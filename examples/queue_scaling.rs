@@ -1,0 +1,42 @@
+//! §2 queue-depth scaling: enterprise controllers scale 4 KB random IOPS
+//! near-linearly with queue depth until device saturation (the PM9A3
+//! datasheet shape), while client-style simulator configurations saturate
+//! early at an order of magnitude lower throughput.
+//!
+//! ```text
+//! cargo run --release --example queue_scaling
+//! ```
+
+use mqms::config;
+use mqms::coordinator::CoSim;
+use mqms::util::bench::{print_table, si};
+use mqms::workloads::{synth::SynthPattern, WorkloadSpec};
+
+fn main() {
+    let depths = [1u32, 2, 4, 8, 16, 32, 64, 128, 256];
+    let mut rows = Vec::new();
+    for qd in depths {
+        let mut cells = Vec::new();
+        for cfg in [config::pm9a3_like(), config::client_ssd()] {
+            let mut sim = CoSim::new(cfg);
+            let count = 4_000u64.max(qd as u64 * 400);
+            sim.add_workload(WorkloadSpec::synthetic(
+                "rand4k-mixed",
+                SynthPattern::mixed_4k(count).with_queue_depth(qd),
+            ));
+            let report = sim.run();
+            cells.push(si(report.ssd.iops()));
+        }
+        rows.push((format!("QD {qd}"), cells));
+    }
+    print_table(
+        "4 KB random IOPS vs queue depth",
+        &["queue depth", "pm9a3-like (enterprise)", "client-style"],
+        &rows,
+    );
+    println!(
+        "Enterprise shape: near-linear scaling with queue depth until the\n\
+         flash back-end saturates; the client-style configuration flattens\n\
+         out early — the §2 observation motivating MQMS."
+    );
+}

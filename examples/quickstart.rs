@@ -1,0 +1,50 @@
+//! Quickstart: run a 4 KB random-write stream through the MQMS enterprise
+//! configuration and its MQSim-style baseline, and print the A/B.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use mqms::config;
+use mqms::coordinator::CoSim;
+use mqms::util::bench::{ns, print_table, si};
+use mqms::workloads::{synth::SynthPattern, WorkloadSpec};
+
+fn main() {
+    let mut rows = Vec::new();
+    for cfg in [config::mqms_enterprise(), config::baseline_mqsim_macsim()] {
+        let name = cfg.name.clone();
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k-write",
+            SynthPattern::random_4k_write(50_000).with_queue_depth(128),
+        ));
+        let report = sim.run();
+        println!(
+            "{name}: {} requests in {} simulated ({} wall)",
+            report.ssd.completed,
+            ns(report.end_ns as f64),
+            format!("{:.2}s", report.wall_s),
+        );
+        rows.push((
+            name,
+            vec![
+                si(report.ssd.iops()),
+                ns(report.ssd.mean_response_ns),
+                ns(report.ssd.write_p99_ns as f64),
+                report.ssd.rmw_reads.to_string(),
+                report.ssd.multiplane_batches.to_string(),
+            ],
+        ));
+    }
+    print_table(
+        "4 KB random writes — MQMS vs MQSim-MacSim baseline",
+        &["config", "IOPS", "mean resp", "p99 resp", "RMW reads", "multiplane batches"],
+        &rows,
+    );
+    println!(
+        "The MQMS row shows the paper's two mechanisms at work: dynamic\n\
+         allocation spreads writes over idle planes (multi-plane batches > 0)\n\
+         and fine-grained mapping never read-modify-writes (RMW reads = 0)."
+    );
+}

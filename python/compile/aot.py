@@ -1,0 +1,157 @@
+"""AOT compilation: lower the L2 JAX models (with their L1 Pallas kernels)
+to HLO *text* artifacts plus a JSON manifest the rust runtime consumes.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Each artifact entry carries input/output tensor specs and a numeric
+checksum of a canonical evaluation, which the rust e2e example re-verifies
+after loading — proving the three layers compose bit-for-bit (within f32
+tolerance).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+import numpy as np
+
+from .model import (
+    ModelConfig,
+    flatten_params,
+    init_params,
+    make_bert_encode_io_fn,
+    make_gpt2_logits_io_fn,
+    make_matmul_fn,
+)
+
+# Canonical model dimensions for the artifacts (small on purpose: the
+# artifacts prove layer composition; the simulator models full-scale I/O).
+CFG = ModelConfig(d_model=128, n_heads=4, n_layers=2, vocab=512, seq_len=32)
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def canonical_ids(cfg: ModelConfig):
+    """The input the rust e2e uses to verify numerics."""
+    return jnp.arange(cfg.seq_len, dtype=jnp.float32) % cfg.vocab
+
+
+def tensor_spec(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def build_artifacts(out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    def lower_and_write(name, fn, example_inputs, meta_fn):
+        lowered = jax.jit(fn).lower(*example_inputs)
+        hlo = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo_file), "w") as f:
+            f.write(hlo)
+        outputs = jax.jit(fn)(*example_inputs)
+        artifacts.append(
+            {
+                "name": name,
+                "hlo_file": hlo_file,
+                "inputs": [tensor_spec(x) for x in example_inputs],
+                "outputs": [tensor_spec(o) for o in outputs],
+                "meta": meta_fn(outputs),
+            }
+        )
+        print(f"  {name}: {len(hlo)} chars, outputs {[o.shape for o in outputs]}")
+        return outputs
+
+    def write_weights(name, flat):
+        """Concatenated little-endian f32 weights, artifact input order."""
+        path = os.path.join(out_dir, f"{name}.weights.bin")
+        with open(path, "wb") as f:
+            for arr in flat:
+                f.write(np.asarray(arr, dtype="<f4").tobytes())
+        return f"{name}.weights.bin"
+
+    # --- 1. tiny GPT-2 forward (weights as runtime inputs) -----------------
+    ids = canonical_ids(CFG)
+    flat = flatten_params(init_params(CFG, SEED))
+    weights_file = write_weights("tiny_gpt2_fwd", flat)
+    gpt2 = make_gpt2_logits_io_fn(CFG)
+    lower_and_write(
+        "tiny_gpt2_fwd",
+        gpt2,
+        (ids, *flat),
+        meta_fn=lambda outs: {
+            "weights_file": weights_file,
+            "d_model": CFG.d_model,
+            "n_heads": CFG.n_heads,
+            "n_layers": CFG.n_layers,
+            "vocab": CFG.vocab,
+            "seq_len": CFG.seq_len,
+            "param_count": CFG.param_count(),
+            # Verified by the rust e2e after loading:
+            "check_logits_sum": float(jnp.sum(outs[0])),
+            "check_argmax_last": int(jnp.argmax(outs[0][-1])),
+        },
+    )
+
+    # --- 2. tiny BERT encoder (weights as runtime inputs) --------------------
+    bert_weights_file = write_weights("tiny_bert_encode", flat)
+    bert = make_bert_encode_io_fn(CFG)
+    lower_and_write(
+        "tiny_bert_encode",
+        bert,
+        (ids, *flat),
+        meta_fn=lambda outs: {
+            "weights_file": bert_weights_file,
+            "d_model": CFG.d_model,
+            "n_layers": CFG.n_layers,
+            "seq_len": CFG.seq_len,
+            "check_hidden_sum": float(jnp.sum(outs[0])),
+            "check_pooled_sum": float(jnp.sum(outs[1])),
+        },
+    )
+
+    # --- 3. raw Pallas matmul kernel (L1 micro-validation) -------------------
+    m, k, n = 64, 128, 64
+    x = (jnp.arange(m * k, dtype=jnp.float32).reshape(m, k) % 7) * 0.25
+    w = (jnp.arange(k * n, dtype=jnp.float32).reshape(k, n) % 5) * 0.5
+    lower_and_write(
+        "pallas_matmul_64x128x64",
+        make_matmul_fn(m, k, n),
+        (x, w),
+        meta_fn=lambda outs: {"m": m, "k": k, "n": n, "check_sum": float(jnp.sum(outs[0]))},
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": artifacts}, f, indent=2)
+    print(f"wrote {len(artifacts)} artifacts + manifest to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

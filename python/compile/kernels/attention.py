@@ -1,0 +1,83 @@
+"""Fused multi-head attention Pallas kernel (L1) — flash-attention style.
+
+TPU adaptation of the paper's GPU attention hot path: one grid program per
+head streams K/V through VMEM in tiles, maintaining the online-softmax
+running max/denominator so the full [T, T] score matrix never materializes
+in HBM — the same insight flash attention expresses with CUDA threadblocks
+and shared memory, re-tiled here for VMEM via BlockSpec + an in-kernel
+fori_loop.
+
+interpret=True (see matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, kv_block):
+    """One head: q [T, D] vs k/v [T, D], online softmax over KV tiles."""
+    q = q_ref[0].astype(jnp.float32)  # [T, D]
+    t, d = q.shape
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    n_tiles = t // kv_block
+
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (t, kv_block), 0)
+
+    def body(tile, carry):
+        acc, m_run, l_run = carry
+        k_tile = jax.lax.dynamic_slice_in_dim(k_ref[0], tile * kv_block, kv_block, 0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_ref[0], tile * kv_block, kv_block, 0)
+        s = jnp.dot(q, k_tile.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+        s = s * scale  # [T, kv_block]
+        if causal:
+            col_ids = tile * kv_block + jax.lax.broadcasted_iota(
+                jnp.int32, (t, kv_block), 1
+            )
+            s = jnp.where(col_ids <= row_ids, s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))  # [T]
+        p = jnp.exp(s - m_new[:, None])  # [T, kv_block]
+        correction = jnp.exp(m_run - m_new)  # [T]
+        l_new = l_run * correction + p.sum(axis=-1)
+        acc = acc * correction[:, None] + jnp.dot(
+            p, v_tile.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((t, d), jnp.float32)
+    m0 = jnp.full((t,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((t,), jnp.float32)
+    acc, _, l_run = jax.lax.fori_loop(0, n_tiles, body, (acc0, m0, l0))
+    o_ref[0] = acc / l_run[:, None]
+
+
+def _pick_block(dim, target):
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "kv_block"))
+def attention(q, k, v, causal=True, kv_block=128):
+    """q, k, v: [H, T, D] → [H, T, D] fused attention, one program per head.
+
+    VMEM working set per program ≈ (T·D q + T·D acc + 2·kv_block·D tiles)·4 B;
+    kv_block shrinks to a divisor of T for small problems.
+    """
+    h, t, d = q.shape
+    kb = _pick_block(t, kv_block)
+    kernel = functools.partial(_attention_kernel, causal=causal, kv_block=kb)
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, t, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""Blocked matmul Pallas kernel (L1).
+
+TPU adaptation of the paper's GPU GEMM hot path: instead of CUDA threadblock
+tiling into shared memory, the BlockSpec tiles express the HBM→VMEM schedule
+and the inner `jnp.dot` maps onto the 128×128 MXU systolic array. Block
+shapes default to MXU-aligned 128 where the problem allows and shrink to the
+problem size otherwise (hypothesis sweeps exercise the small shapes).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO for both the pytest oracle
+checks and the rust-loaded artifacts. Real-TPU VMEM/MXU estimates live in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (block_m × block_n) output tile; full K resident in VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pick_block(dim, target):
+    """Largest divisor of `dim` that is ≤ target (keeps grids exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul(x, w, block_m=128, block_n=128):
+    """x: [M, K] @ w: [K, N] → [M, N] (f32 accumulation).
+
+    Grid is (M/block_m, N/block_n); each program reads an [block_m, K] strip
+    of x and a [K, block_n] strip of w — the VMEM working set per program is
+    (block_m + block_n) · K · 4 bytes, sized to stay well under ~16 MiB for
+    the model dimensions used here.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,39 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package must match its oracle to float32 tolerance
+under pytest + hypothesis sweeps (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, w):
+    """Plain matmul with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def ref_layernorm(x, gamma, beta, eps=1e-5):
+    """Row-wise layer normalization."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ref_attention(q, k, v, causal=True):
+    """Multi-head scaled-dot-product attention.
+
+    q, k, v: [H, T, D]; returns [H, T, D].
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    d = q.shape[-1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hts,hsd->htd", probs, v)

@@ -1,0 +1,139 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+hypothesis-swept over shapes and dtypes. This is the CORE correctness
+signal of the compile path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.layernorm import layernorm
+from compile.kernels.matmul import matmul
+from compile.kernels.ref import ref_attention, ref_layernorm, ref_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 32, 64, 96, 128])
+SMALL_DIMS = st.sampled_from([8, 16, 32, 64])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+class TestMatmul:
+    @settings(**SETTINGS)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_f32(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = rand(k1, (m, k), jnp.float32)
+        w = rand(k2, (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, w)), np.asarray(ref_matmul(x, w)), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(**SETTINGS)
+    @given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, dtype=DTYPES)
+    def test_dtype_inputs_accumulate_f32(self, m, k, n, dtype):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        x = rand(k1, (m, k), dtype)
+        w = rand(k2, (k, n), dtype)
+        out = matmul(x, w)
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref_matmul(x, w)), rtol=2e-2, atol=2e-2
+        )
+
+    def test_identity(self):
+        x = jnp.eye(32, dtype=jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+        np.testing.assert_allclose(np.asarray(matmul(x, w)), np.asarray(w), rtol=1e-6)
+
+    def test_block_shapes_do_not_change_result(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (96, 48))
+        w = jax.random.normal(jax.random.PRNGKey(2), (48, 72))
+        a = matmul(x, w, block_m=128, block_n=128)
+        b = matmul(x, w, block_m=32, block_n=24)
+        # Different tilings reduce in different orders: f32-noise tolerance.
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-5)
+
+    def test_rejects_mismatched_inner_dims(self):
+        x = jnp.zeros((4, 8))
+        w = jnp.zeros((9, 4))
+        with pytest.raises(AssertionError):
+            matmul(x, w)
+
+
+class TestLayernorm:
+    @settings(**SETTINGS)
+    @given(t=DIMS, d=st.sampled_from([2, 4, 8, 32, 128]), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, t, d, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, (t, d), jnp.float32) * 3.0 + 1.0
+        g = rand(k2, (d,), jnp.float32)
+        b = rand(k3, (d,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(layernorm(x, g, b)),
+            np.asarray(ref_layernorm(x, g, b)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_output_is_normalized(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, 64)) * 10 + 5
+        out = np.asarray(layernorm(x, jnp.ones(64), jnp.zeros(64)))
+        np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)
+
+
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(
+        h=st.sampled_from([1, 2, 4, 8]),
+        t=st.sampled_from([4, 8, 16, 32, 64]),
+        d=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, h, t, d, causal, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (rand(kk, (h, t, d), jnp.float32) for kk in keys)
+        np.testing.assert_allclose(
+            np.asarray(attention(q, k, v, causal=causal)),
+            np.asarray(ref_attention(q, k, v, causal=causal)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(kv_block=st.sampled_from([4, 8, 16, 32, 64]))
+    def test_kv_tiling_invariant(self, kv_block):
+        """Online-softmax tiling must not change the result."""
+        keys = jax.random.split(jax.random.PRNGKey(11), 3)
+        q, k, v = (rand(kk, (2, 64, 16), jnp.float32) for kk in keys)
+        full = attention(q, k, v, causal=True, kv_block=64)
+        tiled = attention(q, k, v, causal=True, kv_block=kv_block)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), rtol=1e-5, atol=1e-5)
+
+    def test_causal_masks_future(self):
+        """Changing future K/V must not affect earlier outputs."""
+        keys = jax.random.split(jax.random.PRNGKey(5), 3)
+        q, k, v = (rand(kk, (1, 16, 8), jnp.float32) for kk in keys)
+        base = np.asarray(attention(q, k, v, causal=True))
+        k2 = k.at[:, 12:, :].set(99.0)
+        v2 = v.at[:, 12:, :].set(-99.0)
+        perturbed = np.asarray(attention(q, k2, v2, causal=True))
+        np.testing.assert_allclose(base[:, :12], perturbed[:, :12], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(base[:, 12:], perturbed[:, 12:])
+
+    def test_uniform_values_average(self):
+        """With identical V rows, attention returns that row regardless of scores."""
+        q = jax.random.normal(jax.random.PRNGKey(6), (2, 8, 4))
+        k = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 4))
+        v = jnp.broadcast_to(jnp.array([1.0, 2.0, 3.0, 4.0]), (2, 8, 4))
+        out = np.asarray(attention(q, k, v, causal=False))
+        np.testing.assert_allclose(out, np.broadcast_to([1, 2, 3, 4], (2, 8, 4)), rtol=1e-5)

@@ -1,0 +1,104 @@
+"""L2 correctness: transformer forward passes — shapes, determinism,
+causality, and decode behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    bert_forward,
+    gpt2_forward,
+    greedy_decode,
+    init_params,
+    make_gpt2_logits_fn,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(d_model=64, n_heads=4, n_layers=2, vocab=128, seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def ids(cfg=CFG):
+    return jnp.arange(cfg.seq_len, dtype=jnp.float32) % cfg.vocab
+
+
+class TestGpt2:
+    def test_shapes(self, params):
+        logits = gpt2_forward(params, ids(), CFG)
+        assert logits.shape == (CFG.seq_len, CFG.vocab)
+        assert logits.dtype == jnp.float32
+
+    def test_deterministic(self, params):
+        a = gpt2_forward(params, ids(), CFG)
+        b = gpt2_forward(params, ids(), CFG)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_causality(self, params):
+        """Perturbing a later token must not change earlier logits."""
+        base = np.asarray(gpt2_forward(params, ids(), CFG))
+        perturbed_ids = ids().at[10].set(42.0)
+        pert = np.asarray(gpt2_forward(params, perturbed_ids, CFG))
+        np.testing.assert_allclose(base[:10], pert[:10], rtol=1e-5, atol=1e-6)
+        assert not np.allclose(base[10:], pert[10:])
+
+    def test_different_seeds_differ(self):
+        a = gpt2_forward(init_params(CFG, 0), ids(), CFG)
+        b = gpt2_forward(init_params(CFG, 1), ids(), CFG)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_finite(self, params):
+        logits = np.asarray(gpt2_forward(params, ids(), CFG))
+        assert np.all(np.isfinite(logits))
+
+
+class TestBert:
+    def test_shapes(self, params):
+        hidden, pooled = bert_forward(params, ids(), CFG)
+        assert hidden.shape == (CFG.seq_len, CFG.d_model)
+        assert pooled.shape == (CFG.d_model,)
+
+    def test_bidirectional(self, params):
+        """BERT (non-causal): later tokens DO affect earlier hidden states."""
+        base, _ = bert_forward(params, ids(), CFG)
+        pert, _ = bert_forward(params, ids().at[10].set(42.0), CFG)
+        assert not np.allclose(np.asarray(base)[:10], np.asarray(pert)[:10])
+
+    def test_pooled_bounded(self, params):
+        _, pooled = bert_forward(params, ids(), CFG)
+        p = np.asarray(pooled)
+        assert np.all(p >= -1.0) and np.all(p <= 1.0)  # tanh pooling
+
+
+class TestDecode:
+    def test_greedy_decode_extends_prompt(self):
+        out = greedy_decode(CFG, [1, 2, 3], steps=4, seed=0)
+        assert len(out) == 7
+        assert out[:3] == [1, 2, 3]
+        assert all(0 <= t < CFG.vocab for t in out)
+
+    def test_greedy_decode_deterministic(self):
+        a = greedy_decode(CFG, [5], steps=3, seed=0)
+        b = greedy_decode(CFG, [5], steps=3, seed=0)
+        assert a == b
+
+    def test_baked_fn_matches_params_fn(self, params):
+        baked = make_gpt2_logits_fn(CFG, seed=0)
+        (a,) = baked(ids())
+        b = gpt2_forward(params, ids(), CFG)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+class TestParamCount:
+    def test_param_count_formula(self):
+        cfg = ModelConfig(d_model=128, n_heads=4, n_layers=2, vocab=512, seq_len=32)
+        n = cfg.param_count()
+        # wte 512·128 + wpe 32·128 + 2 layers × (4·128² + 2·128·512 + 4·128)
+        expect = 512 * 128 + 32 * 128 + 2 * (4 * 128 * 128 + 2 * 128 * 512 + 4 * 128) + 2 * 128
+        assert n == expect

@@ -1,0 +1,37 @@
+//! Ablation A3 — direct vs CPU-mediated I/O path (§1), isolated: identical
+//! SSD internals (MQMS FTL) on both sides; only the path differs.
+
+use mqms::bench_support as bs;
+use mqms::config::{self, IoPath};
+use mqms::util::bench::{ns, print_table, si};
+
+fn main() {
+    let traces = bs::llm_workloads(bs::LLM_SCALE, bs::SEED);
+    let (name, trace, _) = &traces[0]; // bert: the bursty case
+    let mut rows = Vec::new();
+    let mut iops = Vec::new();
+    for path in [IoPath::Direct, IoPath::HostMediated] {
+        let mut cfg = config::mqms_enterprise();
+        if path == IoPath::HostMediated {
+            cfg.path = config::baseline_mqsim_macsim().path;
+        }
+        cfg.name = match path {
+            IoPath::Direct => "direct (in-storage GPU)".into(),
+            IoPath::HostMediated => "CPU-mediated".into(),
+        };
+        let label = cfg.name.clone();
+        let r = bs::run_single(cfg, name, trace.clone());
+        iops.push(r.ssd.iops());
+        rows.push((
+            label,
+            vec![si(r.ssd.iops()), ns(r.ssd.mean_response_ns), ns(r.end_ns as f64)],
+        ));
+    }
+    print_table(
+        "Ablation — I/O path (BERT trace, MQMS FTL on both sides)",
+        &["path", "IOPS", "mean resp", "end time"],
+        &rows,
+    );
+    println!("direct over host-mediated: {:.2}x", iops[0] / iops[1]);
+    assert!(iops[0] > iops[1] * 1.5, "direct path must clearly beat CPU mediation");
+}

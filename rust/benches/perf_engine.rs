@@ -1,0 +1,66 @@
+//! §Perf microbenchmarks: raw event-queue throughput and end-to-end
+//! simulator event rates — the L3 hot-path numbers EXPERIMENTS.md §Perf
+//! tracks across optimization iterations.
+
+use mqms::config;
+use mqms::coordinator::CoSim;
+use mqms::sim::EventQueue;
+use mqms::util::bench::{measure, print_table, si};
+use mqms::workloads::{synth::SynthPattern, WorkloadSpec};
+
+fn main() {
+    // 1. Raw queue: schedule/pop cycles.
+    let n = 1_000_000u64;
+    let m = measure("event-queue", 1, 5, || {
+        let mut q: EventQueue<u64> = EventQueue::with_capacity(1024);
+        let mut out = 0u64;
+        for i in 0..n {
+            q.schedule_at(i * 3 % 10_000_000, i);
+            if i % 4 == 3 {
+                // Interleave pops to exercise heap movement.
+                if let Some((_, v)) = q.pop() {
+                    out = out.wrapping_add(v);
+                }
+            }
+        }
+        while let Some((_, v)) = q.pop() {
+            out = out.wrapping_add(v);
+        }
+        std::hint::black_box(out);
+    });
+    // 2. End-to-end: events/second through the full SSD stack.
+    let mut evrate = 0.0;
+    let e2e = measure("ssd-e2e", 1, 3, || {
+        let mut sim = CoSim::new(config::mqms_enterprise());
+        // Bounded footprint: measure the event loop, not image preload.
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k",
+            SynthPattern::mixed_4k(30_000)
+                .with_queue_depth(128)
+                .with_footprint(16 * 1024),
+        ));
+        let r = sim.run();
+        evrate = r.events as f64 / r.wall_s.max(1e-9);
+        std::hint::black_box(r.ssd.completed);
+    });
+    print_table(
+        "§Perf — engine microbenchmarks",
+        &["benchmark", "median", "rate"],
+        &[
+            (
+                "event-queue sched+pop".to_string(),
+                vec![
+                    format!("{:.1}ms", m.median_s * 1e3),
+                    format!("{} ops/s", si(2.0 * n as f64 / m.median_s)),
+                ],
+            ),
+            (
+                "full-stack sim".to_string(),
+                vec![
+                    format!("{:.1}ms", e2e.median_s * 1e3),
+                    format!("{} events/s", si(evrate)),
+                ],
+            ),
+        ],
+    );
+}

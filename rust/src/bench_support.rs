@@ -1,0 +1,119 @@
+//! Shared plumbing for the `cargo bench` targets (rust/benches/*): workload
+//! preparation, A/B runs, and paper-shape assertions. Kept in the library so
+//! every per-figure bench stays a thin table printer.
+
+use crate::config::{self, AddrScheme, SchedPolicy, SimConfig};
+use crate::coordinator::CoSim;
+use crate::gpu::trace::Trace;
+use crate::metrics::Report;
+use crate::sampling::{sample, SamplerConfig, SamplingStats};
+use crate::workloads::{self, WorkloadSpec};
+
+/// Default scale for the Table-1 workloads in bench runs (fraction of the
+/// paper's full inference counts — the sampled replay preserves the
+/// distribution, the extrapolated metrics recover full-trace scale).
+pub const LLM_SCALE: f64 = 0.002;
+/// Default scale for the Rodinia policy study.
+pub const RODINIA_SCALE: f64 = 0.05;
+pub const SEED: u64 = 42;
+
+/// The three Table-1 workloads, generated and Allegro-sampled.
+pub fn llm_workloads(scale: f64, seed: u64) -> Vec<(String, Trace, SamplingStats)> {
+    ["bert", "gpt2", "resnet50"]
+        .iter()
+        .map(|name| {
+            let full = workloads::by_name(name, scale, seed).unwrap();
+            let (sampled, stats) = sample(&full, &SamplerConfig::default(), seed);
+            (name.to_string(), sampled, stats)
+        })
+        .collect()
+}
+
+/// The three Rodinia workloads, sampled.
+pub fn rodinia_workloads(scale: f64, seed: u64) -> Vec<(String, Trace)> {
+    ["backprop", "hotspot", "lavamd"]
+        .iter()
+        .map(|name| {
+            let full = workloads::by_name(name, scale, seed).unwrap();
+            let (sampled, _) = sample(&full, &SamplerConfig::default(), seed);
+            (name.to_string(), sampled)
+        })
+        .collect()
+}
+
+/// Run one trace workload alone through a config.
+pub fn run_single(cfg: SimConfig, name: &str, trace: Trace) -> Report {
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::trace(name, trace));
+    sim.run()
+}
+
+/// Run several trace workloads concurrently through a config.
+pub fn run_concurrent(cfg: SimConfig, traces: &[(String, Trace)]) -> Report {
+    let mut sim = CoSim::new(cfg);
+    for (name, t) in traces {
+        sim.add_workload(WorkloadSpec::trace(name, t.clone()));
+    }
+    sim.run()
+}
+
+/// The §4 sweep grid: {RR, LC} × {CWDP, CDWP, WCDP} under static allocation
+/// (scheme priority only binds statically).
+pub fn policy_grid() -> Vec<(SchedPolicy, AddrScheme)> {
+    let mut grid = Vec::new();
+    for sched in [SchedPolicy::RoundRobin, SchedPolicy::LargeChunk] {
+        for scheme in AddrScheme::ALL {
+            grid.push((sched, scheme));
+        }
+    }
+    grid
+}
+
+/// Config for one policy combination. The device is scaled down (2 ch × 2
+/// ways × 2 dies × 4 planes) so storage is the contended resource — policy
+/// interactions only show when the device, not the GPU, is the bottleneck.
+pub fn policy_config(sched: SchedPolicy, scheme: AddrScheme, seed: u64) -> SimConfig {
+    let mut cfg = config::mqms_enterprise();
+    cfg.gpu.sched = sched;
+    cfg.ssd.scheme = scheme;
+    cfg.ssd.alloc = config::AllocPolicy::Static;
+    cfg.ssd.channels = 2;
+    cfg.ssd.ways = 2;
+    cfg.seed = seed;
+    cfg.name = format!("{}+{}", sched.name(), scheme.name());
+    cfg
+}
+
+/// Ratio formatted as `12.3x`.
+pub fn ratio(a: f64, b: f64) -> String {
+    if b <= 0.0 {
+        return "inf".to_string();
+    }
+    format!("{:.1}x", a / b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llm_workloads_sampled_and_nonempty() {
+        let ws = llm_workloads(0.0005, 7);
+        assert_eq!(ws.len(), 3);
+        for (name, t, stats) in ws {
+            assert!(!t.records.is_empty(), "{name}");
+            assert!(stats.reduction_factor() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn policy_grid_is_complete() {
+        let g = policy_grid();
+        assert_eq!(g.len(), 6);
+        let names: std::collections::HashSet<String> = g
+            .iter()
+            .map(|(s, a)| policy_config(*s, *a, 1).name)
+            .collect();
+        assert_eq!(names.len(), 6);
+    }
+}

@@ -1,0 +1,613 @@
+//! Typed simulation configuration with JSON load/save and presets.
+//!
+//! One [`SimConfig`] describes an entire co-simulated system: SSD geometry
+//! and timing, FTL policies (the paper's contributions are the
+//! [`AllocPolicy::Dynamic`] / [`MapGranularity::Sector`] switches), GPU
+//! model, and the I/O path (direct GPU-SSD vs CPU-mediated baseline).
+
+mod presets;
+
+use crate::util::jsonlite::{Json, JsonError};
+use std::fmt;
+
+/// Physical page-allocation ordering for *static* allocation, and the
+/// channel/way/die/plane priority the paper sweeps in §4.
+///
+/// The letters give the striping priority for consecutive logical pages:
+/// e.g. CWDP stripes across **C**hannels first, then **W**ays (chips per
+/// channel), then **D**ies, then **P**lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrScheme {
+    /// Channel-Way-Die-Plane (MQSim default; favors channel parallelism).
+    Cwdp,
+    /// Channel-Die-Way-Plane (die interleaving over way pipelining).
+    Cdwp,
+    /// Way-Channel-Die-Plane (way pipelining over channel striping).
+    Wcdp,
+}
+
+impl AddrScheme {
+    pub const ALL: [AddrScheme; 3] = [AddrScheme::Cwdp, AddrScheme::Cdwp, AddrScheme::Wcdp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AddrScheme::Cwdp => "CWDP",
+            AddrScheme::Cdwp => "CDWP",
+            AddrScheme::Wcdp => "WCDP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "CWDP" => Some(AddrScheme::Cwdp),
+            "CDWP" => Some(AddrScheme::Cdwp),
+            "WCDP" => Some(AddrScheme::Wcdp),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for AddrScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Write-address allocation policy (paper §2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Baseline: the physical plane is a fixed function of the logical
+    /// address (per the configured [`AddrScheme`]).
+    Static,
+    /// MQMS: the plane is chosen at service time (least-loaded within
+    /// `scope`), maximizing plane-level parallelism.
+    Dynamic,
+}
+
+/// Restriction on which planes a dynamic allocation may choose — used by the
+/// "restricted dynamic allocation" comparison the paper mentions in §2.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DynamicScope {
+    /// Any plane in the device (full MQMS).
+    Global,
+    /// Any plane within the statically-derived channel.
+    WithinChannel,
+    /// Any plane within the statically-derived die.
+    WithinDie,
+}
+
+/// Logical→physical mapping granularity (paper §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapGranularity {
+    /// Baseline page-level mapping; sub-page writes incur read-modify-write.
+    Page,
+    /// MQMS fine-grained sector-level mapping; small writes append.
+    Sector,
+}
+
+/// GPU kernel scheduling policy (paper §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Rotate over active workloads, one kernel each.
+    RoundRobin,
+    /// Process large consecutive segments of one workload before switching.
+    LargeChunk,
+    /// RoundRobin, falling back to LargeChunk when
+    /// `n_blocks < s_block * n_cores` (the paper's trigger).
+    Auto,
+}
+
+impl SchedPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::RoundRobin => "round-robin",
+            SchedPolicy::LargeChunk => "large-chunk",
+            SchedPolicy::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Some(SchedPolicy::RoundRobin),
+            "large-chunk" | "lc" => Some(SchedPolicy::LargeChunk),
+            "auto" => Some(SchedPolicy::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// I/O path between the GPU and the SSD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoPath {
+    /// MQMS in-storage GPU: requests go straight into the NVMe SQs.
+    Direct,
+    /// Baseline: every request takes a host round-trip (driver + bounce
+    /// buffer over PCIe) and total outstanding I/O is capped.
+    HostMediated,
+}
+
+/// SSD geometry + timing + policy configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SsdConfig {
+    // --- geometry ---------------------------------------------------------
+    pub channels: u32,
+    /// Chips per channel ("ways").
+    pub ways: u32,
+    /// Dies per chip.
+    pub dies: u32,
+    /// Planes per die.
+    pub planes: u32,
+    pub blocks_per_plane: u32,
+    pub pages_per_block: u32,
+    /// Flash page size in bytes (enterprise trend: up to 16 KB, §2.2).
+    pub page_bytes: u32,
+    /// Mapping sector size in bytes (fine-grained mapping unit).
+    pub sector_bytes: u32,
+    /// Fraction of physical capacity exposed as logical space (the rest is
+    /// over-provisioning for GC headroom).
+    pub op_ratio: f64,
+
+    // --- flash timing -------------------------------------------------------
+    /// Page read latency (tR), ns.
+    pub t_read_ns: u64,
+    /// Page program latency (tPROG), ns.
+    pub t_program_ns: u64,
+    /// Block erase latency (tBERS), ns.
+    pub t_erase_ns: u64,
+    /// ONFI channel bandwidth, MB/s.
+    pub channel_mbps: f64,
+    /// Per-command channel overhead (command/address cycles), ns.
+    pub cmd_overhead_ns: u64,
+
+    // --- controller ---------------------------------------------------------
+    /// NVMe submission/completion queue pairs.
+    pub nvme_queues: u32,
+    /// Per-queue depth.
+    pub queue_depth: u32,
+    /// HIL per-command fetch/decode latency, ns.
+    pub fetch_ns: u64,
+    /// FTL per-transaction processing latency (mapping lookup etc.), ns.
+    pub ftl_ns: u64,
+    /// Extra mapping-lookup penalty on a mapping-table cache miss, ns.
+    pub map_miss_ns: u64,
+    /// Probability a mapping lookup misses the in-controller DRAM cache
+    /// (enterprise SSDs hold the whole table: 0.0).
+    pub map_miss_rate: f64,
+
+    // --- policies (the paper's switches) -------------------------------------
+    pub alloc: AllocPolicy,
+    pub dynamic_scope: DynamicScope,
+    pub scheme: AddrScheme,
+    pub mapping: MapGranularity,
+    /// Allow multi-plane command batching (same die, same page address).
+    pub multiplane: bool,
+    /// Linger time before a partially-filled open page is programmed under
+    /// fine-grained mapping, ns.
+    pub coalesce_linger_ns: u64,
+    /// Acknowledge writes when they land in the (power-loss-protected)
+    /// controller DRAM buffer instead of at flash program completion —
+    /// standard enterprise behaviour; fine-grained mapping only.
+    pub ack_on_buffer: bool,
+
+    // --- garbage collection ---------------------------------------------------
+    /// Start GC on a plane when its free-block count drops to this value.
+    pub gc_threshold_blocks: u32,
+    pub gc_enabled: bool,
+}
+
+impl SsdConfig {
+    pub fn total_planes(&self) -> u32 {
+        self.channels * self.ways * self.dies * self.planes
+    }
+
+    pub fn total_dies(&self) -> u32 {
+        self.channels * self.ways * self.dies
+    }
+
+    pub fn sectors_per_page(&self) -> u32 {
+        (self.page_bytes / self.sector_bytes).max(1)
+    }
+
+    /// Total physical capacity in bytes.
+    pub fn physical_bytes(&self) -> u64 {
+        self.total_planes() as u64
+            * self.blocks_per_plane as u64
+            * self.pages_per_block as u64
+            * self.page_bytes as u64
+    }
+
+    /// Exposed logical capacity in sectors.
+    pub fn logical_sectors(&self) -> u64 {
+        ((self.physical_bytes() as f64 * self.op_ratio) / self.sector_bytes as f64) as u64
+    }
+
+    /// Validate invariants; returns a human-readable list of violations.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.channels == 0 || self.ways == 0 || self.dies == 0 || self.planes == 0 {
+            errs.push("geometry dimensions must be non-zero".to_string());
+        }
+        if self.page_bytes % self.sector_bytes != 0 {
+            errs.push(format!(
+                "page_bytes {} not a multiple of sector_bytes {}",
+                self.page_bytes, self.sector_bytes
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.op_ratio) || self.op_ratio < 0.05 {
+            errs.push(format!("op_ratio {} out of (0.05, 1.0]", self.op_ratio));
+        }
+        if self.gc_enabled && self.gc_threshold_blocks >= self.blocks_per_plane {
+            errs.push("gc_threshold_blocks must be < blocks_per_plane".to_string());
+        }
+        if self.nvme_queues == 0 || self.queue_depth == 0 {
+            errs.push("nvme_queues and queue_depth must be non-zero".to_string());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+}
+
+/// GPU timing-model configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Number of SM cores.
+    pub cores: u32,
+    /// Core clock in MHz (converts kernel cycle costs to time).
+    pub clock_mhz: f64,
+    /// GPU DRAM capacity in bytes; working sets beyond this spill to SSD.
+    pub dram_bytes: u64,
+    /// Block stride for the large-chunk trigger `n_blocks < s_block * n_cores`.
+    pub block_stride: u32,
+    /// Kernel scheduling policy across concurrent workloads.
+    pub sched: SchedPolicy,
+    /// Maximum blocks resident per core.
+    pub blocks_per_core: u32,
+    /// Kernels whose outstanding I/O may overlap (weight-prefetch pipeline
+    /// depth). Compute still serializes; this bounds the dense request
+    /// bursts an in-storage GPU exposes to the device (§1, §3.2).
+    pub pipeline_depth: u32,
+}
+
+/// GPU↔SSD path configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathConfig {
+    pub path: IoPath,
+    /// Host software latency per request (driver, syscall, interrupt), ns.
+    pub host_submit_ns: u64,
+    /// Host completion-side latency per request, ns.
+    pub host_complete_ns: u64,
+    /// PCIe bounce-buffer bandwidth for host-mediated transfers, MB/s.
+    pub pcie_mbps: f64,
+    /// Maximum host-outstanding requests (kernel queue depth cap).
+    pub host_max_outstanding: u32,
+}
+
+/// Complete simulation configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    pub name: String,
+    pub seed: u64,
+    pub ssd: SsdConfig,
+    pub gpu: GpuConfig,
+    pub path: PathConfig,
+}
+
+impl SimConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.ssd.validate()
+    }
+
+    // ---- JSON ----------------------------------------------------------------
+    pub fn to_json(&self) -> Json {
+        let s = &self.ssd;
+        let g = &self.gpu;
+        let p = &self.path;
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("seed", self.seed.into()),
+            (
+                "ssd",
+                Json::from_pairs(vec![
+                    ("channels", (s.channels as u64).into()),
+                    ("ways", (s.ways as u64).into()),
+                    ("dies", (s.dies as u64).into()),
+                    ("planes", (s.planes as u64).into()),
+                    ("blocks_per_plane", (s.blocks_per_plane as u64).into()),
+                    ("pages_per_block", (s.pages_per_block as u64).into()),
+                    ("page_bytes", (s.page_bytes as u64).into()),
+                    ("sector_bytes", (s.sector_bytes as u64).into()),
+                    ("op_ratio", s.op_ratio.into()),
+                    ("t_read_ns", s.t_read_ns.into()),
+                    ("t_program_ns", s.t_program_ns.into()),
+                    ("t_erase_ns", s.t_erase_ns.into()),
+                    ("channel_mbps", s.channel_mbps.into()),
+                    ("cmd_overhead_ns", s.cmd_overhead_ns.into()),
+                    ("nvme_queues", (s.nvme_queues as u64).into()),
+                    ("queue_depth", (s.queue_depth as u64).into()),
+                    ("fetch_ns", s.fetch_ns.into()),
+                    ("ftl_ns", s.ftl_ns.into()),
+                    ("map_miss_ns", s.map_miss_ns.into()),
+                    ("map_miss_rate", s.map_miss_rate.into()),
+                    (
+                        "alloc",
+                        match s.alloc {
+                            AllocPolicy::Static => "static",
+                            AllocPolicy::Dynamic => "dynamic",
+                        }
+                        .into(),
+                    ),
+                    (
+                        "dynamic_scope",
+                        match s.dynamic_scope {
+                            DynamicScope::Global => "global",
+                            DynamicScope::WithinChannel => "within-channel",
+                            DynamicScope::WithinDie => "within-die",
+                        }
+                        .into(),
+                    ),
+                    ("scheme", s.scheme.name().into()),
+                    (
+                        "mapping",
+                        match s.mapping {
+                            MapGranularity::Page => "page",
+                            MapGranularity::Sector => "sector",
+                        }
+                        .into(),
+                    ),
+                    ("multiplane", s.multiplane.into()),
+                    ("coalesce_linger_ns", s.coalesce_linger_ns.into()),
+                    ("ack_on_buffer", s.ack_on_buffer.into()),
+                    ("gc_threshold_blocks", (s.gc_threshold_blocks as u64).into()),
+                    ("gc_enabled", s.gc_enabled.into()),
+                ]),
+            ),
+            (
+                "gpu",
+                Json::from_pairs(vec![
+                    ("cores", (g.cores as u64).into()),
+                    ("clock_mhz", g.clock_mhz.into()),
+                    ("dram_bytes", g.dram_bytes.into()),
+                    ("block_stride", (g.block_stride as u64).into()),
+                    ("sched", g.sched.name().into()),
+                    ("blocks_per_core", (g.blocks_per_core as u64).into()),
+                    ("pipeline_depth", (g.pipeline_depth as u64).into()),
+                ]),
+            ),
+            (
+                "path",
+                Json::from_pairs(vec![
+                    (
+                        "path",
+                        match p.path {
+                            IoPath::Direct => "direct",
+                            IoPath::HostMediated => "host-mediated",
+                        }
+                        .into(),
+                    ),
+                    ("host_submit_ns", p.host_submit_ns.into()),
+                    ("host_complete_ns", p.host_complete_ns.into()),
+                    ("pcie_mbps", p.pcie_mbps.into()),
+                    ("host_max_outstanding", (p.host_max_outstanding as u64).into()),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SimConfig, String> {
+        let mut cfg = presets::mqms_enterprise();
+        if let Some(v) = j.get("name").and_then(Json::as_str) {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_u64) {
+            cfg.seed = v;
+        }
+        if let Some(s) = j.get("ssd") {
+            let c = &mut cfg.ssd;
+            macro_rules! num {
+                ($key:literal, $field:expr, $ty:ty) => {
+                    if let Some(v) = s.get($key).and_then(Json::as_f64) {
+                        $field = v as $ty;
+                    }
+                };
+            }
+            num!("channels", c.channels, u32);
+            num!("ways", c.ways, u32);
+            num!("dies", c.dies, u32);
+            num!("planes", c.planes, u32);
+            num!("blocks_per_plane", c.blocks_per_plane, u32);
+            num!("pages_per_block", c.pages_per_block, u32);
+            num!("page_bytes", c.page_bytes, u32);
+            num!("sector_bytes", c.sector_bytes, u32);
+            num!("op_ratio", c.op_ratio, f64);
+            num!("t_read_ns", c.t_read_ns, u64);
+            num!("t_program_ns", c.t_program_ns, u64);
+            num!("t_erase_ns", c.t_erase_ns, u64);
+            num!("channel_mbps", c.channel_mbps, f64);
+            num!("cmd_overhead_ns", c.cmd_overhead_ns, u64);
+            num!("nvme_queues", c.nvme_queues, u32);
+            num!("queue_depth", c.queue_depth, u32);
+            num!("fetch_ns", c.fetch_ns, u64);
+            num!("ftl_ns", c.ftl_ns, u64);
+            num!("map_miss_ns", c.map_miss_ns, u64);
+            num!("map_miss_rate", c.map_miss_rate, f64);
+            num!("coalesce_linger_ns", c.coalesce_linger_ns, u64);
+            num!("gc_threshold_blocks", c.gc_threshold_blocks, u32);
+            if let Some(v) = s.get("alloc").and_then(Json::as_str) {
+                c.alloc = match v {
+                    "static" => AllocPolicy::Static,
+                    "dynamic" => AllocPolicy::Dynamic,
+                    other => return Err(format!("bad alloc: {other}")),
+                };
+            }
+            if let Some(v) = s.get("dynamic_scope").and_then(Json::as_str) {
+                c.dynamic_scope = match v {
+                    "global" => DynamicScope::Global,
+                    "within-channel" => DynamicScope::WithinChannel,
+                    "within-die" => DynamicScope::WithinDie,
+                    other => return Err(format!("bad dynamic_scope: {other}")),
+                };
+            }
+            if let Some(v) = s.get("scheme").and_then(Json::as_str) {
+                c.scheme = AddrScheme::parse(v).ok_or_else(|| format!("bad scheme: {v}"))?;
+            }
+            if let Some(v) = s.get("mapping").and_then(Json::as_str) {
+                c.mapping = match v {
+                    "page" => MapGranularity::Page,
+                    "sector" => MapGranularity::Sector,
+                    other => return Err(format!("bad mapping: {other}")),
+                };
+            }
+            if let Some(v) = s.get("multiplane").and_then(Json::as_bool) {
+                c.multiplane = v;
+            }
+            if let Some(v) = s.get("ack_on_buffer").and_then(Json::as_bool) {
+                c.ack_on_buffer = v;
+            }
+            if let Some(v) = s.get("gc_enabled").and_then(Json::as_bool) {
+                c.gc_enabled = v;
+            }
+        }
+        if let Some(g) = j.get("gpu") {
+            let c = &mut cfg.gpu;
+            if let Some(v) = g.get("cores").and_then(Json::as_u64) {
+                c.cores = v as u32;
+            }
+            if let Some(v) = g.get("clock_mhz").and_then(Json::as_f64) {
+                c.clock_mhz = v;
+            }
+            if let Some(v) = g.get("dram_bytes").and_then(Json::as_u64) {
+                c.dram_bytes = v;
+            }
+            if let Some(v) = g.get("block_stride").and_then(Json::as_u64) {
+                c.block_stride = v as u32;
+            }
+            if let Some(v) = g.get("blocks_per_core").and_then(Json::as_u64) {
+                c.blocks_per_core = v as u32;
+            }
+            if let Some(v) = g.get("pipeline_depth").and_then(Json::as_u64) {
+                c.pipeline_depth = v as u32;
+            }
+            if let Some(v) = g.get("sched").and_then(Json::as_str) {
+                c.sched = SchedPolicy::parse(v).ok_or_else(|| format!("bad sched: {v}"))?;
+            }
+        }
+        if let Some(p) = j.get("path") {
+            let c = &mut cfg.path;
+            if let Some(v) = p.get("path").and_then(Json::as_str) {
+                c.path = match v {
+                    "direct" => IoPath::Direct,
+                    "host-mediated" => IoPath::HostMediated,
+                    other => return Err(format!("bad path: {other}")),
+                };
+            }
+            if let Some(v) = p.get("host_submit_ns").and_then(Json::as_u64) {
+                c.host_submit_ns = v;
+            }
+            if let Some(v) = p.get("host_complete_ns").and_then(Json::as_u64) {
+                c.host_complete_ns = v;
+            }
+            if let Some(v) = p.get("pcie_mbps").and_then(Json::as_f64) {
+                c.pcie_mbps = v;
+            }
+            if let Some(v) = p.get("host_max_outstanding").and_then(Json::as_u64) {
+                c.host_max_outstanding = v as u32;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SimConfig, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&src).map_err(|e: JsonError| e.to_string())?;
+        SimConfig::from_json(&j)
+    }
+}
+
+pub use presets::{baseline_mqsim_macsim, client_ssd, mqms_enterprise, pm9a3_like};
+
+impl SimConfig {
+    /// MQMS configuration: dynamic allocation, fine-grained mapping, direct
+    /// GPU-SSD path, enterprise geometry.
+    pub fn mqms_enterprise() -> SimConfig {
+        presets::mqms_enterprise()
+    }
+
+    /// Baseline MQSim-MacSim: static CWDP, page mapping, CPU-mediated path.
+    pub fn baseline_mqsim_macsim() -> SimConfig {
+        presets::baseline_mqsim_macsim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        mqms_enterprise().validate().unwrap();
+        baseline_mqsim_macsim().validate().unwrap();
+        pm9a3_like().validate().unwrap();
+        client_ssd().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = mqms_enterprise();
+        let j = cfg.to_json();
+        let re = SimConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, re);
+        let cfg2 = baseline_mqsim_macsim();
+        let re2 = SimConfig::from_json(&cfg2.to_json()).unwrap();
+        assert_eq!(cfg2, re2);
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let c = mqms_enterprise().ssd;
+        assert_eq!(c.sectors_per_page(), c.page_bytes / c.sector_bytes);
+        assert!(c.total_planes() >= 64);
+        assert!(c.logical_sectors() > 0);
+        assert!(c.physical_bytes() > (c.logical_sectors() * c.sector_bytes as u64));
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = mqms_enterprise();
+        c.ssd.sector_bytes = 3000; // not a divisor of page
+        assert!(c.validate().is_err());
+        let mut c = mqms_enterprise();
+        c.ssd.channels = 0;
+        assert!(c.validate().is_err());
+        let mut c = mqms_enterprise();
+        c.ssd.gc_threshold_blocks = c.ssd.blocks_per_plane;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(AddrScheme::parse("cwdp"), Some(AddrScheme::Cwdp));
+        assert_eq!(AddrScheme::parse("WCDP"), Some(AddrScheme::Wcdp));
+        assert_eq!(AddrScheme::parse("nope"), None);
+        assert_eq!(SchedPolicy::parse("rr"), Some(SchedPolicy::RoundRobin));
+        assert_eq!(SchedPolicy::parse("lc"), Some(SchedPolicy::LargeChunk));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = pm9a3_like();
+        let dir = std::env::temp_dir().join("mqms_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        cfg.save(&path).unwrap();
+        let re = SimConfig::load(&path).unwrap();
+        assert_eq!(cfg, re);
+    }
+}

@@ -1,0 +1,148 @@
+//! Configuration presets: the two ends of every A/B in the paper plus the
+//! PM9A3-like datasheet preset and a client-SSD preset used by the
+//! queue-depth scaling study (§2).
+
+use super::*;
+
+/// Enterprise flash geometry shared by the enterprise presets.
+/// 8 ch × 4 ways × 2 dies × 4 planes = 256 planes; 16 KB pages, 4 KB sectors;
+/// 16 GiB raw — enterprise *parallelism* at a reduced capacity so dense
+/// mapping tables stay memory-light (the paper's effects depend on unit
+/// counts and timing, not on raw capacity).
+fn enterprise_ssd_base() -> SsdConfig {
+    SsdConfig {
+        channels: 8,
+        ways: 4,
+        dies: 2,
+        planes: 4,
+        blocks_per_plane: 64,
+        pages_per_block: 64,
+        page_bytes: 16 * 1024,
+        sector_bytes: 4 * 1024,
+        op_ratio: 0.875,
+        // TLC-class timings.
+        t_read_ns: 50_000,
+        t_program_ns: 600_000,
+        t_erase_ns: 3_500_000,
+        channel_mbps: 1200.0,
+        cmd_overhead_ns: 300,
+        nvme_queues: 64,
+        queue_depth: 256,
+        fetch_ns: 200,
+        ftl_ns: 100,
+        map_miss_ns: 25_000,
+        map_miss_rate: 0.0, // enterprise DRAM holds the whole table (§2.2)
+        alloc: AllocPolicy::Dynamic,
+        dynamic_scope: DynamicScope::Global,
+        scheme: AddrScheme::Cwdp,
+        mapping: MapGranularity::Sector,
+        multiplane: true,
+        coalesce_linger_ns: 2_000,
+        ack_on_buffer: false,
+        gc_threshold_blocks: 4,
+        gc_enabled: true,
+    }
+}
+
+fn default_gpu() -> GpuConfig {
+    GpuConfig {
+        cores: 32,
+        clock_mhz: 1400.0,
+        // In-storage GPUs carry modest DRAM; the paper's premise is working
+        // sets that exceed it (>80 % of GNN latency is data propagation).
+        // All Table-1 workloads' footprints (512 MiB – 1 GiB) overflow this.
+        dram_bytes: 128 * 1024 * 1024,
+        block_stride: 4,
+        sched: SchedPolicy::RoundRobin,
+        blocks_per_core: 8,
+        pipeline_depth: 32,
+    }
+}
+
+/// MQMS: in-storage GPU with dynamic allocation + fine-grained mapping,
+/// direct NVMe submission.
+pub fn mqms_enterprise() -> SimConfig {
+    SimConfig {
+        name: "mqms-enterprise".to_string(),
+        seed: 0xA11C,
+        ssd: enterprise_ssd_base(),
+        gpu: default_gpu(),
+        path: PathConfig {
+            path: IoPath::Direct,
+            host_submit_ns: 0,
+            host_complete_ns: 0,
+            pcie_mbps: 0.0,
+            host_max_outstanding: u32::MAX,
+        },
+    }
+}
+
+/// Baseline MQSim-MacSim: identical hardware, but static CWDP allocation,
+/// page-granularity mapping (RMW on small writes), no multi-plane batching,
+/// and a CPU-mediated I/O path (driver latency + PCIe bounce + bounded
+/// outstanding requests) — the architecture the paper's §1 describes as
+/// spending >80 % of latency on data propagation.
+pub fn baseline_mqsim_macsim() -> SimConfig {
+    let mut ssd = enterprise_ssd_base();
+    ssd.alloc = AllocPolicy::Static;
+    ssd.mapping = MapGranularity::Page;
+    ssd.multiplane = false;
+    ssd.nvme_queues = 8;
+    ssd.queue_depth = 64;
+    SimConfig {
+        name: "baseline-mqsim-macsim".to_string(),
+        seed: 0xA11C,
+        ssd,
+        gpu: default_gpu(),
+        path: PathConfig {
+            path: IoPath::HostMediated,
+            // CPU-mediated GPU storage access (GPU fault → host file read →
+            // bounce copy): ~30 us submit-side software, ~15 us completion
+            // interrupt + wakeup, and a shallow effective queue — the
+            // pattern BaM-style measurements show capping CPU-mediated
+            // GPU I/O around 10^5 IOPS while direct paths reach 10^6-10^7.
+            host_submit_ns: 30_000,
+            host_complete_ns: 15_000,
+            pcie_mbps: 12_000.0, // PCIe 3.0 x16 effective
+            host_max_outstanding: 16,
+        },
+    }
+}
+
+/// Samsung PM9A3-like enterprise preset (public datasheet shape: 4 KB random
+/// IOPS scaling near-linearly with queue depth to saturation).
+pub fn pm9a3_like() -> SimConfig {
+    let mut cfg = mqms_enterprise();
+    cfg.name = "pm9a3-like".to_string();
+    cfg.ssd.channels = 8;
+    cfg.ssd.ways = 8;
+    cfg.ssd.dies = 2;
+    cfg.ssd.planes = 4;
+    cfg.ssd.t_read_ns = 45_000;
+    cfg.ssd.t_program_ns = 550_000;
+    cfg.ssd.channel_mbps = 1600.0;
+    cfg
+}
+
+/// Client-SSD preset: the §2 observation — even configured with
+/// enterprise-class *physical* parameters, a client-style controller (static
+/// allocation, page mapping, shallow queues, partial map cache) performs an
+/// order of magnitude worse on 4 KB random workloads.
+pub fn client_ssd() -> SimConfig {
+    let mut cfg = baseline_mqsim_macsim();
+    cfg.name = "client-ssd".to_string();
+    cfg.path = PathConfig {
+        path: IoPath::HostMediated,
+        host_submit_ns: 15_000,
+        host_complete_ns: 10_000,
+        pcie_mbps: 3_500.0,
+        host_max_outstanding: 32,
+    };
+    // Client controllers expose few, shallow queues — the §2 observation:
+    // even with enterprise-class flash geometry, IOPS saturates an order of
+    // magnitude below real enterprise devices.
+    cfg.ssd.nvme_queues = 2;
+    cfg.ssd.queue_depth = 16;
+    cfg.ssd.map_miss_rate = 0.35; // partial mapping-table cache
+    cfg
+}

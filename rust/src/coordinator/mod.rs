@@ -1,0 +1,600 @@
+//! Co-simulation coordinator: wires the GPU timing model to the SSD device
+//! model through the configured I/O path, drives synthetic streams, and
+//! produces the cross-layer [`Report`].
+//!
+//! ## The two paths (paper §1)
+//!
+//! * [`IoPath::Direct`] — the in-storage GPU submits straight into the NVMe
+//!   submission queues (MQMS).
+//! * [`IoPath::HostMediated`] — the MQSim-MacSim baseline: every request
+//!   pays host driver latency plus a PCIe bounce-buffer transfer, and total
+//!   host-outstanding I/O is capped — the "CPU-mediated data access
+//!   pattern" whose propagation overhead the paper measures at >80 % of GNN
+//!   processing latency.
+
+use crate::config::{IoPath, SimConfig};
+use crate::gpu::{GpuEvent, GpuSim};
+use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
+use crate::sim::time::transfer_ns;
+use crate::sim::{Engine, EventQueue, SimTime, World};
+use crate::ssd::nvme::{IoRequest, Opcode};
+use crate::ssd::tsu::TsuEvent;
+use crate::ssd::{SsdEvent, SsdSim};
+use crate::workloads::{synth::SynthPattern, WorkloadKind, WorkloadSpec};
+use crate::gpu::trace::AccessKind;
+use crate::util::rng::Pcg64;
+use std::collections::VecDeque;
+
+/// Unified co-simulation event alphabet.
+#[derive(Debug, Clone)]
+pub enum Ev {
+    Ssd(SsdEvent),
+    Gpu(GpuEvent),
+    /// Host-mediated submit latency elapsed; request enters the device.
+    HostSubmitted(IoRequest),
+    /// Host-mediated completion latency elapsed; GPU sees the I/O done.
+    HostDelivered { req_id: u64 },
+    /// Synthetic stream refill retry.
+    SynthRefill { stream: usize },
+}
+
+impl From<SsdEvent> for Ev {
+    fn from(e: SsdEvent) -> Self {
+        Ev::Ssd(e)
+    }
+}
+impl From<TsuEvent> for Ev {
+    fn from(e: TsuEvent) -> Self {
+        Ev::Ssd(SsdEvent::Tsu(e))
+    }
+}
+impl From<GpuEvent> for Ev {
+    fn from(e: GpuEvent) -> Self {
+        Ev::Gpu(e)
+    }
+}
+
+/// Synthetic stream ids live in the high request-id space so they can never
+/// collide with GPU-generated request ids.
+const SYNTH_ID_BASE: u64 = 1 << 62;
+
+/// Closed-loop synthetic stream state.
+struct SynthStream {
+    pattern: SynthPattern,
+    source: u32,
+    region_base: u64,
+    region_len: u64,
+    cursor: u64,
+    issued: u64,
+    completed: u64,
+    outstanding: u32,
+    next_id: u64,
+    rng: Pcg64,
+}
+
+impl SynthStream {
+    fn done(&self) -> bool {
+        self.completed >= self.pattern.count
+    }
+
+    fn next_request(&mut self) -> IoRequest {
+        let sz = self.pattern.sectors.max(1) as u64;
+        let len = self.region_len.max(sz);
+        let off = match self.pattern.access {
+            AccessKind::Sequential => {
+                let o = self.cursor;
+                self.cursor = (self.cursor + sz) % len;
+                o
+            }
+            AccessKind::Random => self.rng.below(len),
+            AccessKind::Strided(s) => {
+                let o = self.cursor;
+                self.cursor = (self.cursor + s.max(1) as u64) % len;
+                o
+            }
+        };
+        let lsn = self.region_base + off.min(len - sz);
+        let id = self.next_id;
+        self.next_id += 1;
+        let opcode = if self.rng.chance(self.pattern.read_fraction) {
+            Opcode::Read
+        } else {
+            Opcode::Write
+        };
+        IoRequest {
+            id,
+            opcode,
+            lsn,
+            sectors: self.pattern.sectors.max(1),
+            submit_ns: 0,
+            source: self.source,
+        }
+    }
+}
+
+/// The co-simulated world (owns every component).
+pub struct CoWorld {
+    pub cfg: SimConfig,
+    pub ssd: SsdSim,
+    pub gpu: Option<GpuSim>,
+    synth: Vec<SynthStream>,
+    gpu_sources: usize,
+    /// Requests rejected on full SQs, retried after completions.
+    pending_submit: VecDeque<IoRequest>,
+    /// Host-mediated path state.
+    host_outstanding: u32,
+    host_wait: VecDeque<IoRequest>,
+    pub per_source: Vec<PerSourceAcc>,
+    source_names: Vec<String>,
+}
+
+impl World for CoWorld {
+    type Ev = Ev;
+
+    fn handle(&mut self, now: SimTime, ev: Ev, q: &mut EventQueue<Ev>) {
+        match ev {
+            Ev::Ssd(se) => {
+                self.ssd.handle(now, se, q);
+                self.after_ssd(now, q);
+            }
+            Ev::Gpu(ge) => {
+                if let Some(gpu) = self.gpu.as_mut() {
+                    gpu.handle(now, ge, q);
+                }
+                self.drain_gpu_io(now, q);
+            }
+            Ev::HostSubmitted(req) => {
+                self.try_submit(req, q);
+            }
+            Ev::HostDelivered { req_id } => {
+                self.host_outstanding = self.host_outstanding.saturating_sub(1);
+                if let Some(gpu) = self.gpu.as_mut() {
+                    gpu.io_completed(req_id, now, q);
+                }
+                // Admit a queued host request into the freed slot.
+                if let Some(next) = self.host_wait.pop_front() {
+                    self.route(next, q);
+                }
+                self.drain_gpu_io(now, q);
+            }
+            Ev::SynthRefill { stream } => {
+                self.refill_synth(stream, q);
+            }
+        }
+    }
+}
+
+impl CoWorld {
+    /// Process SSD fallout: completions (credit per-source metrics, notify
+    /// the GPU or synth streams) and retry rejected submissions.
+    fn after_ssd(&mut self, now: SimTime, q: &mut EventQueue<Ev>) {
+        let completions = self.ssd.drain_completions();
+        for c in completions {
+            let src = c.source as usize;
+            if src < self.per_source.len() {
+                self.per_source[src].record(c.submit_ns, c.complete_ns);
+            }
+            if c.id >= SYNTH_ID_BASE {
+                let stream = src - self.gpu_sources;
+                let s = &mut self.synth[stream];
+                s.completed += 1;
+                s.outstanding = s.outstanding.saturating_sub(1);
+                self.refill_synth(stream, q);
+            } else if self.gpu.is_some() {
+                match self.cfg.path.path {
+                    IoPath::Direct => {
+                        self.gpu.as_mut().unwrap().io_completed(c.id, now, q);
+                    }
+                    IoPath::HostMediated => {
+                        // Completion interrupt + host wakeup before the GPU
+                        // observes the data.
+                        q.schedule_in(
+                            self.cfg.path.host_complete_ns,
+                            Ev::HostDelivered { req_id: c.id },
+                        );
+                    }
+                }
+            }
+        }
+        // SQ slots freed — retry rejected submissions.
+        let mut still_pending = VecDeque::new();
+        while let Some(req) = self.pending_submit.pop_front() {
+            let queue = self.ssd.queue_for_req(&req);
+            if self.ssd.free_slots(queue) > 0 {
+                self.ssd
+                    .submit(queue, req, q)
+                    .unwrap_or_else(|r| still_pending.push_back(r));
+            } else {
+                still_pending.push_back(req);
+            }
+        }
+        self.pending_submit = still_pending;
+        self.drain_gpu_io(now, q);
+    }
+
+    /// Pull newly generated GPU I/O and route it down the configured path.
+    fn drain_gpu_io(&mut self, _now: SimTime, q: &mut EventQueue<Ev>) {
+        let Some(gpu) = self.gpu.as_mut() else { return };
+        let reqs = gpu.drain_io();
+        for req in reqs {
+            self.route(req, q);
+        }
+    }
+
+    /// Route one GPU request: direct to the device, or through the host.
+    /// Response time is measured from here (request issue), so host-side
+    /// latency and queueing count against the host-mediated baseline.
+    fn route(&mut self, mut req: IoRequest, q: &mut EventQueue<Ev>) {
+        if req.submit_ns == 0 {
+            req.submit_ns = q.now();
+        }
+        match self.cfg.path.path {
+            IoPath::Direct => self.try_submit(req, q),
+            IoPath::HostMediated => {
+                if self.host_outstanding < self.cfg.path.host_max_outstanding {
+                    self.host_outstanding += 1;
+                    let bytes = req.sectors as u64 * self.cfg.ssd.sector_bytes as u64;
+                    let delay = self.cfg.path.host_submit_ns
+                        + transfer_ns(bytes, self.cfg.path.pcie_mbps);
+                    q.schedule_in(delay, Ev::HostSubmitted(req));
+                } else {
+                    self.host_wait.push_back(req);
+                }
+            }
+        }
+    }
+
+    fn try_submit(&mut self, req: IoRequest, q: &mut EventQueue<Ev>) {
+        let queue = self.ssd.queue_for_req(&req);
+        if let Err(r) = self.ssd.submit(queue, req, q) {
+            self.pending_submit.push_back(r);
+        }
+    }
+
+    /// Keep a synthetic stream at its target queue depth.
+    fn refill_synth(&mut self, stream: usize, q: &mut EventQueue<Ev>) {
+        let s = &mut self.synth[stream];
+        while s.outstanding < s.pattern.queue_depth && s.issued < s.pattern.count {
+            let req = s.next_request();
+            let queue = self.ssd.queue_for_req(&req);
+            match self.ssd.submit(queue, req, q) {
+                Ok(()) => {
+                    s.issued += 1;
+                    s.outstanding += 1;
+                }
+                Err(_) => {
+                    // Device queues full. If nothing of ours is in flight the
+                    // completion path can't wake us — poll instead.
+                    if s.outstanding == 0 {
+                        q.schedule_in(10_000, Ev::SynthRefill { stream });
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    fn all_synth_done(&self) -> bool {
+        self.synth.iter().all(SynthStream::done)
+    }
+}
+
+/// The co-simulation driver: configure, add workloads, run, report.
+pub struct CoSim {
+    world: CoWorld,
+    engine: Engine<CoWorld>,
+    specs: Vec<WorkloadSpec>,
+    started: bool,
+}
+
+impl CoSim {
+    pub fn new(cfg: SimConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        let ssd = SsdSim::new(&cfg.ssd, cfg.seed);
+        Self {
+            world: CoWorld {
+                ssd,
+                gpu: None,
+                synth: Vec::new(),
+                gpu_sources: 0,
+                pending_submit: VecDeque::new(),
+                host_outstanding: 0,
+                host_wait: VecDeque::new(),
+                per_source: Vec::new(),
+                source_names: Vec::new(),
+                cfg,
+            },
+            engine: Engine::new(),
+            specs: Vec::new(),
+            started: false,
+        }
+    }
+
+    /// Admit a workload (trace-driven GPU workload or synthetic stream).
+    pub fn add_workload(&mut self, spec: WorkloadSpec) {
+        assert!(!self.started, "add_workload after run");
+        self.specs.push(spec);
+    }
+
+    /// Immutable access to the world (post-run inspection).
+    pub fn world(&self) -> &CoWorld {
+        &self.world
+    }
+
+    /// Run the co-simulation to quiescence and report.
+    pub fn run(&mut self) -> Report {
+        self.run_bounded(None, None)
+    }
+
+    /// Run with optional simulated-time / event-count bounds.
+    pub fn run_bounded(&mut self, until: Option<SimTime>, max_events: Option<u64>) -> Report {
+        let wall0 = std::time::Instant::now();
+        if !self.started {
+            self.start();
+        }
+        let stats = self.engine.run_until(&mut self.world, until, max_events);
+        // A quiescent world must be fully drained unless bounded.
+        if stats.quiescent {
+            debug_assert!(self.world.pending_submit.is_empty());
+            debug_assert!(self.world.ssd.is_drained(), "ssd not drained at quiescence");
+            debug_assert!(
+                self.world.gpu.as_ref().map_or(true, GpuSim::all_done),
+                "gpu not done at quiescence"
+            );
+            debug_assert!(self.world.all_synth_done(), "synth streams incomplete");
+        }
+        self.report(stats.end_time, stats.events, wall0.elapsed().as_secs_f64())
+    }
+
+    fn start(&mut self) {
+        self.started = true;
+        let specs = std::mem::take(&mut self.specs);
+        let seed = self.world.cfg.seed;
+        // GPU workloads first (sources 0..n), then synth streams.
+        let mut gpu = GpuSim::new(&self.world.cfg.gpu, seed);
+        let mut n_gpu = 0usize;
+        for spec in &specs {
+            if let WorkloadKind::Trace(t) = &spec.kind {
+                gpu.add_workload(&spec.name, t.clone(), seed ^ 0x6B);
+                self.world.source_names.push(spec.name.clone());
+                n_gpu += 1;
+            }
+        }
+        self.world.gpu_sources = n_gpu;
+        let total = self.world.ssd.logical_sectors();
+        let n_synth = specs.len() - n_gpu;
+        let n_sources = (n_gpu + n_synth).max(1) as u64;
+        let share = total / n_sources;
+        if n_gpu > 0 {
+            gpu.start(
+                share * n_gpu as u64,
+                self.world.cfg.ssd.sector_bytes as u64,
+                &mut self.engine.queue,
+            );
+            // Install the model/dataset image each workload will read: its
+            // weights were stored on the device before the experiment.
+            let mut g = 0u64;
+            for spec in &specs {
+                if let WorkloadKind::Trace(t) = &spec.kind {
+                    let base = g * share;
+                    let len = t.footprint_sectors.clamp(1, share);
+                    self.world.ssd.preload(base, len);
+                    g += 1;
+                }
+            }
+            self.world.gpu = Some(gpu);
+        }
+        // Synth streams take the tail regions.
+        let mut idx = 0usize;
+        for spec in &specs {
+            if let WorkloadKind::Synth(p) = &spec.kind {
+                let source = (n_gpu + idx) as u32;
+                let region_base = share * source as u64;
+                let region_len = if p.footprint_sectors > 0 {
+                    p.footprint_sectors.min(share)
+                } else {
+                    share
+                };
+                if p.read_fraction > 0.0 {
+                    // Reads need data to hit; install an image first.
+                    self.world.ssd.preload(region_base, region_len);
+                }
+                self.world.source_names.push(spec.name.clone());
+                self.world.synth.push(SynthStream {
+                    pattern: p.clone(),
+                    source,
+                    region_base,
+                    region_len,
+                    cursor: 0,
+                    issued: 0,
+                    completed: 0,
+                    outstanding: 0,
+                    next_id: SYNTH_ID_BASE + ((idx as u64) << 40),
+                    rng: Pcg64::new(seed ^ 0x5E17 ^ (idx as u64) << 9),
+                });
+                idx += 1;
+            }
+        }
+        self.world.per_source =
+            vec![PerSourceAcc::default(); self.world.source_names.len()];
+        for i in 0..self.world.synth.len() {
+            self.engine
+                .queue
+                .schedule_at(self.engine.queue.now(), Ev::SynthRefill { stream: i });
+        }
+    }
+
+    fn report(&self, end_ns: SimTime, events: u64, wall_s: f64) -> Report {
+        let w = &self.world;
+        let workloads = w
+            .source_names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let acc = &w.per_source[i];
+                let (end, predicted, kernels) = if i < w.gpu_sources {
+                    let g = w.gpu.as_ref().unwrap();
+                    (g.actual_end_ns(i), g.predicted_end_ns(i), g.kernels_done(i))
+                } else {
+                    (acc.last_complete_ns, acc.last_complete_ns as f64, 0)
+                };
+                WorkloadReport {
+                    name: name.clone(),
+                    io_completed: acc.completed,
+                    iops: acc.iops(),
+                    mean_response_ns: acc.response.mean(),
+                    end_ns: end,
+                    predicted_end_ns: predicted,
+                    kernels_done: kernels,
+                }
+            })
+            .collect();
+        Report {
+            config_name: w.cfg.name.clone(),
+            ssd: SsdSummary::from_sim(&w.ssd),
+            workloads,
+            end_ns,
+            events,
+            wall_s,
+            gpu: w.gpu.as_ref().map(GpuSim::report),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::workloads;
+
+    #[test]
+    fn synth_stream_runs_to_completion() {
+        let cfg = config::mqms_enterprise();
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k",
+            SynthPattern::random_4k_write(2_000).with_queue_depth(32),
+        ));
+        let report = sim.run();
+        assert_eq!(report.ssd.completed, 2_000);
+        assert!(report.ssd.iops() > 0.0);
+        assert_eq!(report.workloads.len(), 1);
+        assert_eq!(report.workloads[0].io_completed, 2_000);
+    }
+
+    #[test]
+    fn gpu_workload_direct_path() {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpu.dram_bytes = 0;
+        let mut sim = CoSim::new(cfg);
+        let trace = workloads::rodinia::lavamd(0.005, 3);
+        sim.add_workload(WorkloadSpec::trace("lavamd", trace));
+        let report = sim.run();
+        assert!(report.workloads[0].io_completed > 0);
+        assert!(report.workloads[0].kernels_done > 0);
+        assert!(report.end_ns > 0);
+    }
+
+    #[test]
+    fn gpu_workload_host_mediated_is_slower() {
+        let mk = |host: bool| {
+            let mut cfg = if host {
+                config::baseline_mqsim_macsim()
+            } else {
+                config::mqms_enterprise()
+            };
+            // Isolate the path effect: same SSD internals for both.
+            cfg.ssd = config::mqms_enterprise().ssd;
+            cfg.gpu.dram_bytes = 0;
+            let mut sim = CoSim::new(cfg);
+            sim.add_workload(WorkloadSpec::trace(
+                "lavamd",
+                workloads::rodinia::lavamd(0.01, 3),
+            ));
+            sim.run()
+        };
+        let direct = mk(false);
+        let host = mk(true);
+        assert_eq!(
+            direct.workloads[0].io_completed,
+            host.workloads[0].io_completed
+        );
+        assert!(
+            host.end_ns > direct.end_ns,
+            "host-mediated {} must be slower than direct {}",
+            host.end_ns,
+            direct.end_ns
+        );
+    }
+
+    #[test]
+    fn multiple_workloads_get_disjoint_metrics() {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpu.dram_bytes = 0;
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::trace(
+            "backprop",
+            workloads::rodinia::backprop(0.003, 1),
+        ));
+        sim.add_workload(WorkloadSpec::trace(
+            "hotspot",
+            workloads::rodinia::hotspot(0.003, 2),
+        ));
+        let report = sim.run();
+        assert_eq!(report.workloads.len(), 2);
+        for w in &report.workloads {
+            assert!(w.io_completed > 0, "{} saw no I/O", w.name);
+            assert!(w.end_ns > 0);
+        }
+        let total: u64 = report.workloads.iter().map(|w| w.io_completed).sum();
+        assert_eq!(total, report.ssd.completed);
+    }
+
+    #[test]
+    fn mixed_gpu_and_synth() {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpu.dram_bytes = 0;
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::trace(
+            "lavamd",
+            workloads::rodinia::lavamd(0.002, 5),
+        ));
+        sim.add_workload(WorkloadSpec::synthetic(
+            "bg-writes",
+            SynthPattern::random_4k_write(500).with_queue_depth(8),
+        ));
+        let report = sim.run();
+        assert_eq!(report.workloads.len(), 2);
+        assert!(report.workloads[0].kernels_done > 0);
+        assert_eq!(report.workloads[1].io_completed, 500);
+    }
+
+    #[test]
+    fn bounded_run_stops_early() {
+        let cfg = config::mqms_enterprise();
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k",
+            SynthPattern::random_4k_write(1_000_000),
+        ));
+        let report = sim.run_bounded(Some(crate::sim::MILLIS), None);
+        assert!(report.end_ns <= crate::sim::MILLIS);
+        assert!(report.ssd.completed < 1_000_000);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut cfg = config::mqms_enterprise();
+            cfg.gpu.dram_bytes = 0;
+            let mut sim = CoSim::new(cfg);
+            sim.add_workload(WorkloadSpec::trace(
+                "backprop",
+                workloads::rodinia::backprop(0.002, 9),
+            ));
+            let r = sim.run();
+            (r.end_ns, r.ssd.completed, r.ssd.flash_programs)
+        };
+        assert_eq!(run(), run());
+    }
+}

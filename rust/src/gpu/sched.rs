@@ -1,0 +1,196 @@
+//! GPU kernel scheduling across concurrent workloads (paper §4).
+//!
+//! * **Round-robin** rotates over active workloads, launching one kernel
+//!   from each in circular sequence — fair, but it interleaves the
+//!   workloads' I/O streams (and their locality) at the SSD.
+//! * **Large-chunk** processes a consecutive segment of one workload before
+//!   switching — preserves GPU context and per-workload access locality.
+//! * **Auto** follows the paper's trigger: round-robin, falling back to
+//!   large-chunk for a kernel when `n_blocks < s_block × n_cores` (a kernel
+//!   too small for fine-grained scheduling to be efficient).
+
+use crate::config::{GpuConfig, SchedPolicy};
+
+/// Scheduler state: picks which workload launches next.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: SchedPolicy,
+    /// Consecutive kernels per chunk in large-chunk mode.
+    pub chunk: u32,
+    block_stride: u32,
+    cores: u32,
+    cursor: usize,
+    chunk_left: u32,
+    /// Workload the current chunk is pinned to.
+    pinned: Option<usize>,
+    pub chunk_switches: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: &GpuConfig, chunk: u32) -> Self {
+        Self {
+            policy: cfg.sched,
+            chunk,
+            block_stride: cfg.block_stride,
+            cores: cfg.cores,
+            cursor: 0,
+            chunk_left: 0,
+            pinned: None,
+            chunk_switches: 0,
+        }
+    }
+
+    /// The paper's large-chunk trigger for one kernel.
+    pub fn lc_trigger(&self, n_blocks: u32) -> bool {
+        n_blocks < self.block_stride * self.cores
+    }
+
+    /// Pick the next workload to launch from. `ready` flags which workloads
+    /// still have kernels; `next_blocks[i]` is the grid size of workload i's
+    /// next kernel (for the Auto trigger). Returns `None` when nothing is
+    /// ready.
+    pub fn pick(&mut self, ready: &[bool], next_blocks: &[u32]) -> Option<usize> {
+        let n = ready.len();
+        if n == 0 || !ready.iter().any(|&r| r) {
+            return None;
+        }
+        match self.policy {
+            SchedPolicy::RoundRobin => self.pick_rr(ready),
+            SchedPolicy::LargeChunk => self.pick_lc(ready),
+            SchedPolicy::Auto => {
+                // Peek at the round-robin candidate; if its kernel is small,
+                // pin a chunk to it (context retention), else plain RR.
+                if let Some(pin) = self.pinned {
+                    if ready[pin] && self.chunk_left > 0 {
+                        self.chunk_left -= 1;
+                        return Some(pin);
+                    }
+                    self.pinned = None;
+                }
+                let cand = self.pick_rr(ready)?;
+                if self.lc_trigger(next_blocks[cand]) {
+                    self.pinned = Some(cand);
+                    self.chunk_left = self.chunk.saturating_sub(1);
+                    self.chunk_switches += 1;
+                }
+                Some(cand)
+            }
+        }
+    }
+
+    fn pick_rr(&mut self, ready: &[bool]) -> Option<usize> {
+        let n = ready.len();
+        for i in 0..n {
+            let w = (self.cursor + i) % n;
+            if ready[w] {
+                self.cursor = (w + 1) % n;
+                return Some(w);
+            }
+        }
+        None
+    }
+
+    fn pick_lc(&mut self, ready: &[bool]) -> Option<usize> {
+        if let Some(pin) = self.pinned {
+            if ready[pin] && self.chunk_left > 0 {
+                self.chunk_left -= 1;
+                return Some(pin);
+            }
+        }
+        // Pin the next ready workload for a fresh chunk.
+        let w = self.pick_rr(ready)?;
+        self.pinned = Some(w);
+        self.chunk_left = self.chunk.saturating_sub(1);
+        self.chunk_switches += 1;
+        Some(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn sched(policy: SchedPolicy, chunk: u32) -> Scheduler {
+        let mut g = config::mqms_enterprise().gpu;
+        g.sched = policy;
+        Scheduler::new(&g, chunk)
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut s = sched(SchedPolicy::RoundRobin, 4);
+        let ready = vec![true, true, true];
+        let blocks = vec![1000, 1000, 1000];
+        let picks: Vec<usize> = (0..6).map(|_| s.pick(&ready, &blocks).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_finished() {
+        let mut s = sched(SchedPolicy::RoundRobin, 4);
+        let ready = vec![true, false, true];
+        let blocks = vec![10, 10, 10];
+        let picks: Vec<usize> = (0..4).map(|_| s.pick(&ready, &blocks).unwrap()).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn large_chunk_stays_then_switches() {
+        let mut s = sched(SchedPolicy::LargeChunk, 3);
+        let ready = vec![true, true];
+        let blocks = vec![10, 10];
+        let picks: Vec<usize> = (0..8).map(|_| s.pick(&ready, &blocks).unwrap()).collect();
+        assert_eq!(picks, vec![0, 0, 0, 1, 1, 1, 0, 0]);
+        assert_eq!(s.chunk_switches, 3);
+    }
+
+    #[test]
+    fn large_chunk_abandons_finished_workload() {
+        let mut s = sched(SchedPolicy::LargeChunk, 100);
+        let mut ready = vec![true, true];
+        let blocks = vec![10, 10];
+        assert_eq!(s.pick(&ready, &blocks), Some(0));
+        ready[0] = false; // workload 0 finished mid-chunk
+        assert_eq!(s.pick(&ready, &blocks), Some(1));
+    }
+
+    #[test]
+    fn auto_pins_small_kernels() {
+        let mut s = sched(SchedPolicy::Auto, 3);
+        let ready = vec![true, true];
+        // Workload 0 has tiny kernels (below stride*cores = 4*32 = 128).
+        let blocks = vec![16, 100_000];
+        let first = s.pick(&ready, &blocks).unwrap();
+        assert_eq!(first, 0);
+        // Pinned: next picks stay on 0 for the chunk.
+        assert_eq!(s.pick(&ready, &blocks), Some(0));
+        assert_eq!(s.pick(&ready, &blocks), Some(0));
+        // Chunk exhausted → moves on.
+        assert_eq!(s.pick(&ready, &blocks), Some(1));
+    }
+
+    #[test]
+    fn auto_large_kernels_round_robin() {
+        let mut s = sched(SchedPolicy::Auto, 3);
+        let ready = vec![true, true];
+        let blocks = vec![100_000, 100_000];
+        let picks: Vec<usize> = (0..4).map(|_| s.pick(&ready, &blocks).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn lc_trigger_formula() {
+        let s = sched(SchedPolicy::Auto, 4);
+        // stride 4 × cores 32 = 128
+        assert!(s.lc_trigger(127));
+        assert!(!s.lc_trigger(128));
+    }
+
+    #[test]
+    fn nothing_ready_returns_none() {
+        let mut s = sched(SchedPolicy::RoundRobin, 4);
+        assert_eq!(s.pick(&[false, false], &[1, 1]), None);
+        assert_eq!(s.pick(&[], &[]), None);
+    }
+}

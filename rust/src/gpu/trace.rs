@@ -1,0 +1,303 @@
+//! GPU kernel trace format.
+//!
+//! The analog of the SASS-assembly traces MacSim consumes: a sequence of
+//! kernel records, each carrying launch geometry, a per-block compute cost,
+//! and a statistical memory-access pattern (requests per kernel, request
+//! size, access kind over the workload's logical region).
+//!
+//! Traces serialize to a compact little-endian binary format (`MQMT`) and a
+//! JSON export for inspection. Allegro sampling ([`crate::sampling`])
+//! consumes a full trace and emits a reduced one whose records carry
+//! `weight > 1` — each record statistically represents `weight` kernels of
+//! its cluster.
+
+use crate::util::jsonlite::Json;
+use std::io::{self, Read, Write};
+
+/// Memory-access ordering within the workload's logical region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Streaming (weight loads, layer-by-layer).
+    Sequential,
+    /// Uniform random over the region (embedding/feature gathers).
+    Random,
+    /// Fixed-stride sweeps (stencil / grid workloads), stride in sectors.
+    Strided(u32),
+}
+
+impl AccessKind {
+    fn code(&self) -> (u8, u32) {
+        match self {
+            AccessKind::Sequential => (0, 0),
+            AccessKind::Random => (1, 0),
+            AccessKind::Strided(s) => (2, *s),
+        }
+    }
+
+    fn from_code(code: u8, arg: u32) -> io::Result<Self> {
+        match code {
+            0 => Ok(AccessKind::Sequential),
+            1 => Ok(AccessKind::Random),
+            2 => Ok(AccessKind::Strided(arg)),
+            c => Err(io::Error::new(io::ErrorKind::InvalidData, format!("bad access kind {c}"))),
+        }
+    }
+}
+
+/// One kernel launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelRecord {
+    /// Index into [`Trace::names`].
+    pub name_id: u32,
+    /// Grid size (blocks).
+    pub grid: u32,
+    /// Threads per block.
+    pub block: u32,
+    /// Compute cycles per block (on one core).
+    pub cycles_per_block: u64,
+    /// SSD-visible read requests issued by the kernel.
+    pub reads: u32,
+    /// SSD-visible write requests issued by the kernel.
+    pub writes: u32,
+    /// Sectors per request.
+    pub req_sectors: u32,
+    /// Access pattern over the workload region.
+    pub access: AccessKind,
+    /// Sampling weight: this record statistically represents `weight`
+    /// kernels of its cluster (1.0 in full traces).
+    pub weight: f64,
+}
+
+/// A workload trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Kernel-name table (clustering key component).
+    pub names: Vec<String>,
+    pub records: Vec<KernelRecord>,
+    /// Logical footprint of the workload in sectors (addressing region).
+    pub footprint_sectors: u64,
+}
+
+const MAGIC: &[u8; 4] = b"MQMT";
+const VERSION: u32 = 1;
+
+impl Trace {
+    /// Total kernels represented (Σ weights — matches Table 1 counts for
+    /// sampled traces).
+    pub fn represented_kernels(&self) -> f64 {
+        self.records.iter().map(|r| r.weight).sum()
+    }
+
+    pub fn name_of(&self, r: &KernelRecord) -> &str {
+        &self.names[r.name_id as usize]
+    }
+
+    /// Intern a kernel name.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            return i as u32;
+        }
+        self.names.push(name.to_string());
+        (self.names.len() - 1) as u32
+    }
+
+    // ---- binary serialization ------------------------------------------------
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.footprint_sectors.to_le_bytes())?;
+        w.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for n in &self.names {
+            let b = n.as_bytes();
+            w.write_all(&(b.len() as u32).to_le_bytes())?;
+            w.write_all(b)?;
+        }
+        w.write_all(&(self.records.len() as u64).to_le_bytes())?;
+        for r in &self.records {
+            let (code, arg) = r.access.code();
+            w.write_all(&r.name_id.to_le_bytes())?;
+            w.write_all(&r.grid.to_le_bytes())?;
+            w.write_all(&r.block.to_le_bytes())?;
+            w.write_all(&r.cycles_per_block.to_le_bytes())?;
+            w.write_all(&r.reads.to_le_bytes())?;
+            w.write_all(&r.writes.to_le_bytes())?;
+            w.write_all(&r.req_sectors.to_le_bytes())?;
+            w.write_all(&[code])?;
+            w.write_all(&arg.to_le_bytes())?;
+            w.write_all(&r.weight.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> io::Result<Trace> {
+        fn u32_of<R: Read>(r: &mut R) -> io::Result<u32> {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            Ok(u32::from_le_bytes(b))
+        }
+        fn u64_of<R: Read>(r: &mut R) -> io::Result<u64> {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            Ok(u64::from_le_bytes(b))
+        }
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad trace magic"));
+        }
+        let version = u32_of(r)?;
+        if version != VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unsupported trace version {version}"),
+            ));
+        }
+        let footprint_sectors = u64_of(r)?;
+        let n_names = u32_of(r)? as usize;
+        let mut names = Vec::with_capacity(n_names);
+        for _ in 0..n_names {
+            let len = u32_of(r)? as usize;
+            let mut buf = vec![0u8; len];
+            r.read_exact(&mut buf)?;
+            names.push(String::from_utf8(buf).map_err(|e| {
+                io::Error::new(io::ErrorKind::InvalidData, format!("bad name: {e}"))
+            })?);
+        }
+        let n_records = u64_of(r)? as usize;
+        let mut records = Vec::with_capacity(n_records);
+        for _ in 0..n_records {
+            let name_id = u32_of(r)?;
+            let grid = u32_of(r)?;
+            let block = u32_of(r)?;
+            let cycles_per_block = u64_of(r)?;
+            let reads = u32_of(r)?;
+            let writes = u32_of(r)?;
+            let req_sectors = u32_of(r)?;
+            let mut code = [0u8; 1];
+            r.read_exact(&mut code)?;
+            let arg = u32_of(r)?;
+            let mut wb = [0u8; 8];
+            r.read_exact(&mut wb)?;
+            records.push(KernelRecord {
+                name_id,
+                grid,
+                block,
+                cycles_per_block,
+                reads,
+                writes,
+                req_sectors,
+                access: AccessKind::from_code(code[0], arg)?,
+                weight: f64::from_le_bytes(wb),
+            });
+        }
+        Ok(Trace { names, records, footprint_sectors })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &std::path::Path) -> io::Result<Trace> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Trace::read_from(&mut f)
+    }
+
+    /// Summary for reports and the Table-1 bench.
+    pub fn summary(&self) -> Json {
+        Json::from_pairs(vec![
+            ("records", self.records.len().into()),
+            ("represented_kernels", self.represented_kernels().into()),
+            ("unique_names", self.names.len().into()),
+            ("footprint_sectors", self.footprint_sectors.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace { footprint_sectors: 1 << 20, ..Default::default() };
+        let a = t.intern("gemm_128x128");
+        let b = t.intern("softmax");
+        assert_eq!(t.intern("gemm_128x128"), a, "intern must dedupe");
+        t.records = vec![
+            KernelRecord {
+                name_id: a,
+                grid: 256,
+                block: 256,
+                cycles_per_block: 12_000,
+                reads: 64,
+                writes: 8,
+                req_sectors: 4,
+                access: AccessKind::Sequential,
+                weight: 1.0,
+            },
+            KernelRecord {
+                name_id: b,
+                grid: 64,
+                block: 128,
+                cycles_per_block: 3_000,
+                reads: 4,
+                writes: 4,
+                req_sectors: 1,
+                access: AccessKind::Random,
+                weight: 57.5,
+            },
+            KernelRecord {
+                name_id: a,
+                grid: 128,
+                block: 256,
+                cycles_per_block: 11_000,
+                reads: 32,
+                writes: 4,
+                req_sectors: 2,
+                access: AccessKind::Strided(16),
+                weight: 2.0,
+            },
+        ];
+        t
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let t = sample_trace();
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let re = Trace::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, re);
+    }
+
+    #[test]
+    fn represented_kernels_sums_weights() {
+        let t = sample_trace();
+        assert!((t.represented_kernels() - 60.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_corrupt_input() {
+        let t = sample_trace();
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        buf[0] = b'X';
+        assert!(Trace::read_from(&mut buf.as_slice()).is_err());
+        // Truncation.
+        let mut buf2 = Vec::new();
+        t.write_to(&mut buf2).unwrap();
+        buf2.truncate(buf2.len() / 2);
+        assert!(Trace::read_from(&mut buf2.as_slice()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("mqms_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.mqmt");
+        t.save(&p).unwrap();
+        assert_eq!(Trace::load(&p).unwrap(), t);
+    }
+}

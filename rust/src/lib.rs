@@ -1,0 +1,66 @@
+//! # MQMS — performance-aware allocation for accelerated ML on GPU-SSD systems
+//!
+//! Reproduction of *Towards Performance-Aware Allocation for Accelerated
+//! Machine Learning on GPU-SSD Systems* (Gundawar, Chung, Kim — CS.AR 2024).
+//!
+//! MQMS is a discrete-event GPU-SSD co-simulator in which the GPU timing
+//! model issues I/O directly into a fully modeled NVMe SSD (multi-queue host
+//! interface, FTL, transaction scheduling unit, flash back-end). The paper's
+//! two contributions are first-class, switchable features of the FTL:
+//!
+//! * **Dynamic address allocation** ([`ssd::ftl::alloc`]) — physical page
+//!   addresses chosen at service time from any idle plane, scaling write
+//!   throughput as `O(min(n, p))` over `p` planes.
+//! * **Fine-grained address mapping** ([`ssd::ftl::mapping`]) — sector-level
+//!   logical→physical mapping that services small writes without
+//!   read-modify-write amplification.
+//!
+//! The baseline (MQSim-MacSim) behaviour — static CWDP/CDWP/WCDP allocation,
+//! page-granularity mapping, CPU-mediated I/O path — is available through the
+//! same [`config::SimConfig`], so every experiment is an A/B over one world.
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`sim`] | discrete-event core: time, event queue, engine |
+//! | [`config`] | typed configuration + JSON load/save + presets |
+//! | [`ssd`] | NVMe MQ → HIL → FTL → TSU → flash back-end |
+//! | [`gpu`] | GPU timing model: kernels, cores, schedulers, traces |
+//! | [`sampling`] | Allegro kernel sampling (k-means + CLT bounds) |
+//! | [`workloads`] | BERT / GPT-2 / ResNet-50 / Rodinia trace generators |
+//! | [`coordinator`] | world wiring, direct vs host path, run loop |
+//! | [`metrics`] | counters, histograms, reports |
+//! | [`runtime`] | PJRT loading/execution of AOT-compiled JAX artifacts |
+//! | [`util`] | rng, stats, jsonlite, cli, quick (prop tests), bench |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mqms::config::SimConfig;
+//! use mqms::coordinator::CoSim;
+//! use mqms::workloads::{WorkloadSpec, synth::SynthPattern};
+//!
+//! let cfg = SimConfig::mqms_enterprise();
+//! let wl = WorkloadSpec::synthetic("rand4k", SynthPattern::random_4k_write(100_000));
+//! let mut sim = CoSim::new(cfg);
+//! sim.add_workload(wl);
+//! let report = sim.run();
+//! println!("IOPS = {:.0}", report.ssd.iops());
+//! ```
+
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod gpu;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod sim;
+pub mod ssd;
+pub mod util;
+pub mod workloads;
+
+pub use config::SimConfig;
+pub use coordinator::CoSim;
+

@@ -1,0 +1,367 @@
+//! `mqms` — CLI launcher for the GPU-SSD co-simulator.
+//!
+//! Subcommands:
+//!
+//! * `run`     — run workloads through a configuration and print the report
+//! * `sweep`   — §4 policy sweep: {rr, lc} × {CWDP, CDWP, WCDP}
+//! * `trace`   — generate a workload trace file
+//! * `sample`  — Allegro-sample a trace file (§3.1)
+//! * `config`  — emit a preset configuration as JSON
+//! * `inspect` — summarize a trace file
+//!
+//! Examples:
+//!
+//! ```text
+//! mqms run --workload bert --scale 0.01 --preset mqms
+//! mqms run --workload bert --scale 0.01 --preset baseline
+//! mqms sweep --scale 0.005
+//! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
+//! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
+//! ```
+
+use mqms::config::{self, AddrScheme, SchedPolicy, SimConfig};
+use mqms::coordinator::CoSim;
+use mqms::gpu::trace::Trace;
+use mqms::sampling::{self, SamplerConfig};
+use mqms::util::bench::{ns, print_table, si};
+use mqms::util::cli::{Args, CliError};
+use mqms::workloads::{self, WorkloadSpec};
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "ab" => cmd_ab(rest),
+        "sweep" => cmd_sweep(rest),
+        "trace" => cmd_trace(rest),
+        "sample" => cmd_sample(rest),
+        "config" => cmd_config(rest),
+        "inspect" => cmd_inspect(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "mqms — GPU-SSD co-simulator (MQMS reproduction)\n\
+     \n\
+     USAGE: mqms <COMMAND> [OPTIONS]\n\
+     \n\
+     COMMANDS:\n\
+       run      run workloads through a configuration, print the report\n\
+       ab       A/B two presets on the same workloads, print deltas\n\
+       sweep    policy sweep {rr,lc} x {CWDP,CDWP,WCDP} (paper §4)\n\
+       trace    generate a workload trace file\n\
+       sample   Allegro-sample a trace (paper §3.1)\n\
+       config   print a preset configuration as JSON\n\
+       inspect  summarize a trace file\n\
+     \n\
+     Run `mqms <COMMAND> --help` for options."
+        .to_string()
+}
+
+fn handle_help(e: CliError, args: &Args) -> anyhow::Error {
+    if matches!(e, CliError::HelpRequested) {
+        println!("{}", args.help());
+        std::process::exit(0);
+    }
+    anyhow::anyhow!("{e}")
+}
+
+/// Resolve a preset or config file.
+fn load_config(preset: &str) -> anyhow::Result<SimConfig> {
+    Ok(match preset {
+        "mqms" => config::mqms_enterprise(),
+        "baseline" => config::baseline_mqsim_macsim(),
+        "pm9a3" => config::pm9a3_like(),
+        "client" => config::client_ssd(),
+        path => SimConfig::load(Path::new(path)).map_err(|e| anyhow::anyhow!(e))?,
+    })
+}
+
+fn load_traces(
+    names: &str,
+    scale: f64,
+    seed: u64,
+    sampled: bool,
+) -> anyhow::Result<Vec<(String, Trace)>> {
+    let mut out = Vec::new();
+    for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let mut trace = if Path::new(name).exists() {
+            Trace::load(Path::new(name))?
+        } else {
+            workloads::by_name(name, scale, seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?
+        };
+        if sampled {
+            let (t, stats) = sampling::sample(&trace, &SamplerConfig::default(), seed);
+            eprintln!(
+                "# {name}: sampled {} -> {} kernels ({}x reduction)",
+                stats.original_kernels,
+                stats.sampled_kernels,
+                stats.reduction_factor() as u64
+            );
+            trace = t;
+        }
+        out.push((name.to_string(), trace));
+    }
+    Ok(out)
+}
+
+fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Args::new("mqms run", "run workloads through a configuration")
+        .opt("preset", Some("mqms"), "mqms | baseline | pm9a3 | client | <config.json>")
+        .opt("workload", Some("bert"), "comma-separated workload names or trace files")
+        .opt("scale", Some("0.01"), "workload scale factor (fraction of Table-1 size)")
+        .opt("seed", Some("42"), "rng seed")
+        .opt("sched", None, "override scheduler: rr | lc | auto")
+        .opt("scheme", None, "override allocation scheme: CWDP | CDWP | WCDP")
+        .flag("no-sample", "replay the full trace (skip Allegro sampling)")
+        .flag("json", "print the full JSON report");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+
+    let mut cfg = load_config(args.get("preset").unwrap())?;
+    cfg.seed = args.get_u64("seed")?;
+    if let Some(s) = args.get("sched") {
+        cfg.gpu.sched =
+            SchedPolicy::parse(s).ok_or_else(|| anyhow::anyhow!("bad sched `{s}`"))?;
+    }
+    if let Some(s) = args.get("scheme") {
+        cfg.ssd.scheme =
+            AddrScheme::parse(s).ok_or_else(|| anyhow::anyhow!("bad scheme `{s}`"))?;
+    }
+    let traces = load_traces(
+        args.get("workload").unwrap(),
+        args.get_f64("scale")?,
+        cfg.seed,
+        !args.get_flag("no-sample"),
+    )?;
+
+    let mut sim = CoSim::new(cfg);
+    for (name, t) in traces {
+        sim.add_workload(WorkloadSpec::trace(&name, t));
+    }
+    let report = sim.run();
+    if args.get_flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        println!("config: {}", report.config_name);
+        println!("simulated end time: {}", ns(report.end_ns as f64));
+        println!("device IOPS: {}", si(report.ssd.iops()));
+        println!("mean device response: {}", ns(report.ssd.mean_response_ns));
+        println!("events: {} | wall: {:.2}s", report.events, report.wall_s);
+        let rows: Vec<(String, Vec<String>)> = report
+            .workloads
+            .iter()
+            .map(|w| {
+                (
+                    w.name.clone(),
+                    vec![
+                        si(w.iops),
+                        ns(w.mean_response_ns),
+                        ns(w.end_ns as f64),
+                        ns(w.predicted_end_ns),
+                        w.kernels_done.to_string(),
+                    ],
+                )
+            })
+            .collect();
+        print_table(
+            "per-workload",
+            &["workload", "IOPS", "mean resp", "end (sampled)", "end (extrapolated)", "kernels"],
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ab(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Args::new("mqms ab", "A/B two configurations on identical workloads")
+        .opt("a", Some("mqms"), "first preset / config file")
+        .opt("b", Some("baseline"), "second preset / config file")
+        .opt("workload", Some("bert"), "comma-separated workloads")
+        .opt("scale", Some("0.002"), "workload scale factor")
+        .opt("seed", Some("42"), "rng seed")
+        .flag("no-sample", "replay the full traces");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+    let seed = args.get_u64("seed")?;
+    let traces = load_traces(
+        args.get("workload").unwrap(),
+        args.get_f64("scale")?,
+        seed,
+        !args.get_flag("no-sample"),
+    )?;
+    let mut reports = Vec::new();
+    for key in ["a", "b"] {
+        let mut cfg = load_config(args.get(key).unwrap())?;
+        cfg.seed = seed;
+        let mut sim = CoSim::new(cfg);
+        for (name, t) in &traces {
+            sim.add_workload(WorkloadSpec::trace(name, t.clone()));
+        }
+        reports.push(sim.run());
+    }
+    let (a, b) = (&reports[0], &reports[1]);
+    let rows = vec![
+        (
+            "IOPS".to_string(),
+            vec![
+                si(a.ssd.iops()),
+                si(b.ssd.iops()),
+                format!("{:.2}x", a.ssd.iops() / b.ssd.iops().max(1e-9)),
+            ],
+        ),
+        (
+            "mean response".to_string(),
+            vec![
+                ns(a.ssd.mean_response_ns),
+                ns(b.ssd.mean_response_ns),
+                format!("{:.2}x", b.ssd.mean_response_ns / a.ssd.mean_response_ns.max(1e-9)),
+            ],
+        ),
+        (
+            "end time".to_string(),
+            vec![
+                ns(a.end_ns as f64),
+                ns(b.end_ns as f64),
+                format!("{:.2}x", b.end_ns as f64 / (a.end_ns as f64).max(1e-9)),
+            ],
+        ),
+        (
+            "completed".to_string(),
+            vec![
+                a.ssd.completed.to_string(),
+                b.ssd.completed.to_string(),
+                "-".to_string(),
+            ],
+        ),
+    ];
+    print_table(
+        &format!("A/B: {} vs {}", a.config_name, b.config_name),
+        &["metric", "A", "B", "A-advantage"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Args::new("mqms sweep", "policy sweep (paper §4): sched x scheme")
+        .opt("preset", Some("mqms"), "base configuration preset")
+        .opt(
+            "workload",
+            Some("backprop,hotspot,lavamd"),
+            "concurrent workloads for the sweep",
+        )
+        .opt("scale", Some("0.02"), "workload scale factor")
+        .opt("seed", Some("42"), "rng seed");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+    let base = load_config(args.get("preset").unwrap())?;
+    let scale = args.get_f64("scale")?;
+    let seed = args.get_u64("seed")?;
+    let names = args.get("workload").unwrap().to_string();
+
+    let mut rows = Vec::new();
+    for sched in [SchedPolicy::RoundRobin, SchedPolicy::LargeChunk] {
+        for scheme in AddrScheme::ALL {
+            let mut cfg = base.clone();
+            cfg.gpu.sched = sched;
+            cfg.ssd.scheme = scheme;
+            cfg.seed = seed;
+            let mut sim = CoSim::new(cfg);
+            for (name, t) in load_traces(&names, scale, seed, true)? {
+                sim.add_workload(WorkloadSpec::trace(&name, t));
+            }
+            let r = sim.run();
+            rows.push((
+                format!("{}+{}", sched.name(), scheme.name()),
+                vec![
+                    si(r.ssd.iops()),
+                    ns(r.ssd.mean_response_ns),
+                    ns(r.end_ns as f64),
+                ],
+            ));
+        }
+    }
+    print_table(
+        "policy sweep",
+        &["combination", "IOPS", "mean resp", "end time"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Args::new("mqms trace", "generate a workload trace file")
+        .opt("workload", Some("bert"), "workload name")
+        .opt("scale", Some("0.01"), "scale factor")
+        .opt("seed", Some("42"), "rng seed")
+        .opt("out", None, "output path (.mqmt)");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+    let name = args.get("workload").unwrap();
+    let trace = workloads::by_name(name, args.get_f64("scale")?, args.get_u64("seed")?)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
+    let out = args
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{name}.mqmt"));
+    trace.save(Path::new(&out))?;
+    println!("{}", trace.summary().pretty());
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_sample(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Args::new("mqms sample", "Allegro-sample a trace (paper §3.1)")
+        .opt("in", None, "input trace path")
+        .opt("out", None, "output trace path")
+        .opt("epsilon", Some("0.05"), "relative error bound")
+        .opt("seed", Some("42"), "rng seed");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+    let input = args.get("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
+    let trace = Trace::load(Path::new(input))?;
+    let cfg = SamplerConfig { epsilon: args.get_f64("epsilon")?, ..Default::default() };
+    let (sampled, stats) = sampling::sample(&trace, &cfg, args.get_u64("seed")?);
+    println!("{}", stats.to_json().pretty());
+    if let Some(out) = args.get("out") {
+        sampled.save(Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_config(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Args::new("mqms config", "print a preset configuration as JSON")
+        .opt("preset", Some("mqms"), "mqms | baseline | pm9a3 | client");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+    let cfg = load_config(args.get("preset").unwrap())?;
+    println!("{}", cfg.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Args::new("mqms inspect", "summarize a trace file")
+        .positional("trace", "trace file (.mqmt)");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+    let trace = Trace::load(Path::new(args.pos(0).unwrap()))?;
+    println!("{}", trace.summary().pretty());
+    Ok(())
+}

@@ -1,0 +1,200 @@
+//! Cross-layer simulation reports: the numbers Figs. 4–9 plot.
+
+use crate::sim::SimTime;
+use crate::util::jsonlite::Json;
+use crate::util::stats::Running;
+
+/// SSD-side scalar summary extracted from [`crate::ssd::metrics::SsdMetrics`].
+#[derive(Debug, Clone, Default)]
+pub struct SsdSummary {
+    iops: f64,
+    pub mean_response_ns: f64,
+    pub read_p99_ns: u64,
+    pub write_p99_ns: u64,
+    pub completed: u64,
+    pub rmw_reads: u64,
+    pub gc_erases: u64,
+    pub flash_reads: u64,
+    pub flash_programs: u64,
+    pub multiplane_batches: u64,
+    pub write_stalls: u64,
+}
+
+impl SsdSummary {
+    /// I/O operations per simulated second (Fig. 4 metric).
+    pub fn iops(&self) -> f64 {
+        self.iops
+    }
+
+    pub fn from_sim(ssd: &crate::ssd::SsdSim) -> Self {
+        Self {
+            iops: ssd.metrics.iops(),
+            mean_response_ns: ssd.metrics.mean_response_ns(),
+            read_p99_ns: ssd.metrics.read_resp.p99(),
+            write_p99_ns: ssd.metrics.write_resp.p99(),
+            completed: ssd.metrics.completed(),
+            rmw_reads: ssd.metrics.rmw_reads,
+            gc_erases: ssd.metrics.gc_erases,
+            flash_reads: ssd.tsu.flash_reads,
+            flash_programs: ssd.tsu.flash_programs,
+            multiplane_batches: ssd.tsu.multiplane_batches,
+            write_stalls: ssd.metrics.write_stalls,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("iops", self.iops.into()),
+            ("mean_response_ns", self.mean_response_ns.into()),
+            ("read_p99_ns", self.read_p99_ns.into()),
+            ("write_p99_ns", self.write_p99_ns.into()),
+            ("completed", self.completed.into()),
+            ("rmw_reads", self.rmw_reads.into()),
+            ("gc_erases", self.gc_erases.into()),
+            ("flash_reads", self.flash_reads.into()),
+            ("flash_programs", self.flash_programs.into()),
+            ("multiplane_batches", self.multiplane_batches.into()),
+            ("write_stalls", self.write_stalls.into()),
+        ])
+    }
+}
+
+/// Per-workload co-simulation outcome.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub name: String,
+    /// Completed SSD requests attributed to this workload.
+    pub io_completed: u64,
+    /// Device IOPS over this workload's active window.
+    pub iops: f64,
+    /// Mean device response time of this workload's requests, ns.
+    pub mean_response_ns: f64,
+    /// Simulated completion time of the (possibly sampled) replay.
+    pub end_ns: SimTime,
+    /// Allegro-extrapolated full-trace end time (Σ weight × duration).
+    pub predicted_end_ns: f64,
+    pub kernels_done: u64,
+}
+
+impl WorkloadReport {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("io_completed", self.io_completed.into()),
+            ("iops", self.iops.into()),
+            ("mean_response_ns", self.mean_response_ns.into()),
+            ("end_ns", self.end_ns.into()),
+            ("predicted_end_ns", self.predicted_end_ns.into()),
+            ("kernels_done", self.kernels_done.into()),
+        ])
+    }
+}
+
+/// Per-source (workload) response-time accumulation used while running.
+#[derive(Debug, Default, Clone)]
+pub struct PerSourceAcc {
+    pub completed: u64,
+    pub response: Running,
+    pub first_submit_ns: Option<SimTime>,
+    pub last_complete_ns: SimTime,
+}
+
+impl PerSourceAcc {
+    pub fn record(&mut self, submit_ns: SimTime, complete_ns: SimTime) {
+        self.completed += 1;
+        self.response.push(complete_ns.saturating_sub(submit_ns) as f64);
+        if self.first_submit_ns.is_none() {
+            self.first_submit_ns = Some(submit_ns);
+        }
+        self.first_submit_ns = Some(self.first_submit_ns.unwrap().min(submit_ns));
+        self.last_complete_ns = self.last_complete_ns.max(complete_ns);
+    }
+
+    pub fn iops(&self) -> f64 {
+        let Some(first) = self.first_submit_ns else { return 0.0 };
+        let w = self.last_complete_ns.saturating_sub(first);
+        if w == 0 {
+            0.0
+        } else {
+            self.completed as f64 / (w as f64 / 1e9)
+        }
+    }
+}
+
+/// Complete co-simulation report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub config_name: String,
+    pub ssd: SsdSummary,
+    pub workloads: Vec<WorkloadReport>,
+    /// Simulated end time (Fig. 6/9 metric).
+    pub end_ns: SimTime,
+    /// Events dispatched (engine throughput diagnostics).
+    pub events: u64,
+    /// Host wall-clock seconds the simulation took.
+    pub wall_s: f64,
+    pub gpu: Option<Json>,
+}
+
+impl Report {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("config", self.config_name.as_str().into()),
+            ("end_ns", self.end_ns.into()),
+            ("events", self.events.into()),
+            ("wall_s", self.wall_s.into()),
+            ("ssd", self.ssd.to_json()),
+            (
+                "workloads",
+                Json::Arr(self.workloads.iter().map(WorkloadReport::to_json).collect()),
+            ),
+            ("gpu", self.gpu.clone().unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_source_iops() {
+        let mut a = PerSourceAcc::default();
+        for i in 0..100u64 {
+            a.record(i * 1_000, i * 1_000 + 50_000);
+        }
+        assert_eq!(a.completed, 100);
+        assert!((a.response.mean() - 50_000.0).abs() < 1.0);
+        assert!(a.iops() > 0.0);
+    }
+
+    #[test]
+    fn report_serializes() {
+        let r = Report {
+            config_name: "t".into(),
+            ssd: SsdSummary::default(),
+            workloads: vec![WorkloadReport {
+                name: "w".into(),
+                io_completed: 5,
+                iops: 100.0,
+                mean_response_ns: 2.0,
+                end_ns: 10,
+                predicted_end_ns: 100.0,
+                kernels_done: 3,
+            }],
+            end_ns: 42,
+            events: 7,
+            wall_s: 0.1,
+            gpu: None,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("end_ns").unwrap().as_u64(), Some(42));
+        assert_eq!(
+            j.get("workloads").unwrap().as_arr().unwrap()[0]
+                .get("name")
+                .unwrap()
+                .as_str(),
+            Some("w")
+        );
+    }
+}

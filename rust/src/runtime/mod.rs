@@ -1,0 +1,260 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO text emitted
+//! by `python/compile/aot.py`) and executes them on the PJRT CPU client.
+//!
+//! This is the rust side of the three-layer architecture: Python lowers the
+//! L2 model (which calls the L1 Pallas kernels) exactly once at build time;
+//! the request path is pure rust. HLO *text* is the interchange format —
+//! jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
+
+use crate::util::jsonlite::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact input, from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (model dims etc.) the examples may need.
+    pub meta: Json,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let hlo_file = a
+                .get("hlo_file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing hlo_file"))?
+                .to_string();
+            let tensor_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}[]"))?
+                    .iter()
+                    .map(|t| {
+                        let shape = t
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("tensor missing shape"))?
+                            .iter()
+                            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?;
+                        let dtype = t
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("f32")
+                            .to_string();
+                        Ok(TensorSpec { shape, dtype })
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                inputs: tensor_list("inputs")?,
+                outputs: tensor_list("outputs")?,
+                meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                name,
+                hlo_file,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// A compiled, executable artifact.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with f32 input buffers (shapes per the manifest). Returns the
+    /// flattened f32 outputs in manifest order.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if buf.len() != spec.elements() {
+                return Err(anyhow!(
+                    "{}: input size {} != shape {:?}",
+                    self.spec.name,
+                    buf.len(),
+                    spec.shape
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT runtime: one CPU client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact from a manifest.
+    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<&LoadedModel> {
+        if !self.models.contains_key(name) {
+            let spec = manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+                .clone();
+            let path = manifest.dir.join(&spec.hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.models.insert(name.to_string(), LoadedModel { spec, exe });
+        }
+        Ok(&self.models[name])
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LoadedModel> {
+        self.models.get(name)
+    }
+
+    /// Load an artifact's weights file (`meta.weights_file`): concatenated
+    /// little-endian f32 arrays in input order (inputs `1..`, input 0 being
+    /// the activation/ids tensor). Returns one buffer per weight input.
+    pub fn load_weights(manifest: &Manifest, spec: &ArtifactSpec) -> Result<Vec<Vec<f32>>> {
+        let file = spec
+            .meta
+            .get("weights_file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{}: no weights_file in meta", spec.name))?;
+        let bytes = std::fs::read(manifest.dir.join(file))
+            .with_context(|| format!("reading weights {file}"))?;
+        let mut out = Vec::with_capacity(spec.inputs.len().saturating_sub(1));
+        let mut off = 0usize;
+        for input in &spec.inputs[1..] {
+            let n = input.elements();
+            let end = off + n * 4;
+            if end > bytes.len() {
+                return Err(anyhow!(
+                    "{}: weights file too short ({} < {end})",
+                    spec.name,
+                    bytes.len()
+                ));
+            }
+            let buf: Vec<f32> = bytes[off..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.push(buf);
+            off = end;
+        }
+        if off != bytes.len() {
+            return Err(anyhow!(
+                "{}: weights file has {} trailing bytes",
+                spec.name,
+                bytes.len() - off
+            ));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("mqms_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{
+                "name": "m",
+                "hlo_file": "m.hlo.txt",
+                "inputs": [{"shape": [2, 3], "dtype": "f32"}],
+                "outputs": [{"shape": [2], "dtype": "f32"}],
+                "meta": {"layers": 2}
+            }]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("m").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].elements(), 6);
+        assert_eq!(a.meta.get("layers").unwrap().as_u64(), Some(2));
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_contextual_error() {
+        let err = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

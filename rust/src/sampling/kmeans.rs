@@ -1,0 +1,125 @@
+//! Exact 1-D 2-means: the cluster-splitting primitive of Allegro's recursive
+//! kernel clustering (paper §3.1).
+//!
+//! For one dimension and k = 2, the optimal clustering is a threshold split;
+//! we find the split minimizing within-cluster sum of squares exactly with a
+//! sorted prefix-sum sweep — deterministic, O(n log n), and free of the
+//! init-sensitivity of Lloyd iterations.
+
+/// Result of a 2-means split over values `v`: indices below the threshold go
+/// left, the rest right.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Split {
+    /// Threshold value: `v < threshold` → left cluster.
+    pub threshold: f64,
+    pub left_count: usize,
+    pub right_count: usize,
+    /// Within-cluster sum of squares after the split.
+    pub wcss: f64,
+    /// Total sum of squares before the split.
+    pub tss: f64,
+}
+
+/// Find the optimal 2-means threshold of `values`. Returns `None` when all
+/// values are (nearly) identical or fewer than 2 points exist.
+pub fn split_1d(values: &[f64]) -> Option<Split> {
+    let n = values.len();
+    if n < 2 {
+        return None;
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if (sorted[n - 1] - sorted[0]).abs() < 1e-12 * sorted[n - 1].abs().max(1.0) {
+        return None; // degenerate: no spread
+    }
+    // Prefix sums for O(1) cluster statistics.
+    let mut prefix = Vec::with_capacity(n + 1);
+    let mut prefix2 = Vec::with_capacity(n + 1);
+    prefix.push(0.0);
+    prefix2.push(0.0);
+    for &v in &sorted {
+        prefix.push(prefix.last().unwrap() + v);
+        prefix2.push(prefix2.last().unwrap() + v * v);
+    }
+    let sse = |lo: usize, hi: usize| -> f64 {
+        // Sum of squared deviations of sorted[lo..hi].
+        let m = (hi - lo) as f64;
+        if m < 1.0 {
+            return 0.0;
+        }
+        let s = prefix[hi] - prefix[lo];
+        let s2 = prefix2[hi] - prefix2[lo];
+        (s2 - s * s / m).max(0.0)
+    };
+    let tss = sse(0, n);
+    let mut best: Option<(usize, f64)> = None;
+    for cut in 1..n {
+        // Skip cuts inside a run of equal values (threshold must separate).
+        if sorted[cut] == sorted[cut - 1] {
+            continue;
+        }
+        let w = sse(0, cut) + sse(cut, n);
+        if best.map_or(true, |(_, bw)| w < bw) {
+            best = Some((cut, w));
+        }
+    }
+    let (cut, wcss) = best?;
+    Some(Split {
+        threshold: (sorted[cut - 1] + sorted[cut]) / 2.0,
+        left_count: cut,
+        right_count: n - cut,
+        wcss,
+        tss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_clear_clusters() {
+        let mut v: Vec<f64> = Vec::new();
+        v.extend((0..50).map(|i| 10.0 + (i % 5) as f64 * 0.1));
+        v.extend((0..30).map(|i| 100.0 + (i % 7) as f64 * 0.2));
+        let s = split_1d(&v).unwrap();
+        assert_eq!(s.left_count, 50);
+        assert_eq!(s.right_count, 30);
+        assert!(s.threshold > 11.0 && s.threshold < 100.0);
+        // Split removes almost all variance.
+        assert!(s.wcss < 0.05 * s.tss, "wcss {} tss {}", s.wcss, s.tss);
+    }
+
+    #[test]
+    fn degenerate_inputs_return_none() {
+        assert!(split_1d(&[]).is_none());
+        assert!(split_1d(&[5.0]).is_none());
+        assert!(split_1d(&[3.0, 3.0, 3.0]).is_none());
+    }
+
+    #[test]
+    fn split_counts_sum_to_n() {
+        let v: Vec<f64> = (0..101).map(|i| (i as f64).powi(2)).collect();
+        let s = split_1d(&v).unwrap();
+        assert_eq!(s.left_count + s.right_count, v.len());
+        assert!(s.wcss <= s.tss);
+    }
+
+    #[test]
+    fn threshold_separates_values() {
+        let v = vec![1.0, 2.0, 9.0, 10.0, 11.0];
+        let s = split_1d(&v).unwrap();
+        let left: Vec<f64> = v.iter().copied().filter(|&x| x < s.threshold).collect();
+        assert_eq!(left.len(), s.left_count);
+        assert_eq!(s.left_count, 2);
+    }
+
+    #[test]
+    fn order_invariant() {
+        let mut a = vec![5.0, 1.0, 9.0, 2.0, 8.0, 1.5];
+        let s1 = split_1d(&a).unwrap();
+        a.reverse();
+        let s2 = split_1d(&a).unwrap();
+        assert_eq!(s1, s2);
+    }
+}

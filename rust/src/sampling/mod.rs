@@ -1,0 +1,306 @@
+//! Allegro kernel sampling (paper §3.1).
+//!
+//! ML workloads repeat kernels with i.i.d. execution times inside structural
+//! clusters, so a statistically chosen sample of each cluster predicts the
+//! whole trace. The pipeline:
+//!
+//! 1. **Structural clustering** — group kernels by (name, grid, block).
+//! 2. **Recursive refinement** — split groups whose execution-time
+//!    distribution is heterogeneous (coefficient of variation above the
+//!    threshold) with exact 1-D 2-means ([`kmeans::split_1d`]), until each
+//!    cluster is homogeneous.
+//! 3. **CLT sample sizing** — for a cluster with CoV `c`, the minimum sample
+//!    count holding relative error `ε` at confidence `z` is
+//!    `m_min = ⌈(z·c/ε)²⌉` (sampled means converge as `N(μ, σ²/m)`).
+//! 4. **Sampling** — keep `m_min` kernels per cluster, each weighted
+//!    `N/m_min`, so `Y = Σ Nᵢ·X̄ᵢ` extrapolates the full-trace totals.
+
+pub mod kmeans;
+
+use crate::gpu::trace::{KernelRecord, Trace};
+use crate::util::jsonlite::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Running;
+
+/// Sampler parameters (defaults follow the paper: 95 % confidence).
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// Relative error bound ε.
+    pub epsilon: f64,
+    /// Confidence z-score (1.96 ≙ 95 %).
+    pub z: f64,
+    /// Stop splitting clusters whose execution-time CoV is below this.
+    pub cov_threshold: f64,
+    /// Never split clusters smaller than this.
+    pub min_cluster: usize,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self { epsilon: 0.05, z: 1.96, cov_threshold: 0.10, min_cluster: 8 }
+    }
+}
+
+/// Per-cluster sampling summary.
+#[derive(Debug, Clone)]
+pub struct ClusterInfo {
+    pub name: String,
+    pub grid: u32,
+    pub block: u32,
+    pub kernels: usize,
+    pub sampled: usize,
+    pub mean_exec: f64,
+    pub cov: f64,
+}
+
+/// Whole-trace sampling statistics.
+#[derive(Debug, Clone)]
+pub struct SamplingStats {
+    pub original_kernels: usize,
+    pub sampled_kernels: usize,
+    pub clusters: Vec<ClusterInfo>,
+    pub epsilon: f64,
+    pub z: f64,
+}
+
+impl SamplingStats {
+    pub fn reduction_factor(&self) -> f64 {
+        if self.sampled_kernels == 0 {
+            return 0.0;
+        }
+        self.original_kernels as f64 / self.sampled_kernels as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("original_kernels", self.original_kernels.into()),
+            ("sampled_kernels", self.sampled_kernels.into()),
+            ("reduction_factor", self.reduction_factor().into()),
+            ("clusters", self.clusters.len().into()),
+            ("epsilon", self.epsilon.into()),
+            ("z", self.z.into()),
+        ])
+    }
+}
+
+/// Execution-time proxy for clustering: total compute cycles of the launch.
+fn exec_metric(r: &KernelRecord) -> f64 {
+    r.cycles_per_block as f64 * r.grid as f64
+}
+
+/// CLT minimum sample count for a cluster.
+pub fn m_min(cov: f64, epsilon: f64, z: f64, n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let m = ((z * cov / epsilon).powi(2)).ceil() as usize;
+    m.clamp(1, n)
+}
+
+/// Sample a trace: returns the reduced trace plus statistics.
+///
+/// The sampled trace preserves [`Trace::footprint_sectors`] and the name
+/// table; record weights carry the cluster scale factors.
+pub fn sample(trace: &Trace, cfg: &SamplerConfig, seed: u64) -> (Trace, SamplingStats) {
+    let mut rng = Pcg64::new(seed);
+    // 1. structural clustering by (name, grid, block)
+    let mut groups: std::collections::HashMap<(u32, u32, u32), Vec<usize>> =
+        std::collections::HashMap::new();
+    for (i, r) in trace.records.iter().enumerate() {
+        groups.entry((r.name_id, r.grid, r.block)).or_default().push(i);
+    }
+    // Deterministic order.
+    let mut keys: Vec<_> = groups.keys().copied().collect();
+    keys.sort();
+
+    let mut out = Trace {
+        names: trace.names.clone(),
+        records: Vec::new(),
+        footprint_sectors: trace.footprint_sectors,
+    };
+    let mut clusters = Vec::new();
+    for key in keys {
+        let members = &groups[&key];
+        // 2. recursive CoV-driven refinement
+        let mut stack = vec![members.clone()];
+        let mut leaves: Vec<Vec<usize>> = Vec::new();
+        while let Some(cluster) = stack.pop() {
+            let mut stat = Running::new();
+            for &i in &cluster {
+                stat.push(exec_metric(&trace.records[i]));
+            }
+            let heterogeneous =
+                stat.cov() > cfg.cov_threshold && cluster.len() >= cfg.min_cluster * 2;
+            if heterogeneous {
+                let values: Vec<f64> =
+                    cluster.iter().map(|&i| exec_metric(&trace.records[i])).collect();
+                if let Some(split) = kmeans::split_1d(&values) {
+                    let (mut left, mut right) = (Vec::new(), Vec::new());
+                    for &i in &cluster {
+                        if exec_metric(&trace.records[i]) < split.threshold {
+                            left.push(i);
+                        } else {
+                            right.push(i);
+                        }
+                    }
+                    if !left.is_empty() && !right.is_empty() {
+                        stack.push(left);
+                        stack.push(right);
+                        continue;
+                    }
+                }
+            }
+            leaves.push(cluster);
+        }
+        // 3+4. CLT sizing and weighted sampling per leaf
+        for leaf in leaves {
+            let n = leaf.len();
+            let mut stat = Running::new();
+            for &i in &leaf {
+                stat.push(exec_metric(&trace.records[i]));
+            }
+            let m = m_min(stat.cov(), cfg.epsilon, cfg.z, n);
+            // Uniform sample without replacement.
+            let mut pool = leaf.clone();
+            rng.shuffle(&mut pool);
+            let weight = n as f64 / m as f64;
+            for &i in pool.iter().take(m) {
+                let mut rec = trace.records[i].clone();
+                rec.weight = trace.records[i].weight * weight;
+                out.records.push(rec);
+            }
+            clusters.push(ClusterInfo {
+                name: trace.names[key.0 as usize].clone(),
+                grid: key.1,
+                block: key.2,
+                kernels: n,
+                sampled: m,
+                mean_exec: stat.mean(),
+                cov: stat.cov(),
+            });
+        }
+    }
+    let stats = SamplingStats {
+        original_kernels: trace.records.len(),
+        sampled_kernels: out.records.len(),
+        clusters,
+        epsilon: cfg.epsilon,
+        z: cfg.z,
+    };
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::trace::AccessKind;
+
+    /// Build a trace with `n` kernels of one structural identity whose exec
+    /// times are homogeneous (low CoV).
+    fn homogeneous_trace(n: usize) -> Trace {
+        let mut t = Trace { footprint_sectors: 1 << 16, ..Default::default() };
+        let id = t.intern("gemm");
+        let mut rng = Pcg64::new(5);
+        t.records = (0..n)
+            .map(|_| KernelRecord {
+                name_id: id,
+                grid: 128,
+                block: 256,
+                cycles_per_block: 10_000 + rng.below(200), // CoV ≈ 0.006
+                reads: 8,
+                writes: 2,
+                req_sectors: 1,
+                access: AccessKind::Sequential,
+                weight: 1.0,
+            })
+            .collect();
+        t
+    }
+
+    #[test]
+    fn m_min_formula() {
+        // CoV 0.1, ε 0.05, z 1.96 → (1.96*0.1/0.05)² = 15.37 → 16
+        assert_eq!(m_min(0.1, 0.05, 1.96, 1000), 16);
+        // Clamped to population.
+        assert_eq!(m_min(2.0, 0.01, 1.96, 50), 50);
+        // Degenerate cov → 1 sample suffices.
+        assert_eq!(m_min(0.0, 0.05, 1.96, 1000), 1);
+        assert_eq!(m_min(0.5, 0.05, 1.96, 0), 0);
+    }
+
+    #[test]
+    fn homogeneous_cluster_collapses() {
+        let t = homogeneous_trace(10_000);
+        let (sampled, stats) = sample(&t, &SamplerConfig::default(), 1);
+        assert!(stats.reduction_factor() > 100.0, "rf {}", stats.reduction_factor());
+        // Weights preserve the population count.
+        let total: f64 = sampled.represented_kernels();
+        assert!((total - 10_000.0).abs() < 1e-6, "total {total}");
+    }
+
+    #[test]
+    fn heterogeneous_cluster_splits() {
+        // Same structural identity but bimodal exec times.
+        let mut t = homogeneous_trace(2000);
+        for (i, r) in t.records.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                r.cycles_per_block *= 20; // fast/slow modes
+            }
+        }
+        let (_, stats) = sample(&t, &SamplerConfig::default(), 1);
+        assert!(stats.clusters.len() >= 2, "clusters {}", stats.clusters.len());
+        // Each leaf must now be homogeneous.
+        for c in &stats.clusters {
+            assert!(c.cov <= 0.15, "leaf cov {} too high", c.cov);
+        }
+    }
+
+    #[test]
+    fn distinct_names_never_merge() {
+        let mut t = Trace { footprint_sectors: 1, ..Default::default() };
+        let a = t.intern("a");
+        let b = t.intern("b");
+        for id in [a, b] {
+            for _ in 0..100 {
+                t.records.push(KernelRecord {
+                    name_id: id,
+                    grid: 1,
+                    block: 1,
+                    cycles_per_block: 100,
+                    reads: 0,
+                    writes: 0,
+                    req_sectors: 1,
+                    access: AccessKind::Random,
+                    weight: 1.0,
+                });
+            }
+        }
+        let (_, stats) = sample(&t, &SamplerConfig::default(), 3);
+        assert_eq!(stats.clusters.len(), 2);
+        assert!(stats.clusters.iter().all(|c| c.kernels == 100));
+    }
+
+    #[test]
+    fn extrapolated_total_time_within_epsilon() {
+        // The estimator Y = Σ Nᵢ·X̄ᵢ must recover the true total exec metric
+        // within a few ε.
+        let mut t = homogeneous_trace(20_000);
+        let mut rng = Pcg64::new(11);
+        for r in t.records.iter_mut() {
+            r.cycles_per_block = (10_000.0 * rng.lognormal(0.0, 0.08)) as u64;
+        }
+        let truth: f64 = t.records.iter().map(exec_metric).sum();
+        let (sampled, _) = sample(&t, &SamplerConfig::default(), 5);
+        let estimate: f64 = sampled.records.iter().map(|r| exec_metric(r) * r.weight).sum();
+        let rel = (estimate - truth).abs() / truth;
+        assert!(rel < 0.10, "relative error {rel}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let t = homogeneous_trace(5000);
+        let (s1, _) = sample(&t, &SamplerConfig::default(), 42);
+        let (s2, _) = sample(&t, &SamplerConfig::default(), 42);
+        assert_eq!(s1, s2);
+    }
+}

@@ -1,0 +1,175 @@
+//! Priority event queue: the heart of the discrete-event engine.
+//!
+//! Events are ordered by `(time, sequence)`; the sequence number makes
+//! same-timestamp ordering deterministic (FIFO in scheduling order), which is
+//! essential for reproducible simulations.
+
+use super::time::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    at: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, o: &Self) -> bool {
+        self.at == o.at && self.seq == o.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        o.at.cmp(&self.at).then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic earliest-first event queue.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: SimTime,
+    scheduled_total: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, now: 0, scheduled_total: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap), seq: 0, now: 0, scheduled_total: 0 }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at`. Scheduling in the past is a bug;
+    /// the event is clamped to `now` in release builds and panics in debug.
+    #[inline]
+    pub fn schedule_at(&mut self, at: SimTime, ev: E) {
+        debug_assert!(at >= self.now, "scheduling into the past: {} < {}", at, self.now);
+        let at = at.max(self.now);
+        self.heap.push(Entry { at, seq: self.seq, ev });
+        self.seq += 1;
+        self.scheduled_total += 1;
+    }
+
+    /// Schedule `ev` after a delay relative to `now`.
+    #[inline]
+    pub fn schedule_in(&mut self, delay: SimTime, ev: E) {
+        self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Pop the earliest event, advancing `now` to its timestamp.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| {
+            self.now = e.at;
+            (e.at, e.ev)
+        })
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events ever scheduled (engine throughput statistics).
+    pub fn scheduled_total(&self) -> u64 {
+        self.scheduled_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn earliest_first() {
+        let mut q = EventQueue::new();
+        q.schedule_at(30, "c");
+        q.schedule_at(10, "a");
+        q.schedule_at(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_within_timestamp() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule_at(5, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((5, i)));
+        }
+    }
+
+    #[test]
+    fn now_advances_with_pop() {
+        let mut q = EventQueue::new();
+        q.schedule_at(7, ());
+        assert_eq!(q.now(), 0);
+        q.pop();
+        assert_eq!(q.now(), 7);
+        q.schedule_in(3, ());
+        assert_eq!(q.peek_time(), Some(10));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // debug_assert-backed guard
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_scheduling_panics_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10, ());
+        q.pop();
+        q.schedule_at(5, ());
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_is_deterministic() {
+        let run = || {
+            let mut q = EventQueue::new();
+            let mut order = Vec::new();
+            q.schedule_at(1, 100);
+            q.schedule_at(1, 101);
+            while let Some((t, v)) = q.pop() {
+                order.push((t, v));
+                if v < 110 {
+                    q.schedule_in(2, v + 10);
+                    q.schedule_in(1, v + 1000);
+                }
+            }
+            order
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,14 @@
+//! Discrete-event simulation core shared by the SSD and GPU models.
+//!
+//! Time is a `u64` nanosecond counter ([`SimTime`]); components communicate
+//! exclusively by scheduling typed events on the [`EventQueue`]. The
+//! [`Engine`] drives a [`World`] (the dispatcher owning all component state)
+//! to quiescence or to a time bound.
+
+pub mod engine;
+pub mod events;
+pub mod time;
+
+pub use engine::{Engine, World};
+pub use events::EventQueue;
+pub use time::{SimTime, MICROS, MILLIS, SECS};

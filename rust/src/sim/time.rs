@@ -1,0 +1,74 @@
+//! Simulation time: `u64` nanoseconds since simulation start.
+
+/// Simulated time in nanoseconds.
+pub type SimTime = u64;
+
+/// One microsecond in [`SimTime`] units.
+pub const MICROS: SimTime = 1_000;
+/// One millisecond in [`SimTime`] units.
+pub const MILLIS: SimTime = 1_000_000;
+/// One second in [`SimTime`] units.
+pub const SECS: SimTime = 1_000_000_000;
+
+/// Convert microseconds to [`SimTime`].
+#[inline]
+pub const fn us(v: u64) -> SimTime {
+    v * MICROS
+}
+
+/// Convert milliseconds to [`SimTime`].
+#[inline]
+pub const fn ms(v: u64) -> SimTime {
+    v * MILLIS
+}
+
+/// Convert a byte count and a bandwidth in MB/s to a transfer time.
+#[inline]
+pub fn transfer_ns(bytes: u64, mb_per_s: f64) -> SimTime {
+    if mb_per_s <= 0.0 {
+        return 0;
+    }
+    // bytes / (MB/s * 1e6 B/s) seconds → ns
+    ((bytes as f64) / (mb_per_s * 1e6) * 1e9).round() as SimTime
+}
+
+/// Human-readable formatting of a [`SimTime`].
+pub fn fmt(t: SimTime) -> String {
+    if t >= SECS {
+        format!("{:.3}s", t as f64 / SECS as f64)
+    } else if t >= MILLIS {
+        format!("{:.3}ms", t as f64 / MILLIS as f64)
+    } else if t >= MICROS {
+        format!("{:.3}us", t as f64 / MICROS as f64)
+    } else {
+        format!("{t}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(us(3), 3_000);
+        assert_eq!(ms(2), 2_000_000);
+        assert_eq!(SECS, 1_000_000_000);
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 16 KB at 1200 MB/s ≈ 13.65 us
+        let t = transfer_ns(16 * 1024, 1200.0);
+        assert!((t as i64 - 13_653).abs() < 10, "t {t}");
+        assert_eq!(transfer_ns(1024, 0.0), 0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt(500), "500ns");
+        assert_eq!(fmt(2_500), "2.500us");
+        assert_eq!(fmt(2_500_000), "2.500ms");
+        assert_eq!(fmt(1_500_000_000), "1.500s");
+    }
+}

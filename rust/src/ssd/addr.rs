@@ -1,0 +1,282 @@
+//! Physical/logical addressing and geometry decomposition.
+//!
+//! The SSD is organized as `channels × ways (chips) × dies × planes`, each
+//! plane holding `blocks_per_plane × pages_per_block` flash pages of
+//! `page_bytes`, mapped in `sector_bytes` units. Flat indices:
+//!
+//! * `die_id  = ((channel * ways) + way) * dies + die`
+//! * `plane_id = die_id * planes + plane`
+//!
+//! The static address-allocation schemes (CWDP/CDWP/WCDP, §4) decompose a
+//! logical page number into (channel, way, die, plane) by striping across the
+//! listed dimensions in priority order.
+
+use crate::config::{AddrScheme, SsdConfig};
+
+/// Flat plane index.
+pub type PlaneId = u32;
+/// Flat die index.
+pub type DieId = u32;
+/// Flat channel index.
+pub type ChannelId = u32;
+
+/// Physical page address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PhysPage {
+    pub plane: PlaneId,
+    pub block: u32,
+    pub page: u32,
+}
+
+/// Physical sector address (fine-grained mapping unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PhysSector {
+    pub page: PhysPage,
+    /// Sector slot within the page, `0..sectors_per_page`.
+    pub slot: u32,
+}
+
+/// Compact encoding of a [`PhysSector`] into a `u64` for dense map tables:
+/// `[plane:20][block:16][page:20][slot:8]`, with `u64::MAX` = unmapped.
+pub const UNMAPPED: u64 = u64::MAX;
+
+pub fn encode_sector(s: PhysSector) -> u64 {
+    debug_assert!(s.page.plane < (1 << 20));
+    debug_assert!(s.page.block < (1 << 16));
+    debug_assert!(s.page.page < (1 << 20));
+    debug_assert!(s.slot < (1 << 8));
+    ((s.page.plane as u64) << 44)
+        | ((s.page.block as u64) << 28)
+        | ((s.page.page as u64) << 8)
+        | s.slot as u64
+}
+
+pub fn decode_sector(v: u64) -> PhysSector {
+    PhysSector {
+        page: PhysPage {
+            plane: ((v >> 44) & 0xF_FFFF) as u32,
+            block: ((v >> 28) & 0xFFFF) as u32,
+            page: ((v >> 8) & 0xF_FFFF) as u32,
+        },
+        slot: (v & 0xFF) as u32,
+    }
+}
+
+/// Immutable geometry derived from an [`SsdConfig`].
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub channels: u32,
+    pub ways: u32,
+    pub dies: u32,
+    pub planes: u32,
+    pub blocks_per_plane: u32,
+    pub pages_per_block: u32,
+    pub page_bytes: u32,
+    pub sector_bytes: u32,
+    pub sectors_per_page: u32,
+}
+
+impl Geometry {
+    pub fn new(c: &SsdConfig) -> Self {
+        Self {
+            channels: c.channels,
+            ways: c.ways,
+            dies: c.dies,
+            planes: c.planes,
+            blocks_per_plane: c.blocks_per_plane,
+            pages_per_block: c.pages_per_block,
+            page_bytes: c.page_bytes,
+            sector_bytes: c.sector_bytes,
+            sectors_per_page: c.sectors_per_page(),
+        }
+    }
+
+    #[inline]
+    pub fn total_dies(&self) -> u32 {
+        self.channels * self.ways * self.dies
+    }
+
+    #[inline]
+    pub fn total_planes(&self) -> u32 {
+        self.total_dies() * self.planes
+    }
+
+    /// Flat die id from coordinates.
+    #[inline]
+    pub fn die_id(&self, channel: u32, way: u32, die: u32) -> DieId {
+        ((channel * self.ways) + way) * self.dies + die
+    }
+
+    /// Flat plane id from coordinates.
+    #[inline]
+    pub fn plane_id(&self, channel: u32, way: u32, die: u32, plane: u32) -> PlaneId {
+        self.die_id(channel, way, die) * self.planes + plane
+    }
+
+    /// Die containing a plane.
+    #[inline]
+    pub fn die_of_plane(&self, plane: PlaneId) -> DieId {
+        plane / self.planes
+    }
+
+    /// Channel serving a die.
+    #[inline]
+    pub fn channel_of_die(&self, die: DieId) -> ChannelId {
+        die / (self.ways * self.dies)
+    }
+
+    /// Channel serving a plane.
+    #[inline]
+    pub fn channel_of_plane(&self, plane: PlaneId) -> ChannelId {
+        self.channel_of_die(self.die_of_plane(plane))
+    }
+
+    /// Planes of a die, as a flat-index range.
+    #[inline]
+    pub fn planes_of_die(&self, die: DieId) -> std::ops::Range<u32> {
+        let base = die * self.planes;
+        base..base + self.planes
+    }
+
+    /// Decompose a logical page number into a plane under a static
+    /// allocation scheme: stripe across dimensions in the scheme's priority
+    /// order (first letter varies fastest).
+    pub fn static_plane(&self, lpn: u64, scheme: AddrScheme) -> PlaneId {
+        let (c, w, d, p);
+        let cc = self.channels as u64;
+        let ww = self.ways as u64;
+        let dd = self.dies as u64;
+        let pp = self.planes as u64;
+        match scheme {
+            AddrScheme::Cwdp => {
+                c = lpn % cc;
+                w = (lpn / cc) % ww;
+                d = (lpn / (cc * ww)) % dd;
+                p = (lpn / (cc * ww * dd)) % pp;
+            }
+            AddrScheme::Cdwp => {
+                c = lpn % cc;
+                d = (lpn / cc) % dd;
+                w = (lpn / (cc * dd)) % ww;
+                p = (lpn / (cc * dd * ww)) % pp;
+            }
+            AddrScheme::Wcdp => {
+                w = lpn % ww;
+                c = (lpn / ww) % cc;
+                d = (lpn / (ww * cc)) % dd;
+                p = (lpn / (ww * cc * dd)) % pp;
+            }
+        }
+        self.plane_id(c as u32, w as u32, d as u32, p as u32)
+    }
+
+    /// Pages per plane.
+    #[inline]
+    pub fn pages_per_plane(&self) -> u64 {
+        self.blocks_per_plane as u64 * self.pages_per_block as u64
+    }
+
+    /// Sector slots per block.
+    #[inline]
+    pub fn sectors_per_block(&self) -> u32 {
+        self.pages_per_block * self.sectors_per_page
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn geo() -> Geometry {
+        Geometry::new(&config::mqms_enterprise().ssd)
+    }
+
+    #[test]
+    fn flat_ids_are_bijective() {
+        let g = geo();
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..g.channels {
+            for w in 0..g.ways {
+                for d in 0..g.dies {
+                    for p in 0..g.planes {
+                        let id = g.plane_id(c, w, d, p);
+                        assert!(seen.insert(id), "duplicate plane id {id}");
+                        assert!(id < g.total_planes());
+                        assert_eq!(g.die_of_plane(id), g.die_id(c, w, d));
+                        assert_eq!(g.channel_of_plane(id), c);
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len() as u32, g.total_planes());
+    }
+
+    #[test]
+    fn sector_encoding_roundtrip() {
+        let cases = [
+            PhysSector { page: PhysPage { plane: 0, block: 0, page: 0 }, slot: 0 },
+            PhysSector { page: PhysPage { plane: 255, block: 127, page: 255 }, slot: 3 },
+            PhysSector { page: PhysPage { plane: 1000, block: 65535, page: 99999 }, slot: 255 },
+        ];
+        for s in cases {
+            let enc = encode_sector(s);
+            assert_ne!(enc, UNMAPPED);
+            assert_eq!(decode_sector(enc), s);
+        }
+    }
+
+    #[test]
+    fn cwdp_stripes_channels_first() {
+        let g = geo();
+        // Consecutive LPNs under CWDP must land on consecutive channels.
+        for lpn in 0..g.channels as u64 {
+            let plane = g.static_plane(lpn, AddrScheme::Cwdp);
+            assert_eq!(g.channel_of_plane(plane), lpn as u32);
+        }
+        // After one full channel sweep, the way advances.
+        let p0 = g.static_plane(0, AddrScheme::Cwdp);
+        let p_next = g.static_plane(g.channels as u64, AddrScheme::Cwdp);
+        assert_eq!(g.channel_of_plane(p_next), 0);
+        assert_ne!(p0, p_next);
+    }
+
+    #[test]
+    fn wcdp_stripes_ways_first() {
+        let g = geo();
+        // First `ways` LPNs stay on channel 0 (way varies fastest).
+        for lpn in 0..g.ways as u64 {
+            let plane = g.static_plane(lpn, AddrScheme::Wcdp);
+            assert_eq!(g.channel_of_plane(plane), 0);
+        }
+        let plane = g.static_plane(g.ways as u64, AddrScheme::Wcdp);
+        assert_eq!(g.channel_of_plane(plane), 1);
+    }
+
+    #[test]
+    fn static_plane_covers_all_planes() {
+        let g = geo();
+        for scheme in AddrScheme::ALL {
+            let mut seen = std::collections::HashSet::new();
+            for lpn in 0..g.total_planes() as u64 {
+                seen.insert(g.static_plane(lpn, scheme));
+            }
+            assert_eq!(seen.len() as u32, g.total_planes(), "{scheme} not a bijection");
+        }
+    }
+
+    #[test]
+    fn static_plane_is_periodic() {
+        let g = geo();
+        let n = g.total_planes() as u64;
+        for scheme in AddrScheme::ALL {
+            for lpn in [0u64, 5, 117] {
+                assert_eq!(
+                    g.static_plane(lpn, scheme),
+                    g.static_plane(lpn + n, scheme),
+                    "{scheme} must be periodic in total_planes"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,405 @@
+//! Per-plane flash block bookkeeping: open-block write pointers (separate
+//! host and GC streams), free lists, valid-sector bitmaps, reverse maps for
+//! GC relocation, and erase counters for wear accounting.
+
+use crate::config::SsdConfig;
+use crate::ssd::addr::{Geometry, PhysPage, PhysSector, PlaneId};
+
+/// Which append stream a page allocation belongs to. Separating host and GC
+/// streams is standard enterprise practice (avoids mixing hot/cold data and
+/// keeps GC from stealing the host open block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stream {
+    Host,
+    Gc,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockState {
+    Free,
+    Open,
+    Full,
+}
+
+/// One physical block.
+#[derive(Debug)]
+pub struct Block {
+    pub state: BlockState,
+    /// Next page to program.
+    pub write_ptr: u32,
+    /// Valid bitmap over sector slots (pages * sectors_per_page bits).
+    valid: Vec<u64>,
+    pub valid_count: u32,
+    pub erase_count: u32,
+    /// slot -> logical id (lsn for sector mapping, lpn for page mapping).
+    /// Lazily allocated on first write to keep cold blocks free.
+    rmap: Option<Box<[u64]>>,
+}
+
+impl Block {
+    fn new(sectors: u32) -> Self {
+        Self {
+            state: BlockState::Free,
+            write_ptr: 0,
+            valid: vec![0; ((sectors + 63) / 64) as usize],
+            valid_count: 0,
+            erase_count: 0,
+            rmap: None,
+        }
+    }
+
+    #[inline]
+    fn set_valid(&mut self, slot: u32) {
+        let w = (slot / 64) as usize;
+        let b = slot % 64;
+        debug_assert_eq!(self.valid[w] & (1 << b), 0, "slot {slot} already valid");
+        self.valid[w] |= 1 << b;
+        self.valid_count += 1;
+    }
+
+    #[inline]
+    fn clear_valid(&mut self, slot: u32) -> bool {
+        let w = (slot / 64) as usize;
+        let b = slot % 64;
+        if self.valid[w] & (1 << b) != 0 {
+            self.valid[w] &= !(1 << b);
+            self.valid_count -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    pub fn is_valid(&self, slot: u32) -> bool {
+        self.valid[(slot / 64) as usize] & (1 << (slot % 64)) != 0
+    }
+}
+
+/// One plane's block set.
+#[derive(Debug)]
+pub struct Plane {
+    pub blocks: Vec<Block>,
+    /// Free block indexes (LIFO — recently erased reused first).
+    free: Vec<u32>,
+    open_host: Option<u32>,
+    open_gc: Option<u32>,
+    /// Transactions queued or executing against this plane (allocator load).
+    pub inflight: u32,
+    /// GC currently relocating on this plane.
+    pub gc_active: bool,
+}
+
+/// All planes.
+#[derive(Debug)]
+pub struct BlockMgr {
+    pub geo: Geometry,
+    pub planes: Vec<Plane>,
+    /// Free blocks held back from the host stream so GC relocation can
+    /// always make progress (host writes stall instead of starving GC).
+    gc_reserve: u32,
+}
+
+impl BlockMgr {
+    pub fn new(cfg: &SsdConfig) -> Self {
+        let geo = Geometry::new(cfg);
+        let sectors = geo.sectors_per_block();
+        let planes = (0..geo.total_planes())
+            .map(|_| Plane {
+                blocks: (0..geo.blocks_per_plane).map(|_| Block::new(sectors)).collect(),
+                free: (0..geo.blocks_per_plane).rev().collect(),
+                open_host: None,
+                open_gc: None,
+                inflight: 0,
+                gc_active: false,
+            })
+            .collect();
+        Self { geo, planes, gc_reserve: 1 }
+    }
+
+    /// Free blocks remaining in a plane (excluding open blocks).
+    pub fn free_blocks(&self, plane: PlaneId) -> u32 {
+        self.planes[plane as usize].free.len() as u32
+    }
+
+    /// Allocate the next page of `plane`'s open block for `stream`, opening a
+    /// new block from the free list when necessary.
+    ///
+    /// Returns `None` when the plane is out of free blocks *and* the open
+    /// block is full — the caller (GC trigger logic) must guarantee headroom.
+    pub fn alloc_page(&mut self, plane: PlaneId, stream: Stream) -> Option<PhysPage> {
+        let ppb = self.geo.pages_per_block;
+        let p = &mut self.planes[plane as usize];
+        let open = match stream {
+            Stream::Host => &mut p.open_host,
+            Stream::Gc => &mut p.open_gc,
+        };
+        // Retire a filled open block.
+        if let Some(b) = *open {
+            if p.blocks[b as usize].write_ptr >= ppb {
+                p.blocks[b as usize].state = BlockState::Full;
+                *open = None;
+            }
+        }
+        let open = match stream {
+            Stream::Host => &mut p.open_host,
+            Stream::Gc => &mut p.open_gc,
+        };
+        if open.is_none() {
+            // Host allocations may not dip into the GC reserve.
+            if stream == Stream::Host && p.free.len() as u32 <= self.gc_reserve {
+                return None;
+            }
+            let b = p.free.pop()?;
+            debug_assert_eq!(p.blocks[b as usize].state, BlockState::Free);
+            p.blocks[b as usize].state = BlockState::Open;
+            p.blocks[b as usize].write_ptr = 0;
+            *open = Some(b);
+        }
+        let b = open.unwrap();
+        let blk = &mut p.blocks[b as usize];
+        let page = blk.write_ptr;
+        blk.write_ptr += 1;
+        Some(PhysPage { plane, block: b, page })
+    }
+
+    /// Record `logical` as live in `sector`'s slot (sets the valid bit and
+    /// the reverse map used by GC relocation).
+    pub fn mark_valid(&mut self, sector: PhysSector, logical: u64) {
+        let spb = self.geo.sectors_per_block();
+        let blk =
+            &mut self.planes[sector.page.plane as usize].blocks[sector.page.block as usize];
+        let slot = sector.page.page * self.geo.sectors_per_page + sector.slot;
+        blk.set_valid(slot);
+        let rmap = blk
+            .rmap
+            .get_or_insert_with(|| vec![u64::MAX; spb as usize].into_boxed_slice());
+        rmap[slot as usize] = logical;
+    }
+
+    /// Invalidate a sector slot (no-op if already invalid). Returns whether
+    /// the slot was valid.
+    pub fn invalidate(&mut self, sector: PhysSector) -> bool {
+        let blk =
+            &mut self.planes[sector.page.plane as usize].blocks[sector.page.block as usize];
+        let slot = sector.page.page * self.geo.sectors_per_page + sector.slot;
+        blk.clear_valid(slot)
+    }
+
+    /// Logical id stored in a slot's reverse map (u64::MAX when never set).
+    pub fn logical_at(&self, sector: PhysSector) -> u64 {
+        let blk = &self.planes[sector.page.plane as usize].blocks[sector.page.block as usize];
+        let slot = sector.page.page * self.geo.sectors_per_page + sector.slot;
+        blk.rmap.as_ref().map(|m| m[slot as usize]).unwrap_or(u64::MAX)
+    }
+
+    /// GC victim: the *full* block with the fewest valid sectors. Ties break
+    /// toward lower erase counts (cheap wear leveling).
+    pub fn victim(&self, plane: PlaneId) -> Option<u32> {
+        let p = &self.planes[plane as usize];
+        p.blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.state == BlockState::Full)
+            .min_by_key(|(_, b)| (b.valid_count, b.erase_count))
+            .map(|(i, _)| i as u32)
+    }
+
+    /// Valid (slot, logical) pairs of a block — the data GC must relocate.
+    pub fn valid_sectors(&self, plane: PlaneId, block: u32) -> Vec<(u32, u64)> {
+        let blk = &self.planes[plane as usize].blocks[block as usize];
+        let mut out = Vec::with_capacity(blk.valid_count as usize);
+        if blk.valid_count == 0 {
+            return out;
+        }
+        let rmap = blk.rmap.as_ref().expect("valid sectors require rmap");
+        let total = self.geo.sectors_per_block();
+        for slot in 0..total {
+            if blk.is_valid(slot) {
+                out.push((slot, rmap[slot as usize]));
+            }
+        }
+        out
+    }
+
+    /// Erase a block: clears bitmaps, bumps the erase counter, returns the
+    /// block to the free list.
+    pub fn erase(&mut self, plane: PlaneId, block: u32) {
+        let p = &mut self.planes[plane as usize];
+        let blk = &mut p.blocks[block as usize];
+        debug_assert_eq!(blk.state, BlockState::Full, "erasing a non-full block");
+        debug_assert_eq!(blk.valid_count, 0, "erasing a block with valid data");
+        blk.state = BlockState::Free;
+        blk.write_ptr = 0;
+        blk.erase_count += 1;
+        blk.valid.iter_mut().for_each(|w| *w = 0);
+        blk.rmap = None;
+        p.free.push(block);
+    }
+
+    /// Total valid sectors across the device (conservation checks in tests).
+    pub fn total_valid(&self) -> u64 {
+        self.planes
+            .iter()
+            .map(|p| p.blocks.iter().map(|b| b.valid_count as u64).sum::<u64>())
+            .sum()
+    }
+
+    /// Max erase count across blocks (wear).
+    pub fn max_erase(&self) -> u32 {
+        self.planes
+            .iter()
+            .flat_map(|p| p.blocks.iter().map(|b| b.erase_count))
+            .max()
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn inflight(&self, plane: PlaneId) -> u32 {
+        self.planes[plane as usize].inflight
+    }
+
+    #[inline]
+    pub fn add_inflight(&mut self, plane: PlaneId, d: i32) {
+        let p = &mut self.planes[plane as usize];
+        p.inflight = (p.inflight as i64 + d as i64).max(0) as u32;
+    }
+
+    /// Slot index of a sector within its block.
+    #[inline]
+    pub fn slot_of(&self, s: PhysSector) -> u32 {
+        s.page.page * self.geo.sectors_per_page + s.slot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn mgr() -> BlockMgr {
+        BlockMgr::new(&config::mqms_enterprise().ssd)
+    }
+
+    #[test]
+    fn alloc_fills_block_then_opens_next() {
+        let mut m = mgr();
+        let ppb = m.geo.pages_per_block;
+        let free0 = m.free_blocks(0);
+        let first = m.alloc_page(0, Stream::Host).unwrap();
+        assert_eq!(first.page, 0);
+        for i in 1..ppb {
+            let pg = m.alloc_page(0, Stream::Host).unwrap();
+            assert_eq!(pg.block, first.block);
+            assert_eq!(pg.page, i);
+        }
+        // Next allocation rolls to a fresh block.
+        let next = m.alloc_page(0, Stream::Host).unwrap();
+        assert_ne!(next.block, first.block);
+        assert_eq!(next.page, 0);
+        assert_eq!(m.free_blocks(0), free0 - 2);
+        assert_eq!(
+            m.planes[0].blocks[first.block as usize].state,
+            BlockState::Full
+        );
+    }
+
+    #[test]
+    fn host_and_gc_streams_are_separate() {
+        let mut m = mgr();
+        let h = m.alloc_page(0, Stream::Host).unwrap();
+        let g = m.alloc_page(0, Stream::Gc).unwrap();
+        assert_ne!(h.block, g.block);
+    }
+
+    #[test]
+    fn valid_tracking_and_invalidate() {
+        let mut m = mgr();
+        let pg = m.alloc_page(0, Stream::Host).unwrap();
+        let s = PhysSector { page: pg, slot: 1 };
+        m.mark_valid(s, 42);
+        assert_eq!(m.logical_at(s), 42);
+        assert_eq!(m.total_valid(), 1);
+        assert!(m.invalidate(s));
+        assert!(!m.invalidate(s), "double invalidate must be a no-op");
+        assert_eq!(m.total_valid(), 0);
+    }
+
+    #[test]
+    fn victim_prefers_fewest_valid() {
+        let mut m = mgr();
+        let ppb = m.geo.pages_per_block;
+        let spp = m.geo.sectors_per_page;
+        // Fill two blocks: first fully valid, second half-invalidated.
+        let mut pages = Vec::new();
+        for _ in 0..2 * ppb {
+            pages.push(m.alloc_page(0, Stream::Host).unwrap());
+        }
+        for (i, pg) in pages.iter().enumerate() {
+            for slot in 0..spp {
+                m.mark_valid(PhysSector { page: *pg, slot }, (i as u64) * 10 + slot as u64);
+            }
+        }
+        let b1 = pages[ppb as usize].block;
+        for pg in &pages[ppb as usize..] {
+            for slot in 0..spp / 2 {
+                m.invalidate(PhysSector { page: *pg, slot });
+            }
+        }
+        // Force block states to Full by allocating into a third block.
+        m.alloc_page(0, Stream::Host).unwrap();
+        assert_eq!(m.victim(0), Some(b1));
+    }
+
+    #[test]
+    fn erase_returns_block_to_free_list() {
+        let mut m = mgr();
+        let ppb = m.geo.pages_per_block;
+        let free0 = m.free_blocks(0);
+        let mut pages = Vec::new();
+        for _ in 0..ppb {
+            pages.push(m.alloc_page(0, Stream::Host).unwrap());
+        }
+        m.alloc_page(0, Stream::Host).unwrap(); // retire block 0 to Full
+        let block = pages[0].block;
+        m.erase(0, block);
+        assert_eq!(m.free_blocks(0), free0 - 1);
+        assert_eq!(m.planes[0].blocks[block as usize].erase_count, 1);
+    }
+
+    #[test]
+    fn alloc_exhausts_to_none_with_gc_reserve() {
+        let mut m = mgr();
+        // The host stream may use all blocks except the GC reserve (1).
+        let host_capacity =
+            (m.geo.blocks_per_plane as u64 - 1) * m.geo.pages_per_block as u64;
+        for _ in 0..host_capacity {
+            assert!(m.alloc_page(3, Stream::Host).is_some());
+        }
+        assert!(m.alloc_page(3, Stream::Host).is_none(), "reserve must hold");
+        // GC can still claim the reserved block.
+        for _ in 0..m.geo.pages_per_block {
+            assert!(m.alloc_page(3, Stream::Gc).is_some());
+        }
+        assert!(m.alloc_page(3, Stream::Gc).is_none());
+    }
+
+    #[test]
+    fn valid_sectors_lists_survivors() {
+        let mut m = mgr();
+        let pg = m.alloc_page(0, Stream::Host).unwrap();
+        m.mark_valid(PhysSector { page: pg, slot: 0 }, 100);
+        m.mark_valid(PhysSector { page: pg, slot: 2 }, 102);
+        m.invalidate(PhysSector { page: pg, slot: 0 });
+        let vs = m.valid_sectors(0, pg.block);
+        assert_eq!(vs, vec![(2, 102)]);
+    }
+
+    #[test]
+    fn inflight_counter_saturates_at_zero() {
+        let mut m = mgr();
+        m.add_inflight(0, 2);
+        m.add_inflight(0, -5);
+        assert_eq!(m.inflight(0), 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Garbage-collection controller state.
+//!
+//! Greedy per-plane GC: when a plane's free-block count drops to the
+//! threshold, pick the full block with the fewest valid sectors, relocate its
+//! valid data (read + program transaction pairs through the GC stream), then
+//! erase. The actual transaction creation is driven by the SSD simulator;
+//! this module owns the per-plane progress state machine.
+
+use crate::ssd::addr::PlaneId;
+
+/// Per-plane GC progress.
+#[derive(Debug, Clone, Default)]
+pub struct GcPlane {
+    /// Victim block being collected, if a collection is active.
+    pub victim: Option<u32>,
+    /// Relocation reads still in flight.
+    pub pending_reads: u32,
+    /// Relocation programs still in flight.
+    pub pending_programs: u32,
+    /// Erase issued and in flight.
+    pub erase_inflight: bool,
+}
+
+impl GcPlane {
+    pub fn active(&self) -> bool {
+        self.victim.is_some()
+    }
+
+    /// All relocation I/O drained and erase not yet issued?
+    pub fn ready_to_erase(&self) -> bool {
+        self.victim.is_some()
+            && self.pending_reads == 0
+            && self.pending_programs == 0
+            && !self.erase_inflight
+    }
+}
+
+/// All planes' GC state plus aggregate counters.
+#[derive(Debug)]
+pub struct GcController {
+    pub planes: Vec<GcPlane>,
+    pub collections_started: u64,
+    pub collections_finished: u64,
+    pub sectors_relocated: u64,
+}
+
+impl GcController {
+    pub fn new(total_planes: u32) -> Self {
+        Self {
+            planes: vec![GcPlane::default(); total_planes as usize],
+            collections_started: 0,
+            collections_finished: 0,
+            sectors_relocated: 0,
+        }
+    }
+
+    pub fn plane(&self, p: PlaneId) -> &GcPlane {
+        &self.planes[p as usize]
+    }
+
+    pub fn plane_mut(&mut self, p: PlaneId) -> &mut GcPlane {
+        &mut self.planes[p as usize]
+    }
+
+    /// Begin collecting `victim` on `plane` with `reads` relocation reads.
+    pub fn start(&mut self, plane: PlaneId, victim: u32, reads: u32) {
+        let st = self.plane_mut(plane);
+        debug_assert!(st.victim.is_none(), "GC already active on plane {plane}");
+        st.victim = Some(victim);
+        st.pending_reads = reads;
+        st.pending_programs = 0;
+        st.erase_inflight = false;
+        self.collections_started += 1;
+    }
+
+    /// A relocation read finished and spawned `programs` program xacts
+    /// (possibly 0 if the data was invalidated meanwhile).
+    pub fn read_done(&mut self, plane: PlaneId, programs: u32) {
+        let st = self.plane_mut(plane);
+        debug_assert!(st.pending_reads > 0);
+        st.pending_reads -= 1;
+        st.pending_programs += programs;
+    }
+
+    pub fn program_done(&mut self, plane: PlaneId, sectors: u32) {
+        let st = self.plane_mut(plane);
+        debug_assert!(st.pending_programs > 0);
+        st.pending_programs -= 1;
+        self.sectors_relocated += sectors as u64;
+    }
+
+    /// Erase completed: collection over.
+    pub fn finish(&mut self, plane: PlaneId) -> u32 {
+        let st = self.plane_mut(plane);
+        let victim = st.victim.take().expect("finish without active GC");
+        st.erase_inflight = false;
+        self.collections_finished += 1;
+        victim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut gc = GcController::new(4);
+        assert!(!gc.plane(1).active());
+        gc.start(1, 7, 2);
+        assert!(gc.plane(1).active());
+        assert!(!gc.plane(1).ready_to_erase());
+        gc.read_done(1, 1);
+        gc.read_done(1, 1);
+        assert!(!gc.plane(1).ready_to_erase(), "programs still pending");
+        gc.program_done(1, 4);
+        gc.program_done(1, 4);
+        assert!(gc.plane(1).ready_to_erase());
+        gc.plane_mut(1).erase_inflight = true;
+        assert!(!gc.plane(1).ready_to_erase());
+        assert_eq!(gc.finish(1), 7);
+        assert!(!gc.plane(1).active());
+        assert_eq!(gc.collections_started, 1);
+        assert_eq!(gc.collections_finished, 1);
+        assert_eq!(gc.sectors_relocated, 8);
+    }
+
+    #[test]
+    fn read_with_no_programs_when_data_stale() {
+        let mut gc = GcController::new(2);
+        gc.start(0, 3, 1);
+        gc.read_done(0, 0); // all sectors invalidated between start and read
+        assert!(gc.plane(0).ready_to_erase());
+    }
+}

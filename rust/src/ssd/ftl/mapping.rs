@@ -1,0 +1,166 @@
+//! Logical→physical address mapping (paper §2.2).
+//!
+//! Two granularities share one dense table representation:
+//!
+//! * **Page-level** (baseline): one entry per logical page. Sub-page writes
+//!   require read-modify-write of the whole flash page.
+//! * **Sector-level** (MQMS fine-grained): one entry per logical sector.
+//!   Small writes append into open pages and invalidate the old sector.
+//!
+//! Tables are dense `Vec<u64>` indexed by LPN/LSN with the compact
+//! [`encode_sector`] encoding — O(1) lookups with no hashing on the hot path
+//! (enterprise SSDs keep the whole table in controller DRAM; §2.2).
+
+use crate::config::MapGranularity;
+use crate::ssd::addr::{decode_sector, encode_sector, PhysPage, PhysSector, UNMAPPED};
+
+/// Dense logical→physical table at either granularity.
+#[derive(Debug)]
+pub struct Mapping {
+    pub gran: MapGranularity,
+    /// Sectors per page (for lpn↔lsn conversions).
+    pub spp: u32,
+    table: Vec<u64>,
+}
+
+impl Mapping {
+    /// `logical_sectors` bounds the logical space; the page-level table is
+    /// `logical_sectors / spp` entries.
+    pub fn new(gran: MapGranularity, spp: u32, logical_sectors: u64) -> Self {
+        let entries = match gran {
+            MapGranularity::Sector => logical_sectors,
+            MapGranularity::Page => (logical_sectors + spp as u64 - 1) / spp as u64,
+        };
+        Self { gran, spp, table: vec![UNMAPPED; entries as usize] }
+    }
+
+    /// Number of table entries (mapping-table footprint; fine-grained tables
+    /// are `spp`× larger — the §2.2 trade-off).
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Logical sector capacity.
+    pub fn logical_sectors(&self) -> u64 {
+        match self.gran {
+            MapGranularity::Sector => self.table.len() as u64,
+            MapGranularity::Page => self.table.len() as u64 * self.spp as u64,
+        }
+    }
+
+    // ---- sector granularity --------------------------------------------------
+
+    pub fn lookup_sector(&self, lsn: u64) -> Option<PhysSector> {
+        debug_assert_eq!(self.gran, MapGranularity::Sector);
+        match self.table[lsn as usize] {
+            UNMAPPED => None,
+            v => Some(decode_sector(v)),
+        }
+    }
+
+    /// Map `lsn` to a new physical sector, returning the previous location
+    /// (which the caller must invalidate).
+    pub fn map_sector(&mut self, lsn: u64, to: PhysSector) -> Option<PhysSector> {
+        debug_assert_eq!(self.gran, MapGranularity::Sector);
+        let prev = self.table[lsn as usize];
+        self.table[lsn as usize] = encode_sector(to);
+        if prev == UNMAPPED {
+            None
+        } else {
+            Some(decode_sector(prev))
+        }
+    }
+
+    // ---- page granularity --------------------------------------------------
+
+    pub fn lookup_page(&self, lpn: u64) -> Option<PhysPage> {
+        debug_assert_eq!(self.gran, MapGranularity::Page);
+        match self.table[lpn as usize] {
+            UNMAPPED => None,
+            v => Some(decode_sector(v).page),
+        }
+    }
+
+    /// Map `lpn` to a new physical page, returning the previous one.
+    pub fn map_page(&mut self, lpn: u64, to: PhysPage) -> Option<PhysPage> {
+        debug_assert_eq!(self.gran, MapGranularity::Page);
+        let prev = self.table[lpn as usize];
+        self.table[lpn as usize] = encode_sector(PhysSector { page: to, slot: 0 });
+        if prev == UNMAPPED {
+            None
+        } else {
+            Some(decode_sector(prev).page)
+        }
+    }
+
+    /// Generic lookup by logical sector: at page granularity this resolves
+    /// the containing page and the sector's slot within it.
+    pub fn resolve(&self, lsn: u64) -> Option<PhysSector> {
+        match self.gran {
+            MapGranularity::Sector => self.lookup_sector(lsn),
+            MapGranularity::Page => {
+                let lpn = lsn / self.spp as u64;
+                let slot = (lsn % self.spp as u64) as u32;
+                self.lookup_page(lpn).map(|page| PhysSector { page, slot })
+            }
+        }
+    }
+
+    /// Count mapped entries (test/report support; O(n)).
+    pub fn mapped_count(&self) -> u64 {
+        self.table.iter().filter(|&&v| v != UNMAPPED).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn psec(plane: u32, block: u32, page: u32, slot: u32) -> PhysSector {
+        PhysSector { page: PhysPage { plane, block, page }, slot }
+    }
+
+    #[test]
+    fn sector_map_roundtrip() {
+        let mut m = Mapping::new(MapGranularity::Sector, 4, 1024);
+        assert_eq!(m.lookup_sector(5), None);
+        assert_eq!(m.map_sector(5, psec(1, 2, 3, 0)), None);
+        assert_eq!(m.lookup_sector(5), Some(psec(1, 2, 3, 0)));
+        // Remap returns the old location.
+        let prev = m.map_sector(5, psec(7, 8, 9, 2));
+        assert_eq!(prev, Some(psec(1, 2, 3, 0)));
+        assert_eq!(m.lookup_sector(5), Some(psec(7, 8, 9, 2)));
+        assert_eq!(m.mapped_count(), 1);
+    }
+
+    #[test]
+    fn page_map_roundtrip() {
+        let mut m = Mapping::new(MapGranularity::Page, 4, 1024);
+        assert_eq!(m.entries(), 256);
+        let pg = PhysPage { plane: 3, block: 1, page: 7 };
+        assert_eq!(m.map_page(10, pg), None);
+        assert_eq!(m.lookup_page(10), Some(pg));
+        // resolve() finds the containing page for any sector of lpn 10.
+        for slot in 0..4u32 {
+            let lsn = 40 + slot as u64;
+            assert_eq!(m.resolve(lsn), Some(PhysSector { page: pg, slot }));
+        }
+        assert_eq!(m.resolve(44), None, "lpn 11 unmapped");
+    }
+
+    #[test]
+    fn table_sizes_reflect_granularity() {
+        let fine = Mapping::new(MapGranularity::Sector, 4, 4096);
+        let coarse = Mapping::new(MapGranularity::Page, 4, 4096);
+        assert_eq!(fine.entries(), 4096);
+        assert_eq!(coarse.entries(), 1024);
+        assert_eq!(fine.logical_sectors(), coarse.logical_sectors());
+    }
+
+    #[test]
+    fn resolve_sector_granularity_passthrough() {
+        let mut m = Mapping::new(MapGranularity::Sector, 4, 64);
+        m.map_sector(9, psec(0, 1, 2, 3));
+        assert_eq!(m.resolve(9), Some(psec(0, 1, 2, 3)));
+    }
+}

@@ -1,0 +1,12 @@
+//! Flash translation layer: mapping tables, write-address allocation, block
+//! management, and garbage collection.
+
+pub mod alloc;
+pub mod blockmgr;
+pub mod gc;
+pub mod mapping;
+
+pub use alloc::Allocator;
+pub use blockmgr::{BlockMgr, BlockState, Stream};
+pub use gc::GcController;
+pub use mapping::Mapping;

@@ -1,0 +1,123 @@
+//! Host interface layer: tracks in-service requests and settles sector
+//! credits as flash transactions complete.
+//!
+//! Device response time (the paper's Fig. 5 metric) is the interval between
+//! SQ enqueue and CQ delivery — `Completion::complete_ns - submit_ns`.
+
+use super::nvme::{Completion, IoRequest, Opcode};
+use crate::sim::SimTime;
+use std::collections::HashMap;
+
+/// In-service request state.
+#[derive(Debug)]
+struct Live {
+    req: IoRequest,
+    queue: usize,
+    remaining_sectors: u32,
+}
+
+/// Request tracker.
+#[derive(Debug, Default)]
+pub struct Hil {
+    live: HashMap<u64, Live>,
+    pub completed_reads: u64,
+    pub completed_writes: u64,
+}
+
+impl Hil {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin servicing a fetched request.
+    pub fn admit(&mut self, req: IoRequest, queue: usize) {
+        debug_assert!(req.sectors > 0, "zero-length request");
+        let prev = self.live.insert(
+            req.id,
+            Live { req, queue, remaining_sectors: req.sectors },
+        );
+        debug_assert!(prev.is_none(), "duplicate request id {}", req.id);
+    }
+
+    /// Credit `sectors` serviced sectors to request `id`. When the request is
+    /// fully serviced, returns `(queue_to_release, completion_record)`.
+    pub fn credit(&mut self, id: u64, sectors: u32, now: SimTime) -> Option<(usize, Completion)> {
+        let live = self.live.get_mut(&id).expect("credit to unknown request");
+        debug_assert!(
+            live.remaining_sectors >= sectors,
+            "over-credit: req {id} has {} left, credited {sectors}",
+            live.remaining_sectors
+        );
+        live.remaining_sectors -= sectors;
+        if live.remaining_sectors == 0 {
+            let Live { req, queue, .. } = self.live.remove(&id).unwrap();
+            match req.opcode {
+                Opcode::Read => self.completed_reads += 1,
+                Opcode::Write => self.completed_writes += 1,
+            }
+            Some((
+                queue,
+                Completion {
+                    id: req.id,
+                    opcode: req.opcode,
+                    lsn: req.lsn,
+                    sectors: req.sectors,
+                    submit_ns: req.submit_ns,
+                    complete_ns: now,
+                    source: req.source,
+                },
+            ))
+        } else {
+            None
+        }
+    }
+
+    pub fn in_service(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, sectors: u32, opcode: Opcode) -> IoRequest {
+        IoRequest { id, opcode, lsn: 0, sectors, submit_ns: 50, source: 3 }
+    }
+
+    #[test]
+    fn partial_credits_accumulate() {
+        let mut h = Hil::new();
+        h.admit(req(1, 4, Opcode::Write), 2);
+        assert!(h.credit(1, 1, 100).is_none());
+        assert!(h.credit(1, 2, 200).is_none());
+        let (queue, c) = h.credit(1, 1, 300).unwrap();
+        assert_eq!(queue, 2);
+        assert_eq!(c.id, 1);
+        assert_eq!(c.submit_ns, 50);
+        assert_eq!(c.complete_ns, 300);
+        assert_eq!(c.source, 3);
+        assert_eq!(h.completed_writes, 1);
+        assert_eq!(h.in_service(), 0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)] // debug_assert-backed guard
+    #[should_panic(expected = "over-credit")]
+    fn over_credit_panics_in_debug() {
+        let mut h = Hil::new();
+        h.admit(req(1, 2, Opcode::Read), 0);
+        h.credit(1, 3, 10);
+    }
+
+    #[test]
+    fn interleaved_requests() {
+        let mut h = Hil::new();
+        h.admit(req(1, 2, Opcode::Read), 0);
+        h.admit(req(2, 1, Opcode::Read), 1);
+        assert!(h.credit(2, 1, 10).is_some());
+        assert!(h.credit(1, 1, 20).is_none());
+        assert!(h.credit(1, 1, 30).is_some());
+        assert_eq!(h.completed_reads, 2);
+    }
+}

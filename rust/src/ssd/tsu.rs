@@ -1,0 +1,666 @@
+//! Transaction Scheduling Unit: per-die queues, channel arbitration, and the
+//! die state machine that models flash operation timing.
+//!
+//! Timing model (standard ONFI-style decomposition):
+//!
+//! * **Program**: channel transfer in (command cycles + data at channel
+//!   bandwidth) → die busy for tPROG. The channel is free during tPROG —
+//!   that's way pipelining.
+//! * **Read**: die busy for tR → channel transfer out.
+//! * **Erase**: die busy for tBERS; no data transfer.
+//!
+//! **Multi-plane batching**: when a die is idle and several same-kind
+//! transactions targeting *different planes* of that die are queued, they
+//! execute as one array operation — one tR/tPROG for the whole batch, with
+//! data transfers serialized on the channel. Dynamic address allocation is
+//! what makes such sibling-plane batches common (paper §2.1, Fig. 1).
+//!
+//! Host transactions have priority over GC transactions unless a plane is
+//! out of free blocks (GC starvation guard).
+
+use super::addr::{ChannelId, DieId, Geometry};
+use super::xact::{XactId, XactKind, XactSlab};
+use crate::config::SsdConfig;
+use crate::sim::time::transfer_ns;
+use crate::sim::{EventQueue, SimTime};
+use std::collections::VecDeque;
+
+/// Flash timing parameters.
+#[derive(Debug, Clone)]
+pub struct FlashTiming {
+    pub t_read_ns: u64,
+    pub t_program_ns: u64,
+    pub t_erase_ns: u64,
+    pub channel_mbps: f64,
+    pub cmd_overhead_ns: u64,
+}
+
+impl FlashTiming {
+    pub fn new(cfg: &SsdConfig) -> Self {
+        Self {
+            t_read_ns: cfg.t_read_ns,
+            t_program_ns: cfg.t_program_ns,
+            t_erase_ns: cfg.t_erase_ns,
+            channel_mbps: cfg.channel_mbps,
+            cmd_overhead_ns: cfg.cmd_overhead_ns,
+        }
+    }
+
+    #[inline]
+    pub fn xfer(&self, bytes: u64, ops: u32) -> SimTime {
+        self.cmd_overhead_ns * ops as u64 + transfer_ns(bytes, self.channel_mbps)
+    }
+
+    pub fn busy(&self, kind: XactKind) -> SimTime {
+        match kind {
+            XactKind::Read => self.t_read_ns,
+            XactKind::Program => self.t_program_ns,
+            XactKind::Erase => self.t_erase_ns,
+        }
+    }
+}
+
+/// TSU-originated events, routed back by the SSD simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TsuEvent {
+    /// Channel-side transfer for the die's current batch finished.
+    XferDone { die: DieId },
+    /// In-die operation (tR / tPROG / tBERS) finished.
+    OpDone { die: DieId },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Phase {
+    Idle,
+    /// Program batch waiting for the channel (transfer-in).
+    WaitChanIn,
+    XferIn,
+    Busy,
+    /// Read batch finished tR, waiting for the channel (transfer-out).
+    WaitChanOut,
+    XferOut,
+}
+
+#[derive(Debug)]
+struct DieState {
+    phase: Phase,
+    batch: Vec<XactId>,
+    kind: XactKind,
+    /// Channel time of the transfer awaiting grant (precomputed while the
+    /// slab is in scope).
+    pending_xfer_ns: SimTime,
+}
+
+/// The scheduling unit.
+#[derive(Debug)]
+pub struct Tsu {
+    geo: Geometry,
+    pub timing: FlashTiming,
+    multiplane: bool,
+    dies: Vec<DieState>,
+    host_q: Vec<VecDeque<XactId>>,
+    gc_q: Vec<VecDeque<XactId>>,
+    /// Per-die flag: prioritize GC (set when the plane is out of headroom).
+    gc_urgent: Vec<bool>,
+    chan_busy: Vec<bool>,
+    chan_wait: Vec<VecDeque<DieId>>,
+    // --- metrics -----------------------------------------------------------
+    pub die_busy_ns: Vec<u64>,
+    pub chan_busy_ns: Vec<u64>,
+    pub multiplane_batches: u64,
+    pub multiplane_ops: u64,
+    pub flash_reads: u64,
+    pub flash_programs: u64,
+    pub flash_erases: u64,
+}
+
+impl Tsu {
+    pub fn new(cfg: &SsdConfig) -> Self {
+        let geo = Geometry::new(cfg);
+        let dies = geo.total_dies() as usize;
+        let channels = geo.channels as usize;
+        Self {
+            timing: FlashTiming::new(cfg),
+            multiplane: cfg.multiplane,
+            dies: (0..dies)
+                .map(|_| DieState {
+                    phase: Phase::Idle,
+                    batch: Vec::new(),
+                    kind: XactKind::Read,
+                    pending_xfer_ns: 0,
+                })
+                .collect(),
+            host_q: vec![VecDeque::new(); dies],
+            gc_q: vec![VecDeque::new(); dies],
+            gc_urgent: vec![false; dies],
+            chan_busy: vec![false; channels],
+            chan_wait: vec![VecDeque::new(); channels],
+            die_busy_ns: vec![0; dies],
+            chan_busy_ns: vec![0; channels],
+            multiplane_batches: 0,
+            multiplane_ops: 0,
+            flash_reads: 0,
+            flash_programs: 0,
+            flash_erases: 0,
+            geo,
+        }
+    }
+
+    /// Queue depth feeding a die (for tests / introspection).
+    pub fn queued(&self, die: DieId) -> usize {
+        self.host_q[die as usize].len() + self.gc_q[die as usize].len()
+    }
+
+    pub fn set_gc_urgent(&mut self, die: DieId, urgent: bool) {
+        self.gc_urgent[die as usize] = urgent;
+    }
+
+    /// True when no transaction is queued or executing anywhere.
+    pub fn is_drained(&self) -> bool {
+        self.dies.iter().all(|d| d.phase == Phase::Idle)
+            && self.host_q.iter().all(VecDeque::is_empty)
+            && self.gc_q.iter().all(VecDeque::is_empty)
+    }
+
+    /// Enqueue a ready transaction and try to dispatch its die.
+    pub fn enqueue<E: From<TsuEvent>>(
+        &mut self,
+        xid: XactId,
+        is_gc: bool,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+    ) {
+        let die = self.push(xid, is_gc, slab);
+        self.try_dispatch(die, slab, q);
+    }
+
+    /// Enqueue a group of ready transactions, dispatching only after all are
+    /// queued — this is what lets sibling-plane transactions created by one
+    /// request (or one coalesced flush burst) form a multi-plane batch.
+    pub fn enqueue_many<E: From<TsuEvent>>(
+        &mut self,
+        xids: impl IntoIterator<Item = (XactId, bool)>,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+    ) {
+        let mut dies = Vec::new();
+        for (xid, is_gc) in xids {
+            let die = self.push(xid, is_gc, slab);
+            if !dies.contains(&die) {
+                dies.push(die);
+            }
+        }
+        for die in dies {
+            self.try_dispatch(die, slab, q);
+        }
+    }
+
+    /// Queue a transaction without dispatching; returns its die.
+    fn push(&mut self, xid: XactId, is_gc: bool, slab: &XactSlab) -> DieId {
+        let die = self.geo.die_of_plane(slab.get(xid).target.plane);
+        if is_gc {
+            self.gc_q[die as usize].push_back(xid);
+        } else {
+            self.host_q[die as usize].push_back(xid);
+        }
+        die
+    }
+
+    /// Handle a TSU event; returns the batch that *completed* (empty if the
+    /// event only advanced a phase). The caller settles claims/deps and the
+    /// TSU immediately tries to dispatch more work.
+    pub fn on_event<E: From<TsuEvent>>(
+        &mut self,
+        ev: TsuEvent,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+    ) -> Vec<XactId> {
+        match ev {
+            TsuEvent::XferDone { die } => self.xfer_done(die, slab, q),
+            TsuEvent::OpDone { die } => self.op_done(die, slab, q),
+        }
+    }
+
+    // --- internals --------------------------------------------------------
+
+    fn try_dispatch<E: From<TsuEvent>>(
+        &mut self,
+        die: DieId,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+    ) {
+        if self.dies[die as usize].phase != Phase::Idle {
+            return;
+        }
+        let Some((batch, kind)) = self.pick_batch(die, slab) else {
+            return;
+        };
+        if batch.len() > 1 {
+            self.multiplane_batches += 1;
+            self.multiplane_ops += batch.len() as u64;
+        }
+        match kind {
+            XactKind::Program => {
+                self.flash_programs += batch.len() as u64;
+                let d = &mut self.dies[die as usize];
+                d.phase = Phase::WaitChanIn;
+                d.batch = batch;
+                d.kind = kind;
+                self.set_pending_xfer(die, slab);
+                self.request_channel(die, q);
+            }
+            XactKind::Read => {
+                self.flash_reads += batch.len() as u64;
+                let t = self.timing.busy(XactKind::Read);
+                self.die_busy_ns[die as usize] += t;
+                let d = &mut self.dies[die as usize];
+                d.phase = Phase::Busy;
+                d.batch = batch;
+                d.kind = kind;
+                q.schedule_in(t, TsuEvent::OpDone { die }.into());
+            }
+            XactKind::Erase => {
+                self.flash_erases += batch.len() as u64;
+                let t = self.timing.busy(XactKind::Erase);
+                self.die_busy_ns[die as usize] += t;
+                let d = &mut self.dies[die as usize];
+                d.phase = Phase::Busy;
+                d.batch = batch;
+                d.kind = kind;
+                q.schedule_in(t, TsuEvent::OpDone { die }.into());
+            }
+        }
+    }
+
+    /// Pop the next batch for a die: head of the prioritized queue plus (when
+    /// multi-plane is enabled) same-kind transactions on distinct sibling
+    /// planes, scanned within a bounded lookahead window.
+    fn pick_batch(&mut self, die: DieId, slab: &XactSlab) -> Option<(Vec<XactId>, XactKind)> {
+        let d = die as usize;
+        let use_gc_first = self.gc_urgent[d] && !self.gc_q[d].is_empty();
+        let queue = if use_gc_first || self.host_q[d].is_empty() {
+            &mut self.gc_q[d]
+        } else {
+            &mut self.host_q[d]
+        };
+        let head = queue.pop_front()?;
+        let kind = slab.get(head).kind;
+        let mut batch = vec![head];
+        if self.multiplane && self.geo.planes > 1 {
+            let mut planes_used = 1u64 << (slab.get(head).target.plane % self.geo.planes);
+            const LOOKAHEAD: usize = 16;
+            let mut i = 0;
+            while i < queue.len().min(LOOKAHEAD) && batch.len() < self.geo.planes as usize {
+                let cand = queue[i];
+                let x = slab.get(cand);
+                let plane_bit = 1u64 << (x.target.plane % self.geo.planes);
+                if x.kind == kind && planes_used & plane_bit == 0 {
+                    planes_used |= plane_bit;
+                    batch.push(cand);
+                    queue.remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        Some((batch, kind))
+    }
+
+    fn request_channel<E: From<TsuEvent>>(&mut self, die: DieId, q: &mut EventQueue<E>) {
+        let ch = self.geo.channel_of_die(die);
+        if self.chan_busy[ch as usize] {
+            self.chan_wait[ch as usize].push_back(die);
+        } else {
+            self.grant_channel(ch, die, q);
+        }
+    }
+
+    fn grant_channel<E: From<TsuEvent>>(
+        &mut self,
+        ch: ChannelId,
+        die: DieId,
+        q: &mut EventQueue<E>,
+    ) {
+        self.chan_busy[ch as usize] = true;
+        let d = &mut self.dies[die as usize];
+        d.phase = match d.phase {
+            Phase::WaitChanIn => Phase::XferIn,
+            Phase::WaitChanOut => Phase::XferOut,
+            ref other => unreachable!("grant to die in phase {other:?}"),
+        };
+        // Transfer time was precomputed when entering the wait phase (the
+        // slab is not in scope here).
+        let t = d.pending_xfer_ns;
+        self.chan_busy_ns[ch as usize] += t;
+        q.schedule_in(t, TsuEvent::XferDone { die }.into());
+    }
+
+    fn release_channel<E: From<TsuEvent>>(&mut self, ch: ChannelId, q: &mut EventQueue<E>) {
+        self.chan_busy[ch as usize] = false;
+        if let Some(next) = self.chan_wait[ch as usize].pop_front() {
+            self.grant_channel(ch, next, q);
+        }
+    }
+
+    fn xfer_done<E: From<TsuEvent>>(
+        &mut self,
+        die: DieId,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+    ) -> Vec<XactId> {
+        let ch = self.geo.channel_of_die(die);
+        match self.dies[die as usize].phase {
+            Phase::XferIn => {
+                // Data landed in the page registers; start tPROG.
+                self.release_channel(ch, q);
+                let t = self.timing.busy(XactKind::Program);
+                self.die_busy_ns[die as usize] += t;
+                self.dies[die as usize].phase = Phase::Busy;
+                q.schedule_in(t, TsuEvent::OpDone { die }.into());
+                Vec::new()
+            }
+            Phase::XferOut => {
+                // Read data is out; batch complete.
+                self.release_channel(ch, q);
+                let batch = std::mem::take(&mut self.dies[die as usize].batch);
+                self.dies[die as usize].phase = Phase::Idle;
+                self.try_dispatch(die, slab, q);
+                batch
+            }
+            ref other => unreachable!("XferDone in phase {other:?}"),
+        }
+    }
+
+    fn op_done<E: From<TsuEvent>>(
+        &mut self,
+        die: DieId,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+    ) -> Vec<XactId> {
+        let d = die as usize;
+        match (self.dies[d].phase.clone(), self.dies[d].kind) {
+            (Phase::Busy, XactKind::Read) => {
+                // tR elapsed; data must cross the channel.
+                let bytes: u64 =
+                    self.dies[d].batch.iter().map(|&x| slab.get(x).xfer_bytes as u64).sum();
+                let ops = self.dies[d].batch.len() as u32;
+                self.dies[d].pending_xfer_ns = self.timing.xfer(bytes, ops);
+                self.dies[d].phase = Phase::WaitChanOut;
+                self.request_channel(die, q);
+                Vec::new()
+            }
+            (Phase::Busy, _) => {
+                // Program or erase complete.
+                let batch = std::mem::take(&mut self.dies[d].batch);
+                self.dies[d].phase = Phase::Idle;
+                self.try_dispatch(die, slab, q);
+                batch
+            }
+            (other, kind) => unreachable!("OpDone in phase {other:?} kind {kind:?}"),
+        }
+    }
+
+    /// Precompute the transfer-in size when a program batch starts waiting
+    /// for the channel. Called by `try_dispatch` before `request_channel` —
+    /// folded here because `grant_channel` lacks slab access.
+    fn set_pending_xfer(&mut self, die: DieId, slab: &XactSlab) {
+        let d = die as usize;
+        let bytes: u64 = self.dies[d].batch.iter().map(|&x| slab.get(x).xfer_bytes as u64).sum();
+        let ops = self.dies[d].batch.len() as u32;
+        self.dies[d].pending_xfer_ns = self.timing.xfer(bytes, ops);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::ssd::addr::PhysPage;
+    use crate::ssd::xact::{Xact, XactCause};
+    use crate::sim::EventQueue;
+
+    fn cfg() -> crate::config::SsdConfig {
+        config::mqms_enterprise().ssd
+    }
+
+    fn mk(slab: &mut XactSlab, kind: XactKind, plane: u32, bytes: u32) -> XactId {
+        slab.insert(Xact::new(
+            kind,
+            XactCause::Host,
+            PhysPage { plane, block: 0, page: 0 },
+            bytes,
+        ))
+    }
+
+    /// Drive the TSU alone to quiescence, returning (time, completed xacts in order).
+    fn drain(tsu: &mut Tsu, slab: &XactSlab, q: &mut EventQueue<TsuEvent>) -> (SimTime, Vec<XactId>) {
+        let mut done = Vec::new();
+        while let Some((_, ev)) = q.pop() {
+            done.extend(tsu.on_event(ev, slab, q));
+        }
+        (q.now(), done)
+    }
+
+    #[test]
+    fn single_read_timing() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let x = mk(&mut slab, XactKind::Read, 0, c.sector_bytes);
+        tsu.enqueue(x, false, &slab, &mut q);
+        let (t, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done, vec![x]);
+        let expect = c.t_read_ns + tsu.timing.xfer(c.sector_bytes as u64, 1);
+        assert_eq!(t, expect);
+        assert!(tsu.is_drained());
+        assert_eq!(tsu.flash_reads, 1);
+    }
+
+    #[test]
+    fn single_program_timing() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let x = mk(&mut slab, XactKind::Program, 0, c.page_bytes);
+        tsu.enqueue(x, false, &slab, &mut q);
+        let (t, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done, vec![x]);
+        let expect = tsu.timing.xfer(c.page_bytes as u64, 1) + c.t_program_ns;
+        assert_eq!(t, expect);
+        assert_eq!(tsu.flash_programs, 1);
+    }
+
+    #[test]
+    fn erase_timing_no_channel() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let x = mk(&mut slab, XactKind::Erase, 0, 0);
+        tsu.enqueue(x, false, &slab, &mut q);
+        let (t, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done, vec![x]);
+        assert_eq!(t, c.t_erase_ns);
+        assert_eq!(tsu.flash_erases, 1);
+    }
+
+    #[test]
+    fn multiplane_programs_share_one_tprog() {
+        let c = cfg();
+        assert!(c.planes >= 4);
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        // Four programs to four sibling planes of die 0, enqueued together.
+        let xs: Vec<_> =
+            (0..4).map(|p| mk(&mut slab, XactKind::Program, p, c.page_bytes)).collect();
+        tsu.enqueue_many(xs.iter().map(|&x| (x, false)), &slab, &mut q);
+        let (t, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done.len(), 4);
+        // One batched op: 4 transfers serialized + a single tPROG.
+        let expect = tsu.timing.xfer(4 * c.page_bytes as u64, 4) + c.t_program_ns;
+        assert_eq!(t, expect);
+        assert_eq!(tsu.multiplane_batches, 1);
+        assert_eq!(tsu.multiplane_ops, 4);
+    }
+
+    #[test]
+    fn same_plane_programs_serialize() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let a = mk(&mut slab, XactKind::Program, 0, c.page_bytes);
+        let b = mk(&mut slab, XactKind::Program, 0, c.page_bytes);
+        tsu.enqueue(a, false, &slab, &mut q);
+        tsu.enqueue(b, false, &slab, &mut q);
+        let (t, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done.len(), 2);
+        let one = tsu.timing.xfer(c.page_bytes as u64, 1) + c.t_program_ns;
+        assert_eq!(t, 2 * one);
+        assert_eq!(tsu.multiplane_batches, 0);
+    }
+
+    #[test]
+    fn multiplane_disabled_serializes() {
+        let mut c = cfg();
+        c.multiplane = false;
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let xs: Vec<_> =
+            (0..4).map(|p| mk(&mut slab, XactKind::Program, p, c.page_bytes)).collect();
+        tsu.enqueue_many(xs.iter().map(|&x| (x, false)), &slab, &mut q);
+        let (t, _) = drain(&mut tsu, &slab, &mut q);
+        let one = tsu.timing.xfer(c.page_bytes as u64, 1) + c.t_program_ns;
+        assert_eq!(t, 4 * one);
+    }
+
+    #[test]
+    fn dies_on_different_channels_overlap() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let geo = Geometry::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        // One program on die of channel 0 and one on a die of channel 1.
+        let p0 = geo.plane_id(0, 0, 0, 0);
+        let p1 = geo.plane_id(1, 0, 0, 0);
+        let a = mk(&mut slab, XactKind::Program, p0, c.page_bytes);
+        let b = mk(&mut slab, XactKind::Program, p1, c.page_bytes);
+        tsu.enqueue(a, false, &slab, &mut q);
+        tsu.enqueue(b, false, &slab, &mut q);
+        let (t, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done.len(), 2);
+        // Fully parallel across channels.
+        let one = tsu.timing.xfer(c.page_bytes as u64, 1) + c.t_program_ns;
+        assert_eq!(t, one);
+    }
+
+    #[test]
+    fn channel_contention_pipelines_tprog() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let geo = Geometry::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        // Two dies on the SAME channel: transfers serialize, tPROGs overlap.
+        let p0 = geo.plane_id(0, 0, 0, 0);
+        let p1 = geo.plane_id(0, 1, 0, 0);
+        let a = mk(&mut slab, XactKind::Program, p0, c.page_bytes);
+        let b = mk(&mut slab, XactKind::Program, p1, c.page_bytes);
+        tsu.enqueue(a, false, &slab, &mut q);
+        tsu.enqueue(b, false, &slab, &mut q);
+        let (t, _) = drain(&mut tsu, &slab, &mut q);
+        let xfer = tsu.timing.xfer(c.page_bytes as u64, 1);
+        // Way pipelining: total = 2 transfers + one tPROG (the second die's
+        // program overlaps the tail).
+        assert_eq!(t, 2 * xfer + c.t_program_ns);
+    }
+
+    #[test]
+    fn gc_yields_to_host_until_urgent() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let host = mk(&mut slab, XactKind::Read, 0, c.sector_bytes);
+        let gc = mk(&mut slab, XactKind::Read, 1, c.sector_bytes);
+        // Enqueue GC first but host must run first (die busy check via order
+        // of completion).
+        tsu.enqueue(gc, true, &slab, &mut q);
+        tsu.enqueue(host, false, &slab, &mut q);
+        // gc got dispatched immediately (die was idle) — so instead check the
+        // urgent flag path with a fresh TSU and a queued die.
+        let (_, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done.len(), 2);
+
+        // Now: die busy with one op, then both queues non-empty.
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let first = mk(&mut slab, XactKind::Erase, 0, 0);
+        tsu.enqueue(first, false, &slab, &mut q);
+        let host = mk(&mut slab, XactKind::Read, 0, c.sector_bytes);
+        let gc = mk(&mut slab, XactKind::Read, 1, c.sector_bytes);
+        tsu.enqueue(gc, true, &slab, &mut q);
+        tsu.enqueue(host, false, &slab, &mut q);
+        let (_, done) = drain(&mut tsu, &slab, &mut q);
+        // host read completes before gc read despite gc enqueued first.
+        let host_pos = done.iter().position(|&x| x == host).unwrap();
+        let gc_pos = done.iter().position(|&x| x == gc).unwrap();
+        assert!(host_pos < gc_pos, "host must be prioritized: {done:?}");
+    }
+
+    #[test]
+    fn gc_urgent_flag_reverses_priority() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let first = mk(&mut slab, XactKind::Erase, 0, 0);
+        tsu.enqueue(first, false, &slab, &mut q);
+        let host = mk(&mut slab, XactKind::Read, 0, c.sector_bytes);
+        let gc = mk(&mut slab, XactKind::Read, 1, c.sector_bytes);
+        tsu.enqueue(host, false, &slab, &mut q);
+        tsu.enqueue(gc, true, &slab, &mut q);
+        tsu.set_gc_urgent(0, true);
+        let (_, done) = drain(&mut tsu, &slab, &mut q);
+        let host_pos = done.iter().position(|&x| x == host).unwrap();
+        let gc_pos = done.iter().position(|&x| x == gc).unwrap();
+        assert!(gc_pos < host_pos, "urgent gc must preempt: {done:?}");
+    }
+
+    #[test]
+    fn multiplane_reads_batch() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let xs: Vec<_> =
+            (0..c.planes).map(|p| mk(&mut slab, XactKind::Read, p, c.sector_bytes)).collect();
+        tsu.enqueue_many(xs.iter().map(|&x| (x, false)), &slab, &mut q);
+        let (t, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done.len(), c.planes as usize);
+        let expect =
+            c.t_read_ns + tsu.timing.xfer(c.planes as u64 * c.sector_bytes as u64, c.planes);
+        assert_eq!(t, expect);
+    }
+
+    #[test]
+    fn mixed_kinds_do_not_batch() {
+        let c = cfg();
+        let mut tsu = Tsu::new(&c);
+        let mut slab = XactSlab::new();
+        let mut q = EventQueue::new();
+        let r = mk(&mut slab, XactKind::Read, 0, c.sector_bytes);
+        let w = mk(&mut slab, XactKind::Program, 1, c.page_bytes);
+        tsu.enqueue(r, false, &slab, &mut q);
+        tsu.enqueue(w, false, &slab, &mut q);
+        let (_, done) = drain(&mut tsu, &slab, &mut q);
+        assert_eq!(done.len(), 2);
+        assert_eq!(tsu.multiplane_batches, 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! In-repo measurement harness for `cargo bench` targets (replacement for
+//! criterion, unavailable offline). Provides warmup, repeated timed runs, and
+//! median/MAD reporting, plus table-row printing helpers shared by the
+//! per-figure benches.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub reps: usize,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items: f64) -> f64 {
+        if self.median_s <= 0.0 {
+            0.0
+        } else {
+            items / self.median_s
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `reps` measured runs.
+/// Returns median and median-absolute-deviation of the wall-clock times.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    Measurement { name: name.to_string(), median_s: median, mad_s: mad, reps }
+}
+
+/// Pretty SI formatting for counts (IOPS etc.).
+pub fn si(v: f64) -> String {
+    let (scaled, suffix) = if v.abs() >= 1e9 {
+        (v / 1e9, "G")
+    } else if v.abs() >= 1e6 {
+        (v / 1e6, "M")
+    } else if v.abs() >= 1e3 {
+        (v / 1e3, "K")
+    } else {
+        (v, "")
+    };
+    format!("{scaled:.2}{suffix}")
+}
+
+/// Pretty duration formatting from nanoseconds.
+pub fn ns(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}s", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}ms", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}us", v / 1e3)
+    } else {
+        format!("{v:.0}ns")
+    }
+}
+
+/// Print a markdown-ish table. `rows` are (label, cells).
+pub fn print_table(title: &str, headers: &[&str], rows: &[(String, Vec<String>)]) {
+    println!("\n## {title}\n");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for (label, cells) in rows {
+        widths[0] = widths[0].max(label.len());
+        for (i, c) in cells.iter().enumerate() {
+            if i + 1 < widths.len() {
+                widths[i + 1] = widths[i + 1].max(c.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        s
+    };
+    println!("{}", fmt_row(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>()));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("{}", fmt_row(&sep));
+    for (label, cells) in rows {
+        let mut all = vec![label.clone()];
+        all.extend(cells.iter().cloned());
+        println!("{}", fmt_row(&all));
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_median() {
+        let m = measure("noop-ish", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(m.median_s > 0.0);
+        assert_eq!(m.reps, 5);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(1234.0), "1.23K");
+        assert_eq!(si(2_500_000.0), "2.50M");
+        assert_eq!(si(3.1e9), "3.10G");
+        assert_eq!(si(12.0), "12.00");
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(ns(500.0), "500ns");
+        assert_eq!(ns(2500.0), "2.50us");
+        assert_eq!(ns(3.3e6), "3.30ms");
+        assert_eq!(ns(1.5e9), "1.50s");
+    }
+}

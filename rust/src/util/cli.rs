@@ -1,0 +1,274 @@
+//! Tiny declarative command-line parser (replacement for clap, unavailable
+//! offline). Supports `--flag`, `--key value`, `--key=value`, positional
+//! arguments, subcommands, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// One registered option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pos_values: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("missing required positional <{0}>")]
+    MissingPositional(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            pos_values: Vec::new(),
+        }
+    }
+
+    /// Register a boolean flag (`--name`).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Register a value option (`--name VALUE`) with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Register a required positional argument.
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Render the help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p:<18}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {head:<22} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse a token list (without the program name).
+    pub fn parse(mut self, tokens: &[String]) -> Result<Args, CliError> {
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                self.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(rest) = t.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?
+                    .clone();
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    self.values.insert(name, v);
+                } else {
+                    self.flags.insert(name, true);
+                }
+            } else {
+                self.pos_values.push(t.clone());
+            }
+            i += 1;
+        }
+        if self.pos_values.len() < self.positionals.len() {
+            let missing = &self.positionals[self.pos_values.len()].0;
+            return Err(CliError::MissingPositional(missing.clone()));
+        }
+        Ok(self)
+    }
+
+    // ----- typed getters ----------------------------------------------------
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        parse_scaled_u64(raw).ok_or_else(|| CliError::Invalid(name.to_string(), raw.to_string()))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        raw.parse()
+            .map_err(|_| CliError::Invalid(name.to_string(), raw.to_string()))
+    }
+
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.pos_values.get(idx).map(String::as_str)
+    }
+}
+
+/// Parse integers with optional k/m/g suffix (binary for sizes is explicit:
+/// ki/mi/gi). `"64k"` → 64_000, `"16ki"` → 16_384.
+pub fn parse_scaled_u64(s: &str) -> Option<u64> {
+    let s = s.trim().to_lowercase();
+    let (num, mult) = if let Some(p) = s.strip_suffix("ki") {
+        (p, 1024)
+    } else if let Some(p) = s.strip_suffix("mi") {
+        (p, 1024 * 1024)
+    } else if let Some(p) = s.strip_suffix("gi") {
+        (p, 1024 * 1024 * 1024)
+    } else if let Some(p) = s.strip_suffix('k') {
+        (p, 1_000)
+    } else if let Some(p) = s.strip_suffix('m') {
+        (p, 1_000_000)
+    } else if let Some(p) = s.strip_suffix('g') {
+        (p, 1_000_000_000)
+    } else {
+        (s.as_str(), 1)
+    };
+    num.trim().parse::<u64>().ok().map(|v| v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = Args::new("t", "test")
+            .flag("verbose", "")
+            .opt("n", Some("10"), "")
+            .opt("name", None, "")
+            .parse(&toks(&["--verbose", "--n", "42", "--name=abc"]))
+            .unwrap();
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get_u64("n").unwrap(), 42);
+        assert_eq!(a.get("name"), Some("abc"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", "").opt("n", Some("7"), "").parse(&[]).unwrap();
+        assert_eq!(a.get_u64("n").unwrap(), 7);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = Args::new("t", "")
+            .positional("input", "")
+            .parse(&toks(&["file.json"]))
+            .unwrap();
+        assert_eq!(a.pos(0), Some("file.json"));
+        let e = Args::new("t", "").positional("input", "").parse(&[]);
+        assert!(matches!(e, Err(CliError::MissingPositional(_))));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let e = Args::new("t", "").parse(&toks(&["--bogus"]));
+        assert!(matches!(e, Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn help_requested() {
+        let e = Args::new("t", "").parse(&toks(&["--help"]));
+        assert!(matches!(e, Err(CliError::HelpRequested)));
+    }
+
+    #[test]
+    fn scaled_numbers() {
+        assert_eq!(parse_scaled_u64("64k"), Some(64_000));
+        assert_eq!(parse_scaled_u64("16ki"), Some(16_384));
+        assert_eq!(parse_scaled_u64("2m"), Some(2_000_000));
+        assert_eq!(parse_scaled_u64("1gi"), Some(1 << 30));
+        assert_eq!(parse_scaled_u64("nope"), None);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities that replace crates unavailable in the
+//! offline build environment (rand, serde_json, clap, proptest, criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod jsonlite;
+pub mod quick;
+pub mod rng;
+pub mod stats;

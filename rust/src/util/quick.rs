@@ -1,0 +1,130 @@
+//! `quick` — a small seeded randomized-property-testing helper (replacement
+//! for proptest, unavailable offline).
+//!
+//! Usage pattern (`no_run`: doctest binaries don't inherit the
+//! xla_extension rpath this image needs):
+//!
+//! ```no_run
+//! use mqms::util::quick::{forall, Gen};
+//! forall(100, 0xC0FFEE, |g: &mut Gen| {
+//!     let xs = g.vec_u64(0..=64, 0..1000);
+//!     let mut ys = xs.clone();
+//!     ys.sort();
+//!     ys.sort();
+//!     let mut zs = xs.clone();
+//!     zs.sort();
+//!     assert_eq!(ys, zs, "sort must be idempotent");
+//! });
+//! ```
+//!
+//! On failure the harness re-raises the panic annotated with the case seed so
+//! the exact input can be replayed with `replay(seed, f)`.
+
+use super::rng::Pcg64;
+
+/// Random input generator handed to property bodies.
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Size hint that grows over the run (small cases first).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        if range.is_empty() {
+            return range.start;
+        }
+        self.rng.range(range.start, range.end - 1)
+    }
+
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector with length drawn from `len` (inclusive) and elements from `el`.
+    pub fn vec_u64(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        el: std::ops::Range<u64>,
+    ) -> Vec<u64> {
+        let n = self.rng.range(*len.start() as u64, *len.end() as u64) as usize;
+        (0..n).map(|_| self.u64(el.clone())).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Run `cases` random cases of property `f`. Panics (with the failing case
+/// seed in the message) on the first violated case.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u32, seed: u64, f: F) {
+    for i in 0..cases {
+        let case_seed = seed.wrapping_add((i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let size = 4 + (i as usize * 64) / cases.max(1) as usize;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Pcg64::new(case_seed), size };
+            f(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed on case {i} (replay seed: {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnOnce(&mut Gen)>(case_seed: u64, f: F) {
+    let mut g = Gen { rng: Pcg64::new(case_seed), size: 64 };
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(50, 1, |g| {
+            let v = g.u64(0..100);
+            assert!(v < 100);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(50, 2, |g| {
+                let v = g.u64(0..100);
+                assert!(v < 90, "boom {v}");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        forall(100, 3, |g| {
+            let xs = g.vec_u64(0..=16, 5..10);
+            assert!(xs.len() <= 16);
+            assert!(xs.iter().all(|&x| (5..10).contains(&x)));
+        });
+    }
+}

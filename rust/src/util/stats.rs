@@ -1,0 +1,323 @@
+//! Streaming statistics: online mean/variance (Welford), percentile
+//! estimation over log-scaled histogram buckets (HDR-histogram-lite), and
+//! small helpers used by the metrics and sampling modules.
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Coefficient of variation (sd / mean); 0 for degenerate inputs.
+    pub fn cov(&self) -> f64 {
+        if self.mean().abs() < 1e-300 {
+            0.0
+        } else {
+            self.stddev() / self.mean().abs()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Merge another accumulator into this one (parallel Welford).
+    pub fn merge(&mut self, o: &Running) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        let m2 = self.m2 + o.m2 + d * d * (self.n as f64 * o.n as f64) / n as f64;
+        self.mean += d * o.n as f64 / n as f64;
+        self.m2 = m2;
+        self.n = n;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// Log-bucketed latency histogram covering `[1, 2^63)` with ~2.4% relative
+/// error per bucket (16 sub-buckets per octave). Values are u64 (ns).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// 64 octaves x 16 sub-buckets.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+}
+
+const SUB: usize = 16;
+const SUB_BITS: u32 = 4;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64 * SUB], count: 0, sum: 0 }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let oct = 63 - v.leading_zeros();
+        let sub = ((v >> (oct - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        ((oct - SUB_BITS + 1) as usize) * SUB + sub
+    }
+
+    /// Lower bound of the value range covered by bucket `i`.
+    fn bucket_floor(i: usize) -> u64 {
+        let oct = i / SUB;
+        let sub = (i % SUB) as u64;
+        if oct == 0 {
+            return sub;
+        }
+        let shift = (oct - 1) as u32 + SUB_BITS;
+        ((SUB as u64) + sub) << (shift - SUB_BITS)
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` in [0,1] (bucket lower bound; ≤2.4% error).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_floor(i);
+            }
+        }
+        Self::bucket_floor(self.buckets.len() - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+    pub fn max_seen(&self) -> u64 {
+        for i in (0..self.buckets.len()).rev() {
+            if self.buckets[i] > 0 {
+                return Self::bucket_floor(i + 1).saturating_sub(1);
+            }
+        }
+        0
+    }
+
+    pub fn merge(&mut self, o: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.sum += o.sum;
+    }
+}
+
+/// Exact percentile of a mutable slice (used by small offline analyses).
+pub fn percentile_exact(xs: &mut [f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((q.clamp(0.0, 1.0)) * (xs.len() - 1) as f64).round() as usize;
+    xs[idx]
+}
+
+/// Geometric mean of strictly-positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_mean_var() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn running_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Running::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = Running::new();
+        let mut b = Running::new();
+        xs[..37].iter().for_each(|&x| a.push(x));
+        xs[37..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_close() {
+        let mut h = LogHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.p50();
+        assert!(
+            (p50 as f64 - 5000.0).abs() / 5000.0 < 0.05,
+            "p50 {p50}"
+        );
+        let p99 = h.p99();
+        assert!((p99 as f64 - 9900.0).abs() / 9900.0 < 0.05, "p99 {p99}");
+        assert!((h.mean() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 2, 3, 3, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.quantile(1.0), 3);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in 1..5000u64 {
+            a.record(v);
+        }
+        for v in 5000..10_000u64 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 9999);
+        let p50 = a.p50();
+        assert!((p50 as f64 - 5000.0).abs() / 5000.0 < 0.05, "p50 {p50}");
+    }
+
+    #[test]
+    fn bucket_roundtrip_monotonic() {
+        let mut last = 0;
+        for i in 0..200 {
+            let f = LogHistogram::bucket_floor(i);
+            assert!(f >= last, "bucket {i} floor {f} < {last}");
+            last = f;
+        }
+        // floor(index(v)) <= v for a spread of values
+        for v in [1u64, 5, 17, 100, 1000, 123_456, 10_000_000_000] {
+            let f = LogHistogram::bucket_floor(LogHistogram::index(v));
+            assert!(f <= v && v < f * 2 + SUB as u64, "v {v} floor {f}");
+        }
+    }
+
+    #[test]
+    fn exact_percentile_and_geomean() {
+        let mut xs = vec![9.0, 1.0, 5.0, 3.0, 7.0];
+        assert_eq!(percentile_exact(&mut xs, 0.5), 5.0);
+        let g = geomean(&[1.0, 100.0]);
+        assert!((g - 10.0).abs() < 1e-9);
+    }
+}

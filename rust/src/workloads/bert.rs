@@ -1,0 +1,197 @@
+//! BERT-Medium MNLI inference trace (Table 1: classification of 10 K
+//! premise/hypothesis pairs; 1,858,800 kernels).
+//!
+//! BERT's bidirectional architecture loads attention weights for *all* heads
+//! of a layer concurrently — the paper singles this out as the access
+//! pattern where MQMS's plane-level parallelism pays off most (§3.2): dense
+//! bursts of small random reads. We model each encoder layer's kernels with
+//! per-GEMM weight-fetch bursts of 4 KB random reads.
+
+use super::{emit, KernelTemplate};
+use crate::gpu::trace::{AccessKind, Trace};
+use crate::util::rng::Pcg64;
+
+/// Paper's full-scale kernel count (Table 1).
+pub const TABLE1_KERNELS: u64 = 1_858_800;
+/// Full-scale inference count.
+pub const FULL_PAIRS: u64 = 10_000;
+/// BERT-Medium: 8 layers, hidden 512, 8 heads.
+const LAYERS: u32 = 8;
+
+/// Working set: weights (~41 M params ≙ 80 MB bf16) + tokenized dataset +
+/// activations ≈ 512 MiB, in 4 KB sectors.
+const FOOTPRINT_SECTORS: u64 = (512 * 1024 * 1024) / 4096;
+
+/// Kernel species of one encoder layer (≈ 23 launches/layer; with embedding
+/// and pooling this lands on Table 1's ≈ 186 kernels per inference).
+fn layer_templates() -> Vec<KernelTemplate> {
+    // Weight-accurate read counts: a 512×512 bf16 projection is 512 KB =
+    // 128 scattered 4 KB tiles; the 4× FFN matrices are 2 MB = 512 tiles.
+    let gemm = |name: &'static str, reads: u32| KernelTemplate {
+        name,
+        grid: 64,
+        block: 256,
+        cycles_mean: 24_000.0,
+        cycles_cov: 0.08,
+        reads,
+        writes: 8, // activation tiles spilled to storage
+        req_sectors: 1, // 4 KB weight tiles, randomly scattered
+        access: AccessKind::Random,
+    };
+    let small = |name: &'static str| KernelTemplate {
+        name,
+        grid: 16,
+        block: 128,
+        cycles_mean: 3_000.0,
+        cycles_cov: 0.10,
+        reads: 0,
+        writes: 4,
+        req_sectors: 1,
+        access: AccessKind::Random,
+    };
+    vec![
+        // Attention: Q, K, V projections load weight tiles concurrently.
+        gemm("attn_q_gemm", 128),
+        small("attn_q_bias"),
+        gemm("attn_k_gemm", 128),
+        small("attn_k_bias"),
+        gemm("attn_v_gemm", 128),
+        small("attn_v_bias"),
+        KernelTemplate {
+            name: "attn_scores",
+            grid: 32,
+            block: 256,
+            cycles_mean: 14_000.0,
+            cycles_cov: 0.08,
+            reads: 0,
+            writes: 2,
+            req_sectors: 1,
+            access: AccessKind::Random,
+        },
+        small("attn_softmax"),
+        KernelTemplate {
+            name: "attn_context",
+            grid: 32,
+            block: 256,
+            cycles_mean: 14_000.0,
+            cycles_cov: 0.08,
+            reads: 0,
+            writes: 2,
+            req_sectors: 1,
+            access: AccessKind::Random,
+        },
+        gemm("attn_out_gemm", 128),
+        small("attn_out_bias"),
+        small("attn_residual"),
+        small("ln1"),
+        // Feed-forward (4× expansion): the big weight bursts.
+        gemm("ffn1_gemm", 512),
+        small("ffn1_bias"),
+        small("gelu"),
+        gemm("ffn2_gemm", 512),
+        small("ffn2_bias"),
+        small("ffn_residual"),
+        small("ln2"),
+        small("dropout_mask"),
+        small("transpose_in"),
+        small("transpose_out"),
+    ]
+}
+
+/// Per-inference prologue/epilogue kernels.
+fn fixed_templates() -> Vec<KernelTemplate> {
+    vec![
+        KernelTemplate {
+            name: "embedding_lookup",
+            grid: 8,
+            block: 256,
+            cycles_mean: 6_000.0,
+            cycles_cov: 0.15,
+            reads: 64, // token/positional embedding gathers
+            writes: 1,
+            req_sectors: 1,
+            access: AccessKind::Random,
+        },
+        KernelTemplate {
+            name: "pooler_gemm",
+            grid: 16,
+            block: 256,
+            cycles_mean: 9_000.0,
+            cycles_cov: 0.08,
+            reads: 16,
+            writes: 1,
+            req_sectors: 1,
+            access: AccessKind::Random,
+        },
+        KernelTemplate {
+            name: "classifier",
+            grid: 4,
+            block: 128,
+            cycles_mean: 2_000.0,
+            cycles_cov: 0.10,
+            reads: 2,
+            writes: 1,
+            req_sectors: 1,
+            access: AccessKind::Random,
+        },
+    ]
+}
+
+/// Generate a BERT inference trace for `scale × 10K` pairs.
+pub fn generate(scale: f64, seed: u64) -> Trace {
+    let pairs = ((FULL_PAIRS as f64 * scale).round() as u64).max(1);
+    let mut rng = Pcg64::new(seed ^ 0xBE27);
+    let mut t = Trace { footprint_sectors: FOOTPRINT_SECTORS, ..Default::default() };
+    let layer = layer_templates();
+    let fixed = fixed_templates();
+    for _ in 0..pairs {
+        emit(&mut t, &mut rng, &fixed[0]);
+        for _ in 0..LAYERS {
+            for tpl in &layer {
+                emit(&mut t, &mut rng, tpl);
+            }
+        }
+        emit(&mut t, &mut rng, &fixed[1]);
+        emit(&mut t, &mut rng, &fixed[2]);
+    }
+    t
+}
+
+/// Kernels per inference (structure check + Table-1 reconciliation).
+pub fn kernels_per_inference() -> u64 {
+    layer_templates().len() as u64 * LAYERS as u64 + fixed_templates().len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_count_matches_table1_shape() {
+        let per = kernels_per_inference();
+        // Table 1: 1,858,800 / 10,000 = 185.88 kernels per inference.
+        let paper_per = TABLE1_KERNELS as f64 / FULL_PAIRS as f64;
+        assert!(
+            (per as f64 - paper_per).abs() / paper_per < 0.02,
+            "kernels/inference {per} vs paper {paper_per}"
+        );
+    }
+
+    #[test]
+    fn generate_scales_linearly() {
+        let t1 = generate(0.001, 1); // 10 pairs
+        let t2 = generate(0.002, 1); // 20 pairs
+        assert_eq!(t2.records.len(), 2 * t1.records.len());
+        assert_eq!(t1.records.len() as u64, 10 * kernels_per_inference());
+    }
+
+    #[test]
+    fn read_heavy_small_random() {
+        let t = generate(0.0005, 2);
+        let reads: u64 = t.records.iter().map(|r| r.reads as u64).sum();
+        let writes: u64 = t.records.iter().map(|r| r.writes as u64).sum();
+        assert!(reads > writes, "BERT inference must be read-dominated");
+        // All requests are 4 KB (1 sector) — the fine-mapping sweet spot.
+        assert!(t.records.iter().all(|r| r.req_sectors == 1));
+    }
+}

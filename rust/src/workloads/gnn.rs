@@ -1,0 +1,110 @@
+//! Graph-neural-network inference trace — the paper's §1 motivating
+//! workload ("data propagation overhead accounting for more than 80 % of
+//! total processing latency in GNN applications").
+//!
+//! Mini-batched neighbor-sampled GraphSAGE-style inference: per batch,
+//! gather sampled neighbors' features (scattered small random reads over a
+//! feature store far larger than GPU DRAM), aggregate, then a couple of
+//! dense layers. The feature-gather phase is the most storage-hostile
+//! pattern in the suite: high-fanout 4 KB random reads per kernel.
+
+use super::{emit, KernelTemplate};
+use crate::gpu::trace::{AccessKind, Trace};
+use crate::util::rng::Pcg64;
+
+/// Feature store: 2 M nodes × 256 features × 4 B ≈ 2 GiB, capped at 1 GiB
+/// of logical space.
+const FOOTPRINT_SECTORS: u64 = (1024 * 1024 * 1024) / 4096;
+
+/// Generate `scale × 8192` mini-batches of 2-hop sampled inference.
+pub fn generate(scale: f64, seed: u64) -> Trace {
+    let batches = ((8192.0 * scale).round() as u64).max(1);
+    let mut rng = Pcg64::new(seed ^ 0x96E);
+    let mut t = Trace { footprint_sectors: FOOTPRINT_SECTORS, ..Default::default() };
+    // 2-hop sampling: 1024-node batch, fanout 10 → hop-1 gather of ~10K
+    // features, hop-2 of the batch's own 1K. Feature rows are 1 KB, so 4
+    // rows share a 4 KB sector: gathers are scattered single-sector reads.
+    let hop1_gather = KernelTemplate {
+        name: "neighbor_gather_h1",
+        grid: 80,
+        block: 256,
+        cycles_mean: 9_000.0,
+        cycles_cov: 0.20, // fanout varies per batch
+        reads: 640,       // ~10K rows / 4 per sector / 4 coalesced by DMA
+        writes: 8,
+        req_sectors: 1,
+        access: AccessKind::Random,
+    };
+    let hop2_gather = KernelTemplate {
+        name: "neighbor_gather_h2",
+        grid: 16,
+        block: 256,
+        cycles_mean: 4_000.0,
+        cycles_cov: 0.20,
+        reads: 64,
+        writes: 2,
+        req_sectors: 1,
+        access: AccessKind::Random,
+    };
+    let aggregate = |name: &'static str| KernelTemplate {
+        name,
+        grid: 48,
+        block: 256,
+        cycles_mean: 12_000.0,
+        cycles_cov: 0.10,
+        reads: 0,
+        writes: 4,
+        req_sectors: 1,
+        access: AccessKind::Random,
+    };
+    let dense = |name: &'static str| KernelTemplate {
+        name,
+        grid: 32,
+        block: 256,
+        cycles_mean: 15_000.0,
+        cycles_cov: 0.06,
+        reads: 16, // layer weights
+        writes: 4,
+        req_sectors: 1,
+        access: AccessKind::Random,
+    };
+    for _ in 0..batches {
+        emit(&mut t, &mut rng, &hop1_gather);
+        emit(&mut t, &mut rng, &aggregate("sage_mean_h1"));
+        emit(&mut t, &mut rng, &dense("sage_dense_h1"));
+        emit(&mut t, &mut rng, &hop2_gather);
+        emit(&mut t, &mut rng, &aggregate("sage_mean_h2"));
+        emit(&mut t, &mut rng, &dense("sage_dense_h2"));
+        emit(&mut t, &mut rng, &dense("classifier"));
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_dominates_io() {
+        let t = generate(0.01, 3);
+        let gather_reads: u64 = t
+            .records
+            .iter()
+            .filter(|r| t.name_of(r).starts_with("neighbor_gather"))
+            .map(|r| r.reads as u64)
+            .sum();
+        let total_reads: u64 = t.records.iter().map(|r| r.reads as u64).sum();
+        assert!(
+            gather_reads as f64 > 0.8 * total_reads as f64,
+            "feature gathers must dominate GNN I/O ({gather_reads}/{total_reads})"
+        );
+        assert!(t.records.iter().all(|r| r.access == AccessKind::Random));
+    }
+
+    #[test]
+    fn scales_with_batches() {
+        let a = generate(0.01, 1); // 82 batches
+        let b = generate(0.02, 1); // 164 batches
+        assert_eq!(b.records.len(), 2 * a.records.len());
+    }
+}

@@ -1,0 +1,159 @@
+//! ResNet-50 ImageNet classification trace (Table 1: 13.4 K samples;
+//! 2,812,741 kernels).
+//!
+//! Convolutional inference: batched image loads (large sequential reads),
+//! per-stage weight fetches, activation writes. Kernel structure follows the
+//! 4-stage bottleneck layout (3/4/6/3 blocks × 3 convs + shortcut convs +
+//! stem + head ≈ 210 kernels per image at the paper's per-image rate).
+
+use super::{emit, KernelTemplate};
+use crate::gpu::trace::{AccessKind, Trace};
+use crate::util::rng::Pcg64;
+
+/// Paper's full-scale kernel count (Table 1).
+pub const TABLE1_KERNELS: u64 = 2_812_741;
+/// Full-scale sample count ("13.4 K ImageNet samples").
+pub const FULL_IMAGES: u64 = 13_400;
+
+/// Weights ≈ 25.6 M params (bf16 ≈ 51 MB) + image stream + activations:
+/// cap at 1 GiB of logical space.
+const FOOTPRINT_SECTORS: u64 = (1024 * 1024 * 1024) / 4096;
+
+/// Bottleneck blocks per stage.
+const STAGE_BLOCKS: [u32; 4] = [3, 4, 6, 3];
+
+fn conv_template(name: &'static str, grid: u32, reads: u32) -> KernelTemplate {
+    KernelTemplate {
+        name,
+        grid,
+        block: 256,
+        cycles_mean: 30_000.0,
+        cycles_cov: 0.07,
+        reads,
+        writes: 4, // activation tiles out
+        req_sectors: 4,
+        access: AccessKind::Sequential,
+    }
+}
+
+fn small(name: &'static str) -> KernelTemplate {
+    KernelTemplate {
+        name,
+        grid: 32,
+        block: 128,
+        cycles_mean: 4_000.0,
+        cycles_cov: 0.10,
+        reads: 0,
+        writes: 1,
+        req_sectors: 1,
+        access: AccessKind::Sequential,
+    }
+}
+
+/// One bottleneck block: conv1x1 → bn → relu → conv3x3 → bn → relu →
+/// conv1x1 → bn → add → relu (+ occasional downsample conv modeled in the
+/// stage loop) = 12 kernels.
+fn block_templates() -> Vec<KernelTemplate> {
+    vec![
+        conv_template("conv1x1_reduce", 48, 8),
+        small("bn_reduce"),
+        small("relu_reduce"),
+        conv_template("conv3x3", 96, 24),
+        small("bn_3x3"),
+        small("relu_3x3"),
+        conv_template("conv1x1_expand", 48, 8),
+        small("bn_expand"),
+        small("residual_add"),
+        small("relu_out"),
+        small("prefetch_hint"),
+        small("tensor_repack"),
+    ]
+}
+
+/// Generate a ResNet-50 inference trace for `scale × 13.4K` images.
+pub fn generate(scale: f64, seed: u64) -> Trace {
+    let images = ((FULL_IMAGES as f64 * scale).round() as u64).max(1);
+    let mut rng = Pcg64::new(seed ^ 0x4E57);
+    let mut t = Trace { footprint_sectors: FOOTPRINT_SECTORS, ..Default::default() };
+    let block = block_templates();
+    let image_load = KernelTemplate {
+        name: "image_load",
+        grid: 8,
+        block: 256,
+        cycles_mean: 5_000.0,
+        cycles_cov: 0.20,
+        reads: 10, // ~150 KB JPEG+decode staging in 16 KB reads
+        writes: 0,
+        req_sectors: 4,
+        access: AccessKind::Sequential,
+    };
+    let stem = conv_template("stem_conv7x7", 64, 16);
+    let pool = small("maxpool");
+    let head_pool = small("avgpool");
+    let fc = conv_template("fc_gemm", 16, 13);
+    let softmax = small("softmax");
+    for _ in 0..images {
+        emit(&mut t, &mut rng, &image_load);
+        emit(&mut t, &mut rng, &stem);
+        emit(&mut t, &mut rng, &pool);
+        for (stage, &blocks) in STAGE_BLOCKS.iter().enumerate() {
+            for b in 0..blocks {
+                for tpl in &block {
+                    emit(&mut t, &mut rng, tpl);
+                }
+                if b == 0 && stage > 0 {
+                    // Downsample shortcut conv (+bn+relu) at each stage entry.
+                    emit(&mut t, &mut rng, &conv_template("shortcut_conv", 48, 8));
+                    emit(&mut t, &mut rng, &small("bn_shortcut"));
+                    emit(&mut t, &mut rng, &small("relu_shortcut"));
+                }
+            }
+            emit(&mut t, &mut rng, &small("stage_sync"));
+        }
+        emit(&mut t, &mut rng, &head_pool);
+        emit(&mut t, &mut rng, &fc);
+        emit(&mut t, &mut rng, &softmax);
+    }
+    t
+}
+
+pub fn kernels_per_image() -> u64 {
+    let per_block = block_templates().len() as u64;
+    let blocks: u64 = STAGE_BLOCKS.iter().map(|&b| b as u64).sum();
+    // image_load + stem + pool, blocks, 3 shortcut triples, 4 stage syncs,
+    // head (avgpool + fc + softmax)
+    3 + blocks * per_block + 3 * 3 + 4 + 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_count_matches_table1_shape() {
+        let per = kernels_per_image();
+        // Table 1: 2,812,741 / 13,400 ≈ 209.9 kernels per image.
+        let paper_per = TABLE1_KERNELS as f64 / FULL_IMAGES as f64;
+        assert!(
+            (per as f64 - paper_per).abs() / paper_per < 0.02,
+            "kernels/image {per} vs paper {paper_per}"
+        );
+    }
+
+    #[test]
+    fn trace_is_sequential_heavy() {
+        let t = generate(0.0005, 4);
+        assert!(t
+            .records
+            .iter()
+            .all(|r| r.access == AccessKind::Sequential));
+        let reads: u64 = t.records.iter().map(|r| r.reads as u64).sum();
+        assert!(reads > 0);
+    }
+
+    #[test]
+    fn scale_controls_images() {
+        let t = generate(0.001, 4); // 13 images
+        assert_eq!(t.records.len() as u64, 13 * kernels_per_image());
+    }
+}

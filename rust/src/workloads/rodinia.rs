@@ -1,0 +1,203 @@
+//! Rodinia-style kernels for the §4 policy-maxima study: backprop, hotspot,
+//! lavaMD. Their contrasting access patterns drive the
+//! scheduling × allocation interactions of Figs. 7–9:
+//!
+//! * **backprop** — layered NN training sweeps: highly regular strided
+//!   access with strong locality; small grids (the large-chunk trigger
+//!   territory) and bulk weight updates. The paper finds LC+WCDP best for
+//!   IOPS (+128 % over RR+CDWP) and LC+CWDP best for response time.
+//! * **hotspot** — iterative thermal stencil: strided sweeps with erratic
+//!   per-iteration behavior (boundary passes), mixed read/write.
+//! * **lavaMD** — particle-box neighbor interactions: scattered random
+//!   accesses; favors RR+CDWP for end time (−21 % vs LC+WCDP).
+
+use super::{emit, KernelTemplate};
+use crate::gpu::trace::{AccessKind, Trace};
+use crate::util::rng::Pcg64;
+
+/// backprop: `scale × 4096` training iterations over a 3-layer MLP.
+pub fn backprop(scale: f64, seed: u64) -> Trace {
+    let iters = ((4096.0 * scale).round() as u64).max(1);
+    let mut rng = Pcg64::new(seed ^ 0xBAC2);
+    // 64 MiB weight + activation working set.
+    let mut t = Trace {
+        footprint_sectors: (64 * 1024 * 1024) / 4096,
+        ..Default::default()
+    };
+    let fwd = KernelTemplate {
+        name: "layerforward",
+        grid: 96, // below stride×cores in small configs → LC trigger
+        block: 256,
+        cycles_mean: 18_000.0,
+        cycles_cov: 0.05, // very regular
+        reads: 24,
+        writes: 8,
+        req_sectors: 4,
+        access: AccessKind::Strided(8),
+    };
+    let delta = KernelTemplate {
+        name: "output_delta",
+        grid: 24,
+        block: 128,
+        cycles_mean: 4_000.0,
+        cycles_cov: 0.05,
+        reads: 4,
+        writes: 4,
+        req_sectors: 4,
+        access: AccessKind::Strided(8),
+    };
+    let adjust = KernelTemplate {
+        name: "adjust_weights",
+        grid: 96,
+        block: 256,
+        cycles_mean: 16_000.0,
+        cycles_cov: 0.05,
+        reads: 16,
+        writes: 24, // bulk weight write-back
+        req_sectors: 4,
+        access: AccessKind::Strided(8),
+    };
+    for _ in 0..iters {
+        emit(&mut t, &mut rng, &fwd);
+        emit(&mut t, &mut rng, &delta);
+        emit(&mut t, &mut rng, &adjust);
+        emit(&mut t, &mut rng, &adjust);
+    }
+    t
+}
+
+/// hotspot: `scale × 2048` stencil iterations on a 1024² grid.
+pub fn hotspot(scale: f64, seed: u64) -> Trace {
+    let iters = ((2048.0 * scale).round() as u64).max(1);
+    let mut rng = Pcg64::new(seed ^ 0x407);
+    // Temperature + power grids ≈ 128 MiB.
+    let mut t = Trace {
+        footprint_sectors: (128 * 1024 * 1024) / 4096,
+        ..Default::default()
+    };
+    for i in 0..iters {
+        // Erratic behavior: every few iterations a boundary/pyramid pass
+        // with very different cost and I/O intensity.
+        let boundary = i % 8 == 7;
+        let stencil = KernelTemplate {
+            name: if boundary { "hotspot_boundary" } else { "hotspot_step" },
+            grid: if boundary { 40 } else { 256 },
+            block: 256,
+            cycles_mean: if boundary { 45_000.0 } else { 12_000.0 },
+            cycles_cov: 0.25, // erratic (paper: "larger but more erratic")
+            reads: if boundary { 48 } else { 16 },
+            writes: if boundary { 24 } else { 16 },
+            req_sectors: 2,
+            access: AccessKind::Strided(if boundary { 24 } else { 8 }),
+        };
+        emit(&mut t, &mut rng, &stencil);
+        if i % 4 == 3 {
+            emit(
+                &mut t,
+                &mut rng,
+                &KernelTemplate {
+                    name: "temp_swap",
+                    grid: 16,
+                    block: 128,
+                    cycles_mean: 2_000.0,
+                    cycles_cov: 0.15,
+                    reads: 2,
+                    writes: 2,
+                    req_sectors: 2,
+                    access: AccessKind::Sequential,
+                },
+            );
+        }
+    }
+    t
+}
+
+/// lavaMD: `scale × 1024` box-interaction sweeps.
+pub fn lavamd(scale: f64, seed: u64) -> Trace {
+    let sweeps = ((1024.0 * scale).round() as u64).max(1);
+    let mut rng = Pcg64::new(seed ^ 0x1A7A);
+    // Particle arrays ≈ 256 MiB.
+    let mut t = Trace {
+        footprint_sectors: (256 * 1024 * 1024) / 4096,
+        ..Default::default()
+    };
+    let interact = KernelTemplate {
+        name: "md_kernel",
+        grid: 128,
+        block: 128,
+        cycles_mean: 26_000.0,
+        cycles_cov: 0.12,
+        reads: 54, // neighbor-box particle gathers (scattered)
+        writes: 10,
+        req_sectors: 1,
+        access: AccessKind::Random,
+    };
+    let reduce = KernelTemplate {
+        name: "force_reduce",
+        grid: 32,
+        block: 128,
+        cycles_mean: 5_000.0,
+        cycles_cov: 0.10,
+        reads: 0,
+        writes: 6,
+        req_sectors: 1,
+        access: AccessKind::Random,
+    };
+    for _ in 0..sweeps {
+        emit(&mut t, &mut rng, &interact);
+        emit(&mut t, &mut rng, &reduce);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backprop_is_regular() {
+        let t = backprop(0.01, 1);
+        assert!(!t.records.is_empty());
+        // Regularity: low CoV of exec metric within each kernel name.
+        let mut by_name: std::collections::HashMap<u32, crate::util::stats::Running> =
+            std::collections::HashMap::new();
+        for r in &t.records {
+            by_name
+                .entry(r.name_id)
+                .or_insert_with(crate::util::stats::Running::new)
+                .push(r.cycles_per_block as f64);
+        }
+        for (_, s) in by_name {
+            assert!(s.cov() < 0.12, "backprop cov {} too erratic", s.cov());
+        }
+        // Strided everywhere.
+        assert!(t
+            .records
+            .iter()
+            .all(|r| matches!(r.access, AccessKind::Strided(_))));
+    }
+
+    #[test]
+    fn hotspot_is_erratic() {
+        let t = hotspot(0.05, 2);
+        // Two stencil variants with very different costs must coexist.
+        let names: std::collections::HashSet<u32> =
+            t.records.iter().map(|r| r.name_id).collect();
+        assert!(names.len() >= 2);
+        let costs: Vec<f64> = t
+            .records
+            .iter()
+            .map(|r| r.cycles_per_block as f64 * r.grid as f64)
+            .collect();
+        let mut s = crate::util::stats::Running::new();
+        costs.iter().for_each(|&c| s.push(c));
+        assert!(s.cov() > 0.4, "hotspot cov {} too uniform", s.cov());
+    }
+
+    #[test]
+    fn lavamd_is_random_small() {
+        let t = lavamd(0.02, 3);
+        assert!(t.records.iter().all(|r| r.access == AccessKind::Random));
+        assert!(t.records.iter().all(|r| r.req_sectors == 1));
+    }
+}

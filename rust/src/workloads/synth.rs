@@ -1,0 +1,110 @@
+//! Synthetic closed-loop request streams driven straight into the SSD —
+//! no GPU model. Used for the §2 queue-depth scaling study (the PM9A3
+//! comparison), the quickstart, and FTL stress tests.
+
+use crate::gpu::trace::AccessKind;
+
+/// A closed-loop stream: keeps `queue_depth` requests outstanding until
+/// `count` requests have completed.
+#[derive(Debug, Clone)]
+pub struct SynthPattern {
+    /// Total requests to issue.
+    pub count: u64,
+    /// Fraction of reads (rest are writes).
+    pub read_fraction: f64,
+    /// Request size in sectors.
+    pub sectors: u32,
+    /// Address pattern over the footprint.
+    pub access: AccessKind,
+    /// Outstanding requests to maintain (per-stream queue depth).
+    pub queue_depth: u32,
+    /// Logical footprint in sectors (0 = whole device share).
+    pub footprint_sectors: u64,
+}
+
+impl SynthPattern {
+    /// 4 KB random writes — the §2 enterprise benchmark workload.
+    pub fn random_4k_write(count: u64) -> Self {
+        Self {
+            count,
+            read_fraction: 0.0,
+            sectors: 1,
+            access: AccessKind::Random,
+            queue_depth: 64,
+            footprint_sectors: 0,
+        }
+    }
+
+    /// 4 KB random reads (requires a preceding fill to be meaningful).
+    pub fn random_4k_read(count: u64) -> Self {
+        Self {
+            count,
+            read_fraction: 1.0,
+            sectors: 1,
+            access: AccessKind::Random,
+            queue_depth: 64,
+            footprint_sectors: 0,
+        }
+    }
+
+    /// 70/30 mixed 4 KB random workload.
+    pub fn mixed_4k(count: u64) -> Self {
+        Self {
+            count,
+            read_fraction: 0.7,
+            sectors: 1,
+            access: AccessKind::Random,
+            queue_depth: 64,
+            footprint_sectors: 0,
+        }
+    }
+
+    /// Sequential 128 KB writes (bandwidth shape).
+    pub fn seq_128k_write(count: u64) -> Self {
+        Self {
+            count,
+            read_fraction: 0.0,
+            sectors: 32,
+            access: AccessKind::Sequential,
+            queue_depth: 32,
+            footprint_sectors: 0,
+        }
+    }
+
+    pub fn with_queue_depth(mut self, qd: u32) -> Self {
+        self.queue_depth = qd.max(1);
+        self
+    }
+
+    pub fn with_footprint(mut self, sectors: u64) -> Self {
+        self.footprint_sectors = sectors;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let p = SynthPattern::random_4k_write(1000).with_queue_depth(8);
+        assert_eq!(p.count, 1000);
+        assert_eq!(p.queue_depth, 8);
+        assert_eq!(p.sectors, 1);
+        assert_eq!(p.read_fraction, 0.0);
+        let r = SynthPattern::random_4k_read(10);
+        assert_eq!(r.read_fraction, 1.0);
+        let m = SynthPattern::mixed_4k(10);
+        assert!(m.read_fraction > 0.0 && m.read_fraction < 1.0);
+        let s = SynthPattern::seq_128k_write(10);
+        assert_eq!(s.sectors, 32);
+        assert_eq!(s.access, AccessKind::Sequential);
+    }
+
+    #[test]
+    fn queue_depth_floor() {
+        let p = SynthPattern::random_4k_write(10).with_queue_depth(0);
+        assert_eq!(p.queue_depth, 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration tests over the full co-simulation: the paper's headline
+//! orderings must hold end-to-end, and the engine must stay deterministic
+//! and drained across configurations.
+
+use mqms::config::{self, AddrScheme, SchedPolicy};
+use mqms::coordinator::CoSim;
+use mqms::sampling::{sample, SamplerConfig};
+use mqms::workloads::{self, synth::SynthPattern, WorkloadSpec};
+
+fn sampled(name: &str, scale: f64, seed: u64) -> mqms::gpu::trace::Trace {
+    let t = workloads::by_name(name, scale, seed).unwrap();
+    sample(&t, &SamplerConfig::default(), seed).0
+}
+
+#[test]
+fn mqms_beats_baseline_on_all_llm_workloads() {
+    for name in ["bert", "gpt2", "resnet50"] {
+        let trace = sampled(name, 0.001, 11);
+        let run = |cfg: config::SimConfig| {
+            let mut sim = CoSim::new(cfg);
+            sim.add_workload(WorkloadSpec::trace(name, trace.clone()));
+            sim.run()
+        };
+        let mq = run(config::mqms_enterprise());
+        let base = run(config::baseline_mqsim_macsim());
+        assert!(
+            mq.ssd.iops() > base.ssd.iops(),
+            "{name}: MQMS IOPS {} ≤ baseline {}",
+            mq.ssd.iops(),
+            base.ssd.iops()
+        );
+        assert!(
+            mq.end_ns < base.end_ns,
+            "{name}: MQMS end {} ≥ baseline {}",
+            mq.end_ns,
+            base.end_ns
+        );
+        assert!(
+            mq.ssd.mean_response_ns < base.ssd.mean_response_ns,
+            "{name}: MQMS response must be lower"
+        );
+        // Same logical work on both sides.
+        assert_eq!(mq.ssd.completed, base.ssd.completed, "{name}: request counts differ");
+    }
+}
+
+#[test]
+fn bert_gap_exceeds_sequential_workloads() {
+    let gap = |name: &str| {
+        let trace = sampled(name, 0.001, 13);
+        let run = |cfg: config::SimConfig| {
+            let mut sim = CoSim::new(cfg);
+            sim.add_workload(WorkloadSpec::trace(name, trace.clone()));
+            sim.run().ssd.iops()
+        };
+        run(config::mqms_enterprise()) / run(config::baseline_mqsim_macsim())
+    };
+    let bert = gap("bert");
+    let resnet = gap("resnet50");
+    assert!(
+        bert > resnet,
+        "paper §3.2: the BERT gap ({bert:.1}x) must exceed ResNet-50's ({resnet:.1}x)"
+    );
+}
+
+#[test]
+fn policy_combination_changes_outcomes() {
+    // Two contrasting combinations must produce measurably different
+    // end times for the Rodinia mix (the §4 premise).
+    let traces: Vec<(String, _)> = ["backprop", "hotspot", "lavamd"]
+        .iter()
+        .map(|n| (n.to_string(), sampled(n, 0.02, 5)))
+        .collect();
+    let run = |sched, scheme| {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpu.sched = sched;
+        cfg.ssd.scheme = scheme;
+        cfg.ssd.alloc = config::AllocPolicy::Static;
+        cfg.ssd.channels = 2;
+        cfg.ssd.ways = 2;
+        let mut sim = CoSim::new(cfg);
+        for (n, t) in &traces {
+            sim.add_workload(WorkloadSpec::trace(n, t.clone()));
+        }
+        sim.run()
+    };
+    let a = run(SchedPolicy::RoundRobin, AddrScheme::Cdwp);
+    let b = run(SchedPolicy::LargeChunk, AddrScheme::Wcdp);
+    assert_eq!(a.ssd.completed, b.ssd.completed);
+    let rel = (a.end_ns as f64 - b.end_ns as f64).abs() / a.end_ns as f64;
+    assert!(rel > 0.01, "policy change must alter the outcome (Δ {:.2}%)", rel * 100.0);
+}
+
+#[test]
+fn sampled_replay_tracks_full_replay() {
+    // Allegro promise: the sampled trace predicts the full trace's
+    // system-level behaviour. Compare full-replay end time against the
+    // sampled replay's weighted extrapolation.
+    let name = "backprop";
+    let full = workloads::by_name(name, 0.01, 3).unwrap();
+    let (reduced, stats) = sample(&full, &SamplerConfig::default(), 3);
+    assert!(stats.reduction_factor() > 1.5);
+    let run = |t: mqms::gpu::trace::Trace| {
+        let mut sim = CoSim::new(config::mqms_enterprise());
+        sim.add_workload(WorkloadSpec::trace(name, t));
+        sim.run()
+    };
+    let full_r = run(full);
+    let red_r = run(reduced);
+    let truth = full_r.workloads[0].end_ns as f64;
+    let est = red_r.workloads[0].predicted_end_ns;
+    let rel = (est - truth).abs() / truth;
+    assert!(
+        rel < 0.35,
+        "extrapolated end {est:.3e} vs full-replay {truth:.3e} ({:.0}% off)",
+        rel * 100.0
+    );
+}
+
+#[test]
+fn qd_scaling_shapes() {
+    // Enterprise: near-linear low-QD scaling. Client: early saturation.
+    let run = |cfg: config::SimConfig, qd: u32| {
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k",
+            SynthPattern::mixed_4k(2_000).with_queue_depth(qd),
+        ));
+        sim.run().ssd.iops()
+    };
+    let e1 = run(config::pm9a3_like(), 1);
+    let e8 = run(config::pm9a3_like(), 8);
+    assert!(e8 > 4.0 * e1, "enterprise QD8 {e8:.0} must be ≫ QD1 {e1:.0}");
+    // Client saturates around QD 32-64; enterprise keeps scaling.
+    let c128 = run(config::client_ssd(), 128);
+    let e128 = run(config::pm9a3_like(), 128);
+    assert!(
+        e128 > 2.5 * c128,
+        "enterprise at QD128 must dwarf client ({e128:.0} vs {c128:.0})"
+    );
+}
+
+#[test]
+fn gc_under_sustained_writes_in_cosim() {
+    // Long synthetic write stream over a small footprint: GC must engage
+    // and the run must still drain.
+    let mut cfg = config::mqms_enterprise();
+    cfg.ssd.channels = 1;
+    cfg.ssd.ways = 1;
+    cfg.ssd.blocks_per_plane = 16;
+    cfg.ssd.pages_per_block = 16;
+    cfg.ssd.op_ratio = 0.6;
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::synthetic(
+        "churn",
+        SynthPattern::random_4k_write(20_000)
+            .with_queue_depth(64)
+            .with_footprint(256),
+    ));
+    let r = sim.run();
+    assert_eq!(r.ssd.completed, 20_000);
+    assert!(r.ssd.gc_erases > 0, "GC must have reclaimed blocks");
+}
+
+#[test]
+fn report_json_is_parseable_and_complete() {
+    let mut sim = CoSim::new(config::mqms_enterprise());
+    sim.add_workload(WorkloadSpec::trace("lavamd", sampled("lavamd", 0.005, 9)));
+    let r = sim.run();
+    let j = r.to_json();
+    let re = mqms::util::jsonlite::Json::parse(&j.pretty()).unwrap();
+    assert!(re.path(&["ssd", "iops"]).unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        re.get("workloads").unwrap().as_arr().unwrap().len(),
+        1
+    );
+    assert!(re.get("end_ns").unwrap().as_u64().unwrap() > 0);
+}

@@ -1,0 +1,193 @@
+//! Randomized property tests on FTL invariants, via the in-repo `quick`
+//! helper (offline stand-in for proptest):
+//!
+//! * **No lost writes** — after any interleaving of writes and GC, every
+//!   written lsn resolves to a valid physical sector whose reverse map
+//!   points back at it.
+//! * **Conservation** — total valid sectors equals the number of distinct
+//!   live logical sectors.
+//! * **Completion exactness** — every submitted request completes exactly
+//!   once, regardless of queue pressure and GC interference.
+
+use mqms::config::{self, AllocPolicy, DynamicScope, MapGranularity};
+use mqms::sim::{Engine, EventQueue, SimTime, World};
+use mqms::ssd::nvme::{IoRequest, Opcode};
+use mqms::ssd::{SsdEvent, SsdSim};
+use mqms::util::quick::{forall, Gen};
+
+struct SsdWorld {
+    ssd: SsdSim,
+}
+
+impl World for SsdWorld {
+    type Ev = SsdEvent;
+    fn handle(&mut self, now: SimTime, ev: SsdEvent, q: &mut EventQueue<SsdEvent>) {
+        self.ssd.handle(now, ev, q);
+    }
+}
+
+/// Small geometry so GC actually runs within a short random workload.
+fn small_cfg(mapping: MapGranularity, alloc: AllocPolicy) -> config::SsdConfig {
+    let mut cfg = config::mqms_enterprise().ssd;
+    cfg.channels = 2;
+    cfg.ways = 1;
+    cfg.dies = 1;
+    cfg.planes = 2;
+    cfg.blocks_per_plane = 12;
+    cfg.pages_per_block = 8;
+    cfg.gc_threshold_blocks = 2;
+    cfg.op_ratio = 0.6;
+    cfg.mapping = mapping;
+    cfg.alloc = alloc;
+    cfg
+}
+
+/// Drive a random write/read mix; verify mapping + completion invariants.
+fn run_case(g: &mut Gen, mapping: MapGranularity, alloc: AllocPolicy) {
+    let cfg = small_cfg(mapping, alloc);
+    let mut world = SsdWorld { ssd: SsdSim::new(&cfg, g.u64(0..1 << 48)) };
+    let mut engine: Engine<SsdWorld> = Engine::new();
+    let cap = world.ssd.logical_sectors();
+    assert!(cap >= 16);
+
+    let ops = g.usize(10..200);
+    let mut submitted = 0u64;
+    let mut id = 0u64;
+    let mut written = std::collections::HashSet::new();
+    for _ in 0..ops {
+        id += 1;
+        let sectors = g.u64(1..5) as u32;
+        let lsn = g.u64(0..cap - sectors as u64);
+        let write = g.bool();
+        let req = IoRequest {
+            id,
+            opcode: if write { Opcode::Write } else { Opcode::Read },
+            lsn,
+            sectors,
+            submit_ns: 0,
+            source: 0,
+        };
+        let queue = (id % 4) as usize;
+        loop {
+            match world.ssd.submit(queue, req, &mut engine.queue) {
+                Ok(()) => {
+                    submitted += 1;
+                    if write {
+                        for s in lsn..lsn + sectors as u64 {
+                            written.insert(s);
+                        }
+                    }
+                    break;
+                }
+                Err(_) => {
+                    // Full queue: make progress then retry.
+                    engine.run_until(&mut world, None, Some(50));
+                }
+            }
+        }
+        if g.u64(0..4) == 0 {
+            engine.run_until(&mut world, None, Some(g.u64(1..200)));
+        }
+    }
+    let stats = engine.run(&mut world);
+    assert!(stats.quiescent);
+
+    // Completion exactness.
+    assert_eq!(world.ssd.metrics.completed(), submitted, "every request completes once");
+    assert!(world.ssd.is_drained());
+
+    // Conservation: live valid sectors == distinct written lsns
+    // (page-mapping counts one valid entry per written logical page).
+    let expect = match mapping {
+        MapGranularity::Sector => written.len() as u64,
+        MapGranularity::Page => {
+            let spp = cfg.sectors_per_page() as u64;
+            written.iter().map(|s| s / spp).collect::<std::collections::HashSet<_>>().len()
+                as u64
+        }
+    };
+    assert_eq!(world.ssd.mgr.total_valid(), expect, "valid-sector conservation");
+}
+
+#[test]
+fn no_lost_writes_fine_dynamic() {
+    forall(40, 0xF1FE, |g| run_case(g, MapGranularity::Sector, AllocPolicy::Dynamic));
+}
+
+#[test]
+fn no_lost_writes_fine_static() {
+    forall(40, 0xF15A, |g| run_case(g, MapGranularity::Sector, AllocPolicy::Static));
+}
+
+#[test]
+fn no_lost_writes_coarse_dynamic() {
+    forall(40, 0xC0D1, |g| run_case(g, MapGranularity::Page, AllocPolicy::Dynamic));
+}
+
+#[test]
+fn no_lost_writes_coarse_static() {
+    forall(40, 0xC05A, |g| run_case(g, MapGranularity::Page, AllocPolicy::Static));
+}
+
+#[test]
+fn restricted_dynamic_scopes_hold_invariants() {
+    forall(30, 0x5C0E, |g| {
+        let mut cfg = small_cfg(MapGranularity::Sector, AllocPolicy::Dynamic);
+        cfg.dynamic_scope = *g.pick(&[DynamicScope::WithinChannel, DynamicScope::WithinDie]);
+        let mut world = SsdWorld { ssd: SsdSim::new(&cfg, g.u64(0..1 << 40)) };
+        let mut engine: Engine<SsdWorld> = Engine::new();
+        let cap = world.ssd.logical_sectors();
+        let n = g.u64(20..150);
+        for i in 0..n {
+            let req = IoRequest {
+                id: i + 1,
+                opcode: Opcode::Write,
+                lsn: g.u64(0..cap - 1),
+                sectors: 1,
+                submit_ns: 0,
+                source: 0,
+            };
+            while world.ssd.submit(0, req, &mut engine.queue).is_err() {
+                engine.run_until(&mut world, None, Some(50));
+            }
+        }
+        engine.run(&mut world);
+        assert_eq!(world.ssd.metrics.completed(), n);
+        assert!(world.ssd.is_drained());
+    });
+}
+
+#[test]
+fn heavy_overwrite_pressure_survives_gc_storms() {
+    // Deterministic stress: overwrite a tiny logical space many times so GC
+    // must run repeatedly on every plane; nothing may be lost or stuck.
+    for mapping in [MapGranularity::Sector, MapGranularity::Page] {
+        let cfg = small_cfg(mapping, AllocPolicy::Dynamic);
+        let mut world = SsdWorld { ssd: SsdSim::new(&cfg, 77) };
+        let mut engine: Engine<SsdWorld> = Engine::new();
+        let cap = world.ssd.logical_sectors().min(64);
+        let mut id = 0u64;
+        // Enough rounds to consume every plane's free blocks several times.
+        for round in 0..48 {
+            for lsn in 0..cap {
+                id += 1;
+                let req = IoRequest {
+                    id,
+                    opcode: Opcode::Write,
+                    lsn,
+                    sectors: 1,
+                    submit_ns: 0,
+                    source: 0,
+                };
+                while world.ssd.submit((id % 2) as usize, req, &mut engine.queue).is_err() {
+                    engine.run_until(&mut world, None, Some(100));
+                }
+            }
+            engine.run(&mut world);
+            assert!(world.ssd.is_drained(), "round {round} left work stuck");
+        }
+        assert_eq!(world.ssd.metrics.completed(), id);
+        assert!(world.ssd.gc.collections_finished > 0, "GC must have run");
+        assert!(world.ssd.mgr.max_erase() > 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Cross-module integration: CLI-level flows (config files, trace files),
+//! failure injection, and whole-system consistency checks that don't fit a
+//! single module.
+
+use mqms::config::{self, SimConfig};
+use mqms::coordinator::CoSim;
+use mqms::gpu::trace::Trace;
+use mqms::sampling::{sample, SamplerConfig};
+use mqms::workloads::{self, synth::SynthPattern, WorkloadSpec};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mqms_it_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn config_file_roundtrip_drives_simulation() {
+    let dir = tmpdir("cfg");
+    let path = dir.join("mqms.json");
+    config::mqms_enterprise().save(&path).unwrap();
+    let cfg = SimConfig::load(&path).unwrap();
+    assert_eq!(cfg, config::mqms_enterprise());
+    // A modified file changes behaviour.
+    let mut text = std::fs::read_to_string(&path).unwrap();
+    text = text.replace("\"mapping\": \"sector\"", "\"mapping\": \"page\"");
+    std::fs::write(&path, text).unwrap();
+    let cfg2 = SimConfig::load(&path).unwrap();
+    assert_eq!(cfg2.ssd.mapping, config::MapGranularity::Page);
+}
+
+#[test]
+fn corrupted_config_rejected() {
+    let dir = tmpdir("badcfg");
+    let path = dir.join("bad.json");
+    std::fs::write(&path, "{\"ssd\": {\"channels\": 0}}").unwrap();
+    assert!(SimConfig::load(&path).is_err());
+    std::fs::write(&path, "not json at all").unwrap();
+    assert!(SimConfig::load(&path).is_err());
+}
+
+#[test]
+fn trace_file_feeds_cosim() {
+    let dir = tmpdir("trace");
+    let p = dir.join("bp.mqmt");
+    let t = workloads::by_name("backprop", 0.005, 7).unwrap();
+    let (s, _) = sample(&t, &SamplerConfig::default(), 7);
+    s.save(&p).unwrap();
+    let loaded = Trace::load(&p).unwrap();
+    let mut cfg = config::mqms_enterprise();
+    cfg.gpu.dram_bytes = 0; // force all accesses to storage
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::trace("bp", loaded));
+    let r = sim.run();
+    assert!(r.ssd.completed > 0);
+}
+
+#[test]
+fn zero_capacity_synth_footprint_clamps() {
+    // A synth stream with a 1-sector footprint must still run (degenerate
+    // region handling).
+    let mut sim = CoSim::new(config::mqms_enterprise());
+    sim.add_workload(WorkloadSpec::synthetic(
+        "tiny",
+        SynthPattern::random_4k_write(100).with_footprint(1).with_queue_depth(4),
+    ));
+    let r = sim.run();
+    assert_eq!(r.ssd.completed, 100);
+}
+
+#[test]
+fn multi_stream_fairness() {
+    // Four identical synth streams: completed counts must match exactly and
+    // per-stream IOPS must be within 2x of each other (round-robin SQ
+    // arbitration; modest skew tolerated).
+    let mut sim = CoSim::new(config::mqms_enterprise());
+    for i in 0..4 {
+        sim.add_workload(WorkloadSpec::synthetic(
+            &format!("s{i}"),
+            SynthPattern::mixed_4k(5_000).with_queue_depth(32),
+        ));
+    }
+    let r = sim.run();
+    assert_eq!(r.ssd.completed, 20_000);
+    let iops: Vec<f64> = r.workloads.iter().map(|w| w.iops).collect();
+    let max = iops.iter().cloned().fold(f64::MIN, f64::max);
+    let min = iops.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min < 2.0, "stream starvation: {iops:?}");
+}
+
+#[test]
+fn wear_stays_bounded_under_churn() {
+    // Wear accounting: sustained overwrites must not concentrate erases on
+    // few blocks (greedy victim choice + LIFO free list keeps wear sane).
+    let mut cfg = config::mqms_enterprise();
+    cfg.ssd.channels = 1;
+    cfg.ssd.ways = 1;
+    cfg.ssd.dies = 1;
+    cfg.ssd.planes = 2;
+    cfg.ssd.blocks_per_plane = 16;
+    cfg.ssd.pages_per_block = 16;
+    cfg.ssd.op_ratio = 0.5;
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::synthetic(
+        "churn",
+        SynthPattern::random_4k_write(30_000).with_queue_depth(32).with_footprint(512),
+    ));
+    let r = sim.run();
+    assert_eq!(r.ssd.completed, 30_000);
+    assert!(r.ssd.gc_erases > 10, "expected sustained GC, got {}", r.ssd.gc_erases);
+    let world = sim.world();
+    let max_erase = world.ssd.mgr.max_erase();
+    // Perfect leveling would be gc_erases / 32 blocks; allow 8x skew.
+    let fair = (r.ssd.gc_erases as f64 / 32.0).max(1.0);
+    assert!(
+        (max_erase as f64) < 8.0 * fair,
+        "wear skew: max {max_erase} vs fair {fair:.1}"
+    );
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // The mqms binary's core subcommands work end to end.
+    let bin = env!("CARGO_BIN_EXE_mqms");
+    let dir = tmpdir("cli");
+    let trace_path = dir.join("lavamd.mqmt");
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(bin).args(args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "mqms {args:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let out = run(&[
+        "trace",
+        "--workload",
+        "lavamd",
+        "--scale",
+        "0.002",
+        "--out",
+        trace_path.to_str().unwrap(),
+    ]);
+    assert!(out.contains("records"));
+    let out = run(&["inspect", trace_path.to_str().unwrap()]);
+    assert!(out.contains("represented_kernels"));
+    let out = run(&["config", "--preset", "baseline"]);
+    assert!(out.contains("host-mediated"));
+    let out = run(&[
+        "run",
+        "--workload",
+        trace_path.to_str().unwrap(),
+        "--preset",
+        "mqms",
+        "--json",
+    ]);
+    assert!(out.contains("\"iops\""));
+}

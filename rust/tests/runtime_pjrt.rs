@@ -1,0 +1,110 @@
+//! PJRT runtime integration: loading and executing the AOT artifacts from
+//! rust. These tests require `make artifacts` to have run; they are skipped
+//! (with a notice) when the artifacts directory is absent so `cargo test`
+//! works in a fresh checkout.
+
+use mqms::runtime::{Manifest, Runtime};
+use std::path::Path;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping PJRT tests: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let Some(m) = manifest() else { return };
+    for name in ["tiny_gpt2_fwd", "tiny_bert_encode", "pallas_matmul_64x128x64"] {
+        let a = m.find(name).unwrap_or_else(|| panic!("missing artifact {name}"));
+        assert!(!a.inputs.is_empty());
+        assert!(!a.outputs.is_empty());
+        assert!(m.dir.join(&a.hlo_file).exists());
+    }
+}
+
+#[test]
+fn pallas_matmul_executes_correctly() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let model = rt.load(&m, "pallas_matmul_64x128x64").unwrap();
+    let (mm, kk, nn) = (64usize, 128usize, 64usize);
+    let x: Vec<f32> = (0..mm * kk).map(|i| (i % 7) as f32 * 0.25).collect();
+    let w: Vec<f32> = (0..kk * nn).map(|i| (i % 5) as f32 * 0.5).collect();
+    let out = model.run_f32(&[x.clone(), w.clone()]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), mm * nn);
+    // Full rust-side re-computation — the Pallas kernel must agree.
+    for (r, c) in [(0usize, 0usize), (13, 7), (63, 63), (31, 40)] {
+        let mut want = 0f32;
+        for i in 0..kk {
+            want += x[r * kk + i] * w[i * nn + c];
+        }
+        let got = out[0][r * nn + c];
+        assert!(
+            (want - got).abs() < 1e-2,
+            "[{r},{c}]: rust {want} vs pjrt {got}"
+        );
+    }
+}
+
+#[test]
+fn gpt2_artifact_checksum_holds() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let model = rt.load(&m, "tiny_gpt2_fwd").unwrap();
+    let seq_len = model.spec.meta.get("seq_len").unwrap().as_usize().unwrap();
+    let vocab = model.spec.meta.get("vocab").unwrap().as_usize().unwrap();
+    let weights = Runtime::load_weights(&m, &model.spec).unwrap();
+    assert_eq!(weights.len(), model.spec.inputs.len() - 1);
+    let ids: Vec<f32> = (0..seq_len).map(|i| (i % vocab) as f32).collect();
+    let mut inputs = vec![ids];
+    inputs.extend(weights);
+    let out = model.run_f32(&inputs).unwrap();
+    let got: f64 = out[0].iter().map(|&v| v as f64).sum();
+    let want = model.spec.meta.get("check_logits_sum").unwrap().as_f64().unwrap();
+    assert!(
+        (got - want).abs() <= want.abs() * 1e-4 + 1e-2,
+        "logits sum {got} vs recorded {want}"
+    );
+}
+
+#[test]
+fn bert_artifact_checksum_holds() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let model = rt.load(&m, "tiny_bert_encode").unwrap();
+    let seq_len = model.spec.meta.get("seq_len").unwrap().as_usize().unwrap();
+    let weights = Runtime::load_weights(&m, &model.spec).unwrap();
+    let ids: Vec<f32> = (0..seq_len).map(|i| (i % 512) as f32).collect();
+    let mut inputs = vec![ids];
+    inputs.extend(weights);
+    let out = model.run_f32(&inputs).unwrap();
+    assert_eq!(out.len(), 2, "hidden + pooled");
+    let hidden_sum: f64 = out[0].iter().map(|&v| v as f64).sum();
+    let pooled_sum: f64 = out[1].iter().map(|&v| v as f64).sum();
+    let want_h = model.spec.meta.get("check_hidden_sum").unwrap().as_f64().unwrap();
+    let want_p = model.spec.meta.get("check_pooled_sum").unwrap().as_f64().unwrap();
+    assert!((hidden_sum - want_h).abs() <= want_h.abs() * 1e-4 + 1e-2);
+    assert!((pooled_sum - want_p).abs() <= want_p.abs() * 1e-4 + 1e-2);
+    // Pooled output is tanh-bounded.
+    assert!(out[1].iter().all(|v| (-1.0..=1.0).contains(v)));
+}
+
+#[test]
+fn wrong_input_shapes_rejected() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let model = rt.load(&m, "pallas_matmul_64x128x64").unwrap();
+    // Wrong arity.
+    assert!(model.run_f32(&[vec![0.0; 64 * 128]]).is_err());
+    // Wrong element count.
+    assert!(model
+        .run_f32(&[vec![0.0; 10], vec![0.0; 128 * 64]])
+        .is_err());
+}

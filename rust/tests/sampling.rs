@@ -1,0 +1,105 @@
+//! Integration tests of the Allegro sampling pipeline over the real
+//! workload generators (not synthetic toy traces): reduction, estimator
+//! accuracy, and structural-cluster integrity.
+
+use mqms::sampling::{m_min, sample, SamplerConfig};
+use mqms::util::quick::forall;
+use mqms::workloads;
+
+#[test]
+fn all_generators_sample_within_epsilon() {
+    let cfg = SamplerConfig::default();
+    for name in workloads::ALL_WORKLOADS {
+        // Enough kernels per structural cluster that m_min < N (GPT-2 is
+        // huge per unit of scale; the others need a larger scale).
+        let scale = match name {
+            "gpt2" => 0.005,          // huge per unit of scale
+            "hotspot" => 0.3,         // erratic (CoV 0.25): m_min is large
+            _ => 0.05,
+        };
+        let t = workloads::by_name(name, scale, 21).unwrap();
+        let (sampled, stats) = sample(&t, &cfg, 21);
+        // Weighted kernel count is preserved exactly.
+        let represented = sampled.represented_kernels();
+        assert!(
+            (represented - t.records.len() as f64).abs() < 1e-6,
+            "{name}: represented {represented} != {}",
+            t.records.len()
+        );
+        // Total execution-time estimator within a few ε.
+        let metric = |t: &mqms::gpu::trace::Trace| -> f64 {
+            t.records
+                .iter()
+                .map(|r| r.cycles_per_block as f64 * r.grid as f64 * r.weight)
+                .sum()
+        };
+        let rel = (metric(&sampled) - metric(&t)).abs() / metric(&t);
+        assert!(rel < 3.0 * cfg.epsilon, "{name}: estimator error {rel:.3}");
+        // Real ML traces must compress substantially.
+        assert!(
+            stats.reduction_factor() > 3.0,
+            "{name}: reduction only {:.1}x",
+            stats.reduction_factor()
+        );
+    }
+}
+
+#[test]
+fn sampled_records_preserve_structural_identity() {
+    // Every sampled record must exist in the original trace's structural
+    // cluster set (same name/grid/block).
+    let t = workloads::by_name("bert", 0.002, 5).unwrap();
+    let (sampled, _) = sample(&t, &SamplerConfig::default(), 5);
+    let originals: std::collections::HashSet<(u32, u32, u32)> =
+        t.records.iter().map(|r| (r.name_id, r.grid, r.block)).collect();
+    for r in &sampled.records {
+        assert!(
+            originals.contains(&(r.name_id, r.grid, r.block)),
+            "sampled record has foreign structure"
+        );
+        assert!(r.weight >= 1.0 - 1e-9, "weights must scale up, not down");
+    }
+    assert_eq!(sampled.footprint_sectors, t.footprint_sectors);
+}
+
+#[test]
+fn epsilon_controls_sample_size() {
+    let t = workloads::by_name("gpt2", 0.002, 9).unwrap();
+    let tight = sample(&t, &SamplerConfig { epsilon: 0.01, ..Default::default() }, 9).1;
+    let loose = sample(&t, &SamplerConfig { epsilon: 0.20, ..Default::default() }, 9).1;
+    assert!(
+        tight.sampled_kernels >= loose.sampled_kernels,
+        "tighter ε must sample at least as much: {} vs {}",
+        tight.sampled_kernels,
+        loose.sampled_kernels
+    );
+}
+
+#[test]
+fn m_min_properties() {
+    forall(200, 0x33, |g| {
+        let cov = g.f64() * 2.0;
+        let eps = 0.01 + g.f64() * 0.2;
+        let n = g.usize(1..100_000);
+        let m = m_min(cov, eps, 1.96, n);
+        assert!(m >= 1 && m <= n, "m {m} out of [1, {n}]");
+        // Monotonic in cov.
+        let m2 = m_min(cov * 1.5, eps, 1.96, n);
+        assert!(m2 >= m, "m_min must grow with variance");
+        // Anti-monotonic in epsilon.
+        let m3 = m_min(cov, eps * 2.0, 1.96, n);
+        assert!(m3 <= m, "m_min must shrink with looser bounds");
+    });
+}
+
+#[test]
+fn trace_file_roundtrip_through_sampling() {
+    let dir = std::env::temp_dir().join("mqms_sampling_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t = workloads::by_name("hotspot", 0.02, 3).unwrap();
+    let (sampled, _) = sample(&t, &SamplerConfig::default(), 3);
+    let p = dir.join("hotspot.sampled.mqmt");
+    sampled.save(&p).unwrap();
+    let loaded = mqms::gpu::trace::Trace::load(&p).unwrap();
+    assert_eq!(loaded, sampled);
+}
