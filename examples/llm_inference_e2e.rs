@@ -16,7 +16,6 @@
 //! make artifacts && cargo run --release --example llm_inference_e2e
 //! ```
 
-use anyhow::{anyhow, Context, Result};
 use mqms::config;
 use mqms::coordinator::CoSim;
 use mqms::gpu::trace::{AccessKind, KernelRecord, Trace};
@@ -24,6 +23,8 @@ use mqms::runtime::{Manifest, Runtime};
 use mqms::util::bench::{ns, print_table, si};
 use mqms::workloads::WorkloadSpec;
 use std::path::Path;
+
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn main() -> Result<()> {
     let artifacts_dir = std::env::args()
@@ -61,7 +62,7 @@ fn main() -> Result<()> {
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i as f32)
-            .ok_or_else(|| anyhow!("empty logits"))?;
+            .ok_or("empty logits")?;
         ids.push(next);
     }
     let decode_wall = t0.elapsed().as_secs_f64();
@@ -121,9 +122,9 @@ fn verify_matmul(rt: &mut Runtime, manifest: &Manifest) -> Result<()> {
         .meta
         .get("check_sum")
         .and_then(|v| v.as_f64())
-        .ok_or_else(|| anyhow!("manifest missing check_sum"))?;
+        .ok_or("manifest missing check_sum")?;
     if (got - want).abs() > want.abs() * 1e-5 + 1e-3 {
-        return Err(anyhow!("matmul checksum mismatch: got {got}, want {want}"));
+        return Err(format!("matmul checksum mismatch: got {got}, want {want}").into());
     }
     // Independent rust recomputation of one output element.
     let mut expect00 = 0f32;
@@ -132,7 +133,7 @@ fn verify_matmul(rt: &mut Runtime, manifest: &Manifest) -> Result<()> {
     }
     let got00 = out[0][0];
     if (expect00 - got00).abs() > 1e-3 {
-        return Err(anyhow!("matmul[0,0] mismatch: rust {expect00} vs pjrt {got00}"));
+        return Err(format!("matmul[0,0] mismatch: rust {expect00} vs pjrt {got00}").into());
     }
     println!("pallas_matmul artifact ✓ (sum {got:.3})");
     Ok(())
@@ -146,13 +147,13 @@ fn verify_gpt2(rt: &mut Runtime, manifest: &Manifest) -> Result<(usize, usize)> 
         .meta
         .get("seq_len")
         .and_then(|v| v.as_usize())
-        .context("seq_len")?;
+        .ok_or("meta missing seq_len")?;
     let vocab = model
         .spec
         .meta
         .get("vocab")
         .and_then(|v| v.as_usize())
-        .context("vocab")?;
+        .ok_or("meta missing vocab")?;
     let weights = Runtime::load_weights(manifest, &model.spec)?;
     let ids: Vec<f32> = (0..seq_len).map(|i| (i % vocab) as f32).collect();
     let mut inputs = vec![ids];
@@ -164,16 +165,16 @@ fn verify_gpt2(rt: &mut Runtime, manifest: &Manifest) -> Result<(usize, usize)> 
         .meta
         .get("check_logits_sum")
         .and_then(|v| v.as_f64())
-        .context("check_logits_sum")?;
+        .ok_or("meta missing check_logits_sum")?;
     if (got - want).abs() > want.abs() * 1e-4 + 1e-2 {
-        return Err(anyhow!("gpt2 checksum mismatch: got {got}, want {want}"));
+        return Err(format!("gpt2 checksum mismatch: got {got}, want {want}").into());
     }
     let argmax_want = model
         .spec
         .meta
         .get("check_argmax_last")
         .and_then(|v| v.as_u64())
-        .context("check_argmax_last")?;
+        .ok_or("meta missing check_argmax_last")?;
     let last = &out[0][(seq_len - 1) * vocab..];
     let argmax_got = last
         .iter()
@@ -182,7 +183,7 @@ fn verify_gpt2(rt: &mut Runtime, manifest: &Manifest) -> Result<(usize, usize)> 
         .map(|(i, _)| i as u64)
         .unwrap();
     if argmax_got != argmax_want {
-        return Err(anyhow!("gpt2 argmax mismatch: {argmax_got} vs {argmax_want}"));
+        return Err(format!("gpt2 argmax mismatch: {argmax_got} vs {argmax_want}").into());
     }
     println!("tiny_gpt2_fwd artifact ✓ (logits sum {got:.3}, argmax {argmax_got})");
     Ok((seq_len, vocab))

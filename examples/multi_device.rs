@@ -1,0 +1,59 @@
+//! Multi-device sharding walkthrough: the same saturating 4 KB random-write
+//! stream against a single MQMS enterprise SSD and against striped arrays
+//! of 2 and 4 devices, with the per-device breakdown the report now carries.
+//!
+//! ```text
+//! cargo run --release --example multi_device
+//! ```
+
+use mqms::config;
+use mqms::coordinator::CoSim;
+use mqms::util::bench::{ns, print_table, si};
+use mqms::workloads::{synth::SynthPattern, WorkloadSpec};
+
+fn main() {
+    let mut rows = Vec::new();
+    for devices in [1u32, 2, 4] {
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = devices;
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k",
+            SynthPattern::random_4k_write(20_000).with_queue_depth(2048),
+        ));
+        let report = sim.run();
+        println!(
+            "{} device(s): {} requests, aggregate {} IOPS, end {}",
+            devices,
+            report.ssd.completed,
+            si(report.ssd.iops()),
+            ns(report.end_ns as f64),
+        );
+        for (d, s) in report.ssd_devices.iter().enumerate() {
+            println!(
+                "  dev{d}: {} completed, {} IOPS, {} flash programs",
+                s.completed,
+                si(s.iops()),
+                s.flash_programs
+            );
+        }
+        rows.push((
+            format!("{devices} device(s)"),
+            vec![
+                si(report.ssd.iops()),
+                ns(report.ssd.mean_response_ns),
+                ns(report.end_ns as f64),
+            ],
+        ));
+    }
+    print_table(
+        "striped-array scaling (4 KB random writes, QD 2048)",
+        &["array", "aggregate IOPS", "mean resp", "end time"],
+        &rows,
+    );
+    println!(
+        "The stripe map is deterministic: same seed ⇒ identical reports, any\n\
+         device count; a 1-device array is bit-identical to the unsharded\n\
+         simulator. Try `mqms campaign` for the full scenario matrix."
+    );
+}

@@ -14,13 +14,12 @@ use mqms::util::bench::{ns, print_table, si};
 use mqms::util::cli::Args;
 use mqms::workloads::{rodinia, WorkloadSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::new("policy_sweep", "policy maxima exploration (paper §4)")
         .opt("scale", Some("0.02"), "workload scale")
         .opt("seed", Some("42"), "rng seed")
-        .parse(&argv)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .parse(&argv)?;
     let scale = args.get_f64("scale")?;
     let seed = args.get_u64("seed")?;
 

@@ -92,6 +92,21 @@ pub fn ratio(a: f64, b: f64) -> String {
     format!("{:.1}x", a / b)
 }
 
+/// Run a closed-loop 4 KB random-write stream through an MQMS array of
+/// `devices` SSDs (the multi-device scaling benchmark + tests workload).
+pub fn multi_device_synth(devices: u32, count: u64, qd: u32, seed: u64) -> Report {
+    use crate::workloads::synth::SynthPattern;
+    let mut cfg = config::mqms_enterprise();
+    cfg.devices = devices;
+    cfg.seed = seed;
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::synthetic(
+        "rand4k",
+        SynthPattern::random_4k_write(count).with_queue_depth(qd),
+    ));
+    sim.run()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

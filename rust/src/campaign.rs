@@ -1,0 +1,257 @@
+//! Parallel scenario campaigns: expand a `{preset × workload × scale ×
+//! device-count}` matrix into cells and execute them on `std::thread`
+//! workers, one independent co-simulation per cell.
+//!
+//! Each cell is a fully self-contained [`CoSim`] seeded from the campaign's
+//! root seed, so results are deterministic per cell; cells are collected in
+//! matrix order regardless of which worker ran them, making the merged
+//! summary **byte-identical for any worker-thread count** (host wall-clock
+//! time is excluded via [`Report::to_json_deterministic`]).
+
+use crate::config::SimConfig;
+use crate::coordinator::CoSim;
+use crate::metrics::Report;
+use crate::util::bench::{ns, si};
+use crate::util::jsonlite::Json;
+use crate::workloads;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// The campaign matrix: the cross product of every axis.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Preset names or config-file paths.
+    pub presets: Vec<String>,
+    /// Trace-generator or synthetic-stream names (see
+    /// [`workloads::spec_by_name`]).
+    pub workloads: Vec<String>,
+    pub scales: Vec<f64>,
+    /// Device counts for the striped array.
+    pub devices: Vec<u32>,
+    /// Root seed; every cell runs with this seed (a cell is then directly
+    /// comparable to `mqms run --seed <seed>` with the same parameters).
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core, capped at the cell count.
+    pub threads: usize,
+    /// Allegro-sample trace workloads before replay (as `mqms run` does).
+    pub sampled: bool,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        Self {
+            presets: vec!["mqms".into(), "baseline".into()],
+            workloads: vec!["bert".into(), "rand4k".into()],
+            scales: vec![0.005],
+            devices: vec![1, 2, 4],
+            seed: 42,
+            threads: 0,
+            sampled: true,
+        }
+    }
+}
+
+/// One point of the campaign matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub preset: String,
+    pub workload: String,
+    pub scale: f64,
+    pub devices: u32,
+}
+
+impl Cell {
+    /// Compact row label for tables and file names.
+    pub fn label(&self) -> String {
+        format!("{}/{}@{}x{}d", self.preset, self.workload, self.scale, self.devices)
+    }
+}
+
+/// Expand the matrix in deterministic (row-major) order.
+pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for preset in &spec.presets {
+        for workload in &spec.workloads {
+            for &scale in &spec.scales {
+                for &devices in &spec.devices {
+                    cells.push(Cell {
+                        preset: preset.clone(),
+                        workload: workload.clone(),
+                        scale,
+                        devices,
+                    });
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Run one cell to completion.
+pub fn run_cell(cell: &Cell, seed: u64, sampled: bool) -> Result<Report, String> {
+    let mut cfg = SimConfig::load_named(&cell.preset)?;
+    cfg.seed = seed;
+    cfg.devices = cell.devices;
+    cfg.validate()?;
+    let (wspec, _stats) =
+        workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(wspec);
+    Ok(sim.run())
+}
+
+fn effective_threads(requested: usize, cells: usize) -> usize {
+    let t = if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    t.clamp(1, cells.max(1))
+}
+
+/// Execute every cell on a worker pool; results come back in matrix order
+/// whatever the interleaving, so downstream output is thread-count-invariant.
+pub fn run(spec: &CampaignSpec) -> Result<Vec<(Cell, Report)>, String> {
+    let cells = expand(spec);
+    if cells.is_empty() {
+        return Err("empty campaign matrix (no presets/workloads/scales/devices)".to_string());
+    }
+    // Fail fast on unresolvable axes before spawning workers (name-only
+    // checks — no full-scale trace synthesis here).
+    for p in &spec.presets {
+        SimConfig::load_named(p)?;
+    }
+    for w in &spec.workloads {
+        if !workloads::is_valid_name(w) {
+            // Reuse the canonical error with the valid-name listing.
+            workloads::spec_by_name(w, 0.0, spec.seed)?;
+        }
+    }
+    let threads = effective_threads(spec.threads, cells.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<Report, String>>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let r = run_cell(&cells[i], spec.seed, spec.sampled);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(cells.len());
+    for (cell, slot) in cells.into_iter().zip(slots) {
+        let report = slot
+            .into_inner()
+            .unwrap()
+            .unwrap_or_else(|| Err("cell was never executed".to_string()))?;
+        out.push((cell, report));
+    }
+    Ok(out)
+}
+
+/// Deterministic merged campaign summary (excludes wall-clock time): same
+/// seed ⇒ byte-identical output for any thread count.
+pub fn summary_json(results: &[(Cell, Report)]) -> Json {
+    let cells: Vec<Json> = results
+        .iter()
+        .map(|(c, r)| {
+            Json::from_pairs(vec![
+                ("preset", c.preset.as_str().into()),
+                ("workload", c.workload.as_str().into()),
+                ("scale", c.scale.into()),
+                ("devices", (c.devices as u64).into()),
+                ("report", r.to_json_deterministic()),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![("cells", Json::Arr(cells))])
+}
+
+/// Table rows for [`crate::util::bench::print_table`]: one row per cell.
+pub fn table_rows(results: &[(Cell, Report)]) -> Vec<(String, Vec<String>)> {
+    results
+        .iter()
+        .map(|(c, r)| {
+            (
+                c.label(),
+                vec![
+                    si(r.ssd.iops()),
+                    ns(r.ssd.mean_response_ns),
+                    ns(r.end_ns as f64),
+                    r.ssd.completed.to_string(),
+                    r.past_clamps.to_string(),
+                ],
+            )
+        })
+        .collect()
+}
+
+/// Column headers matching [`table_rows`].
+pub const TABLE_HEADERS: [&str; 6] =
+    ["cell", "IOPS", "mean resp", "end time", "completed", "clamps"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expand_is_row_major_cross_product() {
+        let spec = CampaignSpec {
+            presets: vec!["a".into(), "b".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.1, 0.2],
+            devices: vec![1, 2],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].label(), "a/w@0.1x1d");
+        assert_eq!(cells[1].label(), "a/w@0.1x2d");
+        assert_eq!(cells[2].label(), "a/w@0.2x1d");
+        assert_eq!(cells[4].label(), "b/w@0.1x1d");
+    }
+
+    #[test]
+    fn unknown_axis_values_error_before_running() {
+        let spec = CampaignSpec {
+            presets: vec!["no-such-preset".into()],
+            ..CampaignSpec::default()
+        };
+        assert!(run(&spec).is_err());
+        let spec = CampaignSpec {
+            workloads: vec!["no-such-workload".into()],
+            ..CampaignSpec::default()
+        };
+        let err = run(&spec).unwrap_err();
+        assert!(err.contains("no-such-workload"));
+    }
+
+    #[test]
+    fn small_campaign_runs_and_summarizes() {
+        let spec = CampaignSpec {
+            presets: vec!["mqms".into()],
+            workloads: vec!["rand4k".into()],
+            scales: vec![0.001],
+            devices: vec![1, 2],
+            seed: 7,
+            threads: 2,
+            sampled: true,
+        };
+        let results = run(&spec).unwrap();
+        assert_eq!(results.len(), 2);
+        for (_, r) in &results {
+            assert_eq!(r.ssd.completed, 1000);
+            assert_eq!(r.past_clamps, 0, "causality clamps in a clean run");
+        }
+        let j = summary_json(&results);
+        assert_eq!(j.get("cells").unwrap().as_arr().unwrap().len(), 2);
+        let rows = table_rows(&results);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].1.len(), TABLE_HEADERS.len() - 1);
+    }
+}

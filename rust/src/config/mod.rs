@@ -290,6 +290,14 @@ pub struct PathConfig {
 pub struct SimConfig {
     pub name: String,
     pub seed: u64,
+    /// Identical SSD devices in the striped array (≥ 1). One device is the
+    /// classic single-SSD co-simulation; more scale the flash back end
+    /// ZnG-style, with the accelerator striping across them.
+    pub devices: u32,
+    /// Stripe granularity in logical sectors for the device-striping layer.
+    /// Must be a multiple of `ssd.sectors_per_page()` when `devices > 1` so
+    /// stripes never shear a flash page across devices.
+    pub stripe_sectors: u64,
     pub ssd: SsdConfig,
     pub gpu: GpuConfig,
     pub path: PathConfig,
@@ -297,7 +305,28 @@ pub struct SimConfig {
 
 impl SimConfig {
     pub fn validate(&self) -> Result<(), String> {
-        self.ssd.validate()
+        self.ssd.validate()?;
+        let mut errs = Vec::new();
+        if self.devices == 0 {
+            errs.push("devices must be ≥ 1".to_string());
+        }
+        if self.stripe_sectors == 0 {
+            errs.push("stripe_sectors must be ≥ 1".to_string());
+        }
+        if self.devices > 1
+            && self.stripe_sectors % self.ssd.sectors_per_page() as u64 != 0
+        {
+            errs.push(format!(
+                "stripe_sectors {} must be a multiple of sectors_per_page {} when devices > 1",
+                self.stripe_sectors,
+                self.ssd.sectors_per_page()
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
     }
 
     // ---- JSON ----------------------------------------------------------------
@@ -308,6 +337,8 @@ impl SimConfig {
         Json::from_pairs(vec![
             ("name", self.name.as_str().into()),
             ("seed", self.seed.into()),
+            ("devices", (self.devices as u64).into()),
+            ("stripe_sectors", self.stripe_sectors.into()),
             (
                 "ssd",
                 Json::from_pairs(vec![
@@ -403,6 +434,12 @@ impl SimConfig {
         }
         if let Some(v) = j.get("seed").and_then(Json::as_u64) {
             cfg.seed = v;
+        }
+        if let Some(v) = j.get("devices").and_then(Json::as_u64) {
+            cfg.devices = v as u32;
+        }
+        if let Some(v) = j.get("stripe_sectors").and_then(Json::as_u64) {
+            cfg.stripe_sectors = v;
         }
         if let Some(s) = j.get("ssd") {
             let c = &mut cfg.ssd;
@@ -531,7 +568,24 @@ impl SimConfig {
     }
 }
 
-pub use presets::{baseline_mqsim_macsim, client_ssd, mqms_enterprise, pm9a3_like};
+pub use presets::{
+    baseline_mqsim_macsim, client_ssd, mqms_enterprise, pm9a3_like, preset, PRESET_NAMES,
+};
+
+impl SimConfig {
+    /// Resolve a preset name or a JSON config-file path.
+    pub fn load_named(name: &str) -> Result<SimConfig, String> {
+        match presets::preset(name) {
+            Some(cfg) => Ok(cfg),
+            None => SimConfig::load(std::path::Path::new(name)).map_err(|e| {
+                format!(
+                    "`{name}` is not a preset ({}) and failed to load as a config file: {e}",
+                    PRESET_NAMES.join(", ")
+                )
+            }),
+        }
+    }
+}
 
 impl SimConfig {
     /// MQMS configuration: dynamic allocation, fine-grained mapping, direct
@@ -589,6 +643,28 @@ mod tests {
         let mut c = mqms_enterprise();
         c.ssd.gc_threshold_blocks = c.ssd.blocks_per_plane;
         assert!(c.validate().is_err());
+        let mut c = mqms_enterprise();
+        c.devices = 0;
+        assert!(c.validate().is_err());
+        let mut c = mqms_enterprise();
+        c.stripe_sectors = 0;
+        assert!(c.validate().is_err());
+        let mut c = mqms_enterprise();
+        c.devices = 4;
+        c.stripe_sectors = c.ssd.sectors_per_page() as u64 + 1; // shears pages
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn devices_and_stripe_roundtrip() {
+        let mut cfg = mqms_enterprise();
+        cfg.devices = 4;
+        cfg.stripe_sectors = 2 * cfg.ssd.sectors_per_page() as u64;
+        cfg.validate().unwrap();
+        let re = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.devices, 4);
+        assert_eq!(re.stripe_sectors, cfg.stripe_sectors);
+        assert_eq!(cfg, re);
     }
 
     #[test]

@@ -65,6 +65,10 @@ pub fn mqms_enterprise() -> SimConfig {
     SimConfig {
         name: "mqms-enterprise".to_string(),
         seed: 0xA11C,
+        devices: 1,
+        // 256 KiB stripes (64 × 4 KiB sectors): whole flash pages per
+        // device, fine enough that multi-kernel bursts spread the array.
+        stripe_sectors: 64,
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
         path: PathConfig {
@@ -92,6 +96,8 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
     SimConfig {
         name: "baseline-mqsim-macsim".to_string(),
         seed: 0xA11C,
+        devices: 1,
+        stripe_sectors: 64,
         ssd,
         gpu: default_gpu(),
         path: PathConfig {
@@ -108,6 +114,20 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         },
     }
 }
+
+/// Resolve a preset by CLI name.
+pub fn preset(name: &str) -> Option<SimConfig> {
+    match name {
+        "mqms" => Some(mqms_enterprise()),
+        "baseline" => Some(baseline_mqsim_macsim()),
+        "pm9a3" => Some(pm9a3_like()),
+        "client" => Some(client_ssd()),
+        _ => None,
+    }
+}
+
+/// All preset CLI names (help text, campaign validation).
+pub const PRESET_NAMES: [&str; 4] = ["mqms", "baseline", "pm9a3", "client"];
 
 /// Samsung PM9A3-like enterprise preset (public datasheet shape: 4 KB random
 /// IOPS scaling near-linearly with queue depth to saturation).

@@ -18,8 +18,7 @@ use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
 use crate::sim::time::transfer_ns;
 use crate::sim::{Engine, EventQueue, SimTime, World};
 use crate::ssd::nvme::{IoRequest, Opcode};
-use crate::ssd::tsu::TsuEvent;
-use crate::ssd::{SsdEvent, SsdSim};
+use crate::ssd::{ArrayEvent, SsdArray};
 use crate::workloads::{synth::SynthPattern, WorkloadKind, WorkloadSpec};
 use crate::gpu::trace::AccessKind;
 use crate::util::rng::Pcg64;
@@ -28,7 +27,8 @@ use std::collections::VecDeque;
 /// Unified co-simulation event alphabet.
 #[derive(Debug, Clone)]
 pub enum Ev {
-    Ssd(SsdEvent),
+    /// Device-tagged SSD-array event.
+    Ssd(ArrayEvent),
     Gpu(GpuEvent),
     /// Host-mediated submit latency elapsed; request enters the device.
     HostSubmitted(IoRequest),
@@ -38,14 +38,9 @@ pub enum Ev {
     SynthRefill { stream: usize },
 }
 
-impl From<SsdEvent> for Ev {
-    fn from(e: SsdEvent) -> Self {
+impl From<ArrayEvent> for Ev {
+    fn from(e: ArrayEvent) -> Self {
         Ev::Ssd(e)
-    }
-}
-impl From<TsuEvent> for Ev {
-    fn from(e: TsuEvent) -> Self {
-        Ev::Ssd(SsdEvent::Tsu(e))
     }
 }
 impl From<GpuEvent> for Ev {
@@ -108,6 +103,7 @@ impl SynthStream {
             sectors: self.pattern.sectors.max(1),
             submit_ns: 0,
             source: self.source,
+            device: 0,
         }
     }
 }
@@ -115,7 +111,8 @@ impl SynthStream {
 /// The co-simulated world (owns every component).
 pub struct CoWorld {
     pub cfg: SimConfig,
-    pub ssd: SsdSim,
+    /// The striped SSD array (a single device when `cfg.devices == 1`).
+    pub ssd: SsdArray,
     pub gpu: Option<GpuSim>,
     synth: Vec<SynthStream>,
     gpu_sources: usize,
@@ -133,8 +130,8 @@ impl World for CoWorld {
 
     fn handle(&mut self, now: SimTime, ev: Ev, q: &mut EventQueue<Ev>) {
         match ev {
-            Ev::Ssd(se) => {
-                self.ssd.handle(now, se, q);
+            Ev::Ssd(ae) => {
+                self.ssd.handle(ae.dev, now, ae.ev, q);
                 self.after_ssd(now, q);
             }
             Ev::Gpu(ge) => {
@@ -199,14 +196,9 @@ impl CoWorld {
         // SQ slots freed — retry rejected submissions.
         let mut still_pending = VecDeque::new();
         while let Some(req) = self.pending_submit.pop_front() {
-            let queue = self.ssd.queue_for_req(&req);
-            if self.ssd.free_slots(queue) > 0 {
-                self.ssd
-                    .submit(queue, req, q)
-                    .unwrap_or_else(|r| still_pending.push_back(r));
-            } else {
-                still_pending.push_back(req);
-            }
+            self.ssd
+                .submit(req, q)
+                .unwrap_or_else(|r| still_pending.push_back(r));
         }
         self.pending_submit = still_pending;
         self.drain_gpu_io(now, q);
@@ -245,8 +237,7 @@ impl CoWorld {
     }
 
     fn try_submit(&mut self, req: IoRequest, q: &mut EventQueue<Ev>) {
-        let queue = self.ssd.queue_for_req(&req);
-        if let Err(r) = self.ssd.submit(queue, req, q) {
+        if let Err(r) = self.ssd.submit(req, q) {
             self.pending_submit.push_back(r);
         }
     }
@@ -256,8 +247,7 @@ impl CoWorld {
         let s = &mut self.synth[stream];
         while s.outstanding < s.pattern.queue_depth && s.issued < s.pattern.count {
             let req = s.next_request();
-            let queue = self.ssd.queue_for_req(&req);
-            match self.ssd.submit(queue, req, q) {
+            match self.ssd.submit(req, q) {
                 Ok(()) => {
                     s.issued += 1;
                     s.outstanding += 1;
@@ -290,7 +280,7 @@ pub struct CoSim {
 impl CoSim {
     pub fn new(cfg: SimConfig) -> Self {
         cfg.validate().expect("invalid config");
-        let ssd = SsdSim::new(&cfg.ssd, cfg.seed);
+        let ssd = SsdArray::new(&cfg);
         Self {
             world: CoWorld {
                 ssd,
@@ -449,13 +439,17 @@ impl CoSim {
                 }
             })
             .collect();
+        let ssd_devices: Vec<SsdSummary> =
+            w.ssd.devices().iter().map(SsdSummary::from_sim).collect();
         Report {
             config_name: w.cfg.name.clone(),
-            ssd: SsdSummary::from_sim(&w.ssd),
+            ssd: SsdSummary::merge(&ssd_devices),
+            ssd_devices,
             workloads,
             end_ns,
             events,
             wall_s,
+            past_clamps: self.engine.queue.past_clamps() + w.ssd.past_clamps(),
             gpu: w.gpu.as_ref().map(GpuSim::report),
         }
     }

@@ -356,6 +356,7 @@ impl GpuSim {
                 sectors: rec.req_sectors.max(1),
                 submit_ns: 0,
                 source: wid as u32,
+                device: 0,
             });
             self.req_to_kernel.insert(id, kseq);
             outstanding += 1;

@@ -30,7 +30,8 @@
 //! | [`sampling`] | Allegro kernel sampling (k-means + CLT bounds) |
 //! | [`workloads`] | BERT / GPT-2 / ResNet-50 / Rodinia trace generators |
 //! | [`coordinator`] | world wiring, direct vs host path, run loop |
-//! | [`metrics`] | counters, histograms, reports |
+//! | [`campaign`] | scenario-matrix expansion + threaded campaign runner |
+//! | [`metrics`] | per-device + merged counters, histograms, reports |
 //! | [`runtime`] | PJRT loading/execution of AOT-compiled JAX artifacts |
 //! | [`util`] | rng, stats, jsonlite, cli, quick (prop tests), bench |
 //!
@@ -50,6 +51,7 @@
 //! ```
 
 pub mod bench_support;
+pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod gpu;

@@ -2,23 +2,27 @@
 //!
 //! Subcommands:
 //!
-//! * `run`     — run workloads through a configuration and print the report
-//! * `sweep`   — §4 policy sweep: {rr, lc} × {CWDP, CDWP, WCDP}
-//! * `trace`   — generate a workload trace file
-//! * `sample`  — Allegro-sample a trace file (§3.1)
-//! * `config`  — emit a preset configuration as JSON
-//! * `inspect` — summarize a trace file
+//! * `run`      — run workloads through a configuration and print the report
+//! * `ab`       — A/B two presets on the same workloads, print deltas
+//! * `campaign` — expand a scenario matrix and run the cells in parallel
+//! * `sweep`    — §4 policy sweep: {rr, lc} × {CWDP, CDWP, WCDP}
+//! * `trace`    — generate a workload trace file
+//! * `sample`   — Allegro-sample a trace file (§3.1)
+//! * `config`   — emit a preset configuration as JSON
+//! * `inspect`  — summarize a trace file
 //!
 //! Examples:
 //!
 //! ```text
 //! mqms run --workload bert --scale 0.01 --preset mqms
-//! mqms run --workload bert --scale 0.01 --preset baseline
+//! mqms run --workload rand4k --devices 4
+//! mqms campaign --presets mqms,baseline --workloads bert,rand4k --devices 1,2,4
 //! mqms sweep --scale 0.005
 //! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
 //! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
 //! ```
 
+use mqms::campaign::{self, CampaignSpec};
 use mqms::config::{self, AddrScheme, SchedPolicy, SimConfig};
 use mqms::coordinator::CoSim;
 use mqms::gpu::trace::Trace;
@@ -29,6 +33,8 @@ use mqms::workloads::{self, WorkloadSpec};
 use std::path::Path;
 use std::process::ExitCode;
 
+type CliResult = Result<(), String>;
+
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = argv.split_first() else {
@@ -38,6 +44,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "run" => cmd_run(rest),
         "ab" => cmd_ab(rest),
+        "campaign" => cmd_campaign(rest),
         "sweep" => cmd_sweep(rest),
         "trace" => cmd_trace(rest),
         "sample" => cmd_sample(rest),
@@ -67,35 +74,36 @@ fn usage() -> String {
      USAGE: mqms <COMMAND> [OPTIONS]\n\
      \n\
      COMMANDS:\n\
-       run      run workloads through a configuration, print the report\n\
-       ab       A/B two presets on the same workloads, print deltas\n\
-       sweep    policy sweep {rr,lc} x {CWDP,CDWP,WCDP} (paper §4)\n\
-       trace    generate a workload trace file\n\
-       sample   Allegro-sample a trace (paper §3.1)\n\
-       config   print a preset configuration as JSON\n\
-       inspect  summarize a trace file\n\
+       run       run workloads through a configuration, print the report\n\
+       ab        A/B two presets on the same workloads, print deltas\n\
+       campaign  run a {preset x workload x scale x devices} matrix in parallel\n\
+       sweep     policy sweep {rr,lc} x {CWDP,CDWP,WCDP} (paper §4)\n\
+       trace     generate a workload trace file\n\
+       sample    Allegro-sample a trace (paper §3.1)\n\
+       config    print a preset configuration as JSON\n\
+       inspect   summarize a trace file\n\
      \n\
      Run `mqms <COMMAND> --help` for options."
         .to_string()
 }
 
-fn handle_help(e: CliError, args: &Args) -> anyhow::Error {
+/// CliError → message, except `--help`, which prints and exits successfully.
+fn handle_help(e: CliError, args: &Args) -> String {
     if matches!(e, CliError::HelpRequested) {
         println!("{}", args.help());
         std::process::exit(0);
     }
-    anyhow::anyhow!("{e}")
+    e.to_string()
 }
 
-/// Resolve a preset or config file.
-fn load_config(preset: &str) -> anyhow::Result<SimConfig> {
-    Ok(match preset {
-        "mqms" => config::mqms_enterprise(),
-        "baseline" => config::baseline_mqsim_macsim(),
-        "pm9a3" => config::pm9a3_like(),
-        "client" => config::client_ssd(),
-        path => SimConfig::load(Path::new(path)).map_err(|e| anyhow::anyhow!(e))?,
-    })
+/// One-line Allegro-reduction notice, shared by every sampling call site.
+fn log_sampling(name: &str, stats: &sampling::SamplingStats) {
+    eprintln!(
+        "# {name}: sampled {} -> {} kernels ({}x reduction)",
+        stats.original_kernels,
+        stats.sampled_kernels,
+        stats.reduction_factor() as u64
+    );
 }
 
 fn load_traces(
@@ -103,23 +111,17 @@ fn load_traces(
     scale: f64,
     seed: u64,
     sampled: bool,
-) -> anyhow::Result<Vec<(String, Trace)>> {
+) -> Result<Vec<(String, Trace)>, String> {
     let mut out = Vec::new();
     for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let mut trace = if Path::new(name).exists() {
-            Trace::load(Path::new(name))?
+            Trace::load(Path::new(name)).map_err(|e| format!("loading trace {name}: {e}"))?
         } else {
-            workloads::by_name(name, scale, seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?
+            workloads::by_name_or_err(name, scale, seed)?
         };
         if sampled {
             let (t, stats) = sampling::sample(&trace, &SamplerConfig::default(), seed);
-            eprintln!(
-                "# {name}: sampled {} -> {} kernels ({}x reduction)",
-                stats.original_kernels,
-                stats.sampled_kernels,
-                stats.reduction_factor() as u64
-            );
+            log_sampling(name, &stats);
             trace = t;
         }
         out.push((name.to_string(), trace));
@@ -127,48 +129,74 @@ fn load_traces(
     Ok(out)
 }
 
-fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_run(argv: &[String]) -> CliResult {
     let spec = Args::new("mqms run", "run workloads through a configuration")
         .opt("preset", Some("mqms"), "mqms | baseline | pm9a3 | client | <config.json>")
         .opt("workload", Some("bert"), "comma-separated workload names or trace files")
         .opt("scale", Some("0.01"), "workload scale factor (fraction of Table-1 size)")
         .opt("seed", Some("42"), "rng seed")
+        .opt("devices", None, "override device count of the striped array")
+        .opt("stripe", None, "override stripe granularity in sectors")
         .opt("sched", None, "override scheduler: rr | lc | auto")
         .opt("scheme", None, "override allocation scheme: CWDP | CDWP | WCDP")
         .flag("no-sample", "replay the full trace (skip Allegro sampling)")
         .flag("json", "print the full JSON report");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
 
-    let mut cfg = load_config(args.get("preset").unwrap())?;
-    cfg.seed = args.get_u64("seed")?;
+    let mut cfg = SimConfig::load_named(args.get("preset").unwrap())?;
+    cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    if args.get("devices").is_some() {
+        let v = args.get_u64("devices").map_err(|e| e.to_string())?;
+        cfg.devices =
+            u32::try_from(v).map_err(|_| format!("device count out of range: {v}"))?;
+    }
+    if args.get("stripe").is_some() {
+        cfg.stripe_sectors = args.get_u64("stripe").map_err(|e| e.to_string())?;
+    }
     if let Some(s) = args.get("sched") {
-        cfg.gpu.sched =
-            SchedPolicy::parse(s).ok_or_else(|| anyhow::anyhow!("bad sched `{s}`"))?;
+        cfg.gpu.sched = SchedPolicy::parse(s).ok_or_else(|| format!("bad sched `{s}`"))?;
     }
     if let Some(s) = args.get("scheme") {
-        cfg.ssd.scheme =
-            AddrScheme::parse(s).ok_or_else(|| anyhow::anyhow!("bad scheme `{s}`"))?;
+        cfg.ssd.scheme = AddrScheme::parse(s).ok_or_else(|| format!("bad scheme `{s}`"))?;
     }
-    let traces = load_traces(
-        args.get("workload").unwrap(),
-        args.get_f64("scale")?,
-        cfg.seed,
-        !args.get_flag("no-sample"),
-    )?;
+    cfg.validate()?;
+    let scale = args.get_f64("scale").map_err(|e| e.to_string())?;
+    let sampled = !args.get_flag("no-sample");
+    let seed = cfg.seed;
 
     let mut sim = CoSim::new(cfg);
-    for (name, t) in traces {
-        sim.add_workload(WorkloadSpec::trace(&name, t));
+    for name in args
+        .get("workload")
+        .unwrap()
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+    {
+        if Path::new(name).exists() {
+            for (n, t) in load_traces(name, scale, seed, sampled)? {
+                sim.add_workload(WorkloadSpec::trace(&n, t));
+            }
+            continue;
+        }
+        let (wspec, stats) = workloads::spec_by_name_sampled(name, scale, seed, sampled)?;
+        if let Some(stats) = stats {
+            log_sampling(name, &stats);
+        }
+        sim.add_workload(wspec);
     }
     let report = sim.run();
     if args.get_flag("json") {
         println!("{}", report.to_json().pretty());
     } else {
         println!("config: {}", report.config_name);
+        println!("devices: {}", report.ssd_devices.len());
         println!("simulated end time: {}", ns(report.end_ns as f64));
         println!("device IOPS: {}", si(report.ssd.iops()));
         println!("mean device response: {}", ns(report.ssd.mean_response_ns));
         println!("events: {} | wall: {:.2}s", report.events, report.wall_s);
+        if report.past_clamps > 0 {
+            eprintln!("WARNING: {} past-time event clamps (causality bug)", report.past_clamps);
+        }
         let rows: Vec<(String, Vec<String>)> = report
             .workloads
             .iter()
@@ -190,11 +218,34 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
             &["workload", "IOPS", "mean resp", "end (sampled)", "end (extrapolated)", "kernels"],
             &rows,
         );
+        if report.ssd_devices.len() > 1 {
+            let rows: Vec<(String, Vec<String>)> = report
+                .ssd_devices
+                .iter()
+                .enumerate()
+                .map(|(d, s)| {
+                    (
+                        format!("dev{d}"),
+                        vec![
+                            si(s.iops()),
+                            ns(s.mean_response_ns),
+                            s.completed.to_string(),
+                            s.flash_programs.to_string(),
+                        ],
+                    )
+                })
+                .collect();
+            print_table(
+                "per-device",
+                &["device", "IOPS", "mean resp", "completed", "programs"],
+                &rows,
+            );
+        }
     }
     Ok(())
 }
 
-fn cmd_ab(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_ab(argv: &[String]) -> CliResult {
     let spec = Args::new("mqms ab", "A/B two configurations on identical workloads")
         .opt("a", Some("mqms"), "first preset / config file")
         .opt("b", Some("baseline"), "second preset / config file")
@@ -203,16 +254,16 @@ fn cmd_ab(argv: &[String]) -> anyhow::Result<()> {
         .opt("seed", Some("42"), "rng seed")
         .flag("no-sample", "replay the full traces");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
-    let seed = args.get_u64("seed")?;
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
     let traces = load_traces(
         args.get("workload").unwrap(),
-        args.get_f64("scale")?,
+        args.get_f64("scale").map_err(|e| e.to_string())?,
         seed,
         !args.get_flag("no-sample"),
     )?;
     let mut reports = Vec::new();
     for key in ["a", "b"] {
-        let mut cfg = load_config(args.get(key).unwrap())?;
+        let mut cfg = SimConfig::load_named(args.get(key).unwrap())?;
         cfg.seed = seed;
         let mut sim = CoSim::new(cfg);
         for (name, t) in &traces {
@@ -263,7 +314,84 @@ fn cmd_ab(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
+/// Parse a comma-separated list with a per-item parser.
+fn parse_list<T>(raw: &str, what: &str, f: impl Fn(&str) -> Option<T>) -> Result<Vec<T>, String> {
+    let items: Vec<T> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| f(s).ok_or_else(|| format!("bad {what} `{s}`")))
+        .collect::<Result<_, _>>()?;
+    if items.is_empty() {
+        return Err(format!("empty {what} list"));
+    }
+    Ok(items)
+}
+
+fn cmd_campaign(argv: &[String]) -> CliResult {
+    let spec = Args::new(
+        "mqms campaign",
+        "expand a {preset x workload x scale x devices} matrix, run cells in parallel",
+    )
+    .opt("presets", Some("mqms,baseline"), "comma-separated presets / config files")
+    .opt(
+        "workloads",
+        Some("bert,rand4k"),
+        "comma-separated workloads (traces or synthetic streams)",
+    )
+    .opt("scales", Some("0.005"), "comma-separated scale factors")
+    .opt("devices", Some("1,2,4"), "comma-separated device counts")
+    .opt("seed", Some("42"), "root rng seed (every cell runs with it)")
+    .opt("threads", Some("0"), "worker threads (0 = one per core)")
+    .opt("out-dir", None, "write one JSON report per cell plus campaign.json here")
+    .flag("no-sample", "replay full traces (skip Allegro sampling)")
+    .flag("json", "print the merged campaign JSON instead of the table");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+
+    let cspec = CampaignSpec {
+        presets: parse_list(args.get("presets").unwrap(), "preset", |s| {
+            Some(s.to_string())
+        })?,
+        workloads: parse_list(args.get("workloads").unwrap(), "workload", |s| {
+            Some(s.to_string())
+        })?,
+        scales: parse_list(args.get("scales").unwrap(), "scale", |s| s.parse::<f64>().ok())?,
+        devices: parse_list(args.get("devices").unwrap(), "device count", |s| {
+            s.parse::<u32>().ok()
+        })?,
+        seed: args.get_u64("seed").map_err(|e| e.to_string())?,
+        threads: args.get_u64("threads").map_err(|e| e.to_string())? as usize,
+        sampled: !args.get_flag("no-sample"),
+    };
+    let n_cells = campaign::expand(&cspec).len();
+    eprintln!(
+        "# campaign: {n_cells} cells on {} thread(s)",
+        if cspec.threads == 0 { "auto".to_string() } else { cspec.threads.to_string() }
+    );
+    let results = campaign::run(&cspec)?;
+
+    if let Some(dir) = args.get("out-dir") {
+        let dir = Path::new(dir);
+        std::fs::create_dir_all(dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        for (cell, report) in &results {
+            let file = dir.join(format!("{}.json", cell.label().replace('/', "_")));
+            std::fs::write(&file, report.to_json().pretty())
+                .map_err(|e| format!("writing {}: {e}", file.display()))?;
+        }
+        let merged = dir.join("campaign.json");
+        std::fs::write(&merged, campaign::summary_json(&results).pretty())
+            .map_err(|e| format!("writing {}: {e}", merged.display()))?;
+        eprintln!("# wrote {} cell reports + campaign.json to {}", results.len(), dir.display());
+    }
+    if args.get_flag("json") {
+        println!("{}", campaign::summary_json(&results).pretty());
+    } else {
+        print_table("campaign", &campaign::TABLE_HEADERS, &campaign::table_rows(&results));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> CliResult {
     let spec = Args::new("mqms sweep", "policy sweep (paper §4): sched x scheme")
         .opt("preset", Some("mqms"), "base configuration preset")
         .opt(
@@ -274,9 +402,9 @@ fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
         .opt("scale", Some("0.02"), "workload scale factor")
         .opt("seed", Some("42"), "rng seed");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
-    let base = load_config(args.get("preset").unwrap())?;
-    let scale = args.get_f64("scale")?;
-    let seed = args.get_u64("seed")?;
+    let base = SimConfig::load_named(args.get("preset").unwrap())?;
+    let scale = args.get_f64("scale").map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
     let names = args.get("workload").unwrap().to_string();
 
     let mut rows = Vec::new();
@@ -309,7 +437,7 @@ fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_trace(argv: &[String]) -> CliResult {
     let spec = Args::new("mqms trace", "generate a workload trace file")
         .opt("workload", Some("bert"), "workload name")
         .opt("scale", Some("0.01"), "scale factor")
@@ -317,51 +445,65 @@ fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
         .opt("out", None, "output path (.mqmt)");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
     let name = args.get("workload").unwrap();
-    let trace = workloads::by_name(name, args.get_f64("scale")?, args.get_u64("seed")?)
-        .ok_or_else(|| anyhow::anyhow!("unknown workload `{name}`"))?;
+    let trace = workloads::by_name_or_err(
+        name,
+        args.get_f64("scale").map_err(|e| e.to_string())?,
+        args.get_u64("seed").map_err(|e| e.to_string())?,
+    )?;
     let out = args
         .get("out")
         .map(str::to_string)
         .unwrap_or_else(|| format!("{name}.mqmt"));
-    trace.save(Path::new(&out))?;
+    trace.save(Path::new(&out)).map_err(|e| format!("writing {out}: {e}"))?;
     println!("{}", trace.summary().pretty());
     println!("wrote {out}");
     Ok(())
 }
 
-fn cmd_sample(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_sample(argv: &[String]) -> CliResult {
     let spec = Args::new("mqms sample", "Allegro-sample a trace (paper §3.1)")
         .opt("in", None, "input trace path")
         .opt("out", None, "output trace path")
         .opt("epsilon", Some("0.05"), "relative error bound")
         .opt("seed", Some("42"), "rng seed");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
-    let input = args.get("in").ok_or_else(|| anyhow::anyhow!("--in required"))?;
-    let trace = Trace::load(Path::new(input))?;
-    let cfg = SamplerConfig { epsilon: args.get_f64("epsilon")?, ..Default::default() };
-    let (sampled, stats) = sampling::sample(&trace, &cfg, args.get_u64("seed")?);
+    let input = args.get("in").ok_or("--in required")?;
+    let trace = Trace::load(Path::new(input)).map_err(|e| format!("loading {input}: {e}"))?;
+    let cfg = SamplerConfig {
+        epsilon: args.get_f64("epsilon").map_err(|e| e.to_string())?,
+        ..Default::default()
+    };
+    let (sampled, stats) =
+        sampling::sample(&trace, &cfg, args.get_u64("seed").map_err(|e| e.to_string())?);
     println!("{}", stats.to_json().pretty());
     if let Some(out) = args.get("out") {
-        sampled.save(Path::new(out))?;
+        sampled.save(Path::new(out)).map_err(|e| format!("writing {out}: {e}"))?;
         println!("wrote {out}");
     }
     Ok(())
 }
 
-fn cmd_config(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_config(argv: &[String]) -> CliResult {
     let spec = Args::new("mqms config", "print a preset configuration as JSON")
         .opt("preset", Some("mqms"), "mqms | baseline | pm9a3 | client");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
-    let cfg = load_config(args.get("preset").unwrap())?;
+    let cfg = config::preset(args.get("preset").unwrap()).ok_or_else(|| {
+        format!(
+            "unknown preset `{}` (valid: {})",
+            args.get("preset").unwrap(),
+            config::PRESET_NAMES.join(", ")
+        )
+    })?;
     println!("{}", cfg.to_json().pretty());
     Ok(())
 }
 
-fn cmd_inspect(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_inspect(argv: &[String]) -> CliResult {
     let spec = Args::new("mqms inspect", "summarize a trace file")
         .positional("trace", "trace file (.mqmt)");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
-    let trace = Trace::load(Path::new(args.pos(0).unwrap()))?;
+    let path = args.pos(0).unwrap();
+    let trace = Trace::load(Path::new(path)).map_err(|e| format!("loading {path}: {e}"))?;
     println!("{}", trace.summary().pretty());
     Ok(())
 }

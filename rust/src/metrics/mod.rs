@@ -4,7 +4,8 @@ use crate::sim::SimTime;
 use crate::util::jsonlite::Json;
 use crate::util::stats::Running;
 
-/// SSD-side scalar summary extracted from [`crate::ssd::metrics::SsdMetrics`].
+/// SSD-side scalar summary extracted from [`crate::ssd::metrics::SsdMetrics`]
+/// — one per device of the striped array, plus a merged aggregate.
 #[derive(Debug, Clone, Default)]
 pub struct SsdSummary {
     iops: f64,
@@ -18,6 +19,10 @@ pub struct SsdSummary {
     pub flash_programs: u64,
     pub multiplane_batches: u64,
     pub write_stalls: u64,
+    /// Active window (first submit, last completion) — kept so multi-device
+    /// summaries can be merged into a correct aggregate IOPS.
+    pub first_submit_ns: Option<SimTime>,
+    pub last_complete_ns: SimTime,
 }
 
 impl SsdSummary {
@@ -39,7 +44,55 @@ impl SsdSummary {
             flash_programs: ssd.tsu.flash_programs,
             multiplane_batches: ssd.tsu.multiplane_batches,
             write_stalls: ssd.metrics.write_stalls,
+            first_submit_ns: ssd.metrics.first_submit_ns,
+            last_complete_ns: ssd.metrics.last_complete_ns,
         }
+    }
+
+    /// Merge per-device summaries into an array-level aggregate. Counters
+    /// sum (for split requests, each device leg counts once); aggregate
+    /// IOPS is recomputed over the union active window; mean response is
+    /// completion-weighted; p99s take the worst device (an upper bound —
+    /// the per-device histograms are not mergeable from summaries).
+    ///
+    /// Merging a single summary returns it unchanged, so a 1-device array
+    /// reports exactly what the bare device would.
+    pub fn merge(parts: &[SsdSummary]) -> SsdSummary {
+        if parts.is_empty() {
+            return SsdSummary::default();
+        }
+        if parts.len() == 1 {
+            return parts[0].clone();
+        }
+        let mut m = SsdSummary::default();
+        let mut weighted_resp = 0.0;
+        for p in parts {
+            m.completed += p.completed;
+            m.rmw_reads += p.rmw_reads;
+            m.gc_erases += p.gc_erases;
+            m.flash_reads += p.flash_reads;
+            m.flash_programs += p.flash_programs;
+            m.multiplane_batches += p.multiplane_batches;
+            m.write_stalls += p.write_stalls;
+            m.read_p99_ns = m.read_p99_ns.max(p.read_p99_ns);
+            m.write_p99_ns = m.write_p99_ns.max(p.write_p99_ns);
+            weighted_resp += p.mean_response_ns * p.completed as f64;
+            m.first_submit_ns = match (m.first_submit_ns, p.first_submit_ns) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            m.last_complete_ns = m.last_complete_ns.max(p.last_complete_ns);
+        }
+        if m.completed > 0 {
+            m.mean_response_ns = weighted_resp / m.completed as f64;
+        }
+        if let Some(first) = m.first_submit_ns {
+            let window = m.last_complete_ns.saturating_sub(first);
+            if window > 0 {
+                m.iops = m.completed as f64 / (window as f64 / 1e9);
+            }
+        }
+        m
     }
 
     pub fn to_json(&self) -> Json {
@@ -55,6 +108,8 @@ impl SsdSummary {
             ("flash_programs", self.flash_programs.into()),
             ("multiplane_batches", self.multiplane_batches.into()),
             ("write_stalls", self.write_stalls.into()),
+            ("first_submit_ns", self.first_submit_ns.map(Json::from).unwrap_or(Json::Null)),
+            ("last_complete_ns", self.last_complete_ns.into()),
         ])
     }
 }
@@ -125,7 +180,10 @@ impl PerSourceAcc {
 #[derive(Debug, Clone)]
 pub struct Report {
     pub config_name: String,
+    /// Merged (array-level) SSD summary.
     pub ssd: SsdSummary,
+    /// Per-device breakdown (one entry when `devices == 1`).
+    pub ssd_devices: Vec<SsdSummary>,
     pub workloads: Vec<WorkloadReport>,
     /// Simulated end time (Fig. 6/9 metric).
     pub end_ns: SimTime,
@@ -133,6 +191,9 @@ pub struct Report {
     pub events: u64,
     /// Host wall-clock seconds the simulation took.
     pub wall_s: f64,
+    /// Past-time scheduling clamps observed (causality diagnostics;
+    /// anything non-zero is a bug in an event producer).
+    pub past_clamps: u64,
     pub gpu: Option<Json>,
 }
 
@@ -143,13 +204,31 @@ impl Report {
             ("end_ns", self.end_ns.into()),
             ("events", self.events.into()),
             ("wall_s", self.wall_s.into()),
+            ("past_clamps", self.past_clamps.into()),
             ("ssd", self.ssd.to_json()),
+            (
+                "ssd_devices",
+                Json::Arr(self.ssd_devices.iter().map(SsdSummary::to_json).collect()),
+            ),
             (
                 "workloads",
                 Json::Arr(self.workloads.iter().map(WorkloadReport::to_json).collect()),
             ),
             ("gpu", self.gpu.clone().unwrap_or(Json::Null)),
         ])
+    }
+
+    /// Deterministic JSON view: everything except host wall-clock time, for
+    /// byte-identical comparison across runs and campaign thread counts.
+    pub fn to_json_deterministic(&self) -> Json {
+        let j = self.to_json();
+        match j {
+            Json::Obj(mut o) => {
+                o.remove("wall_s");
+                Json::Obj(o)
+            }
+            other => other,
+        }
     }
 }
 
@@ -169,10 +248,41 @@ mod tests {
     }
 
     #[test]
+    fn merge_aggregates_and_single_is_identity() {
+        let mk = |completed: u64, first: u64, last: u64, mean: f64| SsdSummary {
+            completed,
+            first_submit_ns: Some(first),
+            last_complete_ns: last,
+            mean_response_ns: mean,
+            flash_programs: completed,
+            read_p99_ns: last,
+            ..SsdSummary::default()
+        };
+        let a = mk(100, 0, 1_000_000_000, 10_000.0);
+        let b = mk(300, 500, 1_000_000_500, 30_000.0);
+        let single = SsdSummary::merge(std::slice::from_ref(&a));
+        assert_eq!(single.completed, a.completed);
+        assert_eq!(single.iops(), a.iops());
+        let m = SsdSummary::merge(&[a.clone(), b.clone()]);
+        assert_eq!(m.completed, 400);
+        assert_eq!(m.flash_programs, 400);
+        assert_eq!(m.first_submit_ns, Some(0));
+        assert_eq!(m.last_complete_ns, 1_000_000_500);
+        assert_eq!(m.read_p99_ns, b.read_p99_ns);
+        // Aggregate IOPS over the union window: 400 over ~1s ≈ 400.
+        assert!((m.iops() - 400.0).abs() < 1.0, "iops {}", m.iops());
+        // Completion-weighted mean: (100·10k + 300·30k)/400 = 25k.
+        assert!((m.mean_response_ns - 25_000.0).abs() < 1e-6);
+        assert_eq!(SsdSummary::merge(&[]).completed, 0);
+    }
+
+    #[test]
     fn report_serializes() {
         let r = Report {
             config_name: "t".into(),
             ssd: SsdSummary::default(),
+            ssd_devices: vec![SsdSummary::default()],
+            past_clamps: 0,
             workloads: vec![WorkloadReport {
                 name: "w".into(),
                 io_completed: 5,
@@ -196,5 +306,9 @@ mod tests {
                 .as_str(),
             Some("w")
         );
+        assert_eq!(j.get("ssd_devices").unwrap().as_arr().unwrap().len(), 1);
+        let dj = r.to_json_deterministic();
+        assert!(dj.get("wall_s").is_none(), "deterministic view drops wall time");
+        assert!(dj.get("end_ns").is_some());
     }
 }

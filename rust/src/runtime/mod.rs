@@ -6,11 +6,35 @@
 //! the request path is pure rust. HLO *text* is the interchange format —
 //! jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
+//!
+//! Manifest parsing and weight loading are pure std and always available.
+//! Actual execution needs the `xla` crate, which is not vendored in the
+//! offline build image — it compiles only under the `pjrt` feature (add a
+//! local path dependency on `xla` first); without it, [`Runtime::cpu`]
+//! returns a descriptive error so callers and examples degrade gracefully.
 
 use crate::util::jsonlite::Json;
-use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
+
+/// Runtime-layer error: a contextual message chain rendered flat.
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(RuntimeError(msg.into()))
+}
 
 /// Shape + dtype of one artifact input, from the manifest.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,37 +70,41 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let src = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
-        let j = Json::parse(&src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let src = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError(format!(
+                "reading {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&src).map_err(|e| RuntimeError(format!("manifest parse: {e}")))?;
         let mut artifacts = Vec::new();
         for a in j
             .get("artifacts")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+            .ok_or_else(|| RuntimeError("manifest missing artifacts[]".into()))?
         {
             let name = a
                 .get("name")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .ok_or_else(|| RuntimeError("artifact missing name".into()))?
                 .to_string();
             let hlo_file = a
                 .get("hlo_file")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("artifact {name} missing hlo_file"))?
+                .ok_or_else(|| RuntimeError(format!("artifact {name} missing hlo_file")))?
                 .to_string();
             let tensor_list = |key: &str| -> Result<Vec<TensorSpec>> {
                 a.get(key)
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("artifact {name} missing {key}[]"))?
+                    .ok_or_else(|| RuntimeError(format!("artifact {name} missing {key}[]")))?
                     .iter()
                     .map(|t| {
                         let shape = t
                             .get("shape")
                             .and_then(Json::as_arr)
-                            .ok_or_else(|| anyhow!("tensor missing shape"))?
+                            .ok_or_else(|| RuntimeError("tensor missing shape".into()))?
                             .iter()
-                            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .map(|v| v.as_usize().ok_or_else(|| RuntimeError("bad dim".into())))
                             .collect::<Result<Vec<_>>>()?;
                         let dtype = t
                             .get("dtype")
@@ -106,6 +134,7 @@ impl Manifest {
 /// A compiled, executable artifact.
 pub struct LoadedModel {
     pub spec: ArtifactSpec,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -114,50 +143,87 @@ impl LoadedModel {
     /// flattened f32 outputs in manifest order.
     pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != self.spec.inputs.len() {
-            return Err(anyhow!(
+            return err(format!(
                 "{}: expected {} inputs, got {}",
                 self.spec.name,
                 self.spec.inputs.len(),
                 inputs.len()
             ));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (buf, spec) in inputs.iter().zip(&self.spec.inputs) {
             if buf.len() != spec.elements() {
-                return Err(anyhow!(
+                return err(format!(
                     "{}: input size {} != shape {:?}",
                     self.spec.name,
                     buf.len(),
                     spec.shape
                 ));
             }
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.execute(inputs)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let wrap = |e: xla::Error| RuntimeError(format!("{}: {e}", self.spec.name));
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.spec.inputs) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims).map_err(wrap)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
         // aot.py lowers with return_tuple=True.
-        let tuple = result.to_tuple()?;
+        let tuple = result.to_tuple().map_err(wrap)?;
         let mut out = Vec::with_capacity(tuple.len());
         for lit in tuple {
-            out.push(lit.to_vec::<f32>()?);
+            out.push(lit.to_vec::<f32>().map_err(wrap)?);
         }
         Ok(out)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn execute(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        err(format!(
+            "{}: PJRT execution unavailable (built without the `pjrt` feature)",
+            self.spec.name
+        ))
     }
 }
 
 /// The PJRT runtime: one CPU client, many loaded executables.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     models: HashMap<String, LoadedModel>,
 }
 
 impl Runtime {
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()?, models: HashMap::new() })
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError(format!("PJRT CPU client: {e}")))?;
+        Ok(Runtime { client, models: HashMap::new() })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Runtime> {
+        err(
+            "PJRT backend unavailable: this binary was built without the `pjrt` \
+             feature (the `xla` crate is not vendored in the offline image)",
+        )
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "unavailable".to_string()
+        }
     }
 
     /// Load + compile one artifact from a manifest.
@@ -165,18 +231,35 @@ impl Runtime {
         if !self.models.contains_key(name) {
             let spec = manifest
                 .find(name)
-                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+                .ok_or_else(|| RuntimeError(format!("artifact {name} not in manifest")))?
                 .clone();
-            let path = manifest.dir.join(&spec.hlo_file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("loading {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.models.insert(name.to_string(), LoadedModel { spec, exe });
+            let model = self.compile(manifest, spec)?;
+            self.models.insert(name.to_string(), model);
         }
         Ok(&self.models[name])
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn compile(&self, manifest: &Manifest, spec: ArtifactSpec) -> Result<LoadedModel> {
+        let path = manifest.dir.join(&spec.hlo_file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError("non-utf8 path".into()))?,
+        )
+        .map_err(|e| RuntimeError(format!("loading {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| RuntimeError(format!("compiling {}: {e}", spec.name)))?;
+        Ok(LoadedModel { spec, exe })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn compile(&self, _manifest: &Manifest, spec: ArtifactSpec) -> Result<LoadedModel> {
+        err(format!(
+            "{}: PJRT compilation unavailable (built without the `pjrt` feature)",
+            spec.name
+        ))
     }
 
     pub fn get(&self, name: &str) -> Option<&LoadedModel> {
@@ -191,16 +274,16 @@ impl Runtime {
             .meta
             .get("weights_file")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("{}: no weights_file in meta", spec.name))?;
+            .ok_or_else(|| RuntimeError(format!("{}: no weights_file in meta", spec.name)))?;
         let bytes = std::fs::read(manifest.dir.join(file))
-            .with_context(|| format!("reading weights {file}"))?;
+            .map_err(|e| RuntimeError(format!("reading weights {file}: {e}")))?;
         let mut out = Vec::with_capacity(spec.inputs.len().saturating_sub(1));
         let mut off = 0usize;
         for input in &spec.inputs[1..] {
             let n = input.elements();
             let end = off + n * 4;
             if end > bytes.len() {
-                return Err(anyhow!(
+                return err(format!(
                     "{}: weights file too short ({} < {end})",
                     spec.name,
                     bytes.len()
@@ -214,7 +297,7 @@ impl Runtime {
             off = end;
         }
         if off != bytes.len() {
-            return Err(anyhow!(
+            return err(format!(
                 "{}: weights file has {} trailing bytes",
                 spec.name,
                 bytes.len() - off

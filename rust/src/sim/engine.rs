@@ -26,6 +26,9 @@ pub struct RunStats {
     pub events: u64,
     /// True if the run stopped because the queue drained (vs the bound hit).
     pub quiescent: bool,
+    /// Events that were scheduled into the past and clamped to `now`
+    /// (cumulative over the queue's lifetime). Non-zero = causality bug.
+    pub past_clamps: u64,
 }
 
 /// Event-loop driver.
@@ -57,12 +60,22 @@ impl<W: World> Engine<W> {
         loop {
             if let Some(cap) = max_events {
                 if events >= cap {
-                    return RunStats { end_time: self.queue.now(), events, quiescent: false };
+                    return RunStats {
+                        end_time: self.queue.now(),
+                        events,
+                        quiescent: false,
+                        past_clamps: self.queue.past_clamps(),
+                    };
                 }
             }
             match self.queue.peek_time() {
                 None => {
-                    return RunStats { end_time: self.queue.now(), events, quiescent: true }
+                    return RunStats {
+                        end_time: self.queue.now(),
+                        events,
+                        quiescent: true,
+                        past_clamps: self.queue.past_clamps(),
+                    }
                 }
                 Some(t) => {
                     if let Some(bound) = until {
@@ -71,6 +84,7 @@ impl<W: World> Engine<W> {
                                 end_time: self.queue.now(),
                                 events,
                                 quiescent: false,
+                                past_clamps: self.queue.past_clamps(),
                             };
                         }
                     }

@@ -38,6 +38,7 @@ pub struct EventQueue<E> {
     seq: u64,
     now: SimTime,
     scheduled_total: u64,
+    clamped_past: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -48,11 +49,17 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), seq: 0, now: 0, scheduled_total: 0 }
+        Self { heap: BinaryHeap::new(), seq: 0, now: 0, scheduled_total: 0, clamped_past: 0 }
     }
 
     pub fn with_capacity(cap: usize) -> Self {
-        Self { heap: BinaryHeap::with_capacity(cap), seq: 0, now: 0, scheduled_total: 0 }
+        Self {
+            heap: BinaryHeap::with_capacity(cap),
+            seq: 0,
+            now: 0,
+            scheduled_total: 0,
+            clamped_past: 0,
+        }
     }
 
     /// Current simulation time (time of the last popped event).
@@ -61,11 +68,26 @@ impl<E> EventQueue<E> {
         self.now
     }
 
-    /// Schedule `ev` at absolute time `at`. Scheduling in the past is a bug;
-    /// the event is clamped to `now` in release builds and panics in debug.
+    /// Set the clock (proxy/sub-queue use: a component-local queue is
+    /// aligned to the parent queue's `now` before events are forwarded).
+    /// Only valid on an empty queue — there is no history to contradict.
+    #[inline]
+    pub fn set_now(&mut self, now: SimTime) {
+        debug_assert!(self.heap.is_empty(), "set_now with events pending");
+        self.now = now;
+    }
+
+    /// Schedule `ev` at absolute time `at`. Scheduling in the past is a
+    /// causality bug; the event is clamped to `now` in release builds
+    /// (panicking in debug) and the clamp is counted so release runs make
+    /// the bug observable through [`EventQueue::past_clamps`] instead of
+    /// silently rewriting history.
     #[inline]
     pub fn schedule_at(&mut self, at: SimTime, ev: E) {
         debug_assert!(at >= self.now, "scheduling into the past: {} < {}", at, self.now);
+        if at < self.now {
+            self.clamped_past += 1;
+        }
         let at = at.max(self.now);
         self.heap.push(Entry { at, seq: self.seq, ev });
         self.seq += 1;
@@ -103,6 +125,25 @@ impl<E> EventQueue<E> {
     /// Total events ever scheduled (engine throughput statistics).
     pub fn scheduled_total(&self) -> u64 {
         self.scheduled_total
+    }
+
+    /// How many events were scheduled into the past and clamped to `now`.
+    /// Non-zero means a causality bug somewhere in the event producers.
+    pub fn past_clamps(&self) -> u64 {
+        self.clamped_past
+    }
+
+    /// Pop every pending event in firing order (proxy/sub-queue use: the
+    /// caller forwards them into another queue). The clock is left where it
+    /// was — draining is relaying, not simulating.
+    pub fn drain(&mut self) -> Vec<(SimTime, E)> {
+        let saved_now = self.now;
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        self.now = saved_now;
+        out
     }
 }
 
@@ -152,6 +193,33 @@ mod tests {
         q.schedule_at(10, ());
         q.pop();
         q.schedule_at(5, ());
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))] // release-mode clamp path
+    fn past_scheduling_clamps_and_counts_in_release() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10, 1u32);
+        q.pop();
+        assert_eq!(q.past_clamps(), 0);
+        q.schedule_at(5, 2);
+        assert_eq!(q.past_clamps(), 1);
+        // The clamped event fires at `now`, never before.
+        assert_eq!(q.pop(), Some((10, 2)));
+    }
+
+    #[test]
+    fn drain_preserves_order_and_clock() {
+        let mut q = EventQueue::new();
+        q.schedule_at(4, "later");
+        q.schedule_at(2, "sooner");
+        let drained = q.drain();
+        assert_eq!(drained, vec![(2, "sooner"), (4, "later")]);
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 0, "draining must not advance the clock");
+        q.set_now(7);
+        q.schedule_in(1, "next");
+        assert_eq!(q.pop(), Some((8, "next")));
     }
 
     #[test]

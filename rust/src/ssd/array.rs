@@ -1,0 +1,472 @@
+//! Multi-device striping layer: one logical address space over `N ≥ 1`
+//! identical [`SsdSim`] devices (a ZnG-style flash array).
+//!
+//! Global logical sectors are striped round-robin over the devices in
+//! `stripe_sectors`-sized stripes: stripe `s` lives on device `s % N` at
+//! device-local stripe `s / N`. Host requests that cross stripe boundaries
+//! are split into per-device sub-requests and their completions merged back
+//! into one host completion (response time = the slowest leg).
+//!
+//! With `N == 1` the layer is a strict pass-through — identity address
+//! mapping, the device seeded exactly as a standalone [`SsdSim`] — so a
+//! single-device array reproduces the unsharded simulator bit-for-bit.
+//! With `N > 1` each device gets an independent deterministic seed derived
+//! from the root seed by a splitmix64 stream.
+//!
+//! Each device remains a self-contained event-driven simulator speaking
+//! [`SsdEvent`]; the array tags events with their device ([`ArrayEvent`])
+//! and relays them through a proxy queue, so the SSD internals needed no
+//! changes to become shardable.
+
+use crate::config::SimConfig;
+use crate::sim::{EventQueue, SimTime};
+use crate::ssd::nvme::{Completion, IoRequest};
+use crate::ssd::{SsdEvent, SsdSim};
+use std::collections::HashMap;
+
+/// An SSD event tagged with the device it belongs to.
+#[derive(Debug, Clone)]
+pub struct ArrayEvent {
+    pub dev: u32,
+    pub ev: SsdEvent,
+}
+
+/// Sub-request ids live above both GPU-generated ids (small integers) and
+/// synthetic-stream ids (`≥ 1 << 62`), so they can never collide.
+const SPLIT_ID_BASE: u64 = 1 << 63;
+
+/// The d-th output of a splitmix64 stream seeded with `root` — the
+/// per-device seed derivation (independent streams, reproducible from the
+/// root seed alone).
+pub fn device_seed(root: u64, dev: u32) -> u64 {
+    let mut s = root;
+    let mut next = || {
+        s = s.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    };
+    let mut out = next();
+    for _ in 0..dev {
+        out = next();
+    }
+    out
+}
+
+/// Merge bookkeeping for one split host request.
+struct SplitState {
+    parent: IoRequest,
+    remaining: u32,
+    complete_ns: SimTime,
+}
+
+/// A striped array of SSD simulators behind one logical address space.
+pub struct SsdArray {
+    devs: Vec<SsdSim>,
+    n: u64,
+    stripe: u64,
+    /// Usable sectors per device (rounded down to a stripe multiple when
+    /// `n > 1` so the stripe map is total; the full device otherwise).
+    dev_sectors: u64,
+    next_split_id: u64,
+    /// parent id → merge state, for split requests in flight.
+    splits: HashMap<u64, SplitState>,
+    /// sub-request id → parent id.
+    sub_parent: HashMap<u64, u64>,
+    merged_out: Vec<Completion>,
+    /// Relay queue: devices schedule device-local events here, the array
+    /// forwards them into the world queue tagged with the device id.
+    proxy: EventQueue<SsdEvent>,
+}
+
+impl SsdArray {
+    pub fn new(cfg: &SimConfig) -> Self {
+        cfg.validate().expect("invalid config");
+        let n = cfg.devices.max(1) as u64;
+        let stripe = cfg.stripe_sectors.max(1);
+        let devs: Vec<SsdSim> = (0..n as u32)
+            .map(|d| {
+                // A 1-wide array must equal the standalone simulator exactly.
+                let seed = if n == 1 { cfg.seed } else { device_seed(cfg.seed, d) };
+                SsdSim::new(&cfg.ssd, seed)
+            })
+            .collect();
+        let raw = devs[0].logical_sectors();
+        let dev_sectors = if n == 1 { raw } else { raw - raw % stripe };
+        Self {
+            devs,
+            n,
+            stripe,
+            dev_sectors,
+            next_split_id: 0,
+            splits: HashMap::new(),
+            sub_parent: HashMap::new(),
+            merged_out: Vec::new(),
+            proxy: EventQueue::new(),
+        }
+    }
+
+    /// Devices in the array.
+    pub fn device_count(&self) -> usize {
+        self.devs.len()
+    }
+
+    pub fn devices(&self) -> &[SsdSim] {
+        &self.devs
+    }
+
+    pub fn device(&self, dev: u32) -> &SsdSim {
+        &self.devs[dev as usize]
+    }
+
+    pub fn stripe_sectors(&self) -> u64 {
+        self.stripe
+    }
+
+    /// Total logical sector capacity of the array.
+    pub fn logical_sectors(&self) -> u64 {
+        self.n * self.dev_sectors
+    }
+
+    /// Map a global logical sector to `(device, device-local sector)`.
+    pub fn locate(&self, lsn: u64) -> (u32, u64) {
+        if self.n == 1 {
+            return (0, lsn);
+        }
+        let stripe_idx = lsn / self.stripe;
+        let dev = (stripe_idx % self.n) as u32;
+        let local = (stripe_idx / self.n) * self.stripe + lsn % self.stripe;
+        (dev, local)
+    }
+
+    /// Decompose `[lsn, lsn+sectors)` into per-device `(dev, local_lsn,
+    /// sectors)` chunks, coalescing device-contiguous runs. No chunk ever
+    /// crosses a stripe boundary on its device except by coalescing whole
+    /// adjacent stripes that are local-contiguous.
+    pub fn chunks(&self, lsn: u64, sectors: u32) -> Vec<(u32, u64, u32)> {
+        let mut out: Vec<(u32, u64, u32)> = Vec::new();
+        let mut cur = lsn;
+        let end = lsn + sectors as u64;
+        while cur < end {
+            let (dev, local) = self.locate(cur);
+            let stripe_end = if self.n == 1 { end } else { (cur / self.stripe + 1) * self.stripe };
+            let take = (end.min(stripe_end) - cur) as u32;
+            match out.last_mut() {
+                Some(last) if last.0 == dev && last.1 + last.2 as u64 == local => {
+                    last.2 += take;
+                }
+                _ => out.push((dev, local, take)),
+            }
+            cur += take as u64;
+        }
+        out
+    }
+
+    /// Submit a host request against the global address space. Requests that
+    /// fit one device go straight through (keeping their id, so a 1-wide
+    /// array behaves exactly like a bare device); stripe-crossing requests
+    /// are split all-or-nothing. Fails (returning the request unchanged)
+    /// when any target submission queue lacks room — callers hold it and
+    /// retry after completions, as with a bare [`SsdSim`].
+    pub fn submit<E: From<ArrayEvent>>(
+        &mut self,
+        mut req: IoRequest,
+        q: &mut EventQueue<E>,
+    ) -> Result<(), IoRequest> {
+        debug_assert!(req.sectors > 0, "zero-length request");
+        debug_assert!(
+            req.lsn + req.sectors as u64 <= self.logical_sectors(),
+            "request beyond array capacity"
+        );
+        if req.submit_ns == 0 {
+            req.submit_ns = q.now();
+        }
+        let chunks = self.chunks(req.lsn, req.sectors);
+        if chunks.len() == 1 {
+            let (dev, local, _) = chunks[0];
+            let mut sub = req;
+            sub.lsn = local;
+            sub.device = dev;
+            let queue = self.devs[dev as usize].queue_for_req(&sub);
+            return match self.dev_submit(dev, queue, sub, q) {
+                Ok(()) => Ok(()),
+                Err(_) => Err(req),
+            };
+        }
+        // All-or-nothing split: pre-check capacity on every target queue so
+        // a half-placed request can never wedge the array.
+        let base = self.next_split_id;
+        let subs: Vec<IoRequest> = chunks
+            .iter()
+            .enumerate()
+            .map(|(i, &(dev, local, take))| IoRequest {
+                id: SPLIT_ID_BASE + base + i as u64,
+                opcode: req.opcode,
+                lsn: local,
+                sectors: take,
+                submit_ns: req.submit_ns,
+                source: req.source,
+                device: dev,
+            })
+            .collect();
+        let mut need: HashMap<(u32, usize), u32> = HashMap::new();
+        for s in &subs {
+            *need.entry((s.device, self.devs[s.device as usize].queue_for_req(s))).or_insert(0) +=
+                1;
+        }
+        for (&(dev, queue), &cnt) in &need {
+            if self.devs[dev as usize].free_slots(queue) < cnt {
+                return Err(req);
+            }
+        }
+        self.next_split_id += subs.len() as u64;
+        req.device = subs[0].device;
+        let n_subs = subs.len() as u32;
+        for sub in subs {
+            let dev = sub.device;
+            let queue = self.devs[dev as usize].queue_for_req(&sub);
+            self.sub_parent.insert(sub.id, req.id);
+            let placed = self.dev_submit(dev, queue, sub, q);
+            debug_assert!(placed.is_ok(), "pre-checked split submit failed");
+        }
+        self.splits
+            .insert(req.id, SplitState { parent: req, remaining: n_subs, complete_ns: 0 });
+        Ok(())
+    }
+
+    fn dev_submit<E: From<ArrayEvent>>(
+        &mut self,
+        dev: u32,
+        queue: usize,
+        req: IoRequest,
+        q: &mut EventQueue<E>,
+    ) -> Result<(), IoRequest> {
+        self.proxy.set_now(q.now());
+        let res = self.devs[dev as usize].submit(queue, req, &mut self.proxy);
+        self.forward(dev, q);
+        res
+    }
+
+    /// Relay device-local events into the world queue, tagged. Pops the
+    /// proxy directly — this runs once per device event, so no intermediate
+    /// collection. (The proxy clock is left wherever the pops advanced it;
+    /// every use is preceded by `set_now` on an empty queue.)
+    fn forward<E: From<ArrayEvent>>(&mut self, dev: u32, q: &mut EventQueue<E>) {
+        while let Some((t, ev)) = self.proxy.pop() {
+            q.schedule_at(t, ArrayEvent { dev, ev }.into());
+        }
+    }
+
+    /// Dispatch one device event and collect its completion fallout.
+    pub fn handle<E: From<ArrayEvent>>(
+        &mut self,
+        dev: u32,
+        now: SimTime,
+        ev: SsdEvent,
+        q: &mut EventQueue<E>,
+    ) {
+        self.proxy.set_now(now);
+        self.devs[dev as usize].handle(now, ev, &mut self.proxy);
+        self.forward(dev, q);
+        let comps = self.devs[dev as usize].drain_completions();
+        for c in comps {
+            self.settle(c);
+        }
+    }
+
+    /// Fold one device completion into the merged stream.
+    fn settle(&mut self, c: Completion) {
+        if c.id < SPLIT_ID_BASE {
+            self.merged_out.push(c);
+            return;
+        }
+        let parent_id = self.sub_parent.remove(&c.id).expect("completion for unknown sub-request");
+        let st = self.splits.get_mut(&parent_id).expect("split state missing");
+        st.remaining -= 1;
+        st.complete_ns = st.complete_ns.max(c.complete_ns);
+        if st.remaining == 0 {
+            let st = self.splits.remove(&parent_id).unwrap();
+            let p = st.parent;
+            self.merged_out.push(Completion {
+                id: p.id,
+                opcode: p.opcode,
+                lsn: p.lsn,
+                sectors: p.sectors,
+                submit_ns: p.submit_ns,
+                complete_ns: st.complete_ns,
+                source: p.source,
+                device: p.device,
+            });
+        }
+    }
+
+    /// Drain merged host completions accumulated since the last call.
+    pub fn drain_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.merged_out)
+    }
+
+    /// Install a pre-existing data image over a global sector range.
+    pub fn preload(&mut self, lsn_start: u64, sectors: u64) {
+        let mut cur = lsn_start;
+        let end = lsn_start + sectors;
+        assert!(end <= self.logical_sectors(), "preload beyond array capacity");
+        while cur < end {
+            let (dev, local) = self.locate(cur);
+            let stripe_end = if self.n == 1 { end } else { (cur / self.stripe + 1) * self.stripe };
+            let take = end.min(stripe_end) - cur;
+            self.devs[dev as usize].preload(local, take);
+            cur += take;
+        }
+    }
+
+    /// Every device drained and no split merge outstanding?
+    pub fn is_drained(&self) -> bool {
+        self.splits.is_empty() && self.devs.iter().all(SsdSim::is_drained)
+    }
+
+    /// Causality clamps observed on the device relay queue (see
+    /// [`EventQueue::past_clamps`]).
+    pub fn past_clamps(&self) -> u64 {
+        self.proxy.past_clamps()
+    }
+
+    /// Completed requests summed over all devices (sub-requests count once
+    /// per device leg; host-visible counts come from the coordinator).
+    pub fn total_completed(&self) -> u64 {
+        self.devs.iter().map(|d| d.metrics.completed()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::sim::{Engine, World};
+    use crate::ssd::nvme::Opcode;
+
+    struct ArrayWorld {
+        arr: SsdArray,
+    }
+
+    impl World for ArrayWorld {
+        type Ev = ArrayEvent;
+        fn handle(&mut self, now: SimTime, ev: ArrayEvent, q: &mut EventQueue<ArrayEvent>) {
+            self.arr.handle(ev.dev, now, ev.ev, q);
+        }
+    }
+
+    fn world(devices: u32, stripe: u64) -> (ArrayWorld, Engine<ArrayWorld>) {
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = devices;
+        cfg.stripe_sectors = stripe;
+        (ArrayWorld { arr: SsdArray::new(&cfg) }, Engine::new())
+    }
+
+    fn wreq(id: u64, lsn: u64, sectors: u32) -> IoRequest {
+        IoRequest { id, opcode: Opcode::Write, lsn, sectors, submit_ns: 0, source: 0, device: 0 }
+    }
+
+    #[test]
+    fn locate_round_robin_striping() {
+        let (w, _) = world(4, 8);
+        // Stripe s → device s % 4, local stripe s / 4.
+        assert_eq!(w.arr.locate(0), (0, 0));
+        assert_eq!(w.arr.locate(7), (0, 7));
+        assert_eq!(w.arr.locate(8), (1, 0));
+        assert_eq!(w.arr.locate(16), (2, 0));
+        assert_eq!(w.arr.locate(24), (3, 0));
+        assert_eq!(w.arr.locate(32), (0, 8));
+        assert_eq!(w.arr.locate(33), (0, 9));
+    }
+
+    #[test]
+    fn single_device_is_identity() {
+        let (w, _) = world(1, 8);
+        for lsn in [0u64, 5, 63, 1000] {
+            assert_eq!(w.arr.locate(lsn), (0, lsn));
+        }
+        let cfg = config::mqms_enterprise();
+        assert_eq!(w.arr.logical_sectors(), crate::ssd::SsdSim::new(&cfg.ssd, 1).logical_sectors());
+    }
+
+    #[test]
+    fn chunks_split_at_stripe_boundaries_only() {
+        let (w, _) = world(4, 8);
+        // Entirely inside one stripe: one chunk.
+        assert_eq!(w.arr.chunks(2, 4), vec![(0, 2, 4)]);
+        // Straddles stripes 0 (dev 0) and 1 (dev 1).
+        assert_eq!(w.arr.chunks(6, 4), vec![(0, 6, 2), (1, 0, 2)]);
+        // Covers stripes 3 (dev 3) and 4 (dev 0, local stripe 1).
+        assert_eq!(w.arr.chunks(30, 4), vec![(3, 6, 2), (0, 8, 2)]);
+        // Chunk sector totals always reconstruct the request.
+        for (lsn, sectors) in [(0u64, 32u32), (5, 17), (31, 9)] {
+            let total: u32 = w.arr.chunks(lsn, sectors).iter().map(|c| c.2).sum();
+            assert_eq!(total, sectors);
+        }
+    }
+
+    #[test]
+    fn device_seeds_differ_and_are_deterministic() {
+        let a = device_seed(42, 0);
+        let b = device_seed(42, 1);
+        assert_ne!(a, b);
+        assert_eq!(a, device_seed(42, 0));
+        assert_ne!(device_seed(42, 0), device_seed(43, 0));
+    }
+
+    #[test]
+    fn split_write_completes_once_with_merged_timing() {
+        let (mut w, mut e) = world(2, 8);
+        // 4 sectors starting at 6: crosses the stripe-0/stripe-1 boundary.
+        w.arr.submit(wreq(1, 6, 4), &mut e.queue).unwrap();
+        let stats = e.run(&mut w);
+        assert!(stats.quiescent);
+        let cs = w.arr.drain_completions();
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].id, 1);
+        assert_eq!(cs[0].lsn, 6);
+        assert_eq!(cs[0].sectors, 4);
+        assert!(w.arr.is_drained());
+        // Both devices saw work.
+        assert_eq!(w.arr.device(0).metrics.completed(), 1);
+        assert_eq!(w.arr.device(1).metrics.completed(), 1);
+    }
+
+    #[test]
+    fn striped_writes_land_on_expected_devices() {
+        let (mut w, mut e) = world(4, 8);
+        // One full-stripe write per stripe across 8 stripes: two per device.
+        for s in 0..8u64 {
+            w.arr.submit(wreq(s + 1, s * 8, 8), &mut e.queue).unwrap();
+        }
+        let stats = e.run(&mut w);
+        assert!(stats.quiescent);
+        assert_eq!(w.arr.drain_completions().len(), 8);
+        for d in 0..4u32 {
+            assert_eq!(
+                w.arr.device(d).metrics.completed(),
+                2,
+                "device {d} must service exactly its two stripes"
+            );
+            // All 16 sectors landed as valid flash data on that device.
+            assert_eq!(w.arr.device(d).mgr.total_valid(), 16);
+        }
+    }
+
+    #[test]
+    fn array_deterministic_across_runs() {
+        let run = || {
+            let (mut w, mut e) = world(4, 8);
+            for i in 0..200u64 {
+                let req = wreq(i + 1, (i * 37) % 500, 4);
+                while w.arr.submit(req, &mut e.queue).is_err() {
+                    e.run_until(&mut w, None, Some(50));
+                }
+            }
+            let stats = e.run(&mut w);
+            (stats.end_time, w.arr.total_completed())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -65,6 +65,7 @@ impl Hil {
                     submit_ns: req.submit_ns,
                     complete_ns: now,
                     source: req.source,
+                    device: req.device,
                 },
             ))
         } else {
@@ -82,7 +83,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, sectors: u32, opcode: Opcode) -> IoRequest {
-        IoRequest { id, opcode, lsn: 0, sectors, submit_ns: 50, source: 3 }
+        IoRequest { id, opcode, lsn: 0, sectors, submit_ns: 50, source: 3, device: 0 }
     }
 
     #[test]

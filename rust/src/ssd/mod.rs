@@ -15,12 +15,15 @@
 //! are drained with [`SsdSim::drain_completions`].
 
 pub mod addr;
+pub mod array;
 pub mod ftl;
 pub mod hil;
 pub mod metrics;
 pub mod nvme;
 pub mod tsu;
 pub mod xact;
+
+pub use array::{ArrayEvent, SsdArray};
 
 use crate::config::{MapGranularity, SsdConfig};
 use crate::sim::{EventQueue, SimTime};
@@ -905,11 +908,11 @@ mod tests {
     }
 
     fn wreq(id: u64, lsn: u64, sectors: u32) -> IoRequest {
-        IoRequest { id, opcode: Opcode::Write, lsn, sectors, submit_ns: 0, source: 0 }
+        IoRequest { id, opcode: Opcode::Write, lsn, sectors, submit_ns: 0, source: 0, device: 0 }
     }
 
     fn rreq(id: u64, lsn: u64, sectors: u32) -> IoRequest {
-        IoRequest { id, opcode: Opcode::Read, lsn, sectors, submit_ns: 0, source: 0 }
+        IoRequest { id, opcode: Opcode::Read, lsn, sectors, submit_ns: 0, source: 0, device: 0 }
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub enum Opcode {
 pub struct IoRequest {
     pub id: u64,
     pub opcode: Opcode,
-    /// Starting logical sector.
+    /// Starting logical sector (device-local once routed).
     pub lsn: u64,
     /// Length in sectors.
     pub sectors: u32,
@@ -29,6 +29,9 @@ pub struct IoRequest {
     pub submit_ns: SimTime,
     /// Originating workload / GPU core (for per-workload metrics).
     pub source: u32,
+    /// Target device in a striped array (0 for single-device systems;
+    /// assigned by the striping layer when routed).
+    pub device: u32,
 }
 
 /// A completed request delivered through a completion queue.
@@ -41,6 +44,9 @@ pub struct Completion {
     pub submit_ns: SimTime,
     pub complete_ns: SimTime,
     pub source: u32,
+    /// Device that serviced the request (first device for requests merged
+    /// across a stripe boundary).
+    pub device: u32,
 }
 
 /// Submission-queue set with round-robin arbitration.
@@ -145,7 +151,15 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> IoRequest {
-        IoRequest { id, opcode: Opcode::Read, lsn: id * 8, sectors: 1, submit_ns: 0, source: 0 }
+        IoRequest {
+            id,
+            opcode: Opcode::Read,
+            lsn: id * 8,
+            sectors: 1,
+            submit_ns: 0,
+            source: 0,
+            device: 0,
+        }
     }
 
     #[test]

@@ -25,19 +25,28 @@ pub struct Args {
     pos_values: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("missing required positional <{0}>")]
     MissingPositional(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
-    #[error("help requested")]
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(n) => write!(f, "unknown option --{n}"),
+            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            CliError::MissingPositional(n) => write!(f, "missing required positional <{n}>"),
+            CliError::Invalid(n, v) => write!(f, "invalid value for --{n}: {v}"),
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn new(program: &str, about: &str) -> Self {

@@ -16,12 +16,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ----- constructors ---------------------------------------------------
@@ -97,15 +104,33 @@ impl Json {
         Some(cur)
     }
 
-    /// Insert into an object (panics if not an object — construction-time API).
-    pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
+    /// Short human-readable name of this value's kind (error messages).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    /// Insert into an object. Returns an error (instead of panicking) when
+    /// the value is not an object, so callers working on documents parsed
+    /// from untrusted/malformed files can surface the problem without
+    /// aborting the process.
+    pub fn set(&mut self, key: &str, val: Json) -> Result<&mut Self, JsonError> {
         match self {
             Json::Obj(o) => {
                 o.insert(key.to_string(), val);
+                Ok(self)
             }
-            _ => panic!("Json::set on non-object"),
+            other => Err(JsonError {
+                pos: 0,
+                msg: format!("Json::set(\"{key}\") on non-object ({})", other.kind()),
+            }),
         }
-        self
     }
 
     // ----- parse ----------------------------------------------------------
@@ -494,6 +519,24 @@ mod tests {
     fn integers_serialize_without_fraction() {
         let j = Json::Num(42.0);
         assert_eq!(j.to_string(), "42");
+    }
+
+    #[test]
+    fn set_on_object_inserts() {
+        let mut j = Json::obj();
+        j.set("a", 1u64.into()).unwrap().set("b", "x".into()).unwrap();
+        assert_eq!(j.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("b").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn set_on_non_object_is_error_not_panic() {
+        let mut j = Json::Arr(vec![]);
+        let err = j.set("a", Json::Null).unwrap_err();
+        assert!(err.msg.contains("non-object"), "{}", err.msg);
+        // The value is left untouched and the process keeps going.
+        assert_eq!(j, Json::Arr(vec![]));
+        assert!(Json::Num(4.0).set("k", Json::Null).is_err());
     }
 
     #[test]

@@ -110,6 +110,85 @@ pub fn by_name(name: &str, scale: f64, seed: u64) -> Option<Trace> {
 pub const ALL_WORKLOADS: [&str; 8] =
     ["bert", "gpt2", "resnet50", "backprop", "hotspot", "lavamd", "gnn", "dlrm"];
 
+/// Named synthetic streams admissible anywhere a workload name is (the
+/// `run`/`campaign` CLI surface). `scale` multiplies the base request count.
+pub const SYNTH_WORKLOADS: [&str; 4] = ["rand4k", "rand4k-read", "mixed4k", "seq128k"];
+
+/// Resolve a named synthetic stream. Base counts are at `scale = 1.0`;
+/// campaign-sized runs use small scales exactly like the trace generators.
+/// The 4 KB streams run at queue depth 2048 — deep enough to saturate one
+/// enterprise device's flash back end, so device-array scaling shows as
+/// aggregate IOPS instead of disappearing into idle queue slots.
+pub fn synth_by_name(name: &str, scale: f64) -> Option<synth::SynthPattern> {
+    let count = |base: f64| ((base * scale).round() as u64).max(1);
+    match name.to_ascii_lowercase().as_str() {
+        "rand4k" | "rand4k-write" => {
+            Some(synth::SynthPattern::random_4k_write(count(1e6)).with_queue_depth(2048))
+        }
+        "rand4k-read" => {
+            Some(synth::SynthPattern::random_4k_read(count(1e6)).with_queue_depth(2048))
+        }
+        "mixed4k" => Some(synth::SynthPattern::mixed_4k(count(1e6)).with_queue_depth(2048)),
+        "seq128k" => Some(synth::SynthPattern::seq_128k_write(count(2.5e5))),
+        _ => None,
+    }
+}
+
+fn unknown_workload(name: &str) -> String {
+    format!(
+        "unknown workload `{name}` — valid traces: {}; synthetic streams: {}",
+        ALL_WORKLOADS.join(", "),
+        SYNTH_WORKLOADS.join(", ")
+    )
+}
+
+/// [`by_name`] with a proper error listing the valid names instead of a
+/// bare `None` (the CLI never panics on a typo'd workload).
+pub fn by_name_or_err(name: &str, scale: f64, seed: u64) -> Result<Trace, String> {
+    by_name(name, scale, seed).ok_or_else(|| unknown_workload(name))
+}
+
+/// Resolve either a trace generator or a named synthetic stream into a
+/// ready-to-admit [`WorkloadSpec`].
+pub fn spec_by_name(name: &str, scale: f64, seed: u64) -> Result<WorkloadSpec, String> {
+    if let Some(t) = by_name(name, scale, seed) {
+        return Ok(WorkloadSpec::trace(name, t));
+    }
+    if let Some(p) = synth_by_name(name, scale) {
+        return Ok(WorkloadSpec::synthetic(name, p));
+    }
+    Err(unknown_workload(name))
+}
+
+/// [`spec_by_name`] plus the standard admission step: trace workloads are
+/// Allegro-sampled when `sampled` is set (synthetic streams pass through).
+/// This is the one shared resolve-and-sample path behind `mqms run`,
+/// `mqms campaign`, and programmatic callers; the returned stats are
+/// `Some` exactly when sampling ran, for callers that log the reduction.
+pub fn spec_by_name_sampled(
+    name: &str,
+    scale: f64,
+    seed: u64,
+    sampled: bool,
+) -> Result<(WorkloadSpec, Option<crate::sampling::SamplingStats>), String> {
+    let spec = spec_by_name(name, scale, seed)?;
+    if sampled {
+        if let WorkloadKind::Trace(t) = &spec.kind {
+            let (reduced, stats) =
+                crate::sampling::sample(t, &crate::sampling::SamplerConfig::default(), seed);
+            return Ok((WorkloadSpec::trace(name, reduced), Some(stats)));
+        }
+    }
+    Ok((spec, None))
+}
+
+/// Cheap name-only validation: resolves exactly the names [`spec_by_name`]
+/// accepts. Generators clamp to a single iteration at scale 0, so this
+/// synthesizes at most a minimum-size trace instead of a full-scale one.
+pub fn is_valid_name(name: &str) -> bool {
+    by_name(name, 0.0, 0).is_some() || synth_by_name(name, 0.0).is_some()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +210,55 @@ mod tests {
             let b = by_name(name, 0.001, 9).unwrap();
             assert_eq!(a, b, "{name} not deterministic");
         }
+    }
+
+    #[test]
+    fn unknown_names_list_valid_workloads() {
+        let err = by_name_or_err("bogus", 0.01, 1).unwrap_err();
+        assert!(err.contains("bogus"));
+        for name in ALL_WORKLOADS {
+            assert!(err.contains(name), "error must list `{name}`: {err}");
+        }
+        for name in SYNTH_WORKLOADS {
+            assert!(err.contains(name), "error must list `{name}`: {err}");
+        }
+        assert!(spec_by_name("nope", 0.01, 1).is_err());
+    }
+
+    #[test]
+    fn spec_by_name_resolves_traces_and_synth() {
+        let t = spec_by_name("bert", 0.001, 3).unwrap();
+        assert!(matches!(t.kind, WorkloadKind::Trace(_)));
+        let s = spec_by_name("rand4k", 0.01, 3).unwrap();
+        match s.kind {
+            WorkloadKind::Synth(p) => assert_eq!(p.count, 10_000),
+            _ => panic!("rand4k must be synthetic"),
+        }
+        assert!(synth_by_name("seq128k", 0.01).is_some());
+    }
+
+    #[test]
+    fn spec_by_name_sampled_reduces_traces_only() {
+        let (spec, stats) = spec_by_name_sampled("backprop", 0.05, 7, true).unwrap();
+        let stats = stats.expect("trace workloads must report sampling stats");
+        assert!(stats.reduction_factor() > 1.0);
+        match spec.kind {
+            WorkloadKind::Trace(t) => assert_eq!(t.records.len(), stats.sampled_kernels),
+            _ => panic!("backprop must stay a trace"),
+        }
+        let (_, none) = spec_by_name_sampled("rand4k", 0.01, 7, true).unwrap();
+        assert!(none.is_none(), "synthetic streams are never sampled");
+        let (_, unsampled) = spec_by_name_sampled("backprop", 0.05, 7, false).unwrap();
+        assert!(unsampled.is_none());
+    }
+
+    #[test]
+    fn is_valid_name_matches_spec_by_name() {
+        for name in ALL_WORKLOADS.iter().chain(SYNTH_WORKLOADS.iter()) {
+            assert!(is_valid_name(name), "{name} must validate");
+        }
+        assert!(is_valid_name("gpt-2"), "aliases must validate");
+        assert!(!is_valid_name("no-such-workload"));
     }
 
     #[test]

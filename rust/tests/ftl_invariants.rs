@@ -66,6 +66,7 @@ fn run_case(g: &mut Gen, mapping: MapGranularity, alloc: AllocPolicy) {
             sectors,
             submit_ns: 0,
             source: 0,
+            device: 0,
         };
         let queue = (id % 4) as usize;
         loop {
@@ -146,6 +147,7 @@ fn restricted_dynamic_scopes_hold_invariants() {
                 sectors: 1,
                 submit_ns: 0,
                 source: 0,
+                device: 0,
             };
             while world.ssd.submit(0, req, &mut engine.queue).is_err() {
                 engine.run_until(&mut world, None, Some(50));
@@ -178,6 +180,7 @@ fn heavy_overwrite_pressure_survives_gc_storms() {
                     sectors: 1,
                     submit_ns: 0,
                     source: 0,
+                    device: 0,
                 };
                 while world.ssd.submit((id % 2) as usize, req, &mut engine.queue).is_err() {
                     engine.run_until(&mut world, None, Some(100));

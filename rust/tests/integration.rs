@@ -110,7 +110,7 @@ fn wear_stays_bounded_under_churn() {
     assert_eq!(r.ssd.completed, 30_000);
     assert!(r.ssd.gc_erases > 10, "expected sustained GC, got {}", r.ssd.gc_erases);
     let world = sim.world();
-    let max_erase = world.ssd.mgr.max_erase();
+    let max_erase = world.ssd.device(0).mgr.max_erase();
     // Perfect leveling would be gc_erases / 32 blocks; allow 8x skew.
     let fair = (r.ssd.gc_erases as f64 / 32.0).max(1.0);
     assert!(
@@ -157,4 +157,35 @@ fn cli_binary_smoke() {
         "--json",
     ]);
     assert!(out.contains("\"iops\""));
+    // Multi-device run + campaign matrix end to end.
+    let out = run(&["run", "--workload", "rand4k", "--scale", "0.001", "--devices", "2", "--json"]);
+    assert!(out.contains("\"ssd_devices\""));
+    let campaign_dir = dir.join("campaign");
+    let out = run(&[
+        "campaign",
+        "--presets",
+        "mqms",
+        "--workloads",
+        "rand4k",
+        "--scales",
+        "0.001",
+        "--devices",
+        "1,2",
+        "--threads",
+        "2",
+        "--out-dir",
+        campaign_dir.to_str().unwrap(),
+        "--json",
+    ]);
+    assert!(out.contains("\"cells\""));
+    assert!(campaign_dir.join("campaign.json").exists());
+    // A typo'd workload must fail with the valid names listed, not panic.
+    let bad = std::process::Command::new(bin)
+        .args(["run", "--workload", "no-such-workload"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("unknown workload"), "stderr: {stderr}");
+    assert!(stderr.contains("bert"), "must list valid names: {stderr}");
 }
