@@ -1,0 +1,39 @@
+//! §Perf — hot-path regression benchmark (PR 2 onward).
+//!
+//! Drives one saturating closed-loop 4 KiB random-write stream at a 4-device
+//! striped array twice — once through `SsdArray::submit_batch` rounds, once
+//! through per-request `SsdArray::submit` — and writes the machine-readable
+//! `BENCH_PR2.json` report (events/sec, ns/event, scheduled-event counts as
+//! an allocation proxy) that tracks the simulator's own throughput across
+//! optimization PRs. `mqms bench --json` emits the same payload.
+
+use mqms::bench_support as bs;
+
+fn main() {
+    let devices = 4u32;
+    let count = 40_000u64;
+    let batch = 64usize;
+    let seed = 42u64;
+
+    let (batched, single) = bs::hotpath_results(devices, count, batch, seed);
+
+    println!("## §Perf — hot path, {count} reqs x {devices} devices (batch {batch})");
+    println!("{}", batched.summary_line());
+    println!("{}", single.summary_line());
+    println!(
+        "batch vs per-request submission speedup: {:.3}x",
+        bs::batch_speedup(&batched, &single)
+    );
+
+    let report = bs::hotpath_report(&batched, &single, batch, seed);
+    std::fs::write("BENCH_PR2.json", report.pretty()).expect("writing BENCH_PR2.json");
+    println!("wrote BENCH_PR2.json");
+
+    // Paper-shape sanity: real throughput in both modes (regression canary,
+    // not a perf assertion).
+    for r in [&batched, &single] {
+        assert!(r.events_per_sec() > 0.0, "{}: zero event rate", r.mode);
+        assert!(r.ns_per_event() > 0.0, "{}: zero ns/event", r.mode);
+        assert_eq!(r.requests, count);
+    }
+}

@@ -7,6 +7,11 @@ use crate::coordinator::CoSim;
 use crate::gpu::trace::Trace;
 use crate::metrics::Report;
 use crate::sampling::{sample, SamplerConfig, SamplingStats};
+use crate::sim::{Engine, EventQueue, SimTime, World};
+use crate::ssd::nvme::{IoRequest, Opcode};
+use crate::ssd::{ArrayEvent, SsdArray};
+use crate::util::jsonlite::Json;
+use crate::util::rng::Pcg64;
 use crate::workloads::{self, WorkloadSpec};
 
 /// Default scale for the Table-1 workloads in bench runs (fraction of the
@@ -105,6 +110,232 @@ pub fn multi_device_synth(devices: u32, count: u64, qd: u32, seed: u64) -> Repor
         SynthPattern::random_4k_write(count).with_queue_depth(qd),
     ));
     sim.run()
+}
+
+// --- hot-path regression harness (benches/hotpath_regression.rs + `mqms
+// --- bench`) -----------------------------------------------------------
+
+/// Minimal world owning a bare striped array — no GPU model, no coordinator
+/// — the purest view of the submission/dispatch hot path for benchmarks and
+/// batch-equivalence tests.
+pub struct ArrayWorld {
+    pub arr: SsdArray,
+}
+
+impl World for ArrayWorld {
+    type Ev = ArrayEvent;
+    fn handle(&mut self, now: SimTime, ev: ArrayEvent, q: &mut EventQueue<ArrayEvent>) {
+        self.arr.handle(ev.dev, now, ev.ev, q);
+    }
+}
+
+/// Fresh bare-array world + engine for `devices` striped devices.
+pub fn array_world(devices: u32, seed: u64) -> (ArrayWorld, Engine<ArrayWorld>) {
+    let mut cfg = config::mqms_enterprise();
+    cfg.devices = devices;
+    cfg.seed = seed;
+    (ArrayWorld { arr: SsdArray::new(&cfg) }, Engine::new())
+}
+
+/// One measured hot-path run (see [`drive_array`]).
+#[derive(Debug, Clone)]
+pub struct HotpathResult {
+    /// Submission discipline: `"submit_batch"` or `"submit"`.
+    pub mode: String,
+    pub devices: u32,
+    pub requests: u64,
+    /// Events dispatched by the engine.
+    pub events: u64,
+    /// Events ever scheduled (allocation-pressure proxy: every scheduled
+    /// event is one heap entry, and on the old per-event path one or more
+    /// transient `Vec`s).
+    pub scheduled_events: u64,
+    pub sim_end_ns: SimTime,
+    pub wall_s: f64,
+}
+
+impl HotpathResult {
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / self.wall_s
+        }
+    }
+
+    pub fn ns_per_event(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.wall_s * 1e9 / self.events as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("mode", self.mode.as_str().into()),
+            ("devices", (self.devices as u64).into()),
+            ("requests", self.requests.into()),
+            ("events", self.events.into()),
+            ("scheduled_events", self.scheduled_events.into()),
+            ("sim_end_ns", self.sim_end_ns.into()),
+            ("wall_s", self.wall_s.into()),
+            ("events_per_sec", self.events_per_sec().into()),
+            ("ns_per_event", self.ns_per_event().into()),
+        ])
+    }
+
+    /// One human-readable line — shared by `mqms bench` and the bench
+    /// binary so the display never drifts from the typed fields.
+    pub fn summary_line(&self) -> String {
+        use crate::util::bench::{ns, si};
+        format!(
+            "{:12} {} events/s | {}/event | {} events ({} scheduled) | sim end {}",
+            self.mode,
+            si(self.events_per_sec()),
+            ns(self.ns_per_event()),
+            self.events,
+            self.scheduled_events,
+            ns(self.sim_end_ns as f64),
+        )
+    }
+}
+
+/// Wall-clock advantage of the batched discipline over per-request.
+pub fn batch_speedup(batched: &HotpathResult, single: &HotpathResult) -> f64 {
+    if batched.wall_s > 0.0 {
+        single.wall_s / batched.wall_s
+    } else {
+        0.0
+    }
+}
+
+/// Drive `count` closed-loop random 4 KiB writes at a `devices`-wide array
+/// in rounds of `batch` requests: through one [`SsdArray::submit_batch`]
+/// call per round when `batched`, or one [`SsdArray::submit`] call per
+/// request otherwise. Both modes generate the identical request stream and
+/// run the engine between rounds; rejected requests are retried until
+/// placed, so every request completes. Returns wall-clock and event-rate
+/// measurements of the whole drive.
+pub fn drive_array(
+    devices: u32,
+    count: u64,
+    batch: usize,
+    batched: bool,
+    seed: u64,
+) -> HotpathResult {
+    let (mut world, mut engine) = array_world(devices, seed);
+    let cap = world.arr.logical_sectors().min(1 << 22);
+    let mut rng = Pcg64::new(seed ^ 0xB47C);
+    let sectors = 8u32; // 4 KiB at 512 B sectors
+    let batch = batch.max(1);
+    let mut round: Vec<IoRequest> = Vec::with_capacity(batch);
+    let mut rejected: Vec<IoRequest> = Vec::with_capacity(batch);
+    let mut issued = 0u64;
+    let mut events = 0u64;
+    let mut id = 0u64;
+    let t0 = std::time::Instant::now();
+    while issued < count {
+        let n = batch.min((count - issued) as usize);
+        round.clear();
+        for _ in 0..n {
+            id += 1;
+            let lsn = rng.below(cap - sectors as u64);
+            round.push(IoRequest {
+                id,
+                opcode: Opcode::Write,
+                lsn,
+                sectors,
+                submit_ns: 0,
+                source: 0,
+                device: 0,
+            });
+        }
+        if batched {
+            loop {
+                rejected.clear();
+                issued +=
+                    world.arr.submit_batch(round.drain(..), &mut engine.queue, &mut rejected)
+                        as u64;
+                if rejected.is_empty() {
+                    break;
+                }
+                std::mem::swap(&mut round, &mut rejected);
+                events += engine.run_until(&mut world, None, Some(512)).events;
+            }
+        } else {
+            for &queued in &round {
+                let mut req = queued;
+                loop {
+                    match world.arr.submit(req, &mut engine.queue) {
+                        Ok(()) => {
+                            issued += 1;
+                            break;
+                        }
+                        Err(r) => {
+                            req = r;
+                            events += engine.run_until(&mut world, None, Some(512)).events;
+                        }
+                    }
+                }
+            }
+        }
+        // Keep the merged-completion buffer bounded while saturating.
+        world.arr.drain_completions();
+    }
+    let stats = engine.run(&mut world);
+    events += stats.events;
+    let wall_s = t0.elapsed().as_secs_f64();
+    world.arr.drain_completions();
+    HotpathResult {
+        mode: if batched { "submit_batch" } else { "submit" }.to_string(),
+        devices,
+        requests: count,
+        events,
+        scheduled_events: engine.queue.scheduled_total(),
+        sim_end_ns: stats.end_time,
+        wall_s,
+    }
+}
+
+/// The PR-2 hot-path regression measurement: the same saturating stream
+/// driven through the batched and the per-request submission disciplines.
+pub fn hotpath_results(
+    devices: u32,
+    count: u64,
+    batch: usize,
+    seed: u64,
+) -> (HotpathResult, HotpathResult) {
+    let batched = drive_array(devices, count, batch, true, seed);
+    let single = drive_array(devices, count, batch, false, seed);
+    (batched, single)
+}
+
+/// `BENCH_PR2.json`'s payload (events/sec, ns/event, the scheduled-event
+/// allocation proxy, batch-vs-single speedup), shared by
+/// `benches/hotpath_regression.rs` and `mqms bench`.
+pub fn hotpath_report(
+    batched: &HotpathResult,
+    single: &HotpathResult,
+    batch: usize,
+    seed: u64,
+) -> Json {
+    Json::from_pairs(vec![
+        ("bench", "hotpath_regression".into()),
+        ("devices", (batched.devices as u64).into()),
+        ("requests", batched.requests.into()),
+        ("batch", (batch as u64).into()),
+        ("seed", seed.into()),
+        ("batched", batched.to_json()),
+        ("single", single.to_json()),
+        ("batch_speedup", batch_speedup(batched, single).into()),
+    ])
+}
+
+/// Measure + report in one step (see [`hotpath_results`] / [`hotpath_report`]).
+pub fn hotpath_json(devices: u32, count: u64, batch: usize, seed: u64) -> Json {
+    let (batched, single) = hotpath_results(devices, count, batch, seed);
+    hotpath_report(&batched, &single, batch, seed)
 }
 
 #[cfg(test)]

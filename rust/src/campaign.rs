@@ -87,6 +87,25 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
     cells
 }
 
+/// Worker execution order: cell indexes sorted by estimated cost (scale ×
+/// devices, descending) so the expensive cells start first and a wide
+/// matrix finishes sooner — the tail of a campaign is no longer one big
+/// cell that happened to sit last in matrix order. The sort is stable
+/// (ties keep matrix order), so the schedule itself is deterministic;
+/// result *collection* stays in matrix order, so output bytes are
+/// identical to an unsorted run.
+pub fn schedule_order(cells: &[Cell]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..cells.len()).collect();
+    order.sort_by(|&a, &b| {
+        let cost = |c: &Cell| c.scale * c.devices as f64;
+        // total_cmp: a total order even for NaN costs (a user can type
+        // `--scales nan`), where partial_cmp-with-fallback would hand
+        // sort_by a non-transitive comparator and panic.
+        cost(&cells[b]).total_cmp(&cost(&cells[a]))
+    });
+    order
+}
+
 /// Run one cell to completion.
 pub fn run_cell(cell: &Cell, seed: u64, sampled: bool) -> Result<Report, String> {
     let mut cfg = SimConfig::load_named(&cell.preset)?;
@@ -128,16 +147,20 @@ pub fn run(spec: &CampaignSpec) -> Result<Vec<(Cell, Report)>, String> {
         }
     }
     let threads = effective_threads(spec.threads, cells.len());
+    // Workers claim cells in cost order (expensive first); results land in
+    // matrix-order slots, so the merged output is schedule-independent.
+    let order = schedule_order(&cells);
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Result<Report, String>>>> =
         cells.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= order.len() {
                     break;
                 }
+                let i = order[k];
                 let r = run_cell(&cells[i], spec.seed, spec.sampled);
                 *slots[i].lock().unwrap() = Some(r);
             });
@@ -214,6 +237,34 @@ mod tests {
         assert_eq!(cells[1].label(), "a/w@0.1x2d");
         assert_eq!(cells[2].label(), "a/w@0.2x1d");
         assert_eq!(cells[4].label(), "b/w@0.1x1d");
+    }
+
+    #[test]
+    fn schedule_order_is_cost_descending_and_stable() {
+        let spec = CampaignSpec {
+            presets: vec!["a".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.001, 0.01],
+            devices: vec![1, 4],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&spec);
+        // Matrix order: (0.001,1) (0.001,4) (0.01,1) (0.01,4).
+        let order = schedule_order(&cells);
+        assert_eq!(order.len(), cells.len());
+        // Costs: 0.001, 0.004, 0.01, 0.04 → descending = reverse.
+        assert_eq!(order, vec![3, 2, 1, 0]);
+        // Every index appears exactly once (it's a permutation).
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        // Ties (same scale × devices) keep matrix order: 2 × 0.01x1 vs
+        // 0.005x2 both cost 0.01 — stable sort preserves 0 before 1.
+        let tie = vec![
+            Cell { preset: "a".into(), workload: "w".into(), scale: 0.01, devices: 1 },
+            Cell { preset: "a".into(), workload: "w".into(), scale: 0.005, devices: 2 },
+        ];
+        assert_eq!(schedule_order(&tie), vec![0, 1]);
     }
 
     #[test]

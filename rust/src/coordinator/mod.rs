@@ -116,8 +116,10 @@ pub struct CoWorld {
     pub gpu: Option<GpuSim>,
     synth: Vec<SynthStream>,
     gpu_sources: usize,
-    /// Requests rejected on full SQs, retried after completions.
-    pending_submit: VecDeque<IoRequest>,
+    /// Requests rejected on full SQs, retried (batched) after completions.
+    pending_submit: Vec<IoRequest>,
+    /// Scratch: drained `pending_submit` during one batched retry round.
+    retry_scratch: Vec<IoRequest>,
     /// Host-mediated path state.
     host_outstanding: u32,
     host_wait: VecDeque<IoRequest>,
@@ -193,23 +195,35 @@ impl CoWorld {
                 }
             }
         }
-        // SQ slots freed — retry rejected submissions.
-        let mut still_pending = VecDeque::new();
-        while let Some(req) = self.pending_submit.pop_front() {
-            self.ssd
-                .submit(req, q)
-                .unwrap_or_else(|r| still_pending.push_back(r));
+        // SQ slots freed — retry rejected submissions as one batch: swap the
+        // queue into the (empty) scratch, drain it through `submit_batch`,
+        // and let the still-rejected tail land straight back in
+        // `pending_submit`. Both buffers keep their capacity across rounds.
+        if !self.pending_submit.is_empty() {
+            std::mem::swap(&mut self.pending_submit, &mut self.retry_scratch);
+            self.ssd.submit_batch(self.retry_scratch.drain(..), q, &mut self.pending_submit);
         }
-        self.pending_submit = still_pending;
         self.drain_gpu_io(now, q);
     }
 
     /// Pull newly generated GPU I/O and route it down the configured path.
+    /// Direct-path requests go down as one batch; host-mediated requests
+    /// each pay the host submission pipeline individually.
     fn drain_gpu_io(&mut self, _now: SimTime, q: &mut EventQueue<Ev>) {
         let Some(gpu) = self.gpu.as_mut() else { return };
         let reqs = gpu.drain_io();
-        for req in reqs {
-            self.route(req, q);
+        if reqs.is_empty() {
+            return;
+        }
+        match self.cfg.path.path {
+            IoPath::Direct => {
+                self.ssd.submit_batch(reqs, q, &mut self.pending_submit);
+            }
+            IoPath::HostMediated => {
+                for req in reqs {
+                    self.route(req, q);
+                }
+            }
         }
     }
 
@@ -238,11 +252,16 @@ impl CoWorld {
 
     fn try_submit(&mut self, req: IoRequest, q: &mut EventQueue<Ev>) {
         if let Err(r) = self.ssd.submit(req, q) {
-            self.pending_submit.push_back(r);
+            self.pending_submit.push(r);
         }
     }
 
-    /// Keep a synthetic stream at its target queue depth.
+    /// Keep a synthetic stream at its target queue depth. Generation stays
+    /// lazy and stops at the first rejection — exactly the pre-batching
+    /// semantics, so stream state (cursor, rng, ids) is never burned on
+    /// requests the device had no room for. Steady-state refills are one
+    /// request per completion, where `submit` already IS the batched path
+    /// (a batch of one), so nothing is lost by not window-batching here.
     fn refill_synth(&mut self, stream: usize, q: &mut EventQueue<Ev>) {
         let s = &mut self.synth[stream];
         while s.outstanding < s.pattern.queue_depth && s.issued < s.pattern.count {
@@ -287,7 +306,8 @@ impl CoSim {
                 gpu: None,
                 synth: Vec::new(),
                 gpu_sources: 0,
-                pending_submit: VecDeque::new(),
+                pending_submit: Vec::new(),
+                retry_scratch: Vec::new(),
                 host_outstanding: 0,
                 host_wait: VecDeque::new(),
                 per_source: Vec::new(),

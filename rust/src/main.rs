@@ -6,6 +6,7 @@
 //! * `ab`       — A/B two presets on the same workloads, print deltas
 //! * `campaign` — expand a scenario matrix and run the cells in parallel
 //! * `sweep`    — §4 policy sweep: {rr, lc} × {CWDP, CDWP, WCDP}
+//! * `bench`    — hot-path regression benchmark (events/sec, ns/event)
 //! * `trace`    — generate a workload trace file
 //! * `sample`   — Allegro-sample a trace file (§3.1)
 //! * `config`   — emit a preset configuration as JSON
@@ -46,6 +47,7 @@ fn main() -> ExitCode {
         "ab" => cmd_ab(rest),
         "campaign" => cmd_campaign(rest),
         "sweep" => cmd_sweep(rest),
+        "bench" => cmd_bench(rest),
         "trace" => cmd_trace(rest),
         "sample" => cmd_sample(rest),
         "config" => cmd_config(rest),
@@ -78,6 +80,7 @@ fn usage() -> String {
        ab        A/B two presets on the same workloads, print deltas\n\
        campaign  run a {preset x workload x scale x devices} matrix in parallel\n\
        sweep     policy sweep {rr,lc} x {CWDP,CDWP,WCDP} (paper §4)\n\
+       bench     hot-path regression benchmark, emits BENCH_PR2.json\n\
        trace     generate a workload trace file\n\
        sample    Allegro-sample a trace (paper §3.1)\n\
        config    print a preset configuration as JSON\n\
@@ -434,6 +437,49 @@ fn cmd_sweep(argv: &[String]) -> CliResult {
         &["combination", "IOPS", "mean resp", "end time"],
         &rows,
     );
+    Ok(())
+}
+
+fn cmd_bench(argv: &[String]) -> CliResult {
+    let spec = Args::new(
+        "mqms bench",
+        "hot-path regression benchmark: a saturating closed-loop stream through \
+         submit_batch vs per-request submit (events/sec, ns/event)",
+    )
+    .opt("devices", Some("4"), "device count of the striped array")
+    .opt("count", Some("40000"), "requests in the closed-loop stream")
+    .opt("batch", Some("64"), "requests per submit_batch round")
+    .opt("seed", Some("42"), "rng seed")
+    .opt("out", Some("BENCH_PR2.json"), "write the JSON report here (`-` to skip)")
+    .flag("json", "print the JSON report to stdout");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+
+    let devices_raw = args.get_u64("devices").map_err(|e| e.to_string())?;
+    let devices = u32::try_from(devices_raw)
+        .ok()
+        .filter(|&d| d > 0)
+        .ok_or_else(|| format!("device count out of range: {devices_raw}"))?;
+    let count = args.get_u64("count").map_err(|e| e.to_string())?.max(1);
+    let batch = args.get_u64("batch").map_err(|e| e.to_string())?.max(1) as usize;
+    let seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+
+    let (batched, single) = mqms::bench_support::hotpath_results(devices, count, batch, seed);
+    let report = mqms::bench_support::hotpath_report(&batched, &single, batch, seed);
+    let out = args.get("out").unwrap();
+    if out != "-" {
+        std::fs::write(out, report.pretty()).map_err(|e| format!("writing {out}: {e}"))?;
+        eprintln!("# wrote {out}");
+    }
+    if args.get_flag("json") {
+        println!("{}", report.pretty());
+    } else {
+        println!("{}", batched.summary_line());
+        println!("{}", single.summary_line());
+        println!(
+            "batch speedup: {:.3}x",
+            mqms::bench_support::batch_speedup(&batched, &single)
+        );
+    }
     Ok(())
 }
 

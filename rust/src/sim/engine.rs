@@ -32,8 +32,19 @@ pub struct RunStats {
 }
 
 /// Event-loop driver.
+///
+/// Dispatch is cohort-batched: all events sharing the earliest pending
+/// timestamp are popped in one [`EventQueue::pop_batch_at`] pass into a
+/// reusable scratch buffer and handled back to back. Within a cohort the
+/// insertion (`seq`) order is preserved, and events a handler schedules at
+/// the *same* timestamp carry later sequence numbers than everything already
+/// pending, so they form the next cohort — the dispatch order is bit-for-bit
+/// identical to popping one event at a time, with one peek/bound check per
+/// timestamp instead of one per event and no per-event heap/scratch churn.
 pub struct Engine<W: World> {
     pub queue: EventQueue<W::Ev>,
+    /// Timestamp-cohort scratch, reused across dispatch rounds.
+    batch: Vec<W::Ev>,
 }
 
 impl<W: World> Default for Engine<W> {
@@ -44,7 +55,7 @@ impl<W: World> Default for Engine<W> {
 
 impl<W: World> Engine<W> {
     pub fn new() -> Self {
-        Self { queue: EventQueue::new() }
+        Self { queue: EventQueue::new(), batch: Vec::new() }
     }
 
     /// Run until the event queue drains, or until simulated time would pass
@@ -58,8 +69,32 @@ impl<W: World> Engine<W> {
     ) -> RunStats {
         let mut events = 0u64;
         loop {
-            if let Some(cap) = max_events {
-                if events >= cap {
+            // Remaining dispatch budget bounds the cohort so an event cap is
+            // honored exactly, even mid-cohort.
+            let budget = match max_events {
+                Some(cap) => {
+                    if events >= cap {
+                        return RunStats {
+                            end_time: self.queue.now(),
+                            events,
+                            quiescent: false,
+                            past_clamps: self.queue.past_clamps(),
+                        };
+                    }
+                    usize::try_from(cap - events).unwrap_or(usize::MAX)
+                }
+                None => usize::MAX,
+            };
+            let Some(t) = self.queue.peek_time() else {
+                return RunStats {
+                    end_time: self.queue.now(),
+                    events,
+                    quiescent: true,
+                    past_clamps: self.queue.past_clamps(),
+                };
+            };
+            if let Some(bound) = until {
+                if t > bound {
                     return RunStats {
                         end_time: self.queue.now(),
                         events,
@@ -68,31 +103,12 @@ impl<W: World> Engine<W> {
                     };
                 }
             }
-            match self.queue.peek_time() {
-                None => {
-                    return RunStats {
-                        end_time: self.queue.now(),
-                        events,
-                        quiescent: true,
-                        past_clamps: self.queue.past_clamps(),
-                    }
-                }
-                Some(t) => {
-                    if let Some(bound) = until {
-                        if t > bound {
-                            return RunStats {
-                                end_time: self.queue.now(),
-                                events,
-                                quiescent: false,
-                                past_clamps: self.queue.past_clamps(),
-                            };
-                        }
-                    }
-                }
+            let n = self.queue.pop_batch_at(t, budget, &mut self.batch);
+            debug_assert!(n > 0, "peeked cohort must be non-empty");
+            for ev in self.batch.drain(..) {
+                world.handle(t, ev, &mut self.queue);
             }
-            let (now, ev) = self.queue.pop().expect("peeked non-empty");
-            world.handle(now, ev, &mut self.queue);
-            events += 1;
+            events += n as u64;
         }
     }
 
@@ -157,6 +173,60 @@ mod tests {
         let stats = e.run_until(&mut w, None, Some(3));
         assert_eq!(stats.events, 3);
         assert_eq!(w.log.len(), 3);
+    }
+
+    /// World that logs (time, id) and schedules same-timestamp follow-ups,
+    /// exercising cohort dispatch ordering.
+    struct Logger {
+        log: Vec<(SimTime, u32)>,
+        respawn: bool,
+    }
+
+    impl World for Logger {
+        type Ev = u32;
+        fn handle(&mut self, now: SimTime, ev: u32, q: &mut EventQueue<u32>) {
+            self.log.push((now, ev));
+            if self.respawn && ev < 10 {
+                // Same-timestamp follow-up: must run after the rest of the
+                // current cohort, in scheduling order.
+                q.schedule_at(now, ev + 100);
+            }
+        }
+    }
+
+    #[test]
+    fn same_timestamp_cohort_preserves_fifo_and_followups() {
+        let mut w = Logger { log: vec![], respawn: true };
+        let mut e = Engine::new();
+        for ev in [1u32, 2, 3] {
+            e.queue.schedule_at(5, ev);
+        }
+        let stats = e.run(&mut w);
+        assert!(stats.quiescent);
+        // Original cohort first in insertion order, then the follow-ups it
+        // scheduled (also at t=5), also in scheduling order.
+        assert_eq!(w.log, vec![(5, 1), (5, 2), (5, 3), (5, 101), (5, 102), (5, 103)]);
+        assert_eq!(stats.events, 6);
+        assert_eq!(stats.end_time, 5);
+    }
+
+    #[test]
+    fn event_cap_respected_mid_cohort() {
+        let mut w = Logger { log: vec![], respawn: false };
+        let mut e = Engine::new();
+        for ev in 0..10u32 {
+            e.queue.schedule_at(7, ev);
+        }
+        let stats = e.run_until(&mut w, None, Some(4));
+        assert_eq!(stats.events, 4);
+        assert_eq!(w.log, vec![(7, 0), (7, 1), (7, 2), (7, 3)]);
+        // Resuming picks up the rest of the cohort in order.
+        let stats = e.run_until(&mut w, None, Some(2));
+        assert_eq!(stats.events, 2);
+        assert_eq!(w.log.last(), Some(&(7, 5)));
+        let stats = e.run(&mut w);
+        assert!(stats.quiescent);
+        assert_eq!(w.log.len(), 10);
     }
 
     #[test]

@@ -109,6 +109,28 @@ impl<E> EventQueue<E> {
         })
     }
 
+    /// Pop up to `limit` events whose timestamp equals `at` into `out`
+    /// (appending, in insertion `seq` order), advancing `now` to `at` when
+    /// anything was popped. `at` is the cohort timestamp — normally the
+    /// queue's earliest pending time from [`EventQueue::peek_time`]; events
+    /// at other timestamps are left untouched. This is the engine's batch
+    /// dispatch primitive: one bound check per timestamp cohort instead of
+    /// one per event, with the cohort landing in a caller-owned scratch
+    /// buffer instead of per-event pops interleaved with dispatch.
+    pub fn pop_batch_at(&mut self, at: SimTime, limit: usize, out: &mut Vec<E>) -> usize {
+        debug_assert!(at >= self.now, "cohort pop into the past: {} < {}", at, self.now);
+        let mut n = 0usize;
+        while n < limit && self.heap.peek().map_or(false, |e| e.at == at) {
+            let e = self.heap.pop().expect("peeked non-empty");
+            out.push(e.ev);
+            n += 1;
+        }
+        if n > 0 {
+            self.now = at;
+        }
+        n
+    }
+
     /// Timestamp of the next event without popping it.
     pub fn peek_time(&self) -> Option<SimTime> {
         self.heap.peek().map(|e| e.at)
@@ -137,13 +159,21 @@ impl<E> EventQueue<E> {
     /// caller forwards them into another queue). The clock is left where it
     /// was — draining is relaying, not simulating.
     pub fn drain(&mut self) -> Vec<(SimTime, E)> {
-        let saved_now = self.now;
         let mut out = Vec::with_capacity(self.heap.len());
+        self.drain_into(&mut out);
+        out
+    }
+
+    /// [`EventQueue::drain`] into a caller-owned buffer (appending), so
+    /// repeated relaying reuses one allocation instead of returning a fresh
+    /// `Vec` per round. The clock is restored, as with `drain`.
+    pub fn drain_into(&mut self, out: &mut Vec<(SimTime, E)>) {
+        let saved_now = self.now;
+        out.reserve(self.heap.len());
         while let Some(e) = self.pop() {
             out.push(e);
         }
         self.now = saved_now;
-        out
     }
 }
 
@@ -220,6 +250,71 @@ mod tests {
         q.set_now(7);
         q.schedule_in(1, "next");
         assert_eq!(q.pop(), Some((8, "next")));
+    }
+
+    #[test]
+    fn pop_batch_at_takes_whole_cohort_in_seq_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5, "a");
+        q.schedule_at(9, "later");
+        q.schedule_at(5, "b");
+        q.schedule_at(5, "c");
+        let mut out = Vec::new();
+        let t = q.peek_time().unwrap();
+        assert_eq!(t, 5);
+        let n = q.pop_batch_at(t, usize::MAX, &mut out);
+        assert_eq!(n, 3);
+        // Cohort ordering follows insertion seq (FIFO within a timestamp).
+        assert_eq!(out, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 5, "cohort pop must advance the clock");
+        // The later event is untouched.
+        assert_eq!(q.peek_time(), Some(9));
+        assert_eq!(q.pop(), Some((9, "later")));
+    }
+
+    #[test]
+    fn pop_batch_at_respects_limit_and_appends() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule_at(3, i);
+        }
+        let mut out = vec![99];
+        assert_eq!(q.pop_batch_at(3, 4, &mut out), 4);
+        assert_eq!(out, vec![99, 0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+        // The remainder of the cohort is still poppable at the same time.
+        assert_eq!(q.pop_batch_at(3, usize::MAX, &mut out), 6);
+        assert_eq!(out.len(), 11);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_at_empty_or_mismatched_time_pops_nothing() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch_at(0, usize::MAX, &mut out), 0);
+        q.schedule_at(7, 1);
+        // Asking for a later cohort than the earliest pending must not skip
+        // over the earlier event.
+        assert_eq!(q.pop_batch_at(8, usize::MAX, &mut out), 0);
+        assert!(out.is_empty());
+        assert_eq!(q.now(), 0, "no pop, no clock movement");
+    }
+
+    #[test]
+    fn drain_into_reuses_buffer_and_matches_drain() {
+        let mut q = EventQueue::new();
+        q.schedule_at(4, "later");
+        q.schedule_at(2, "sooner");
+        let mut out = Vec::new();
+        q.drain_into(&mut out);
+        assert_eq!(out, vec![(2, "sooner"), (4, "later")]);
+        assert_eq!(q.now(), 0, "drain_into must not advance the clock");
+        // Second round appends into the same buffer.
+        q.schedule_at(6, "next");
+        q.drain_into(&mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[2], (6, "next"));
     }
 
     #[test]

@@ -78,6 +78,14 @@ pub struct SsdArray {
     /// Relay queue: devices schedule device-local events here, the array
     /// forwards them into the world queue tagged with the device id.
     proxy: EventQueue<SsdEvent>,
+    /// Scratch: per-device chunk decomposition of one request (reused so the
+    /// submission hot path allocates nothing in steady state).
+    scratch_chunks: Vec<(u32, u64, u32)>,
+    /// Scratch: materialized sub-requests of one split, with their target
+    /// queues resolved exactly once per sub-request.
+    scratch_subs: Vec<(IoRequest, usize)>,
+    /// Scratch: per-(device, queue) slot demand of one split pre-check.
+    scratch_need: Vec<(u32, usize, u32)>,
 }
 
 impl SsdArray {
@@ -104,6 +112,9 @@ impl SsdArray {
             sub_parent: HashMap::new(),
             merged_out: Vec::new(),
             proxy: EventQueue::new(),
+            scratch_chunks: Vec::new(),
+            scratch_subs: Vec::new(),
+            scratch_need: Vec::new(),
         }
     }
 
@@ -145,7 +156,15 @@ impl SsdArray {
     /// crosses a stripe boundary on its device except by coalescing whole
     /// adjacent stripes that are local-contiguous.
     pub fn chunks(&self, lsn: u64, sectors: u32) -> Vec<(u32, u64, u32)> {
-        let mut out: Vec<(u32, u64, u32)> = Vec::new();
+        let mut out = Vec::new();
+        self.chunks_into(lsn, sectors, &mut out);
+        out
+    }
+
+    /// [`SsdArray::chunks`] into a caller-owned buffer (cleared first) — the
+    /// submission path runs this out of a reusable scratch vector.
+    fn chunks_into(&self, lsn: u64, sectors: u32, out: &mut Vec<(u32, u64, u32)>) {
+        out.clear();
         let mut cur = lsn;
         let end = lsn + sectors as u64;
         while cur < end {
@@ -160,7 +179,6 @@ impl SsdArray {
             }
             cur += take as u64;
         }
-        out
     }
 
     /// Submit a host request against the global address space. Requests that
@@ -169,7 +187,54 @@ impl SsdArray {
     /// are split all-or-nothing. Fails (returning the request unchanged)
     /// when any target submission queue lacks room — callers hold it and
     /// retry after completions, as with a bare [`SsdSim`].
+    ///
+    /// A thin wrapper over a batch of one: [`SsdArray::submit_batch`] is the
+    /// real submission path.
     pub fn submit<E: From<ArrayEvent>>(
+        &mut self,
+        req: IoRequest,
+        q: &mut EventQueue<E>,
+    ) -> Result<(), IoRequest> {
+        self.proxy.set_now(q.now());
+        self.submit_inner(req, q)
+    }
+
+    /// Submit a batch of host requests, equivalent to calling
+    /// [`SsdArray::submit`] once per request in order — same placements,
+    /// same event sequence, same rejections — while paying the per-round
+    /// overhead once per batch instead of once per request: the relay clock
+    /// is aligned once, and chunk decomposition plus split bookkeeping run
+    /// out of reusable scratch buffers with, within each split request, one
+    /// arbitration (queue resolution + capacity) pass per `(device, queue)`
+    /// target. Requests are deliberately NOT regrouped per device across
+    /// the batch: that would reorder same-timestamp events between devices
+    /// and break the bit-for-bit equivalence with per-request submission
+    /// that `tests/batch_equivalence.rs` pins.
+    ///
+    /// Rejected requests (a full target submission queue) are appended to
+    /// `rejected` in submission order; callers hold them and retry after
+    /// completions. Returns the number of accepted requests.
+    pub fn submit_batch<E: From<ArrayEvent>>(
+        &mut self,
+        reqs: impl IntoIterator<Item = IoRequest>,
+        q: &mut EventQueue<E>,
+        rejected: &mut Vec<IoRequest>,
+    ) -> usize {
+        self.proxy.set_now(q.now());
+        let mut accepted = 0usize;
+        for req in reqs {
+            match self.submit_inner(req, q) {
+                Ok(()) => accepted += 1,
+                Err(r) => rejected.push(r),
+            }
+        }
+        accepted
+    }
+
+    /// One request through the submission path. The relay clock must already
+    /// be aligned to the world queue (`proxy.set_now` in `submit` /
+    /// `submit_batch`).
+    fn submit_inner<E: From<ArrayEvent>>(
         &mut self,
         mut req: IoRequest,
         q: &mut EventQueue<E>,
@@ -182,9 +247,13 @@ impl SsdArray {
         if req.submit_ns == 0 {
             req.submit_ns = q.now();
         }
-        let chunks = self.chunks(req.lsn, req.sectors);
-        if chunks.len() == 1 {
-            let (dev, local, _) = chunks[0];
+        // Fast path: the request stays inside one stripe (always, when
+        // `n == 1`), so it maps to a single device without touching the
+        // chunk scratch at all.
+        let single_stripe = self.n == 1
+            || req.lsn / self.stripe == (req.lsn + req.sectors as u64 - 1) / self.stripe;
+        if single_stripe {
+            let (dev, local) = self.locate(req.lsn);
             let mut sub = req;
             sub.lsn = local;
             sub.device = dev;
@@ -194,13 +263,32 @@ impl SsdArray {
                 Err(_) => Err(req),
             };
         }
-        // All-or-nothing split: pre-check capacity on every target queue so
-        // a half-placed request can never wedge the array.
+        let mut chunks = std::mem::take(&mut self.scratch_chunks);
+        self.chunks_into(req.lsn, req.sectors, &mut chunks);
+        if chunks.len() == 1 {
+            // Defensive: with round-robin striping a multi-stripe request on
+            // n > 1 devices always splits, but a future stripe map may
+            // coalesce — keep the single-device path total.
+            let (dev, local, _) = chunks[0];
+            self.scratch_chunks = chunks;
+            let mut sub = req;
+            sub.lsn = local;
+            sub.device = dev;
+            let queue = self.devs[dev as usize].queue_for_req(&sub);
+            return match self.dev_submit(dev, queue, sub, q) {
+                Ok(()) => Ok(()),
+                Err(_) => Err(req),
+            };
+        }
+        // All-or-nothing split: materialize the sub-requests (resolving each
+        // target queue exactly once), tally slot demand per (device, queue),
+        // and pre-check capacity so a half-placed request can never wedge
+        // the array. All three passes run on reusable scratch.
         let base = self.next_split_id;
-        let subs: Vec<IoRequest> = chunks
-            .iter()
-            .enumerate()
-            .map(|(i, &(dev, local, take))| IoRequest {
+        let mut subs = std::mem::take(&mut self.scratch_subs);
+        subs.clear();
+        for (i, &(dev, local, take)) in chunks.iter().enumerate() {
+            let sub = IoRequest {
                 id: SPLIT_ID_BASE + base + i as u64,
                 opcode: req.opcode,
                 lsn: local,
@@ -208,28 +296,39 @@ impl SsdArray {
                 submit_ns: req.submit_ns,
                 source: req.source,
                 device: dev,
-            })
-            .collect();
-        let mut need: HashMap<(u32, usize), u32> = HashMap::new();
-        for s in &subs {
-            *need.entry((s.device, self.devs[s.device as usize].queue_for_req(s))).or_insert(0) +=
-                1;
+            };
+            let queue = self.devs[dev as usize].queue_for_req(&sub);
+            subs.push((sub, queue));
         }
-        for (&(dev, queue), &cnt) in &need {
-            if self.devs[dev as usize].free_slots(queue) < cnt {
-                return Err(req);
+        self.scratch_chunks = chunks;
+        let mut need = std::mem::take(&mut self.scratch_need);
+        need.clear();
+        for &(sub, queue) in &subs {
+            match need.iter_mut().find(|e| e.0 == sub.device && e.1 == queue) {
+                Some(e) => e.2 += 1,
+                None => need.push((sub.device, queue, 1)),
             }
         }
+        let fits = need
+            .iter()
+            .all(|&(dev, queue, cnt)| self.devs[dev as usize].free_slots(queue) >= cnt);
+        need.clear();
+        self.scratch_need = need;
+        if !fits {
+            subs.clear();
+            self.scratch_subs = subs;
+            return Err(req);
+        }
         self.next_split_id += subs.len() as u64;
-        req.device = subs[0].device;
+        req.device = subs[0].0.device;
         let n_subs = subs.len() as u32;
-        for sub in subs {
-            let dev = sub.device;
-            let queue = self.devs[dev as usize].queue_for_req(&sub);
+        for &(sub, queue) in &subs {
             self.sub_parent.insert(sub.id, req.id);
-            let placed = self.dev_submit(dev, queue, sub, q);
+            let placed = self.dev_submit(sub.device, queue, sub, q);
             debug_assert!(placed.is_ok(), "pre-checked split submit failed");
         }
+        subs.clear();
+        self.scratch_subs = subs;
         self.splits
             .insert(req.id, SplitState { parent: req, remaining: n_subs, complete_ns: 0 });
         Ok(())
@@ -242,7 +341,6 @@ impl SsdArray {
         req: IoRequest,
         q: &mut EventQueue<E>,
     ) -> Result<(), IoRequest> {
-        self.proxy.set_now(q.now());
         let res = self.devs[dev as usize].submit(queue, req, &mut self.proxy);
         self.forward(dev, q);
         res
@@ -250,12 +348,15 @@ impl SsdArray {
 
     /// Relay device-local events into the world queue, tagged. Pops the
     /// proxy directly — this runs once per device event, so no intermediate
-    /// collection. (The proxy clock is left wherever the pops advanced it;
-    /// every use is preceded by `set_now` on an empty queue.)
+    /// collection. The proxy clock is restored after draining, so a batch of
+    /// submissions stays aligned through one `set_now` instead of one per
+    /// sub-request.
     fn forward<E: From<ArrayEvent>>(&mut self, dev: u32, q: &mut EventQueue<E>) {
+        let aligned = self.proxy.now();
         while let Some((t, ev)) = self.proxy.pop() {
             q.schedule_at(t, ArrayEvent { dev, ev }.into());
         }
+        self.proxy.set_now(aligned);
     }
 
     /// Dispatch one device event and collect its completion fallout.
@@ -341,20 +442,10 @@ impl SsdArray {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bench_support::ArrayWorld;
     use crate::config;
-    use crate::sim::{Engine, World};
+    use crate::sim::Engine;
     use crate::ssd::nvme::Opcode;
-
-    struct ArrayWorld {
-        arr: SsdArray,
-    }
-
-    impl World for ArrayWorld {
-        type Ev = ArrayEvent;
-        fn handle(&mut self, now: SimTime, ev: ArrayEvent, q: &mut EventQueue<ArrayEvent>) {
-            self.arr.handle(ev.dev, now, ev.ev, q);
-        }
-    }
 
     fn world(devices: u32, stripe: u64) -> (ArrayWorld, Engine<ArrayWorld>) {
         let mut cfg = config::mqms_enterprise();

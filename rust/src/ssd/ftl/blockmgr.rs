@@ -206,20 +206,38 @@ impl BlockMgr {
     }
 
     /// Valid (slot, logical) pairs of a block — the data GC must relocate.
-    pub fn valid_sectors(&self, plane: PlaneId, block: u32) -> Vec<(u32, u64)> {
+    /// Streams straight off the valid bitmap, so candidate scans allocate
+    /// nothing; collect only where a materialized list is really needed.
+    pub fn valid_sectors(
+        &self,
+        plane: PlaneId,
+        block: u32,
+    ) -> impl Iterator<Item = (u32, u64)> + '_ {
         let blk = &self.planes[plane as usize].blocks[block as usize];
-        let mut out = Vec::with_capacity(blk.valid_count as usize);
-        if blk.valid_count == 0 {
-            return out;
-        }
-        let rmap = blk.rmap.as_ref().expect("valid sectors require rmap");
-        let total = self.geo.sectors_per_block();
-        for slot in 0..total {
+        // valid_count > 0 guarantees the rmap exists (set on the first
+        // mark_valid); a block violating that is corrupt and must fail
+        // loudly here, not feed garbage logical ids into GC relocation.
+        let (total, rmap): (u32, &[u64]) = if blk.valid_count == 0 {
+            (0, &[])
+        } else {
+            (
+                self.geo.sectors_per_block(),
+                blk.rmap.as_deref().expect("valid sectors require rmap"),
+            )
+        };
+        (0..total).filter_map(move |slot| {
             if blk.is_valid(slot) {
-                out.push((slot, rmap[slot as usize]));
+                Some((slot, rmap[slot as usize]))
+            } else {
+                None
             }
-        }
-        out
+        })
+    }
+
+    /// Valid sectors remaining in a block (GC victim inspection without
+    /// walking the bitmap).
+    pub fn valid_count(&self, plane: PlaneId, block: u32) -> u32 {
+        self.planes[plane as usize].blocks[block as usize].valid_count
     }
 
     /// Erase a block: clears bitmaps, bumps the erase counter, returns the
@@ -391,8 +409,11 @@ mod tests {
         m.mark_valid(PhysSector { page: pg, slot: 0 }, 100);
         m.mark_valid(PhysSector { page: pg, slot: 2 }, 102);
         m.invalidate(PhysSector { page: pg, slot: 0 });
-        let vs = m.valid_sectors(0, pg.block);
+        let vs: Vec<(u32, u64)> = m.valid_sectors(0, pg.block).collect();
         assert_eq!(vs, vec![(2, 102)]);
+        assert_eq!(m.valid_count(0, pg.block), 1);
+        // A block with nothing valid yields an empty, non-panicking stream.
+        assert_eq!(m.valid_sectors(0, pg.block + 1).count(), 0);
     }
 
     #[test]

@@ -111,6 +111,9 @@ pub struct SsdSim {
     rng: Pcg64,
     pub metrics: SsdMetrics,
     completions_out: Vec<Completion>,
+    /// Scratch: completed-transaction ids from one TSU event (reused so the
+    /// per-event settle loop allocates nothing in steady state).
+    done_scratch: Vec<XactId>,
     next_immediate_latency: SimTime,
 }
 
@@ -136,6 +139,7 @@ impl SsdSim {
             rng: Pcg64::new(seed ^ 0x55D),
             metrics: SsdMetrics::new(cfg.sector_bytes),
             completions_out: Vec::new(),
+            done_scratch: Vec::new(),
             next_immediate_latency: 1_000, // ~DRAM/controller turnaround
             cfg: cfg.clone(),
         }
@@ -269,17 +273,22 @@ impl SsdSim {
         match ev {
             SsdEvent::Fetch => self.on_fetch(now, q),
             SsdEvent::Enqueue(xids) => {
-                let tagged: Vec<(XactId, bool)> = xids
-                    .into_iter()
-                    .map(|x| (x, self.slab.get(x).cause == XactCause::Gc))
-                    .collect();
-                self.tsu.enqueue_many(tagged, &self.slab, q);
+                let slab = &self.slab;
+                self.tsu.enqueue_many(
+                    xids.into_iter().map(|x| (x, slab.get(x).cause == XactCause::Gc)),
+                    slab,
+                    q,
+                );
             }
             SsdEvent::Tsu(tev) => {
-                let done = self.tsu.on_event(tev, &self.slab, q);
-                for xid in done {
+                let mut done = std::mem::take(&mut self.done_scratch);
+                debug_assert!(done.is_empty());
+                self.tsu.on_event_into(tev, &self.slab, q, &mut done);
+                for &xid in &done {
                     self.finish_xact(xid, now, q);
                 }
+                done.clear();
+                self.done_scratch = done;
             }
             SsdEvent::Flush { plane, epoch } => {
                 let buf = &mut self.bufs[plane as usize];
@@ -704,17 +713,17 @@ impl SsdSim {
         let Some(victim) = self.mgr.victim(plane) else {
             return;
         };
-        let valid = self.mgr.valid_sectors(plane, victim);
-        if valid.is_empty() {
+        if self.mgr.valid_count(plane, victim) == 0 {
             // Nothing to relocate: erase straight away.
             self.gc.start(plane, victim, 0);
             self.issue_gc_erase(plane, victim, now, q);
             return;
         }
-        // Group surviving slots by page: one relocation read per page.
+        // Group surviving slots by page (streamed off the valid bitmap —
+        // the scan itself allocates nothing): one relocation read per page.
         let spp = self.geo.sectors_per_page;
         let mut by_page: BTreeMap<u32, Vec<(u32, u64)>> = BTreeMap::new();
-        for (slot, logical) in valid {
+        for (slot, logical) in self.mgr.valid_sectors(plane, victim) {
             by_page.entry(slot / spp).or_default().push((slot, logical));
         }
         self.gc.start(plane, victim, by_page.len() as u32);

@@ -17,7 +17,7 @@ pub enum Opcode {
 }
 
 /// One host I/O command.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IoRequest {
     pub id: u64,
     pub opcode: Opcode,
@@ -35,7 +35,7 @@ pub struct IoRequest {
 }
 
 /// A completed request delivered through a completion queue.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Completion {
     pub id: u64,
     pub opcode: Opcode,

@@ -69,7 +69,7 @@ pub enum TsuEvent {
     OpDone { die: DieId },
 }
 
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
     Idle,
     /// Program batch waiting for the channel (transfer-in).
@@ -104,6 +104,9 @@ pub struct Tsu {
     gc_urgent: Vec<bool>,
     chan_busy: Vec<bool>,
     chan_wait: Vec<VecDeque<DieId>>,
+    /// Scratch: dies touched by one `enqueue_many` round (reused so group
+    /// enqueues allocate nothing in steady state).
+    scratch_dies: Vec<DieId>,
     // --- metrics -----------------------------------------------------------
     pub die_busy_ns: Vec<u64>,
     pub chan_busy_ns: Vec<u64>,
@@ -135,6 +138,7 @@ impl Tsu {
             gc_urgent: vec![false; dies],
             chan_busy: vec![false; channels],
             chan_wait: vec![VecDeque::new(); channels],
+            scratch_dies: Vec::new(),
             die_busy_ns: vec![0; dies],
             chan_busy_ns: vec![0; channels],
             multiplane_batches: 0,
@@ -183,16 +187,19 @@ impl Tsu {
         slab: &XactSlab,
         q: &mut EventQueue<E>,
     ) {
-        let mut dies = Vec::new();
+        let mut dies = std::mem::take(&mut self.scratch_dies);
+        debug_assert!(dies.is_empty());
         for (xid, is_gc) in xids {
             let die = self.push(xid, is_gc, slab);
             if !dies.contains(&die) {
                 dies.push(die);
             }
         }
-        for die in dies {
+        for &die in &dies {
             self.try_dispatch(die, slab, q);
         }
+        dies.clear();
+        self.scratch_dies = dies;
     }
 
     /// Queue a transaction without dispatching; returns its die.
@@ -206,19 +213,35 @@ impl Tsu {
         die
     }
 
-    /// Handle a TSU event; returns the batch that *completed* (empty if the
-    /// event only advanced a phase). The caller settles claims/deps and the
-    /// TSU immediately tries to dispatch more work.
+    /// Handle a TSU event, appending the batch that *completed* to `done`
+    /// (nothing if the event only advanced a phase). The caller settles
+    /// claims/deps and the TSU immediately tries to dispatch more work.
+    /// Allocation-free: the die's batch buffer is recycled in place rather
+    /// than handed out.
+    pub fn on_event_into<E: From<TsuEvent>>(
+        &mut self,
+        ev: TsuEvent,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+        done: &mut Vec<XactId>,
+    ) {
+        match ev {
+            TsuEvent::XferDone { die } => self.xfer_done(die, slab, q, done),
+            TsuEvent::OpDone { die } => self.op_done(die, slab, q, done),
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Tsu::on_event_into`] (tests and
+    /// cold callers; the simulator hot path passes its scratch instead).
     pub fn on_event<E: From<TsuEvent>>(
         &mut self,
         ev: TsuEvent,
         slab: &XactSlab,
         q: &mut EventQueue<E>,
     ) -> Vec<XactId> {
-        match ev {
-            TsuEvent::XferDone { die } => self.xfer_done(die, slab, q),
-            TsuEvent::OpDone { die } => self.op_done(die, slab, q),
-        }
+        let mut done = Vec::new();
+        self.on_event_into(ev, slab, q, &mut done);
+        done
     }
 
     // --- internals --------------------------------------------------------
@@ -232,50 +255,45 @@ impl Tsu {
         if self.dies[die as usize].phase != Phase::Idle {
             return;
         }
-        let Some((batch, kind)) = self.pick_batch(die, slab) else {
+        let Some(kind) = self.refill_batch(die, slab) else {
             return;
         };
-        if batch.len() > 1 {
+        let batch_len = self.dies[die as usize].batch.len();
+        if batch_len > 1 {
             self.multiplane_batches += 1;
-            self.multiplane_ops += batch.len() as u64;
+            self.multiplane_ops += batch_len as u64;
         }
         match kind {
             XactKind::Program => {
-                self.flash_programs += batch.len() as u64;
-                let d = &mut self.dies[die as usize];
-                d.phase = Phase::WaitChanIn;
-                d.batch = batch;
-                d.kind = kind;
+                self.flash_programs += batch_len as u64;
+                self.dies[die as usize].phase = Phase::WaitChanIn;
                 self.set_pending_xfer(die, slab);
                 self.request_channel(die, q);
             }
             XactKind::Read => {
-                self.flash_reads += batch.len() as u64;
+                self.flash_reads += batch_len as u64;
                 let t = self.timing.busy(XactKind::Read);
                 self.die_busy_ns[die as usize] += t;
-                let d = &mut self.dies[die as usize];
-                d.phase = Phase::Busy;
-                d.batch = batch;
-                d.kind = kind;
+                self.dies[die as usize].phase = Phase::Busy;
                 q.schedule_in(t, TsuEvent::OpDone { die }.into());
             }
             XactKind::Erase => {
-                self.flash_erases += batch.len() as u64;
+                self.flash_erases += batch_len as u64;
                 let t = self.timing.busy(XactKind::Erase);
                 self.die_busy_ns[die as usize] += t;
-                let d = &mut self.dies[die as usize];
-                d.phase = Phase::Busy;
-                d.batch = batch;
-                d.kind = kind;
+                self.dies[die as usize].phase = Phase::Busy;
                 q.schedule_in(t, TsuEvent::OpDone { die }.into());
             }
         }
     }
 
-    /// Pop the next batch for a die: head of the prioritized queue plus (when
-    /// multi-plane is enabled) same-kind transactions on distinct sibling
-    /// planes, scanned within a bounded lookahead window.
-    fn pick_batch(&mut self, die: DieId, slab: &XactSlab) -> Option<(Vec<XactId>, XactKind)> {
+    /// Refill a die's (empty, reusable) batch buffer with its next batch:
+    /// head of the prioritized queue plus (when multi-plane is enabled)
+    /// same-kind transactions on distinct sibling planes, scanned within a
+    /// bounded lookahead window. Returns the batch kind, or `None` when the
+    /// die has no queued work. Sets the die's `kind`; the buffer keeps its
+    /// capacity across rounds, so steady-state arbitration allocates nothing.
+    fn refill_batch(&mut self, die: DieId, slab: &XactSlab) -> Option<XactKind> {
         let d = die as usize;
         let use_gc_first = self.gc_urgent[d] && !self.gc_q[d].is_empty();
         let queue = if use_gc_first || self.host_q[d].is_empty() {
@@ -285,7 +303,9 @@ impl Tsu {
         };
         let head = queue.pop_front()?;
         let kind = slab.get(head).kind;
-        let mut batch = vec![head];
+        let batch = &mut self.dies[d].batch;
+        debug_assert!(batch.is_empty(), "refill into a non-empty batch");
+        batch.push(head);
         if self.multiplane && self.geo.planes > 1 {
             let mut planes_used = 1u64 << (slab.get(head).target.plane % self.geo.planes);
             const LOOKAHEAD: usize = 16;
@@ -303,7 +323,8 @@ impl Tsu {
                 }
             }
         }
-        Some((batch, kind))
+        self.dies[d].kind = kind;
+        Some(kind)
     }
 
     fn request_channel<E: From<TsuEvent>>(&mut self, die: DieId, q: &mut EventQueue<E>) {
@@ -342,12 +363,29 @@ impl Tsu {
         }
     }
 
+    /// Retire a die's finished batch: append it to `done` (recycling the
+    /// die's buffer in place) and immediately pull in the next batch.
+    fn complete_batch<E: From<TsuEvent>>(
+        &mut self,
+        die: DieId,
+        slab: &XactSlab,
+        q: &mut EventQueue<E>,
+        done: &mut Vec<XactId>,
+    ) {
+        let d = &mut self.dies[die as usize];
+        done.extend_from_slice(&d.batch);
+        d.batch.clear();
+        d.phase = Phase::Idle;
+        self.try_dispatch(die, slab, q);
+    }
+
     fn xfer_done<E: From<TsuEvent>>(
         &mut self,
         die: DieId,
         slab: &XactSlab,
         q: &mut EventQueue<E>,
-    ) -> Vec<XactId> {
+        done: &mut Vec<XactId>,
+    ) {
         let ch = self.geo.channel_of_die(die);
         match self.dies[die as usize].phase {
             Phase::XferIn => {
@@ -357,17 +395,13 @@ impl Tsu {
                 self.die_busy_ns[die as usize] += t;
                 self.dies[die as usize].phase = Phase::Busy;
                 q.schedule_in(t, TsuEvent::OpDone { die }.into());
-                Vec::new()
             }
             Phase::XferOut => {
                 // Read data is out; batch complete.
                 self.release_channel(ch, q);
-                let batch = std::mem::take(&mut self.dies[die as usize].batch);
-                self.dies[die as usize].phase = Phase::Idle;
-                self.try_dispatch(die, slab, q);
-                batch
+                self.complete_batch(die, slab, q, done);
             }
-            ref other => unreachable!("XferDone in phase {other:?}"),
+            other => unreachable!("XferDone in phase {other:?}"),
         }
     }
 
@@ -376,9 +410,10 @@ impl Tsu {
         die: DieId,
         slab: &XactSlab,
         q: &mut EventQueue<E>,
-    ) -> Vec<XactId> {
+        done: &mut Vec<XactId>,
+    ) {
         let d = die as usize;
-        match (self.dies[d].phase.clone(), self.dies[d].kind) {
+        match (self.dies[d].phase, self.dies[d].kind) {
             (Phase::Busy, XactKind::Read) => {
                 // tR elapsed; data must cross the channel.
                 let bytes: u64 =
@@ -387,14 +422,10 @@ impl Tsu {
                 self.dies[d].pending_xfer_ns = self.timing.xfer(bytes, ops);
                 self.dies[d].phase = Phase::WaitChanOut;
                 self.request_channel(die, q);
-                Vec::new()
             }
             (Phase::Busy, _) => {
                 // Program or erase complete.
-                let batch = std::mem::take(&mut self.dies[d].batch);
-                self.dies[d].phase = Phase::Idle;
-                self.try_dispatch(die, slab, q);
-                batch
+                self.complete_batch(die, slab, q, done);
             }
             (other, kind) => unreachable!("OpDone in phase {other:?} kind {kind:?}"),
         }

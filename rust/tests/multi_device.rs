@@ -8,27 +8,16 @@
 //!   a stripe boundary (FTL-invariants style, randomized).
 //! * Scaling the array scales aggregate IOPS on a saturating stream.
 
-use mqms::bench_support as bs;
+use mqms::bench_support::{self as bs, ArrayWorld};
 use mqms::campaign::{self, CampaignSpec};
 use mqms::config;
 use mqms::coordinator::CoSim;
-use mqms::sim::{Engine, EventQueue, SimTime, World};
+use mqms::sim::Engine;
 use mqms::ssd::nvme::{IoRequest, Opcode};
-use mqms::ssd::{ArrayEvent, SsdArray};
+use mqms::ssd::SsdArray;
 use mqms::util::quick::forall;
 use mqms::workloads;
 use std::collections::HashSet;
-
-struct ArrayWorld {
-    arr: SsdArray,
-}
-
-impl World for ArrayWorld {
-    type Ev = ArrayEvent;
-    fn handle(&mut self, now: SimTime, ev: ArrayEvent, q: &mut EventQueue<ArrayEvent>) {
-        self.arr.handle(ev.dev, now, ev.ev, q);
-    }
-}
 
 #[test]
 fn devices1_cell_reproduces_single_device_run() {
