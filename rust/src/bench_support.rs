@@ -4,6 +4,7 @@
 
 use crate::config::{self, AddrScheme, SchedPolicy, SimConfig};
 use crate::coordinator::CoSim;
+use crate::gpu::placement::Placement;
 use crate::gpu::trace::Trace;
 use crate::metrics::Report;
 use crate::sampling::{sample, SamplerConfig, SamplingStats};
@@ -110,6 +111,66 @@ pub fn multi_device_synth(devices: u32, count: u64, qd: u32, seed: u64) -> Repor
         SynthPattern::random_4k_write(count).with_queue_depth(qd),
     ));
     sim.run()
+}
+
+// --- multi-GPU placement study (benches/multi_gpu_placement.rs +
+// --- tests/multi_gpu.rs) ------------------------------------------------
+
+/// Skewed LLM-inference bundle for the placement studies: one heavy BERT
+/// instance (5× the light scale) plus four light ones, with a rand4k
+/// background stream keeping the shared array's queues busy. Round-robin
+/// placement must co-locate the heavy workload with light ones on 2 or 4
+/// GPUs; perf-aware placement isolates it — the makespan gap the paper's
+/// performance-aware allocation argument predicts.
+pub fn skewed_llm_bundle(seed: u64) -> Vec<WorkloadSpec> {
+    use crate::workloads::synth::SynthPattern;
+    let mut specs = vec![WorkloadSpec::trace(
+        "llm-heavy",
+        workloads::bert::generate(0.0005, seed),
+    )];
+    for i in 0..4u64 {
+        specs.push(WorkloadSpec::trace(
+            &format!("llm-light{i}"),
+            workloads::bert::generate(0.0001, seed ^ (i + 1)),
+        ));
+    }
+    specs.push(WorkloadSpec::synthetic(
+        "rand4k",
+        SynthPattern::random_4k_write(2_000).with_queue_depth(64),
+    ));
+    specs
+}
+
+/// Run a pre-built workload bundle through a config.
+pub fn run_bundle(cfg: SimConfig, specs: &[WorkloadSpec]) -> Report {
+    let mut sim = CoSim::new(cfg);
+    for spec in specs {
+        sim.add_workload(spec.clone());
+    }
+    sim.run()
+}
+
+/// Compute-side makespan: the latest actual end time over the report's
+/// trace (GPU) workloads — synthetic streams are excluded, so background
+/// I/O cannot mask a placement difference.
+pub fn gpu_makespan(r: &Report) -> SimTime {
+    r.workloads
+        .iter()
+        .filter(|w| w.kernels_done > 0)
+        .map(|w| w.end_ns)
+        .max()
+        .unwrap_or(0)
+}
+
+/// One cell of the placement study: the skewed bundle on `gpus` compute
+/// shards over `devices` striped SSDs under `placement`.
+pub fn placement_run(gpus: u32, devices: u32, placement: Placement, seed: u64) -> Report {
+    let mut cfg = config::mqms_enterprise();
+    cfg.gpus = gpus;
+    cfg.devices = devices;
+    cfg.placement = placement;
+    cfg.seed = seed;
+    run_bundle(cfg, &skewed_llm_bundle(seed))
 }
 
 // --- hot-path regression harness (benches/hotpath_regression.rs + `mqms

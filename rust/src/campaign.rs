@@ -1,6 +1,6 @@
 //! Parallel scenario campaigns: expand a `{preset × workload × scale ×
-//! device-count}` matrix into cells and execute them on `std::thread`
-//! workers, one independent co-simulation per cell.
+//! device-count × gpu-count × placement}` matrix into cells and execute
+//! them on `std::thread` workers, one independent co-simulation per cell.
 //!
 //! Each cell is a fully self-contained [`CoSim`] seeded from the campaign's
 //! root seed, so results are deterministic per cell; cells are collected in
@@ -10,6 +10,7 @@
 
 use crate::config::SimConfig;
 use crate::coordinator::CoSim;
+use crate::gpu::placement::Placement;
 use crate::metrics::Report;
 use crate::util::bench::{ns, si};
 use crate::util::jsonlite::Json;
@@ -28,6 +29,11 @@ pub struct CampaignSpec {
     pub scales: Vec<f64>,
     /// Device counts for the striped array.
     pub devices: Vec<u32>,
+    /// GPU shard counts for the compute side.
+    pub gpus: Vec<u32>,
+    /// Workload→GPU placement policies to sweep (collapsed to the first
+    /// entry for `gpus = 1` cells, where placement cannot matter).
+    pub placements: Vec<Placement>,
     /// Root seed; every cell runs with this seed (a cell is then directly
     /// comparable to `mqms run --seed <seed>` with the same parameters).
     pub seed: u64,
@@ -44,6 +50,8 @@ impl Default for CampaignSpec {
             workloads: vec!["bert".into(), "rand4k".into()],
             scales: vec![0.005],
             devices: vec![1, 2, 4],
+            gpus: vec![1],
+            placements: vec![Placement::RoundRobin],
             seed: 42,
             threads: 0,
             sampled: true,
@@ -58,28 +66,49 @@ pub struct Cell {
     pub workload: String,
     pub scale: f64,
     pub devices: u32,
+    pub gpus: u32,
+    pub placement: Placement,
 }
 
 impl Cell {
-    /// Compact row label for tables and file names.
+    /// Compact row label for tables and file names. Single-GPU cells keep
+    /// the historical `preset/workload@scale×Nd` shape; sharded cells append
+    /// the GPU count and placement policy.
     pub fn label(&self) -> String {
-        format!("{}/{}@{}x{}d", self.preset, self.workload, self.scale, self.devices)
+        let mut s =
+            format!("{}/{}@{}x{}d", self.preset, self.workload, self.scale, self.devices);
+        if self.gpus > 1 {
+            s.push_str(&format!("{}g-{}", self.gpus, self.placement.name()));
+        }
+        s
     }
 }
 
-/// Expand the matrix in deterministic (row-major) order.
+/// Expand the matrix in deterministic (row-major) order. `gpus = 1` cells
+/// collapse the placement axis to its first entry: with one shard every
+/// policy yields the same assignment, and duplicate cells would differ only
+/// in label.
 pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
     let mut cells = Vec::new();
     for preset in &spec.presets {
         for workload in &spec.workloads {
             for &scale in &spec.scales {
                 for &devices in &spec.devices {
-                    cells.push(Cell {
-                        preset: preset.clone(),
-                        workload: workload.clone(),
-                        scale,
-                        devices,
-                    });
+                    for &gpus in &spec.gpus {
+                        for (p, &placement) in spec.placements.iter().enumerate() {
+                            if gpus <= 1 && p > 0 {
+                                continue;
+                            }
+                            cells.push(Cell {
+                                preset: preset.clone(),
+                                workload: workload.clone(),
+                                scale,
+                                devices,
+                                gpus,
+                                placement,
+                            });
+                        }
+                    }
                 }
             }
         }
@@ -88,7 +117,7 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
 }
 
 /// Worker execution order: cell indexes sorted by estimated cost (scale ×
-/// devices, descending) so the expensive cells start first and a wide
+/// devices × gpus, descending) so the expensive cells start first and a wide
 /// matrix finishes sooner — the tail of a campaign is no longer one big
 /// cell that happened to sit last in matrix order. The sort is stable
 /// (ties keep matrix order), so the schedule itself is deterministic;
@@ -97,7 +126,7 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
 pub fn schedule_order(cells: &[Cell]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..cells.len()).collect();
     order.sort_by(|&a, &b| {
-        let cost = |c: &Cell| c.scale * c.devices as f64;
+        let cost = |c: &Cell| c.scale * c.devices as f64 * c.gpus as f64;
         // total_cmp: a total order even for NaN costs (a user can type
         // `--scales nan`), where partial_cmp-with-fallback would hand
         // sort_by a non-transitive comparator and panic.
@@ -111,6 +140,8 @@ pub fn run_cell(cell: &Cell, seed: u64, sampled: bool) -> Result<Report, String>
     let mut cfg = SimConfig::load_named(&cell.preset)?;
     cfg.seed = seed;
     cfg.devices = cell.devices;
+    cfg.gpus = cell.gpus;
+    cfg.placement = cell.placement;
     cfg.validate()?;
     let (wspec, _stats) =
         workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
@@ -188,6 +219,8 @@ pub fn summary_json(results: &[(Cell, Report)]) -> Json {
                 ("workload", c.workload.as_str().into()),
                 ("scale", c.scale.into()),
                 ("devices", (c.devices as u64).into()),
+                ("gpus", (c.gpus as u64).into()),
+                ("placement", c.placement.name().into()),
                 ("report", r.to_json_deterministic()),
             ])
         })
@@ -260,11 +293,39 @@ mod tests {
         assert_eq!(seen, vec![0, 1, 2, 3]);
         // Ties (same scale × devices) keep matrix order: 2 × 0.01x1 vs
         // 0.005x2 both cost 0.01 — stable sort preserves 0 before 1.
-        let tie = vec![
-            Cell { preset: "a".into(), workload: "w".into(), scale: 0.01, devices: 1 },
-            Cell { preset: "a".into(), workload: "w".into(), scale: 0.005, devices: 2 },
-        ];
+        let cell = |scale: f64, devices: u32| Cell {
+            preset: "a".into(),
+            workload: "w".into(),
+            scale,
+            devices,
+            gpus: 1,
+            placement: Placement::RoundRobin,
+        };
+        let tie = vec![cell(0.01, 1), cell(0.005, 2)];
         assert_eq!(schedule_order(&tie), vec![0, 1]);
+    }
+
+    #[test]
+    fn gpus_axis_expands_and_collapses_placements_for_one_gpu() {
+        let spec = CampaignSpec {
+            presets: vec!["a".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.1],
+            devices: vec![1],
+            gpus: vec![1, 2],
+            placements: vec![Placement::RoundRobin, Placement::PerfAware],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&spec);
+        // gpus=1 keeps only the first placement; gpus=2 sweeps both.
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].label(), "a/w@0.1x1d");
+        assert_eq!(cells[1].label(), "a/w@0.1x1d2g-round-robin");
+        assert_eq!(cells[2].label(), "a/w@0.1x1d2g-perf-aware");
+        // Labels are unique, so per-cell report files never collide.
+        let labels: std::collections::HashSet<String> =
+            cells.iter().map(Cell::label).collect();
+        assert_eq!(labels.len(), cells.len());
     }
 
     #[test]
@@ -292,6 +353,7 @@ mod tests {
             seed: 7,
             threads: 2,
             sampled: true,
+            ..CampaignSpec::default()
         };
         let results = run(&spec).unwrap();
         assert_eq!(results.len(), 2);

@@ -7,6 +7,7 @@
 
 mod presets;
 
+use crate::gpu::placement::Placement;
 use crate::util::jsonlite::{Json, JsonError};
 use std::fmt;
 
@@ -298,6 +299,12 @@ pub struct SimConfig {
     /// Must be a multiple of `ssd.sectors_per_page()` when `devices > 1` so
     /// stripes never shear a flash page across devices.
     pub stripe_sectors: u64,
+    /// GPU compute shards sharing the array (≥ 1). One GPU is the classic
+    /// co-simulation; more mirror the SSD sharding on the compute side, with
+    /// workloads placed across them by `placement`.
+    pub gpus: u32,
+    /// Workload→GPU placement policy (only meaningful when `gpus > 1`).
+    pub placement: Placement,
     pub ssd: SsdConfig,
     pub gpu: GpuConfig,
     pub path: PathConfig,
@@ -312,6 +319,19 @@ impl SimConfig {
         }
         if self.stripe_sectors == 0 {
             errs.push("stripe_sectors must be ≥ 1".to_string());
+        }
+        if self.gpus == 0 {
+            errs.push("gpus must be ≥ 1".to_string());
+        }
+        // Each GPU instance owns a request-id namespace of width
+        // `1 << GPU_ID_SHIFT` that must stay below the synthetic-stream id
+        // base (1 << 62); more instances would collide with it.
+        let max_gpus = 1u64 << (62 - crate::gpu::GPU_ID_SHIFT);
+        if self.gpus as u64 > max_gpus {
+            errs.push(format!(
+                "gpus {} exceeds the per-instance request-id namespace (max {max_gpus})",
+                self.gpus
+            ));
         }
         if self.devices > 1
             && self.stripe_sectors % self.ssd.sectors_per_page() as u64 != 0
@@ -339,6 +359,8 @@ impl SimConfig {
             ("seed", self.seed.into()),
             ("devices", (self.devices as u64).into()),
             ("stripe_sectors", self.stripe_sectors.into()),
+            ("gpus", (self.gpus as u64).into()),
+            ("placement", self.placement.name().into()),
             (
                 "ssd",
                 Json::from_pairs(vec![
@@ -440,6 +462,13 @@ impl SimConfig {
         }
         if let Some(v) = j.get("stripe_sectors").and_then(Json::as_u64) {
             cfg.stripe_sectors = v;
+        }
+        if let Some(v) = j.get("gpus").and_then(Json::as_u64) {
+            cfg.gpus = u32::try_from(v).map_err(|_| format!("gpus out of range: {v}"))?;
+        }
+        if let Some(v) = j.get("placement").and_then(Json::as_str) {
+            cfg.placement =
+                Placement::parse(v).ok_or_else(|| format!("bad placement: {v}"))?;
         }
         if let Some(s) = j.get("ssd") {
             let c = &mut cfg.ssd;
@@ -653,6 +682,32 @@ mod tests {
         c.devices = 4;
         c.stripe_sectors = c.ssd.sectors_per_page() as u64 + 1; // shears pages
         assert!(c.validate().is_err());
+        let mut c = mqms_enterprise();
+        c.gpus = 0;
+        assert!(c.validate().is_err());
+        // Beyond the per-instance request-id namespace.
+        let mut c = mqms_enterprise();
+        c.gpus = 1 << 15;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn gpus_and_placement_roundtrip() {
+        let mut cfg = mqms_enterprise();
+        cfg.gpus = 4;
+        cfg.placement = Placement::PerfAware;
+        cfg.validate().unwrap();
+        let re = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.gpus, 4);
+        assert_eq!(re.placement, Placement::PerfAware);
+        assert_eq!(cfg, re);
+        // Presets default to the single-GPU pass-through.
+        assert_eq!(mqms_enterprise().gpus, 1);
+        assert_eq!(mqms_enterprise().placement, Placement::RoundRobin);
+        // A bad placement name is a load error, not a silent default.
+        let mut j = cfg.to_json();
+        j.set("placement", "nope".into()).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
     }
 
     #[test]

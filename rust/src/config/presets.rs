@@ -69,6 +69,8 @@ pub fn mqms_enterprise() -> SimConfig {
         // 256 KiB stripes (64 × 4 KiB sectors): whole flash pages per
         // device, fine enough that multi-kernel bursts spread the array.
         stripe_sectors: 64,
+        gpus: 1,
+        placement: crate::gpu::placement::Placement::RoundRobin,
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
         path: PathConfig {
@@ -98,6 +100,8 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         seed: 0xA11C,
         devices: 1,
         stripe_sectors: 64,
+        gpus: 1,
+        placement: crate::gpu::placement::Placement::RoundRobin,
         ssd,
         gpu: default_gpu(),
         path: PathConfig {

@@ -13,7 +13,7 @@
 //!   processing latency.
 
 use crate::config::{IoPath, SimConfig};
-use crate::gpu::{GpuEvent, GpuSim};
+use crate::gpu::{self, placement, GpuSim, TaggedGpuEvent};
 use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
 use crate::sim::time::transfer_ns;
 use crate::sim::{Engine, EventQueue, SimTime, World};
@@ -29,11 +29,13 @@ use std::collections::VecDeque;
 pub enum Ev {
     /// Device-tagged SSD-array event.
     Ssd(ArrayEvent),
-    Gpu(GpuEvent),
+    /// Instance-tagged GPU-shard event.
+    Gpu(TaggedGpuEvent),
     /// Host-mediated submit latency elapsed; request enters the device.
     HostSubmitted(IoRequest),
-    /// Host-mediated completion latency elapsed; GPU sees the I/O done.
-    HostDelivered { req_id: u64 },
+    /// Host-mediated completion latency elapsed; the owning GPU shard sees
+    /// the I/O done (`source` routes it, mirroring the direct path).
+    HostDelivered { req_id: u64, source: u32 },
     /// Synthetic stream refill retry.
     SynthRefill { stream: usize },
 }
@@ -43,8 +45,8 @@ impl From<ArrayEvent> for Ev {
         Ev::Ssd(e)
     }
 }
-impl From<GpuEvent> for Ev {
-    fn from(e: GpuEvent) -> Self {
+impl From<TaggedGpuEvent> for Ev {
+    fn from(e: TaggedGpuEvent) -> Self {
         Ev::Gpu(e)
     }
 }
@@ -113,18 +115,30 @@ pub struct CoWorld {
     pub cfg: SimConfig,
     /// The striped SSD array (a single device when `cfg.devices == 1`).
     pub ssd: SsdArray,
-    pub gpu: Option<GpuSim>,
+    /// GPU compute shards sharing the array (empty when no trace workloads
+    /// were admitted; one instance reproduces the classic single-GPU path).
+    pub gpus: Vec<GpuSim>,
     synth: Vec<SynthStream>,
     gpu_sources: usize,
+    /// source → owning GPU instance, for trace sources (< `gpu_sources`).
+    source_gpu: Vec<u32>,
+    /// source → local workload slot on its GPU.
+    source_slot: Vec<usize>,
     /// Requests rejected on full SQs, retried (batched) after completions.
     pending_submit: Vec<IoRequest>,
     /// Scratch: drained `pending_submit` during one batched retry round.
     retry_scratch: Vec<IoRequest>,
+    /// Scratch: per-shard drained GPU I/O (reused across drains).
+    io_scratch: Vec<IoRequest>,
     /// Host-mediated path state.
     host_outstanding: u32,
     host_wait: VecDeque<IoRequest>,
     pub per_source: Vec<PerSourceAcc>,
     source_names: Vec<String>,
+    /// Completions (or events) that could not be attributed to any shard or
+    /// stream — counted here and surfaced via [`Report::misrouted`] instead
+    /// of panicking mid-simulation.
+    pub misrouted: u64,
 }
 
 impl World for CoWorld {
@@ -136,20 +150,20 @@ impl World for CoWorld {
                 self.ssd.handle(ae.dev, now, ae.ev, q);
                 self.after_ssd(now, q);
             }
-            Ev::Gpu(ge) => {
-                if let Some(gpu) = self.gpu.as_mut() {
-                    gpu.handle(now, ge, q);
+            Ev::Gpu(te) => {
+                if let Some(gpu) = self.gpus.get_mut(te.gpu as usize) {
+                    gpu.handle(now, te.ev, q);
+                } else {
+                    self.misrouted += 1;
                 }
                 self.drain_gpu_io(now, q);
             }
             Ev::HostSubmitted(req) => {
                 self.try_submit(req, q);
             }
-            Ev::HostDelivered { req_id } => {
+            Ev::HostDelivered { req_id, source } => {
                 self.host_outstanding = self.host_outstanding.saturating_sub(1);
-                if let Some(gpu) = self.gpu.as_mut() {
-                    gpu.io_completed(req_id, now, q);
-                }
+                self.deliver_to_gpu(source, req_id, now, q);
                 // Admit a queued host request into the freed slot.
                 if let Some(next) = self.host_wait.pop_front() {
                     self.route(next, q);
@@ -164,8 +178,25 @@ impl World for CoWorld {
 }
 
 impl CoWorld {
+    /// Hand a completed request to the GPU shard that owns `source`.
+    /// Unknown sources and request ids no shard recognizes (mis-routed,
+    /// duplicate, or late completions) are counted in `misrouted` — the
+    /// simulation keeps going and the report surfaces the anomaly.
+    fn deliver_to_gpu(&mut self, source: u32, req_id: u64, now: SimTime, q: &mut EventQueue<Ev>) {
+        let src = source as usize;
+        if src >= self.gpu_sources {
+            self.misrouted += 1;
+            return;
+        }
+        let g = self.source_gpu[src] as usize;
+        if !self.gpus[g].io_completed(req_id, now, q) {
+            self.misrouted += 1;
+        }
+    }
+
     /// Process SSD fallout: completions (credit per-source metrics, notify
-    /// the GPU or synth streams) and retry rejected submissions.
+    /// the owning GPU shard or synth stream — routed by `c.source`) and
+    /// retry rejected submissions.
     fn after_ssd(&mut self, now: SimTime, q: &mut EventQueue<Ev>) {
         let completions = self.ssd.drain_completions();
         for c in completions {
@@ -173,23 +204,32 @@ impl CoWorld {
             if src < self.per_source.len() {
                 self.per_source[src].record(c.submit_ns, c.complete_ns);
             }
-            if c.id >= SYNTH_ID_BASE {
+            if src >= self.gpu_sources {
+                // Synthetic-stream source; its ids must sit in the synth
+                // id space, or the completion is mis-attributed.
                 let stream = src - self.gpu_sources;
+                if c.id < SYNTH_ID_BASE || stream >= self.synth.len() {
+                    self.misrouted += 1;
+                    continue;
+                }
                 let s = &mut self.synth[stream];
                 s.completed += 1;
                 s.outstanding = s.outstanding.saturating_sub(1);
                 self.refill_synth(stream, q);
-            } else if self.gpu.is_some() {
+            } else if c.id >= SYNTH_ID_BASE {
+                // A synth-space id claiming a GPU source: never deliverable.
+                self.misrouted += 1;
+            } else {
                 match self.cfg.path.path {
                     IoPath::Direct => {
-                        self.gpu.as_mut().unwrap().io_completed(c.id, now, q);
+                        self.deliver_to_gpu(c.source, c.id, now, q);
                     }
                     IoPath::HostMediated => {
                         // Completion interrupt + host wakeup before the GPU
                         // observes the data.
                         q.schedule_in(
                             self.cfg.path.host_complete_ns,
-                            Ev::HostDelivered { req_id: c.id },
+                            Ev::HostDelivered { req_id: c.id, source: c.source },
                         );
                     }
                 }
@@ -206,25 +246,34 @@ impl CoWorld {
         self.drain_gpu_io(now, q);
     }
 
-    /// Pull newly generated GPU I/O and route it down the configured path.
-    /// Direct-path requests go down as one batch; host-mediated requests
-    /// each pay the host submission pipeline individually.
+    /// Pull newly generated I/O from every GPU shard and route it down the
+    /// configured path. Direct-path requests go down as one batch per shard;
+    /// host-mediated requests each pay the host submission pipeline
+    /// individually. Both paths drain through one reusable scratch buffer
+    /// ([`GpuSim::drain_io_into`]), so the steady state allocates nothing.
     fn drain_gpu_io(&mut self, _now: SimTime, q: &mut EventQueue<Ev>) {
-        let Some(gpu) = self.gpu.as_mut() else { return };
-        let reqs = gpu.drain_io();
-        if reqs.is_empty() {
-            return;
-        }
-        match self.cfg.path.path {
-            IoPath::Direct => {
-                self.ssd.submit_batch(reqs, q, &mut self.pending_submit);
+        // Both buffers are swapped out of `self` so the shard walk can call
+        // back into `self.ssd` / `self.route` without aliasing.
+        let mut gpus = std::mem::take(&mut self.gpus);
+        let mut buf = std::mem::take(&mut self.io_scratch);
+        for gpu in &mut gpus {
+            gpu.drain_io_into(&mut buf);
+            if buf.is_empty() {
+                continue;
             }
-            IoPath::HostMediated => {
-                for req in reqs {
-                    self.route(req, q);
+            match self.cfg.path.path {
+                IoPath::Direct => {
+                    self.ssd.submit_batch(buf.drain(..), q, &mut self.pending_submit);
+                }
+                IoPath::HostMediated => {
+                    for req in buf.drain(..) {
+                        self.route(req, q);
+                    }
                 }
             }
         }
+        self.io_scratch = buf;
+        self.gpus = gpus;
     }
 
     /// Route one GPU request: direct to the device, or through the host.
@@ -303,15 +352,19 @@ impl CoSim {
         Self {
             world: CoWorld {
                 ssd,
-                gpu: None,
+                gpus: Vec::new(),
                 synth: Vec::new(),
                 gpu_sources: 0,
+                source_gpu: Vec::new(),
+                source_slot: Vec::new(),
                 pending_submit: Vec::new(),
                 retry_scratch: Vec::new(),
+                io_scratch: Vec::new(),
                 host_outstanding: 0,
                 host_wait: VecDeque::new(),
                 per_source: Vec::new(),
                 source_names: Vec::new(),
+                misrouted: 0,
                 cfg,
             },
             engine: Engine::new(),
@@ -348,7 +401,7 @@ impl CoSim {
             debug_assert!(self.world.pending_submit.is_empty());
             debug_assert!(self.world.ssd.is_drained(), "ssd not drained at quiescence");
             debug_assert!(
-                self.world.gpu.as_ref().map_or(true, GpuSim::all_done),
+                self.world.gpus.iter().all(GpuSim::all_done),
                 "gpu not done at quiescence"
             );
             debug_assert!(self.world.all_synth_done(), "synth streams incomplete");
@@ -360,27 +413,58 @@ impl CoSim {
         self.started = true;
         let specs = std::mem::take(&mut self.specs);
         let seed = self.world.cfg.seed;
-        // GPU workloads first (sources 0..n), then synth streams.
-        let mut gpu = GpuSim::new(&self.world.cfg.gpu, seed);
-        let mut n_gpu = 0usize;
-        for spec in &specs {
-            if let WorkloadKind::Trace(t) = &spec.kind {
-                gpu.add_workload(&spec.name, t.clone(), seed ^ 0x6B);
-                self.world.source_names.push(spec.name.clone());
-                n_gpu += 1;
-            }
-        }
+        // Trace workloads take sources 0..n in admission order (synth
+        // streams follow), whatever GPU shard each one lands on.
+        let n_gpu = specs
+            .iter()
+            .filter(|s| matches!(s.kind, WorkloadKind::Trace(_)))
+            .count();
         self.world.gpu_sources = n_gpu;
         let total = self.world.ssd.logical_sectors();
         let n_synth = specs.len() - n_gpu;
         let n_sources = (n_gpu + n_synth).max(1) as u64;
         let share = total / n_sources;
         if n_gpu > 0 {
-            gpu.start(
-                share * n_gpu as u64,
-                self.world.cfg.ssd.sector_bytes as u64,
-                &mut self.engine.queue,
-            );
+            // Placement: predict each trace workload's cost against the
+            // array shape, then let the configured policy spread them over
+            // the compute shards (all land on shard 0 when `gpus == 1`).
+            let n_shards = self.world.cfg.gpus.max(1) as usize;
+            let ctx = placement::PlacementCtx::from_config(&self.world.cfg);
+            let estimates: Vec<placement::CostEstimate> = specs
+                .iter()
+                .filter_map(|s| match &s.kind {
+                    WorkloadKind::Trace(t) => Some(placement::estimate(t, &ctx)),
+                    WorkloadKind::Synth(_) => None,
+                })
+                .collect();
+            let assignment =
+                placement::assign(self.world.cfg.placement, &estimates, n_shards);
+            let mut gpus: Vec<GpuSim> = (0..n_shards)
+                .map(|g| GpuSim::new(&self.world.cfg.gpu, seed, g as u32))
+                .collect();
+            self.world.source_gpu = Vec::with_capacity(n_gpu);
+            self.world.source_slot = Vec::with_capacity(n_gpu);
+            let mut source = 0usize;
+            for spec in &specs {
+                if let WorkloadKind::Trace(t) = &spec.kind {
+                    let g = assignment[source];
+                    let slot =
+                        gpus[g].add_workload(&spec.name, t.clone(), seed ^ 0x6B, source as u32);
+                    self.world.source_gpu.push(g as u32);
+                    self.world.source_slot.push(slot);
+                    self.world.source_names.push(spec.name.clone());
+                    source += 1;
+                }
+            }
+            for gpu in &mut gpus {
+                if gpu.workload_count() > 0 {
+                    gpu.start(
+                        share,
+                        self.world.cfg.ssd.sector_bytes as u64,
+                        &mut self.engine.queue,
+                    );
+                }
+            }
             // Install the model/dataset image each workload will read: its
             // weights were stored on the device before the experiment.
             let mut g = 0u64;
@@ -392,7 +476,7 @@ impl CoSim {
                     g += 1;
                 }
             }
-            self.world.gpu = Some(gpu);
+            self.world.gpus = gpus;
         }
         // Synth streams take the tail regions.
         let mut idx = 0usize;
@@ -443,8 +527,9 @@ impl CoSim {
             .map(|(i, name)| {
                 let acc = &w.per_source[i];
                 let (end, predicted, kernels) = if i < w.gpu_sources {
-                    let g = w.gpu.as_ref().unwrap();
-                    (g.actual_end_ns(i), g.predicted_end_ns(i), g.kernels_done(i))
+                    let g = &w.gpus[w.source_gpu[i] as usize];
+                    let slot = w.source_slot[i];
+                    (g.actual_end_ns(slot), g.predicted_end_ns(slot), g.kernels_done(slot))
                 } else {
                     (acc.last_complete_ns, acc.last_complete_ns as f64, 0)
                 };
@@ -470,7 +555,9 @@ impl CoSim {
             events,
             wall_s,
             past_clamps: self.engine.queue.past_clamps() + w.ssd.past_clamps(),
-            gpu: w.gpu.as_ref().map(GpuSim::report),
+            misrouted: w.misrouted,
+            gpu: if w.gpus.is_empty() { None } else { Some(gpu::merged_report(&w.gpus)) },
+            gpus: w.gpus.iter().map(GpuSim::report).collect(),
         }
     }
 }
@@ -581,6 +668,38 @@ mod tests {
         assert_eq!(report.workloads.len(), 2);
         assert!(report.workloads[0].kernels_done > 0);
         assert_eq!(report.workloads[1].io_completed, 500);
+        assert_eq!(report.misrouted, 0, "clean runs must attribute every completion");
+    }
+
+    #[test]
+    fn multi_gpu_shards_run_and_attribute() {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpu.dram_bytes = 0;
+        cfg.gpus = 2;
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::trace(
+            "backprop",
+            workloads::rodinia::backprop(0.003, 1),
+        ));
+        sim.add_workload(WorkloadSpec::trace(
+            "hotspot",
+            workloads::rodinia::hotspot(0.003, 2),
+        ));
+        let report = sim.run();
+        assert_eq!(report.misrouted, 0);
+        assert_eq!(report.gpus.len(), 2, "one report per compute shard");
+        assert_eq!(report.workloads.len(), 2);
+        for w in &report.workloads {
+            assert!(w.io_completed > 0, "{} saw no I/O", w.name);
+            assert!(w.kernels_done > 0, "{} ran no kernels", w.name);
+        }
+        let total: u64 = report.workloads.iter().map(|w| w.io_completed).sum();
+        assert_eq!(total, report.ssd.completed);
+        // Round-robin placement put one workload on each shard.
+        let launched = |g: &crate::util::jsonlite::Json| {
+            g.get("kernels_launched").and_then(|v| v.as_u64()).unwrap()
+        };
+        assert!(report.gpus.iter().all(|g| launched(g) > 0), "idle shard");
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! `Y = Σ Nᵢ·X̄ᵢ`: each sampled kernel's simulated duration is scaled by its
 //! record weight ([`trace::KernelRecord::weight`]).
 
+pub mod placement;
 pub mod sched;
 pub mod trace;
 
@@ -41,6 +42,22 @@ pub enum GpuEvent {
     WaveCompute { seq: u64 },
 }
 
+/// A GPU event tagged with the instance it belongs to — the compute-side
+/// mirror of [`crate::ssd::ArrayEvent`]. Every event a [`GpuSim`] schedules
+/// carries its own instance id, so a world owning several GPU shards routes
+/// events without guessing.
+#[derive(Debug, Clone, Copy)]
+pub struct TaggedGpuEvent {
+    pub gpu: u32,
+    pub ev: GpuEvent,
+}
+
+/// Request-id namespace width per GPU instance: instance `g` issues ids in
+/// `[1 + (g << GPU_ID_SHIFT), ...)`, keeping ids unique across instances and
+/// far below the synthetic-stream (`1 << 62`) and split (`1 << 63`) id
+/// spaces. Instance 0 issues the exact ids a single-GPU build always did.
+pub const GPU_ID_SHIFT: u32 = 48;
+
 /// Default kernel-launch overhead (driver + dispatch), ns.
 const LAUNCH_OVERHEAD_NS: SimTime = 3_000;
 /// Default large-chunk length in kernels.
@@ -50,6 +67,9 @@ pub const DEFAULT_CHUNK: u32 = 64;
 struct WorkloadRun {
     name: String,
     trace: Trace,
+    /// Global source id (workload index across all GPUs), stamped on every
+    /// request so completions and metrics attribute across shards.
+    source: u32,
     next_record: usize,
     /// Logical-sector region [base, base+len) this workload addresses.
     region_base: u64,
@@ -94,9 +114,11 @@ struct RunningCompute {
     wave_seq: u64,
 }
 
-/// The GPU simulator.
+/// The GPU simulator (one compute shard; a world may own several).
 pub struct GpuSim {
     pub cfg: GpuConfig,
+    /// Instance id within the sharded compute side (0 for single-GPU runs).
+    instance: u32,
     workloads: Vec<WorkloadRun>,
     sched: Scheduler,
     running: Option<RunningCompute>,
@@ -116,10 +138,11 @@ pub struct GpuSim {
 }
 
 impl GpuSim {
-    pub fn new(cfg: &GpuConfig, seed: u64) -> Self {
+    pub fn new(cfg: &GpuConfig, seed: u64, instance: u32) -> Self {
         let _ = seed;
         Self {
             cfg: cfg.clone(),
+            instance,
             workloads: Vec::new(),
             sched: Scheduler::new(cfg, DEFAULT_CHUNK),
             running: None,
@@ -127,7 +150,7 @@ impl GpuSim {
             req_to_kernel: std::collections::HashMap::new(),
             kernel_seq: 0,
             io_out: Vec::new(),
-            next_req_id: 1,
+            next_req_id: 1 + ((instance as u64) << GPU_ID_SHIFT),
             wave_counter: 0,
             started: false,
             busy_ns: 0,
@@ -137,19 +160,34 @@ impl GpuSim {
         }
     }
 
-    /// Admit a workload. Must be called before [`GpuSim::start`].
-    pub fn add_workload(&mut self, name: &str, trace: Trace, seed: u64) -> usize {
+    /// Instance id within the sharded compute side.
+    pub fn instance(&self) -> u32 {
+        self.instance
+    }
+
+    /// Tag one of this instance's events for the world queue.
+    #[inline]
+    fn tag(&self, ev: GpuEvent) -> TaggedGpuEvent {
+        TaggedGpuEvent { gpu: self.instance, ev }
+    }
+
+    /// Admit a workload under global source id `source` (the cross-GPU
+    /// workload index — requests carry it, and the per-workload rng stream
+    /// derives from it so co-scheduled shards never share streams). Must be
+    /// called before [`GpuSim::start`]; returns the local slot.
+    pub fn add_workload(&mut self, name: &str, trace: Trace, seed: u64, source: u32) -> usize {
         assert!(!self.started, "add_workload after start");
         let id = self.workloads.len();
         self.workloads.push(WorkloadRun {
             name: name.to_string(),
             trace,
+            source,
             next_record: 0,
             region_base: 0,
             region_len: 0,
             hit_rate: 0.0,
             cursor: 0,
-            rng: Pcg64::new(seed ^ ((id as u64) << 17)),
+            rng: Pcg64::new(seed ^ ((source as u64) << 17)),
             kernels_done: 0,
             predicted_ns: 0.0,
             end_ns: 0,
@@ -160,22 +198,24 @@ impl GpuSim {
         id
     }
 
-    /// Partition the SSD logical space among workloads, derive DRAM hit
-    /// rates, and schedule the first launch.
-    pub fn start<E: From<GpuEvent>>(
+    /// Place each workload in its global region (`source × share_sectors`),
+    /// derive DRAM hit rates, and schedule the first launch. The caller
+    /// supplies the per-source share of the logical space, so shards on
+    /// different GPUs address disjoint regions keyed by source — not by
+    /// local slot.
+    pub fn start<E: From<TaggedGpuEvent>>(
         &mut self,
-        total_logical_sectors: u64,
+        share_sectors: u64,
         sector_bytes: u64,
         q: &mut EventQueue<E>,
     ) {
         assert!(!self.workloads.is_empty(), "no workloads admitted");
         self.started = true;
         let n = self.workloads.len() as u64;
-        let share = total_logical_sectors / n;
         let dram_share = self.cfg.dram_bytes / n;
-        for (i, w) in self.workloads.iter_mut().enumerate() {
-            w.region_base = i as u64 * share;
-            w.region_len = w.trace.footprint_sectors.clamp(1, share);
+        for w in self.workloads.iter_mut() {
+            w.region_base = w.source as u64 * share_sectors;
+            w.region_len = w.trace.footprint_sectors.clamp(1, share_sectors.max(1));
             let footprint_bytes = w.region_len * sector_bytes;
             w.hit_rate = if footprint_bytes == 0 {
                 1.0
@@ -183,7 +223,7 @@ impl GpuSim {
                 (dram_share as f64 / footprint_bytes as f64).min(1.0)
             };
         }
-        q.schedule_at(q.now(), GpuEvent::Launch.into());
+        q.schedule_at(q.now(), self.tag(GpuEvent::Launch).into());
     }
 
     /// All workloads finished, no kernel computing, no I/O outstanding?
@@ -193,30 +233,48 @@ impl GpuSim {
             && self.workloads.iter().all(WorkloadRun::done)
     }
 
-    /// Pending SSD I/O generated since the last drain.
-    pub fn drain_io(&mut self) -> Vec<IoRequest> {
-        std::mem::take(&mut self.io_out)
+    /// Pending SSD I/O generated since the last drain, appended into a
+    /// caller-owned buffer (the coordinator reuses one scratch vector, so
+    /// steady-state drains allocate nothing once capacities warm up).
+    pub fn drain_io_into(&mut self, out: &mut Vec<IoRequest>) {
+        out.append(&mut self.io_out);
     }
 
-    /// Called by the coordinator when an SSD request completes.
-    pub fn io_completed<E: From<GpuEvent>>(
+    /// Allocating convenience wrapper over [`GpuSim::drain_io_into`].
+    pub fn drain_io(&mut self) -> Vec<IoRequest> {
+        let mut out = Vec::new();
+        self.drain_io_into(&mut out);
+        out
+    }
+
+    /// Called by the coordinator when an SSD request completes. Returns
+    /// `false` when the request id is unknown to this instance (a
+    /// mis-routed or duplicate completion) — the caller counts the anomaly
+    /// instead of this shard aborting the whole co-simulation.
+    #[must_use]
+    pub fn io_completed<E: From<TaggedGpuEvent>>(
         &mut self,
         req_id: u64,
         now: SimTime,
         q: &mut EventQueue<E>,
-    ) {
-        let kseq = self
-            .req_to_kernel
-            .remove(&req_id)
-            .expect("io completion for unknown request");
+    ) -> bool {
+        let Some(kseq) = self.req_to_kernel.remove(&req_id) else {
+            return false;
+        };
         let k = self.inflight.get_mut(&kseq).expect("io for retired kernel");
         debug_assert!(k.io_left > 0);
         k.io_left -= 1;
         self.maybe_retire(kseq, now, q);
+        true
     }
 
     /// Dispatch one GPU event.
-    pub fn handle<E: From<GpuEvent>>(&mut self, now: SimTime, ev: GpuEvent, q: &mut EventQueue<E>) {
+    pub fn handle<E: From<TaggedGpuEvent>>(
+        &mut self,
+        now: SimTime,
+        ev: GpuEvent,
+        q: &mut EventQueue<E>,
+    ) {
         match ev {
             GpuEvent::Launch => self.try_launch(now, q),
             GpuEvent::WaveCompute { seq } => {
@@ -241,7 +299,7 @@ impl GpuSim {
 
     // --- internals --------------------------------------------------------
 
-    fn try_launch<E: From<GpuEvent>>(&mut self, now: SimTime, q: &mut EventQueue<E>) {
+    fn try_launch<E: From<TaggedGpuEvent>>(&mut self, now: SimTime, q: &mut EventQueue<E>) {
         if self.running.is_some() {
             return;
         }
@@ -300,7 +358,7 @@ impl GpuSim {
 
     /// Begin the next wave of the running kernel: schedule its compute
     /// completion and emit its share of the kernel's memory requests.
-    fn start_wave<E: From<GpuEvent>>(&mut self, start_at: SimTime, q: &mut EventQueue<E>) {
+    fn start_wave<E: From<TaggedGpuEvent>>(&mut self, start_at: SimTime, q: &mut EventQueue<E>) {
         self.wave_counter += 1;
         let seq = self.wave_counter;
         let run = self.running.as_mut().expect("start_wave without kernel");
@@ -355,14 +413,14 @@ impl GpuSim {
                 lsn,
                 sectors: rec.req_sectors.max(1),
                 submit_ns: 0,
-                source: wid as u32,
+                source: self.workloads[wid].source,
                 device: 0,
             });
             self.req_to_kernel.insert(id, kseq);
             outstanding += 1;
         }
         self.inflight.get_mut(&kseq).unwrap().io_left += outstanding;
-        q.schedule_at(start_at + compute_ns, GpuEvent::WaveCompute { seq }.into());
+        q.schedule_at(start_at + compute_ns, self.tag(GpuEvent::WaveCompute { seq }).into());
     }
 
     /// Generate one request address within the workload's region.
@@ -388,7 +446,12 @@ impl GpuSim {
 
     /// Retire a kernel once both its compute and its I/O have finished,
     /// freeing a pipeline slot for the launcher.
-    fn maybe_retire<E: From<GpuEvent>>(&mut self, kseq: u64, now: SimTime, q: &mut EventQueue<E>) {
+    fn maybe_retire<E: From<TaggedGpuEvent>>(
+        &mut self,
+        kseq: u64,
+        now: SimTime,
+        q: &mut EventQueue<E>,
+    ) {
         let k = &self.inflight[&kseq];
         if !(k.compute_done && k.io_left == 0) {
             return;
@@ -400,7 +463,7 @@ impl GpuSim {
         w.kernels_done += 1;
         w.predicted_ns += duration as f64 * weight;
         w.end_ns = now.max(w.end_ns);
-        q.schedule_at(now, GpuEvent::Launch.into());
+        q.schedule_at(now, self.tag(GpuEvent::Launch).into());
     }
 
     // --- reporting ----------------------------------------------------------
@@ -427,24 +490,29 @@ impl GpuSim {
         self.workloads[id].kernels_done
     }
 
-    pub fn report(&self) -> Json {
-        let per: Vec<Json> = self
-            .workloads
-            .iter()
-            .map(|w| {
-                Json::from_pairs(vec![
-                    ("name", w.name.as_str().into()),
-                    ("kernels_done", w.kernels_done.into()),
-                    ("predicted_end_ns", w.predicted_ns.into()),
-                    ("actual_end_ns", w.end_ns.into()),
-                    ("io_reads", w.io_reads.into()),
-                    ("io_writes", w.io_writes.into()),
-                    ("dram_hits", w.dram_hits.into()),
-                    ("hit_rate", w.hit_rate.into()),
-                ])
-            })
-            .collect();
+    /// Global source id of local workload slot `id`.
+    pub fn workload_source(&self, id: usize) -> u32 {
+        self.workloads[id].source
+    }
+
+    fn workload_json(w: &WorkloadRun) -> Json {
         Json::from_pairs(vec![
+            ("name", w.name.as_str().into()),
+            ("source", (w.source as u64).into()),
+            ("kernels_done", w.kernels_done.into()),
+            ("predicted_end_ns", w.predicted_ns.into()),
+            ("actual_end_ns", w.end_ns.into()),
+            ("io_reads", w.io_reads.into()),
+            ("io_writes", w.io_writes.into()),
+            ("dram_hits", w.dram_hits.into()),
+            ("hit_rate", w.hit_rate.into()),
+        ])
+    }
+
+    pub fn report(&self) -> Json {
+        let per: Vec<Json> = self.workloads.iter().map(Self::workload_json).collect();
+        Json::from_pairs(vec![
+            ("instance", (self.instance as u64).into()),
             ("kernels_launched", self.kernels_launched.into()),
             ("busy_ns", self.busy_ns.into()),
             ("io_stall_ns", self.io_stall_ns.into()),
@@ -452,6 +520,42 @@ impl GpuSim {
             ("workloads", Json::Arr(per)),
         ])
     }
+}
+
+/// Merge per-instance GPU reports into one compute-side aggregate, the way
+/// [`crate::metrics::SsdSummary::merge`] folds per-device SSD summaries:
+/// counters and busy/stall times sum across shards, and the per-workload
+/// entries are re-ordered by global source id so the merged view reads like
+/// one big GPU running every workload. A single instance merges to exactly
+/// its own [`GpuSim::report`] (minus nothing), so `gpus = 1` reports are
+/// unchanged by the sharding layer.
+pub fn merged_report(gpus: &[GpuSim]) -> Json {
+    if gpus.len() == 1 {
+        return gpus[0].report();
+    }
+    let mut kernels_launched = 0u64;
+    let mut busy_ns: SimTime = 0;
+    let mut io_stall_ns: SimTime = 0;
+    let mut chunk_switches = 0u64;
+    let mut per: Vec<(u32, Json)> = Vec::new();
+    for g in gpus {
+        kernels_launched += g.kernels_launched;
+        busy_ns += g.busy_ns;
+        io_stall_ns += g.io_stall_ns;
+        chunk_switches += g.sched.chunk_switches;
+        for w in &g.workloads {
+            per.push((w.source, GpuSim::workload_json(w)));
+        }
+    }
+    per.sort_by_key(|(source, _)| *source);
+    Json::from_pairs(vec![
+        ("instances", (gpus.len() as u64).into()),
+        ("kernels_launched", kernels_launched.into()),
+        ("busy_ns", busy_ns.into()),
+        ("io_stall_ns", io_stall_ns.into()),
+        ("chunk_switches", chunk_switches.into()),
+        ("workloads", Json::Arr(per.into_iter().map(|(_, j)| j).collect())),
+    ])
 }
 
 #[cfg(test)]
@@ -462,12 +566,12 @@ mod tests {
 
     #[derive(Clone, Copy)]
     enum GpuOrIo {
-        Gpu(GpuEvent),
+        Gpu(TaggedGpuEvent),
         IoDone(u64),
     }
 
-    impl From<GpuEvent> for GpuOrIo {
-        fn from(g: GpuEvent) -> Self {
+    impl From<TaggedGpuEvent> for GpuOrIo {
+        fn from(g: TaggedGpuEvent) -> Self {
             GpuOrIo::Gpu(g)
         }
     }
@@ -481,8 +585,13 @@ mod tests {
         type Ev = GpuOrIo;
         fn handle(&mut self, now: SimTime, ev: GpuOrIo, q: &mut EventQueue<GpuOrIo>) {
             match ev {
-                GpuOrIo::Gpu(g) => self.gpu.handle(now, g, q),
-                GpuOrIo::IoDone(id) => self.gpu.io_completed(id, now, q),
+                GpuOrIo::Gpu(g) => {
+                    assert_eq!(g.gpu, self.gpu.instance(), "event tagged for another shard");
+                    self.gpu.handle(now, g.ev, q);
+                }
+                GpuOrIo::IoDone(id) => {
+                    assert!(self.gpu.io_completed(id, now, q), "completion for unknown request");
+                }
             }
             // Instantly "service" any generated I/O after a fixed delay.
             for req in self.gpu.drain_io() {
@@ -512,7 +621,8 @@ mod tests {
 
     fn run_world(mut w: GpuWorld) -> (GpuWorld, SimTime) {
         let mut e: Engine<GpuWorld> = Engine::new();
-        w.gpu.start(1 << 20, 4096, &mut e.queue);
+        let share = (1u64 << 20) / w.gpu.workload_count() as u64;
+        w.gpu.start(share, 4096, &mut e.queue);
         // start() scheduled a Launch; the world must also drain the first IO.
         let stats = e.run(&mut w);
         assert!(stats.quiescent);
@@ -520,9 +630,9 @@ mod tests {
     }
 
     fn gpu_with(cfg: &crate::config::GpuConfig, traces: Vec<(&str, Trace)>) -> GpuSim {
-        let mut g = GpuSim::new(cfg, 42);
-        for (name, t) in traces {
-            g.add_workload(name, t, 7);
+        let mut g = GpuSim::new(cfg, 42, 0);
+        for (i, (name, t)) in traces.into_iter().enumerate() {
+            g.add_workload(name, t, 7, i as u32);
         }
         g
     }
@@ -639,16 +749,18 @@ mod tests {
         );
         let mut q: EventQueue<GpuOrIo> = EventQueue::new();
         let total: u64 = 1 << 20;
-        gpu.start(total, 4096, &mut q);
         let share = total / 2;
+        gpu.start(share, 4096, &mut q);
         let mut seen_b = false;
         let mut guard = 0;
         while guard < 1_000_000 {
             guard += 1;
             let Some((now, ev)) = q.pop() else { break };
             match ev {
-                GpuOrIo::Gpu(g) => gpu.handle(now, g, &mut q),
-                GpuOrIo::IoDone(id) => gpu.io_completed(id, now, &mut q),
+                GpuOrIo::Gpu(g) => gpu.handle(now, g.ev, &mut q),
+                GpuOrIo::IoDone(id) => {
+                    assert!(gpu.io_completed(id, now, &mut q));
+                }
             }
             for req in gpu.drain_io() {
                 let region = (req.source as u64 * share, (req.source as u64 + 1) * share);
@@ -680,5 +792,56 @@ mod tests {
         let (w, _) = run_world(GpuWorld { gpu, io_latency: 1_000 });
         assert!(w.gpu.all_done());
         assert_eq!(w.gpu.kernels_done(0), 1);
+    }
+
+    #[test]
+    fn instances_issue_disjoint_request_ids() {
+        let mut cfg = config::mqms_enterprise().gpu;
+        cfg.dram_bytes = 0;
+        let collect_ids = |instance: u32| {
+            let mut gpu = GpuSim::new(&cfg, 42, instance);
+            gpu.add_workload("a", tiny_trace(2, 8, 1.0), 7, 0);
+            let mut q: EventQueue<GpuOrIo> = EventQueue::new();
+            gpu.start(1 << 20, 4096, &mut q);
+            let mut ids = Vec::new();
+            let mut guard = 0;
+            while guard < 100_000 {
+                guard += 1;
+                let Some((now, ev)) = q.pop() else { break };
+                match ev {
+                    GpuOrIo::Gpu(g) => gpu.handle(now, g.ev, &mut q),
+                    GpuOrIo::IoDone(id) => {
+                        assert!(gpu.io_completed(id, now, &mut q));
+                    }
+                }
+                for req in gpu.drain_io() {
+                    ids.push(req.id);
+                    q.schedule_in(5_000, GpuOrIo::IoDone(req.id));
+                }
+            }
+            assert!(gpu.all_done());
+            ids
+        };
+        let a = collect_ids(0);
+        let b = collect_ids(1);
+        assert!(!a.is_empty() && !b.is_empty());
+        // Instance 0 keeps the historical id space; instance 1 sits in its
+        // own shifted namespace, below the synthetic-stream base.
+        assert!(a.iter().all(|&id| id < 1 << GPU_ID_SHIFT));
+        assert!(b.iter().all(|&id| id > 1 << GPU_ID_SHIFT && id < 1 << 62));
+        let sa: std::collections::HashSet<u64> = a.into_iter().collect();
+        assert!(b.iter().all(|id| !sa.contains(id)), "id namespaces overlap");
+    }
+
+    #[test]
+    fn unknown_completion_is_reported_not_fatal() {
+        let mut cfg = config::mqms_enterprise().gpu;
+        cfg.dram_bytes = 0;
+        let mut gpu = gpu_with(&cfg, vec![("a", tiny_trace(1, 1, 1.0))]);
+        let mut q: EventQueue<GpuOrIo> = EventQueue::new();
+        gpu.start(1 << 20, 4096, &mut q);
+        // A completion for a request this shard never issued (e.g. one
+        // mis-routed from another GPU) must be refused, not panic.
+        assert!(!gpu.io_completed(0xDEAD_BEEF, 0, &mut q));
     }
 }

@@ -1,0 +1,287 @@
+//! Workload→GPU placement policies — the paper's *performance-aware
+//! allocation* scaled out to a sharded compute side.
+//!
+//! With `gpus > 1` the coordinator owns several [`super::GpuSim`] instances
+//! sharing one striped SSD array, and every trace workload must be assigned
+//! to exactly one of them before the run starts. The assignment is where the
+//! allocation policy space the paper argues for actually opens up:
+//!
+//! * [`Placement::RoundRobin`] — workload *i* on GPU `i % n`. Oblivious to
+//!   cost; the baseline every performance-aware policy must beat.
+//! * [`Placement::LeastLoaded`] — greedy in admission order onto the GPU
+//!   with the least outstanding estimated I/O (request count). Balances the
+//!   storage *demand* each GPU pushes at the shared array, but ignores
+//!   compute.
+//! * [`Placement::PerfAware`] — longest-predicted-first onto the GPU with
+//!   the earliest predicted end time, where each workload's prediction
+//!   combines its compute estimate with an I/O service estimate derived
+//!   from the array shape (device count, per-device NVMe queue capacity,
+//!   flash parallelism). This is the paper's performance-aware allocation
+//!   applied to the compute side: placement decisions follow predicted
+//!   end-times rather than arrival order.
+//!
+//! All three are deterministic (ties break toward the lowest GPU index), so
+//! placement never perturbs run-to-run reproducibility.
+
+use crate::config::SimConfig;
+use crate::gpu::trace::Trace;
+use std::fmt;
+
+/// Workload→GPU placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Workload `i` → GPU `i % n` (cost-oblivious baseline).
+    RoundRobin,
+    /// Admission-order greedy onto the GPU with the least assigned
+    /// estimated outstanding I/O.
+    LeastLoaded,
+    /// Longest-predicted-first onto the GPU with the earliest predicted end
+    /// time (compute + queue-depth-aware I/O service estimate).
+    PerfAware,
+}
+
+impl Placement {
+    pub const ALL: [Placement; 3] =
+        [Placement::RoundRobin, Placement::LeastLoaded, Placement::PerfAware];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::RoundRobin => "round-robin",
+            Placement::LeastLoaded => "least-loaded",
+            Placement::PerfAware => "perf-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Some(Placement::RoundRobin),
+            "least-loaded" | "ll" => Some(Placement::LeastLoaded),
+            "perf-aware" | "perf" | "pa" => Some(Placement::PerfAware),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The system shape a placement estimate is computed against.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementCtx {
+    /// Devices in the striped array.
+    pub devices: u32,
+    /// NVMe capacity of one device (queues × depth): how much concurrency a
+    /// device absorbs before requests queue behind each other.
+    pub queue_slots: u32,
+    /// Flash planes of one device (the service-parallelism ceiling).
+    pub planes_per_device: u32,
+    pub cores: u32,
+    pub blocks_per_core: u32,
+    pub clock_mhz: f64,
+    /// Per-request flash service proxy (tR), ns.
+    pub read_ns: u64,
+}
+
+impl PlacementCtx {
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        Self {
+            devices: cfg.devices.max(1),
+            queue_slots: cfg.ssd.nvme_queues.saturating_mul(cfg.ssd.queue_depth).max(1),
+            planes_per_device: cfg.ssd.total_planes().max(1),
+            cores: cfg.gpu.cores.max(1),
+            blocks_per_core: cfg.gpu.blocks_per_core.max(1),
+            clock_mhz: cfg.gpu.clock_mhz.max(1.0),
+            read_ns: cfg.ssd.t_read_ns.max(1),
+        }
+    }
+
+    /// Requests the storage side services concurrently: per-device
+    /// parallelism is bounded by both NVMe queue capacity and flash planes,
+    /// and the striped array multiplies it by the device count.
+    fn service_parallelism(&self) -> f64 {
+        (self.devices as f64) * (self.queue_slots.min(self.planes_per_device).max(1) as f64)
+    }
+}
+
+/// Static cost prediction for one trace workload.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostEstimate {
+    /// Predicted serial compute time on one GPU, ns.
+    pub compute_ns: f64,
+    /// Predicted storage request count (weight-extrapolated).
+    pub io_requests: f64,
+    /// Predicted storage service time through the array, ns.
+    pub io_ns: f64,
+}
+
+impl CostEstimate {
+    /// Predicted end time of the workload alone: compute and I/O overlap
+    /// through the retirement pipeline, so the longer phase dominates.
+    pub fn end_ns(&self) -> f64 {
+        self.compute_ns.max(self.io_ns)
+    }
+}
+
+/// Estimate a trace's cost against a system shape (Allegro-style
+/// `Σ weight × per-kernel cost`, the same extrapolation the predicted
+/// end-time metric uses).
+pub fn estimate(trace: &Trace, ctx: &PlacementCtx) -> CostEstimate {
+    let mut compute_cycles = 0.0f64;
+    let mut io_requests = 0.0f64;
+    for rec in &trace.records {
+        // Blocks execute sequentially per core within each wave; across the
+        // whole kernel that is ceil(grid / cores) block slots. Computed in
+        // u64: any u32 grid is legal in a trace file, so the +cores-1
+        // ceiling term must not overflow u32.
+        let per_core =
+            (rec.grid.max(1) as u64 + ctx.cores as u64 - 1) / ctx.cores as u64;
+        compute_cycles += rec.weight * rec.cycles_per_block as f64 * per_core as f64;
+        io_requests += rec.weight * (rec.reads as u64 + rec.writes as u64) as f64;
+    }
+    let compute_ns = compute_cycles / ctx.clock_mhz * 1_000.0;
+    let io_ns = io_requests * ctx.read_ns as f64 / ctx.service_parallelism();
+    CostEstimate { compute_ns, io_requests, io_ns }
+}
+
+/// Index of the minimum load, ties toward the lowest index.
+fn argmin(load: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &l) in load.iter().enumerate().skip(1) {
+        if l < load[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Assign each workload (by index) to a GPU in `0..n_gpus`. Deterministic
+/// for every policy; with `n_gpus == 1` every policy collapses to the same
+/// all-on-GPU-0 assignment, so single-GPU runs are placement-invariant.
+pub fn assign(policy: Placement, estimates: &[CostEstimate], n_gpus: usize) -> Vec<usize> {
+    let n_gpus = n_gpus.max(1);
+    let mut out = vec![0usize; estimates.len()];
+    if n_gpus == 1 {
+        return out;
+    }
+    match policy {
+        Placement::RoundRobin => {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = i % n_gpus;
+            }
+        }
+        Placement::LeastLoaded => {
+            let mut load = vec![0.0f64; n_gpus];
+            for (i, e) in estimates.iter().enumerate() {
+                let g = argmin(&load);
+                out[i] = g;
+                load[g] += e.io_requests;
+            }
+        }
+        Placement::PerfAware => {
+            // Longest-predicted-first (LPT): sort by predicted end time
+            // descending (stable — ties keep admission order), then greedy
+            // onto the GPU whose accumulated predicted end is earliest.
+            let mut order: Vec<usize> = (0..estimates.len()).collect();
+            order.sort_by(|&a, &b| estimates[b].end_ns().total_cmp(&estimates[a].end_ns()));
+            let mut load = vec![0.0f64; n_gpus];
+            for i in order {
+                let g = argmin(&load);
+                out[i] = g;
+                load[g] += estimates[i].end_ns();
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(end: f64, io: f64) -> CostEstimate {
+        CostEstimate { compute_ns: end, io_requests: io, io_ns: end }
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for p in Placement::ALL {
+            assert_eq!(Placement::parse(p.name()), Some(p));
+        }
+        assert_eq!(Placement::parse("rr"), Some(Placement::RoundRobin));
+        assert_eq!(Placement::parse("ll"), Some(Placement::LeastLoaded));
+        assert_eq!(Placement::parse("perf"), Some(Placement::PerfAware));
+        assert_eq!(Placement::parse("nope"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let es = vec![est(1.0, 1.0); 5];
+        assert_eq!(assign(Placement::RoundRobin, &es, 2), vec![0, 1, 0, 1, 0]);
+        assert_eq!(assign(Placement::RoundRobin, &es, 3), vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn single_gpu_collapses_all_policies() {
+        let es = vec![est(5.0, 9.0), est(1.0, 1.0), est(3.0, 2.0)];
+        for p in Placement::ALL {
+            assert_eq!(assign(p, &es, 1), vec![0, 0, 0]);
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances_io() {
+        // I/O loads 10, 1, 1, 1: the heavy one claims GPU 0, the rest pile
+        // onto GPU 1 until it catches up.
+        let es = vec![est(0.0, 10.0), est(0.0, 1.0), est(0.0, 1.0), est(0.0, 1.0)];
+        let a = assign(Placement::LeastLoaded, &es, 2);
+        assert_eq!(a, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn perf_aware_is_lpt_and_beats_round_robin_makespan() {
+        // Skewed ends: one heavy workload first, four light ones after.
+        let es = vec![est(10.0, 0.0), est(1.0, 0.0), est(1.0, 0.0), est(1.0, 0.0), est(1.0, 0.0)];
+        let makespan = |a: &[usize], n: usize| {
+            let mut load = vec![0.0f64; n];
+            for (i, &g) in a.iter().enumerate() {
+                load[g] += es[i].end_ns();
+            }
+            load.iter().cloned().fold(0.0, f64::max)
+        };
+        for n in [2usize, 4] {
+            let rr = assign(Placement::RoundRobin, &es, n);
+            let pa = assign(Placement::PerfAware, &es, n);
+            assert!(
+                makespan(&pa, n) < makespan(&rr, n),
+                "perf-aware {} must beat round-robin {} on {n} GPUs",
+                makespan(&pa, n),
+                makespan(&rr, n)
+            );
+        }
+        // The heavy workload sits alone on its GPU.
+        let pa = assign(Placement::PerfAware, &es, 2);
+        assert_eq!(pa[0], 0);
+        assert!(pa[1..].iter().all(|&g| g == 1));
+    }
+
+    #[test]
+    fn estimate_scales_with_trace_and_array() {
+        use crate::config;
+        let cfg = config::mqms_enterprise();
+        let ctx1 = PlacementCtx::from_config(&cfg);
+        let mut cfg4 = cfg.clone();
+        cfg4.devices = 4;
+        let ctx4 = PlacementCtx::from_config(&cfg4);
+        let small = crate::workloads::bert::generate(0.0001, 7);
+        let big = crate::workloads::bert::generate(0.0005, 7);
+        let (es, eb) = (estimate(&small, &ctx1), estimate(&big, &ctx1));
+        assert!(eb.end_ns() > es.end_ns(), "bigger trace must predict later end");
+        assert!(eb.io_requests > es.io_requests);
+        // More devices → more service parallelism → smaller I/O estimate.
+        let eb4 = estimate(&big, &ctx4);
+        assert!(eb4.io_ns < eb.io_ns);
+    }
+}

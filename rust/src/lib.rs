@@ -26,7 +26,7 @@
 //! | [`sim`] | discrete-event core: time, event queue, engine |
 //! | [`config`] | typed configuration + JSON load/save + presets |
 //! | [`ssd`] | NVMe MQ → HIL → FTL → TSU → flash back-end |
-//! | [`gpu`] | GPU timing model: kernels, cores, schedulers, traces |
+//! | [`gpu`] | GPU timing model: kernels, cores, schedulers, traces, multi-GPU placement |
 //! | [`sampling`] | Allegro kernel sampling (k-means + CLT bounds) |
 //! | [`workloads`] | BERT / GPT-2 / ResNet-50 / Rodinia trace generators |
 //! | [`coordinator`] | world wiring, direct vs host path, run loop |

@@ -17,7 +17,9 @@
 //! ```text
 //! mqms run --workload bert --scale 0.01 --preset mqms
 //! mqms run --workload rand4k --devices 4
+//! mqms run --workload bert,gpt2,resnet50 --gpus 2 --placement perf-aware
 //! mqms campaign --presets mqms,baseline --workloads bert,rand4k --devices 1,2,4
+//! mqms campaign --workloads bert --gpus 1,2,4 --placements rr,perf
 //! mqms sweep --scale 0.005
 //! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
 //! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
@@ -25,6 +27,7 @@
 
 use mqms::campaign::{self, CampaignSpec};
 use mqms::config::{self, AddrScheme, SchedPolicy, SimConfig};
+use mqms::gpu::placement::Placement;
 use mqms::coordinator::CoSim;
 use mqms::gpu::trace::Trace;
 use mqms::sampling::{self, SamplerConfig};
@@ -140,6 +143,8 @@ fn cmd_run(argv: &[String]) -> CliResult {
         .opt("seed", Some("42"), "rng seed")
         .opt("devices", None, "override device count of the striped array")
         .opt("stripe", None, "override stripe granularity in sectors")
+        .opt("gpus", None, "override GPU shard count of the compute side")
+        .opt("placement", None, "workload→GPU placement: rr | ll | perf")
         .opt("sched", None, "override scheduler: rr | lc | auto")
         .opt("scheme", None, "override allocation scheme: CWDP | CDWP | WCDP")
         .flag("no-sample", "replay the full trace (skip Allegro sampling)")
@@ -155,6 +160,14 @@ fn cmd_run(argv: &[String]) -> CliResult {
     }
     if args.get("stripe").is_some() {
         cfg.stripe_sectors = args.get_u64("stripe").map_err(|e| e.to_string())?;
+    }
+    if args.get("gpus").is_some() {
+        let v = args.get_u64("gpus").map_err(|e| e.to_string())?;
+        cfg.gpus = u32::try_from(v).map_err(|_| format!("gpu count out of range: {v}"))?;
+    }
+    if let Some(s) = args.get("placement") {
+        cfg.placement =
+            Placement::parse(s).ok_or_else(|| format!("bad placement `{s}` (rr | ll | perf)"))?;
     }
     if let Some(s) = args.get("sched") {
         cfg.gpu.sched = SchedPolicy::parse(s).ok_or_else(|| format!("bad sched `{s}`"))?;
@@ -193,12 +206,18 @@ fn cmd_run(argv: &[String]) -> CliResult {
     } else {
         println!("config: {}", report.config_name);
         println!("devices: {}", report.ssd_devices.len());
+        if report.gpus.len() > 1 {
+            println!("gpus: {}", report.gpus.len());
+        }
         println!("simulated end time: {}", ns(report.end_ns as f64));
         println!("device IOPS: {}", si(report.ssd.iops()));
         println!("mean device response: {}", ns(report.ssd.mean_response_ns));
         println!("events: {} | wall: {:.2}s", report.events, report.wall_s);
         if report.past_clamps > 0 {
             eprintln!("WARNING: {} past-time event clamps (causality bug)", report.past_clamps);
+        }
+        if report.misrouted > 0 {
+            eprintln!("WARNING: {} misrouted completions (routing bug)", report.misrouted);
         }
         let rows: Vec<(String, Vec<String>)> = report
             .workloads
@@ -344,6 +363,8 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     )
     .opt("scales", Some("0.005"), "comma-separated scale factors")
     .opt("devices", Some("1,2,4"), "comma-separated device counts")
+    .opt("gpus", Some("1"), "comma-separated GPU shard counts")
+    .opt("placements", Some("rr"), "comma-separated placements (rr | ll | perf)")
     .opt("seed", Some("42"), "root rng seed (every cell runs with it)")
     .opt("threads", Some("0"), "worker threads (0 = one per core)")
     .opt("out-dir", None, "write one JSON report per cell plus campaign.json here")
@@ -362,6 +383,8 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         devices: parse_list(args.get("devices").unwrap(), "device count", |s| {
             s.parse::<u32>().ok()
         })?,
+        gpus: parse_list(args.get("gpus").unwrap(), "gpu count", |s| s.parse::<u32>().ok())?,
+        placements: parse_list(args.get("placements").unwrap(), "placement", Placement::parse)?,
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         threads: args.get_u64("threads").map_err(|e| e.to_string())? as usize,
         sampled: !args.get_flag("no-sample"),

@@ -194,7 +194,15 @@ pub struct Report {
     /// Past-time scheduling clamps observed (causality diagnostics;
     /// anything non-zero is a bug in an event producer).
     pub past_clamps: u64,
+    /// Completions the coordinator could not attribute (unknown source or a
+    /// request id no GPU shard recognizes). Anything non-zero indicates a
+    /// routing bug — counted and surfaced instead of aborting the run.
+    pub misrouted: u64,
+    /// Merged compute-side report (one GPU's report when `gpus == 1`).
     pub gpu: Option<Json>,
+    /// Per-instance GPU reports (one entry per compute shard; empty when no
+    /// trace workloads ran).
+    pub gpus: Vec<Json>,
 }
 
 impl Report {
@@ -205,6 +213,7 @@ impl Report {
             ("events", self.events.into()),
             ("wall_s", self.wall_s.into()),
             ("past_clamps", self.past_clamps.into()),
+            ("misrouted", self.misrouted.into()),
             ("ssd", self.ssd.to_json()),
             (
                 "ssd_devices",
@@ -215,6 +224,7 @@ impl Report {
                 Json::Arr(self.workloads.iter().map(WorkloadReport::to_json).collect()),
             ),
             ("gpu", self.gpu.clone().unwrap_or(Json::Null)),
+            ("gpus", Json::Arr(self.gpus.clone())),
         ])
     }
 
@@ -295,7 +305,9 @@ mod tests {
             end_ns: 42,
             events: 7,
             wall_s: 0.1,
+            misrouted: 0,
             gpu: None,
+            gpus: Vec::new(),
         };
         let j = r.to_json();
         assert_eq!(j.get("end_ns").unwrap().as_u64(), Some(42));

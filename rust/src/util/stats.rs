@@ -135,15 +135,20 @@ impl LogHistogram {
         ((oct - SUB_BITS + 1) as usize) * SUB + sub
     }
 
-    /// Lower bound of the value range covered by bucket `i`.
+    /// Lower bound of the value range covered by bucket `i`, saturating at
+    /// `u64::MAX`: the upper octaves' bounds exceed 64 bits (for the top
+    /// occupied bucket of a `u64::MAX` sample, `(16 + sub) << 60` already
+    /// overflows — a debug-build shift panic in [`LogHistogram::max_seen`],
+    /// which probes `bucket_floor(i + 1)`), so the math runs in u128 and
+    /// clamps.
     fn bucket_floor(i: usize) -> u64 {
         let oct = i / SUB;
         let sub = (i % SUB) as u64;
         if oct == 0 {
             return sub;
         }
-        let shift = (oct - 1) as u32 + SUB_BITS;
-        ((SUB as u64) + sub) << (shift - SUB_BITS)
+        let floor = (((SUB as u64) + sub) as u128) << (oct - 1);
+        u64::try_from(floor).unwrap_or(u64::MAX)
     }
 
     #[inline]
@@ -209,11 +214,14 @@ impl LogHistogram {
 }
 
 /// Exact percentile of a mutable slice (used by small offline analyses).
+/// NaN-tolerant: `total_cmp` gives a total order (NaNs sort above
+/// +infinity), where `partial_cmp(..).unwrap()` would abort on the first
+/// NaN sample.
 pub fn percentile_exact(xs: &mut [f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.total_cmp(b));
     let idx = ((q.clamp(0.0, 1.0)) * (xs.len() - 1) as f64).round() as usize;
     xs[idx]
 }
@@ -319,5 +327,39 @@ mod tests {
         assert_eq!(percentile_exact(&mut xs, 0.5), 5.0);
         let g = geomean(&[1.0, 100.0]);
         assert!((g - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_percentile_tolerates_nan() {
+        // partial_cmp(..).unwrap() used to abort here; total_cmp sorts NaN
+        // above every finite value instead.
+        let mut xs = vec![3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile_exact(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile_exact(&mut xs, 0.5), 2.0);
+        // The top percentile lands on the NaN itself — returned, not fatal.
+        assert!(percentile_exact(&mut xs, 1.0).is_nan());
+    }
+
+    #[test]
+    fn histogram_top_bucket_does_not_overflow() {
+        // A u64::MAX sample occupies the highest reachable bucket;
+        // max_seen() probes the *next* bucket's floor, whose exact value
+        // exceeds u64 — it must saturate, not shift-overflow.
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        h.record(1);
+        assert_eq!(h.count(), 3);
+        let m = h.max_seen();
+        assert!(m >= u64::MAX - (u64::MAX >> 5), "max_seen {m} far below the top bucket");
+        assert!(h.quantile(1.0) <= u64::MAX);
+        assert!(h.p99() > 1 << 62);
+        // Every bucket floor is still monotone non-decreasing to the end.
+        let mut last = 0;
+        for i in 0..=64 * SUB {
+            let f = LogHistogram::bucket_floor(i);
+            assert!(f >= last, "bucket {i} floor {f} < {last}");
+            last = f;
+        }
     }
 }

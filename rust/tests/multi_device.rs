@@ -28,6 +28,8 @@ fn devices1_cell_reproduces_single_device_run() {
         workload: "rand4k".to_string(),
         scale: 0.002,
         devices: 1,
+        gpus: 1,
+        placement: mqms::gpu::placement::Placement::RoundRobin,
     };
     let from_campaign = campaign::run_cell(&cell, 42, true).unwrap();
 
@@ -57,6 +59,7 @@ fn campaign_byte_identical_across_thread_counts() {
             seed: 42,
             threads,
             sampled: true,
+            ..CampaignSpec::default()
         };
         let results = campaign::run(&spec).unwrap();
         assert_eq!(results.len(), 6);

@@ -1,0 +1,144 @@
+//! Multi-GPU sharded-compute integration tests: the tentpole invariants of
+//! the placement layer.
+//!
+//! * `gpus = 1` is a strict pass-through: every placement policy produces a
+//!   byte-identical report, indistinguishable from the default config.
+//! * Perf-aware placement strictly beats round-robin on the skewed
+//!   {LLM-inference + rand4k} bundle across a {2,4}-GPU × {1,4}-device
+//!   matrix (the paper's performance-aware allocation, scaled out).
+//! * Sharded runs stay deterministic, drain cleanly, attribute every
+//!   completion (`misrouted == 0`), and keep per-workload metrics disjoint.
+
+use mqms::bench_support as bs;
+use mqms::config;
+use mqms::coordinator::CoSim;
+use mqms::gpu::placement::Placement;
+
+#[test]
+fn gpus1_is_placement_invariant_passthrough() {
+    let run = |placement: Option<Placement>| {
+        let mut cfg = config::mqms_enterprise();
+        cfg.seed = 42;
+        if let Some(p) = placement {
+            cfg.gpus = 1;
+            cfg.placement = p;
+        }
+        bs::run_bundle(cfg, &bs::skewed_llm_bundle(42)).to_json_deterministic().pretty()
+    };
+    let default = run(None);
+    for p in Placement::ALL {
+        assert_eq!(
+            default,
+            run(Some(p)),
+            "gpus=1 with {p:?} must be byte-identical to the default single-GPU run"
+        );
+    }
+}
+
+#[test]
+fn perf_aware_beats_round_robin_on_skewed_bundle() {
+    for gpus in [2u32, 4] {
+        for devices in [1u32, 4] {
+            let rr = bs::placement_run(gpus, devices, Placement::RoundRobin, 42);
+            let pa = bs::placement_run(gpus, devices, Placement::PerfAware, 42);
+            assert_eq!(rr.misrouted, 0);
+            assert_eq!(pa.misrouted, 0);
+            assert_eq!(rr.past_clamps, 0);
+            assert_eq!(pa.past_clamps, 0);
+            // Same bundle, same completions — placement only moves work.
+            assert_eq!(rr.ssd.completed, pa.ssd.completed);
+            let (m_rr, m_pa) = (bs::gpu_makespan(&rr), bs::gpu_makespan(&pa));
+            assert!(
+                m_pa < m_rr,
+                "perf-aware makespan {m_pa} must be strictly lower than \
+                 round-robin {m_rr} on {gpus} GPUs x {devices} devices"
+            );
+        }
+    }
+}
+
+#[test]
+fn least_loaded_spreads_io_across_shards() {
+    let r = bs::placement_run(2, 1, Placement::LeastLoaded, 7);
+    assert_eq!(r.misrouted, 0);
+    assert_eq!(r.gpus.len(), 2);
+    for (g, rep) in r.gpus.iter().enumerate() {
+        let launched = rep.get("kernels_launched").and_then(|v| v.as_u64()).unwrap();
+        assert!(launched > 0, "shard {g} launched nothing");
+    }
+}
+
+#[test]
+fn sharded_runs_are_deterministic_and_disjoint() {
+    let run = |seed: u64| bs::placement_run(4, 4, Placement::PerfAware, seed);
+    let a = run(9);
+    let b = run(9);
+    assert_eq!(
+        a.to_json_deterministic().pretty(),
+        b.to_json_deterministic().pretty(),
+        "same seed must give a byte-identical sharded report"
+    );
+    let c = run(10);
+    assert_ne!(a.to_json_deterministic().pretty(), c.to_json_deterministic().pretty());
+    // Every workload made progress and attribution is exact.
+    assert_eq!(a.misrouted, 0);
+    assert_eq!(a.workloads.len(), 6);
+    for w in &a.workloads {
+        assert!(w.io_completed > 0, "{} saw no I/O", w.name);
+    }
+    let total: u64 = a.workloads.iter().map(|w| w.io_completed).sum();
+    assert_eq!(total, a.ssd.completed, "per-source counts must sum to the array total");
+    // The merged GPU report covers all five trace workloads in source order.
+    let merged = a.gpu.as_ref().expect("merged gpu report");
+    let wl = merged.get("workloads").unwrap().as_arr().unwrap();
+    assert_eq!(wl.len(), 5);
+    let sources: Vec<u64> =
+        wl.iter().map(|w| w.get("source").unwrap().as_u64().unwrap()).collect();
+    assert_eq!(sources, vec![0, 1, 2, 3, 4], "merged workloads must be source-ordered");
+}
+
+#[test]
+fn host_mediated_path_works_with_shards() {
+    // The host-mediated baseline must route completions back to the right
+    // shard by source, same as the direct path.
+    let mut cfg = config::baseline_mqsim_macsim();
+    cfg.gpus = 2;
+    cfg.placement = Placement::PerfAware;
+    cfg.gpu.dram_bytes = 0;
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(mqms::workloads::WorkloadSpec::trace(
+        "backprop",
+        mqms::workloads::rodinia::backprop(0.002, 1),
+    ));
+    sim.add_workload(mqms::workloads::WorkloadSpec::trace(
+        "hotspot",
+        mqms::workloads::rodinia::hotspot(0.002, 2),
+    ));
+    let r = sim.run();
+    assert_eq!(r.misrouted, 0);
+    for w in &r.workloads {
+        assert!(w.io_completed > 0 && w.kernels_done > 0, "{} stalled", w.name);
+    }
+}
+
+#[test]
+fn campaign_sweeps_gpus_and_placements() {
+    let spec = mqms::campaign::CampaignSpec {
+        presets: vec!["mqms".into()],
+        workloads: vec!["backprop".into()],
+        scales: vec![0.002],
+        devices: vec![1],
+        gpus: vec![1, 2],
+        placements: vec![Placement::RoundRobin, Placement::PerfAware],
+        seed: 7,
+        threads: 2,
+        sampled: true,
+    };
+    let results = mqms::campaign::run(&spec).unwrap();
+    // 1 GPU collapses the placement axis; 2 GPUs sweep both policies.
+    assert_eq!(results.len(), 3);
+    for (cell, r) in &results {
+        assert!(r.ssd.completed > 0, "{} completed nothing", cell.label());
+        assert_eq!(r.misrouted, 0);
+    }
+}
