@@ -173,6 +173,70 @@ pub fn placement_run(gpus: u32, devices: u32, placement: Placement, seed: u64) -
     run_bundle(cfg, &skewed_llm_bundle(seed))
 }
 
+// --- dynamic re-placement study (benches/replace_drift.rs +
+// --- tests/replace.rs) --------------------------------------------------
+
+/// Build a uniform trace of `kernels` small kernels, each issuing `reads`
+/// read and `writes` write requests (4 KiB each) with light deterministic
+/// compute jitter. The building block of [`drift_bundle`].
+pub fn drift_trace(kernels: usize, reads: u32, writes: u32, seed: u64) -> Trace {
+    use crate::gpu::trace::{AccessKind, KernelRecord};
+    let mut t = Trace { footprint_sectors: 1 << 14, ..Default::default() };
+    let name = t.intern("drift-kernel");
+    let mut rng = Pcg64::new(seed ^ 0xD21F);
+    t.records = (0..kernels)
+        .map(|_| KernelRecord {
+            name_id: name,
+            grid: 64,
+            block: 256,
+            cycles_per_block: 1_000 + rng.below(256),
+            reads,
+            writes,
+            req_sectors: 1,
+            access: AccessKind::Sequential,
+            weight: 1.0,
+        })
+        .collect();
+    t
+}
+
+/// Drift-inducing bundle: the static cost model prices every request at
+/// `t_read_ns`, so a write-storm trace is under-predicted by roughly
+/// tPROG/tR (12× on the enterprise preset, where writes complete at flash
+/// program time). One heavy write-storm workload — the largest *predicted*
+/// cost, so PerfAware isolates it on its own shard — plus three read-only
+/// workloads whose predictions are accurate. At runtime the write shard
+/// crawls while the read shards drain and go idle: exactly the
+/// observed-vs-predicted drift the online monitor exists to correct.
+pub fn drift_bundle(seed: u64) -> Vec<WorkloadSpec> {
+    let mut specs = vec![WorkloadSpec::trace("write-storm", drift_trace(120, 0, 30, seed))];
+    for i in 0..3u64 {
+        specs.push(WorkloadSpec::trace(
+            &format!("read-light{i}"),
+            drift_trace(40, 30, 0, seed ^ (i + 1)),
+        ));
+    }
+    specs
+}
+
+/// One cell of the static-vs-dynamic study: the drift bundle under
+/// PerfAware placement, with re-placement on or off. DRAM is disabled so
+/// every request reaches storage and per-source request counts stay
+/// trace-determined (the conservation tests compare them across runs), and
+/// the prefetch pipeline is kept shallow so a shard's mispredicted I/O
+/// shows up as pipeline stall instead of disappearing into queue depth.
+pub fn replace_run(gpus: u32, devices: u32, replace: bool, seed: u64) -> Report {
+    let mut cfg = config::mqms_enterprise();
+    cfg.gpus = gpus;
+    cfg.devices = devices;
+    cfg.placement = Placement::PerfAware;
+    cfg.gpu.dram_bytes = 0;
+    cfg.gpu.pipeline_depth = 4;
+    cfg.replace.enabled = replace;
+    cfg.seed = seed;
+    run_bundle(cfg, &drift_bundle(seed))
+}
+
 // --- hot-path regression harness (benches/hotpath_regression.rs + `mqms
 // --- bench`) -----------------------------------------------------------
 

@@ -34,6 +34,10 @@ pub struct CampaignSpec {
     /// Workload→GPU placement policies to sweep (collapsed to the first
     /// entry for `gpus = 1` cells, where placement cannot matter).
     pub placements: Vec<Placement>,
+    /// Dynamic re-placement on/off values to sweep (collapsed to the first
+    /// entry for `gpus = 1` cells, where migration cannot matter) — static
+    /// vs dynamic allocation becomes one axis of the same matrix.
+    pub replace: Vec<bool>,
     /// Root seed; every cell runs with this seed (a cell is then directly
     /// comparable to `mqms run --seed <seed>` with the same parameters).
     pub seed: u64,
@@ -52,6 +56,7 @@ impl Default for CampaignSpec {
             devices: vec![1, 2, 4],
             gpus: vec![1],
             placements: vec![Placement::RoundRobin],
+            replace: vec![false],
             seed: 42,
             threads: 0,
             sampled: true,
@@ -68,26 +73,32 @@ pub struct Cell {
     pub devices: u32,
     pub gpus: u32,
     pub placement: Placement,
+    /// Dynamic re-placement enabled for this cell.
+    pub replace: bool,
 }
 
 impl Cell {
     /// Compact row label for tables and file names. Single-GPU cells keep
     /// the historical `preset/workload@scale×Nd` shape; sharded cells append
-    /// the GPU count and placement policy.
+    /// the GPU count and placement policy, plus `-dyn` when dynamic
+    /// re-placement is on.
     pub fn label(&self) -> String {
         let mut s =
             format!("{}/{}@{}x{}d", self.preset, self.workload, self.scale, self.devices);
         if self.gpus > 1 {
             s.push_str(&format!("{}g-{}", self.gpus, self.placement.name()));
+            if self.replace {
+                s.push_str("-dyn");
+            }
         }
         s
     }
 }
 
 /// Expand the matrix in deterministic (row-major) order. `gpus = 1` cells
-/// collapse the placement axis to its first entry: with one shard every
-/// policy yields the same assignment, and duplicate cells would differ only
-/// in label.
+/// collapse the placement and replace axes to their first entries: with one
+/// shard every policy yields the same assignment (and migration is a
+/// no-op), so duplicate cells would differ only in label.
 pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
     let mut cells = Vec::new();
     for preset in &spec.presets {
@@ -99,14 +110,20 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
                             if gpus <= 1 && p > 0 {
                                 continue;
                             }
-                            cells.push(Cell {
-                                preset: preset.clone(),
-                                workload: workload.clone(),
-                                scale,
-                                devices,
-                                gpus,
-                                placement,
-                            });
+                            for (r, &replace) in spec.replace.iter().enumerate() {
+                                if gpus <= 1 && r > 0 {
+                                    continue;
+                                }
+                                cells.push(Cell {
+                                    preset: preset.clone(),
+                                    workload: workload.clone(),
+                                    scale,
+                                    devices,
+                                    gpus,
+                                    placement,
+                                    replace,
+                                });
+                            }
                         }
                     }
                 }
@@ -142,6 +159,7 @@ pub fn run_cell(cell: &Cell, seed: u64, sampled: bool) -> Result<Report, String>
     cfg.devices = cell.devices;
     cfg.gpus = cell.gpus;
     cfg.placement = cell.placement;
+    cfg.replace.enabled = cell.replace;
     cfg.validate()?;
     let (wspec, _stats) =
         workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
@@ -162,6 +180,21 @@ fn effective_threads(requested: usize, cells: usize) -> usize {
 /// Execute every cell on a worker pool; results come back in matrix order
 /// whatever the interleaving, so downstream output is thread-count-invariant.
 pub fn run(spec: &CampaignSpec) -> Result<Vec<(Cell, Report)>, String> {
+    run_streaming(spec, |_, _, _| {})
+}
+
+/// Like [`run`], but invokes `on_cell(index, cell, report)` incrementally —
+/// in matrix order, as the leading prefix of cells completes — so long
+/// matrices stream partial results (progress lines, CSV rows) instead of
+/// reporting only at the final barrier. The callback runs on worker threads
+/// under a lock; cells that failed are skipped by the stream (the error
+/// still fails the whole run at collection). Workers still claim cells in
+/// cost order, so the stream typically begins once the most expensive
+/// leading cell lands and then drains in bursts.
+pub fn run_streaming(
+    spec: &CampaignSpec,
+    on_cell: impl FnMut(usize, &Cell, &Report) + Send,
+) -> Result<Vec<(Cell, Report)>, String> {
     let cells = expand(spec);
     if cells.is_empty() {
         return Err("empty campaign matrix (no presets/workloads/scales/devices)".to_string());
@@ -184,6 +217,10 @@ pub fn run(spec: &CampaignSpec) -> Result<Vec<(Cell, Report)>, String> {
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Result<Report, String>>>> =
         cells.iter().map(|_| Mutex::new(None)).collect();
+    // Stream cursor + callback: whichever worker finishes a cell flushes the
+    // contiguous completed prefix, so rows emit in matrix order regardless
+    // of scheduling.
+    let stream = Mutex::new((0usize, on_cell));
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
@@ -194,6 +231,18 @@ pub fn run(spec: &CampaignSpec) -> Result<Vec<(Cell, Report)>, String> {
                 let i = order[k];
                 let r = run_cell(&cells[i], spec.seed, spec.sampled);
                 *slots[i].lock().unwrap() = Some(r);
+                let mut st = stream.lock().unwrap();
+                while st.0 < cells.len() {
+                    let idx = st.0;
+                    let slot = slots[idx].lock().unwrap();
+                    match slot.as_ref() {
+                        Some(Ok(report)) => (st.1)(idx, &cells[idx], report),
+                        Some(Err(_)) => {}
+                        None => break,
+                    }
+                    drop(slot);
+                    st.0 += 1;
+                }
             });
         }
     });
@@ -221,6 +270,7 @@ pub fn summary_json(results: &[(Cell, Report)]) -> Json {
                 ("devices", (c.devices as u64).into()),
                 ("gpus", (c.gpus as u64).into()),
                 ("placement", c.placement.name().into()),
+                ("replace", c.replace.into()),
                 ("report", r.to_json_deterministic()),
             ])
         })
@@ -250,6 +300,42 @@ pub fn table_rows(results: &[(Cell, Report)]) -> Vec<(String, Vec<String>)> {
 /// Column headers matching [`table_rows`].
 pub const TABLE_HEADERS: [&str; 6] =
     ["cell", "IOPS", "mean resp", "end time", "completed", "clamps"];
+
+/// Figure-ready CSV header: one [`csv_row`] per cell, axes first, then the
+/// headline metrics (makespan, device response p50/p99, events/sec).
+pub const CSV_HEADER: &str = "preset,workload,scale,devices,gpus,placement,replace,\
+end_ns,gpu_makespan_ns,completed,iops,mean_response_ns,\
+read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,events_per_sec";
+
+/// One CSV data row matching [`CSV_HEADER`]. Everything except
+/// `events_per_sec` (a host wall-clock rate) is deterministic for a fixed
+/// seed. Axis values never contain commas (preset/workload names are
+/// identifiers or file paths). For multi-device cells the response
+/// quantile columns are worst-device upper bounds (see
+/// [`crate::metrics::SsdSummary::merge`]), exact for `devices = 1`.
+pub fn csv_row(cell: &Cell, r: &Report) -> String {
+    let events_per_sec = if r.wall_s > 0.0 { r.events as f64 / r.wall_s } else { 0.0 };
+    format!(
+        "{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{:.3}",
+        cell.preset,
+        cell.workload,
+        cell.scale,
+        cell.devices,
+        cell.gpus,
+        cell.placement.name(),
+        if cell.replace { "on" } else { "off" },
+        r.end_ns,
+        crate::bench_support::gpu_makespan(r),
+        r.ssd.completed,
+        r.ssd.iops(),
+        r.ssd.mean_response_ns,
+        r.ssd.read_p50_ns,
+        r.ssd.read_p99_ns,
+        r.ssd.write_p50_ns,
+        r.ssd.write_p99_ns,
+        events_per_sec,
+    )
+}
 
 #[cfg(test)]
 mod tests {
@@ -300,6 +386,7 @@ mod tests {
             devices,
             gpus: 1,
             placement: Placement::RoundRobin,
+            replace: false,
         };
         let tie = vec![cell(0.01, 1), cell(0.005, 2)];
         assert_eq!(schedule_order(&tie), vec![0, 1]);
@@ -326,6 +413,62 @@ mod tests {
         let labels: std::collections::HashSet<String> =
             cells.iter().map(Cell::label).collect();
         assert_eq!(labels.len(), cells.len());
+    }
+
+    #[test]
+    fn replace_axis_expands_and_collapses_for_one_gpu() {
+        let spec = CampaignSpec {
+            presets: vec!["a".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.1],
+            devices: vec![1],
+            gpus: vec![1, 2],
+            placements: vec![Placement::PerfAware],
+            replace: vec![false, true],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&spec);
+        // gpus=1 keeps only the first replace value; gpus=2 sweeps both.
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].label(), "a/w@0.1x1d");
+        assert_eq!(cells[1].label(), "a/w@0.1x1d2g-perf-aware");
+        assert_eq!(cells[2].label(), "a/w@0.1x1d2g-perf-aware-dyn");
+        let labels: std::collections::HashSet<String> =
+            cells.iter().map(Cell::label).collect();
+        assert_eq!(labels.len(), cells.len(), "labels must stay unique");
+    }
+
+    #[test]
+    fn csv_rows_match_header_arity_and_stream_in_matrix_order() {
+        let spec = CampaignSpec {
+            presets: vec!["mqms".into()],
+            workloads: vec!["rand4k".into()],
+            scales: vec![0.001],
+            devices: vec![1, 2],
+            seed: 7,
+            threads: 2,
+            sampled: true,
+            ..CampaignSpec::default()
+        };
+        let mut streamed: Vec<usize> = Vec::new();
+        let mut rows: Vec<String> = Vec::new();
+        let results = run_streaming(&spec, |i, cell, report| {
+            streamed.push(i);
+            rows.push(csv_row(cell, report));
+        })
+        .unwrap();
+        assert_eq!(results.len(), 2);
+        // Every cell streamed exactly once, in matrix order.
+        assert_eq!(streamed, vec![0, 1]);
+        let n_cols = CSV_HEADER.split(',').count();
+        for row in &rows {
+            assert_eq!(row.split(',').count(), n_cols, "row arity: {row}");
+        }
+        // Streamed rows describe the same reports the barrier returned.
+        for (row, (cell, report)) in rows.iter().zip(&results) {
+            assert_eq!(row, &csv_row(cell, report));
+            assert!(row.starts_with(&format!("mqms,rand4k,0.001,{},", cell.devices)));
+        }
     }
 
     #[test]

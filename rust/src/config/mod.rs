@@ -272,6 +272,61 @@ pub struct GpuConfig {
     pub pipeline_depth: u32,
 }
 
+/// Online re-placement (dynamic migration) configuration — the knobs of the
+/// [`crate::gpu::monitor`] / [`crate::gpu::replace`] subsystem. Off by
+/// default: with `enabled = false` the coordinator schedules no monitor
+/// events and a run is byte-identical to the static-placement behaviour the
+/// determinism/equivalence suites pin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplaceConfig {
+    /// Master switch (only meaningful when `gpus > 1`).
+    pub enabled: bool,
+    /// Monitor sampling period in simulated ns (`MonitorTick` cadence).
+    pub epoch_ns: u64,
+    /// EWMA drift spread (behind − ahead, relative to the static prior)
+    /// that arms a migration.
+    pub drift_threshold: f64,
+    /// Consecutive over-threshold epochs required before migrating.
+    pub hysteresis: u32,
+    /// Hard cap on migrations per run (0 = monitor only, never migrate).
+    pub max_migrations: u32,
+    /// EWMA smoothing factor for observed rates and drift, in (0, 1].
+    pub ewma_alpha: f64,
+}
+
+impl Default for ReplaceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            epoch_ns: 250_000,
+            drift_threshold: 0.25,
+            hysteresis: 2,
+            max_migrations: 64,
+            ewma_alpha: 0.4,
+        }
+    }
+}
+
+impl ReplaceConfig {
+    fn validate(&self, errs: &mut Vec<String>) {
+        if self.epoch_ns == 0 {
+            errs.push("replace.epoch_ns must be ≥ 1".to_string());
+        }
+        if !(self.drift_threshold > 0.0 && self.drift_threshold.is_finite()) {
+            errs.push(format!(
+                "replace.drift_threshold {} must be finite and > 0",
+                self.drift_threshold
+            ));
+        }
+        if self.hysteresis == 0 {
+            errs.push("replace.hysteresis must be ≥ 1".to_string());
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            errs.push(format!("replace.ewma_alpha {} out of (0, 1]", self.ewma_alpha));
+        }
+    }
+}
+
 /// GPU↔SSD path configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PathConfig {
@@ -305,6 +360,8 @@ pub struct SimConfig {
     pub gpus: u32,
     /// Workload→GPU placement policy (only meaningful when `gpus > 1`).
     pub placement: Placement,
+    /// Online re-placement policy (monitor + queued-kernel migration).
+    pub replace: ReplaceConfig,
     pub ssd: SsdConfig,
     pub gpu: GpuConfig,
     pub path: PathConfig,
@@ -342,6 +399,7 @@ impl SimConfig {
                 self.ssd.sectors_per_page()
             ));
         }
+        self.replace.validate(&mut errs);
         if errs.is_empty() {
             Ok(())
         } else {
@@ -354,6 +412,7 @@ impl SimConfig {
         let s = &self.ssd;
         let g = &self.gpu;
         let p = &self.path;
+        let r = &self.replace;
         Json::from_pairs(vec![
             ("name", self.name.as_str().into()),
             ("seed", self.seed.into()),
@@ -361,6 +420,17 @@ impl SimConfig {
             ("stripe_sectors", self.stripe_sectors.into()),
             ("gpus", (self.gpus as u64).into()),
             ("placement", self.placement.name().into()),
+            (
+                "replace",
+                Json::from_pairs(vec![
+                    ("enabled", r.enabled.into()),
+                    ("epoch_ns", r.epoch_ns.into()),
+                    ("drift_threshold", r.drift_threshold.into()),
+                    ("hysteresis", (r.hysteresis as u64).into()),
+                    ("max_migrations", (r.max_migrations as u64).into()),
+                    ("ewma_alpha", r.ewma_alpha.into()),
+                ]),
+            ),
             (
                 "ssd",
                 Json::from_pairs(vec![
@@ -469,6 +539,29 @@ impl SimConfig {
         if let Some(v) = j.get("placement").and_then(Json::as_str) {
             cfg.placement =
                 Placement::parse(v).ok_or_else(|| format!("bad placement: {v}"))?;
+        }
+        if let Some(r) = j.get("replace") {
+            let c = &mut cfg.replace;
+            if let Some(v) = r.get("enabled").and_then(Json::as_bool) {
+                c.enabled = v;
+            }
+            if let Some(v) = r.get("epoch_ns").and_then(Json::as_u64) {
+                c.epoch_ns = v;
+            }
+            if let Some(v) = r.get("drift_threshold").and_then(Json::as_f64) {
+                c.drift_threshold = v;
+            }
+            if let Some(v) = r.get("hysteresis").and_then(Json::as_u64) {
+                c.hysteresis =
+                    u32::try_from(v).map_err(|_| format!("replace.hysteresis out of range: {v}"))?;
+            }
+            if let Some(v) = r.get("max_migrations").and_then(Json::as_u64) {
+                c.max_migrations = u32::try_from(v)
+                    .map_err(|_| format!("replace.max_migrations out of range: {v}"))?;
+            }
+            if let Some(v) = r.get("ewma_alpha").and_then(Json::as_f64) {
+                c.ewma_alpha = v;
+            }
         }
         if let Some(s) = j.get("ssd") {
             let c = &mut cfg.ssd;
@@ -707,6 +800,47 @@ mod tests {
         // A bad placement name is a load error, not a silent default.
         let mut j = cfg.to_json();
         j.set("placement", "nope".into()).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn replace_block_roundtrips_and_validates() {
+        // Presets default to replace-off pass-through.
+        assert!(!mqms_enterprise().replace.enabled);
+        let mut cfg = mqms_enterprise();
+        cfg.gpus = 2;
+        cfg.replace.enabled = true;
+        cfg.replace.epoch_ns = 100_000;
+        cfg.replace.drift_threshold = 0.5;
+        cfg.replace.hysteresis = 3;
+        cfg.replace.max_migrations = 7;
+        cfg.replace.ewma_alpha = 0.25;
+        cfg.validate().unwrap();
+        let re = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, re);
+        assert!(re.replace.enabled);
+        assert_eq!(re.replace.epoch_ns, 100_000);
+        assert_eq!(re.replace.hysteresis, 3);
+        // Bad knob values are load errors, not silent defaults.
+        let mut bad = cfg.clone();
+        bad.replace.epoch_ns = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.replace.ewma_alpha = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.replace.ewma_alpha = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.replace.drift_threshold = -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.replace.hysteresis = 0;
+        assert!(bad.validate().is_err());
+        let mut j = cfg.to_json();
+        let mut rj = j.get("replace").cloned().unwrap();
+        rj.set("epoch_ns", 0u64.into()).unwrap();
+        j.set("replace", rj).unwrap();
         assert!(SimConfig::from_json(&j).is_err());
     }
 

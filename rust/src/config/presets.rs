@@ -71,6 +71,7 @@ pub fn mqms_enterprise() -> SimConfig {
         stripe_sectors: 64,
         gpus: 1,
         placement: crate::gpu::placement::Placement::RoundRobin,
+        replace: ReplaceConfig::default(),
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
         path: PathConfig {
@@ -102,6 +103,7 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         stripe_sectors: 64,
         gpus: 1,
         placement: crate::gpu::placement::Placement::RoundRobin,
+        replace: ReplaceConfig::default(),
         ssd,
         gpu: default_gpu(),
         path: PathConfig {

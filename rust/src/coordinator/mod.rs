@@ -13,7 +13,7 @@
 //!   processing latency.
 
 use crate::config::{IoPath, SimConfig};
-use crate::gpu::{self, placement, GpuSim, TaggedGpuEvent};
+use crate::gpu::{self, placement, replace, GpuSim, TaggedGpuEvent};
 use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
 use crate::sim::time::transfer_ns;
 use crate::sim::{Engine, EventQueue, SimTime, World};
@@ -38,6 +38,10 @@ pub enum Ev {
     HostDelivered { req_id: u64, source: u32 },
     /// Synthetic stream refill retry.
     SynthRefill { stream: usize },
+    /// Periodic progress-monitor epoch for dynamic re-placement. Scheduled
+    /// only when the `replace` policy is enabled on a multi-shard run, so a
+    /// replace-off world sees a byte-identical event stream.
+    MonitorTick,
 }
 
 impl From<ArrayEvent> for Ev {
@@ -120,10 +124,14 @@ pub struct CoWorld {
     pub gpus: Vec<GpuSim>,
     synth: Vec<SynthStream>,
     gpu_sources: usize,
-    /// source → owning GPU instance, for trace sources (< `gpu_sources`).
-    source_gpu: Vec<u32>,
-    /// source → local workload slot on its GPU.
-    source_slot: Vec<usize>,
+    /// source → `(gpu, slot)` locations holding that source's kernels, for
+    /// trace sources (< `gpu_sources`). The first entry is the
+    /// admission-time placement; each migration appends the continuation's
+    /// location, and reporting aggregates over all of them.
+    source_locs: Vec<Vec<(u32, usize)>>,
+    /// Dynamic re-placement engine (populated only when `cfg.replace` is
+    /// enabled on a multi-shard run with trace workloads).
+    replace: Option<replace::ReplaceEngine>,
     /// Requests rejected on full SQs, retried (batched) after completions.
     pending_submit: Vec<IoRequest>,
     /// Scratch: drained `pending_submit` during one batched retry round.
@@ -173,24 +181,65 @@ impl World for CoWorld {
             Ev::SynthRefill { stream } => {
                 self.refill_synth(stream, q);
             }
+            Ev::MonitorTick => {
+                self.monitor_tick(now, q);
+            }
         }
     }
 }
 
 impl CoWorld {
-    /// Hand a completed request to the GPU shard that owns `source`.
-    /// Unknown sources and request ids no shard recognizes (mis-routed,
-    /// duplicate, or late completions) are counted in `misrouted` — the
-    /// simulation keeps going and the report surfaces the anomaly.
+    /// Hand a completed request to the GPU shard that issued it. Shard
+    /// ownership is recovered from the request id itself — instance `g`
+    /// issues ids in `1 + (g << GPU_ID_SHIFT)` — which stays correct after
+    /// dynamic re-placement lets one source's kernels issue from several
+    /// shards (a source→shard map would go stale mid-run). Unknown sources
+    /// and request ids no shard recognizes (mis-routed, duplicate, or late
+    /// completions) are counted in `misrouted` — the simulation keeps going
+    /// and the report surfaces the anomaly.
     fn deliver_to_gpu(&mut self, source: u32, req_id: u64, now: SimTime, q: &mut EventQueue<Ev>) {
         let src = source as usize;
         if src >= self.gpu_sources {
             self.misrouted += 1;
             return;
         }
-        let g = self.source_gpu[src] as usize;
+        let g = (req_id.wrapping_sub(1) >> gpu::GPU_ID_SHIFT) as usize;
+        if g >= self.gpus.len() {
+            self.misrouted += 1;
+            return;
+        }
         if !self.gpus[g].io_completed(req_id, now, q) {
             self.misrouted += 1;
+        }
+    }
+
+    /// One progress-monitor epoch: sample every shard, execute a migration
+    /// when the engine asks for one, and re-arm the tick. Ticking stops once
+    /// the compute side has drained so the run can reach quiescence.
+    fn monitor_tick(&mut self, now: SimTime, q: &mut EventQueue<Ev>) {
+        if self.gpus.iter().all(GpuSim::all_done) {
+            return;
+        }
+        let plan = match self.replace.as_mut() {
+            Some(eng) => eng.tick(now, &self.gpus),
+            None => return,
+        };
+        if let Some(plan) = plan {
+            if plan.from != plan.to {
+                let extracted =
+                    self.gpus[plan.from].extract_queued_tail(plan.slot, plan.kernels);
+                if let Some(work) = extracted {
+                    let src = work.source as usize;
+                    if let Some(eng) = self.replace.as_mut() {
+                        eng.note_migrated_work(plan.from, plan.to, &work.records);
+                    }
+                    let slot = self.gpus[plan.to].inject_migrated(work, q);
+                    self.source_locs[src].push((plan.to as u32, slot));
+                }
+            }
+        }
+        if let Some(eng) = &self.replace {
+            q.schedule_in(eng.epoch_ns(), Ev::MonitorTick);
         }
     }
 
@@ -355,8 +404,8 @@ impl CoSim {
                 gpus: Vec::new(),
                 synth: Vec::new(),
                 gpu_sources: 0,
-                source_gpu: Vec::new(),
-                source_slot: Vec::new(),
+                source_locs: Vec::new(),
+                replace: None,
                 pending_submit: Vec::new(),
                 retry_scratch: Vec::new(),
                 io_scratch: Vec::new(),
@@ -442,19 +491,40 @@ impl CoSim {
             let mut gpus: Vec<GpuSim> = (0..n_shards)
                 .map(|g| GpuSim::new(&self.world.cfg.gpu, seed, g as u32))
                 .collect();
-            self.world.source_gpu = Vec::with_capacity(n_gpu);
-            self.world.source_slot = Vec::with_capacity(n_gpu);
+            self.world.source_locs = Vec::with_capacity(n_gpu);
             let mut source = 0usize;
             for spec in &specs {
                 if let WorkloadKind::Trace(t) = &spec.kind {
                     let g = assignment[source];
                     let slot =
                         gpus[g].add_workload(&spec.name, t.clone(), seed ^ 0x6B, source as u32);
-                    self.world.source_gpu.push(g as u32);
-                    self.world.source_slot.push(slot);
+                    self.world.source_locs.push(vec![(g as u32, slot)]);
                     self.world.source_names.push(spec.name.clone());
                     source += 1;
                 }
+            }
+            // Online re-placement: the monitor's prior is each shard's
+            // assigned work priced in the SAME per-record unit its progress
+            // samples use (Σ record_cost end), from the same cost model the
+            // static policy placed by. Pricing the prior with the
+            // workload-level estimate instead (max of the compute/IO sums)
+            // would let prior transfers over- or under-debit by up to 2×
+            // and skew drift after migrations. Off-policy runs schedule no
+            // tick at all.
+            if self.world.cfg.replace.enabled && n_shards > 1 {
+                let mut priors = vec![0.0f64; n_shards];
+                let mut i = 0usize;
+                for spec in &specs {
+                    if let WorkloadKind::Trace(t) = &spec.kind {
+                        let cost: f64 =
+                            t.records.iter().map(|r| ctx.record_cost(r).end_ns()).sum();
+                        priors[assignment[i]] += cost;
+                        i += 1;
+                    }
+                }
+                let eng = replace::ReplaceEngine::new(&self.world.cfg, priors);
+                self.engine.queue.schedule_in(eng.epoch_ns(), Ev::MonitorTick);
+                self.world.replace = Some(eng);
             }
             for gpu in &mut gpus {
                 if gpu.workload_count() > 0 {
@@ -527,9 +597,20 @@ impl CoSim {
             .map(|(i, name)| {
                 let acc = &w.per_source[i];
                 let (end, predicted, kernels) = if i < w.gpu_sources {
-                    let g = &w.gpus[w.source_gpu[i] as usize];
-                    let slot = w.source_slot[i];
-                    (g.actual_end_ns(slot), g.predicted_end_ns(slot), g.kernels_done(slot))
+                    // Aggregate over every location holding this source's
+                    // kernels (one without re-placement; the admission slot
+                    // plus each migrated continuation with it): ends take
+                    // the max, predictions and kernel counts sum.
+                    let mut end: SimTime = 0;
+                    let mut predicted = 0.0f64;
+                    let mut kernels = 0u64;
+                    for &(g, slot) in &w.source_locs[i] {
+                        let gs = &w.gpus[g as usize];
+                        end = end.max(gs.actual_end_ns(slot));
+                        predicted += gs.predicted_end_ns(slot);
+                        kernels += gs.kernels_done(slot);
+                    }
+                    (end, predicted, kernels)
                 } else {
                     (acc.last_complete_ns, acc.last_complete_ns as f64, 0)
                 };
@@ -558,6 +639,7 @@ impl CoSim {
             misrouted: w.misrouted,
             gpu: if w.gpus.is_empty() { None } else { Some(gpu::merged_report(&w.gpus)) },
             gpus: w.gpus.iter().map(GpuSim::report).collect(),
+            replacement: w.replace.as_ref().map(replace::ReplaceEngine::report_json),
         }
     }
 }

@@ -21,7 +21,9 @@
 //! `Y = Σ Nᵢ·X̄ᵢ`: each sampled kernel's simulated duration is scaled by its
 //! record weight ([`trace::KernelRecord::weight`]).
 
+pub mod monitor;
 pub mod placement;
+pub mod replace;
 pub mod sched;
 pub mod trace;
 
@@ -92,6 +94,29 @@ impl WorkloadRun {
     fn done(&self) -> bool {
         self.next_record >= self.trace.records.len()
     }
+}
+
+/// One workload's not-yet-launched kernel tail, carried between shards by
+/// the dynamic re-placement engine ([`replace`]): the queued records plus
+/// the region/rng state that keeps the continuation deterministic for a
+/// fixed seed. In-flight kernels (launched compute or outstanding I/O)
+/// never migrate — they retire on the shard that issued them, and the
+/// destination shard stamps migrated requests with its own
+/// `1 + (g << GPU_ID_SHIFT)` id namespace.
+#[derive(Debug, Clone)]
+pub struct MigratedWork {
+    pub name: String,
+    /// Global source id — unchanged by migration, so completions and
+    /// per-source metrics keep attributing exactly.
+    pub source: u32,
+    pub names: Vec<String>,
+    pub records: Vec<KernelRecord>,
+    pub footprint_sectors: u64,
+    pub region_base: u64,
+    pub region_len: u64,
+    pub hit_rate: f64,
+    pub cursor: u64,
+    pub rng: Pcg64,
 }
 
 /// A kernel with outstanding work (compute on the GPU and/or I/O in
@@ -495,6 +520,93 @@ impl GpuSim {
         self.workloads[id].source
     }
 
+    /// All kernel records of slot `id` (completed prefix + queued tail).
+    pub fn workload_records(&self, id: usize) -> &[KernelRecord] {
+        &self.workloads[id].trace.records
+    }
+
+    /// Index of the next record to launch on slot `id`: records below it
+    /// are consumed (launched or retired), records at/after it are queued
+    /// and therefore migratable.
+    pub fn workload_next_record(&self, id: usize) -> usize {
+        self.workloads[id].next_record.min(self.workloads[id].trace.records.len())
+    }
+
+    // --- dynamic re-placement ---------------------------------------------
+
+    /// Split off up to `max_kernels` queued records from the *end* of slot
+    /// `id`'s trace for migration to another shard. Returns `None` when
+    /// nothing is queued. The slot keeps everything already launched plus
+    /// the front of its queue, so in-flight kernels (which index records
+    /// below `next_record`) are untouched and the source shard's execution
+    /// order is preserved.
+    pub fn extract_queued_tail(&mut self, id: usize, max_kernels: usize) -> Option<MigratedWork> {
+        let w = &mut self.workloads[id];
+        let queued = w.trace.records.len().saturating_sub(w.next_record);
+        let take = queued.min(max_kernels);
+        if take == 0 {
+            return None;
+        }
+        let at = w.trace.records.len() - take;
+        let records = w.trace.records.split_off(at);
+        // The continuation gets a deterministic *fork* of the source rng
+        // stream, not a clone: a clone would leave both shards replaying
+        // identical address/DRAM-hit draws, so the two halves of the
+        // workload would walk the same region window instead of modelling a
+        // genuine split of its access stream.
+        let rng = w.rng.fork(take as u64);
+        Some(MigratedWork {
+            name: w.name.clone(),
+            source: w.source,
+            names: w.trace.names.clone(),
+            records,
+            footprint_sectors: w.trace.footprint_sectors,
+            region_base: w.region_base,
+            region_len: w.region_len,
+            hit_rate: w.hit_rate,
+            cursor: w.cursor,
+            rng,
+        })
+    }
+
+    /// Admit a migrated continuation mid-run under its original source id,
+    /// region, and rng stream, and wake the launcher (the receiving shard
+    /// may have been idle, or may never have started). Requests the
+    /// continuation issues carry *this* instance's id namespace, so the
+    /// coordinator can route their completions by id alone. Returns the new
+    /// local slot.
+    pub fn inject_migrated<E: From<TaggedGpuEvent>>(
+        &mut self,
+        m: MigratedWork,
+        q: &mut EventQueue<E>,
+    ) -> usize {
+        let slot = self.workloads.len();
+        self.workloads.push(WorkloadRun {
+            name: m.name,
+            trace: Trace {
+                names: m.names,
+                records: m.records,
+                footprint_sectors: m.footprint_sectors,
+            },
+            source: m.source,
+            next_record: 0,
+            region_base: m.region_base,
+            region_len: m.region_len,
+            hit_rate: m.hit_rate,
+            cursor: m.cursor,
+            rng: m.rng,
+            kernels_done: 0,
+            predicted_ns: 0.0,
+            end_ns: 0,
+            io_reads: 0,
+            io_writes: 0,
+            dram_hits: 0,
+        });
+        self.started = true;
+        q.schedule_at(q.now(), self.tag(GpuEvent::Launch).into());
+        slot
+    }
+
     fn workload_json(w: &WorkloadRun) -> Json {
         Json::from_pairs(vec![
             ("name", w.name.as_str().into()),
@@ -831,6 +943,61 @@ mod tests {
         assert!(b.iter().all(|&id| id > 1 << GPU_ID_SHIFT && id < 1 << 62));
         let sa: std::collections::HashSet<u64> = a.into_iter().collect();
         assert!(b.iter().all(|id| !sa.contains(id)), "id namespaces overlap");
+    }
+
+    #[test]
+    fn migrated_tail_completes_on_the_other_shard() {
+        let mut cfg = config::mqms_enterprise().gpu;
+        cfg.dram_bytes = 0;
+        let total = 12usize;
+        let mut g0 = GpuSim::new(&cfg, 42, 0);
+        g0.add_workload("a", tiny_trace(total, 4, 1.0), 7, 0);
+        let mut g1 = GpuSim::new(&cfg, 42, 1);
+        let mut q: EventQueue<GpuOrIo> = EventQueue::new();
+        g0.start(1 << 20, 4096, &mut q);
+        // Drive shard 0 a little, then migrate half its queued tail.
+        let mut steps = 0;
+        let mut migrated = 0usize;
+        let mut ids = Vec::new();
+        let mut guard = 0;
+        while guard < 1_000_000 {
+            guard += 1;
+            let Some((now, ev)) = q.pop() else { break };
+            match ev {
+                GpuOrIo::Gpu(t) => {
+                    let g = if t.gpu == 0 { &mut g0 } else { &mut g1 };
+                    g.handle(now, t.ev, &mut q);
+                }
+                GpuOrIo::IoDone(id) => {
+                    let g = if id < 1 << GPU_ID_SHIFT { &mut g0 } else { &mut g1 };
+                    assert!(g.io_completed(id, now, &mut q));
+                }
+            }
+            for g in [&mut g0, &mut g1] {
+                for req in g.drain_io() {
+                    ids.push(req.id);
+                    q.schedule_in(5_000, GpuOrIo::IoDone(req.id));
+                }
+            }
+            steps += 1;
+            if steps == 10 && migrated == 0 {
+                let queued = g0.workload_records(0).len() - g0.workload_next_record(0);
+                assert!(queued > 0, "migration point must still have queued work");
+                let work = g0.extract_queued_tail(0, queued.div_ceil(2)).unwrap();
+                migrated = work.records.len();
+                let slot = g1.inject_migrated(work, &mut q);
+                assert_eq!(g1.workload_source(slot), 0);
+            }
+        }
+        assert!(migrated > 0);
+        assert!(g0.all_done() && g1.all_done());
+        // No kernel lost or duplicated across the migration.
+        assert_eq!(g0.kernels_done(0) + g1.kernels_done(0), total as u64);
+        assert_eq!(g1.kernels_done(0), migrated as u64);
+        // The continuation issued ids in shard 1's namespace.
+        assert!(ids.iter().any(|&id| id > 1 << GPU_ID_SHIFT));
+        let unique: std::collections::HashSet<u64> = ids.iter().copied().collect();
+        assert_eq!(unique.len(), ids.len(), "request ids must stay unique");
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Online per-shard progress monitor: the observation half of dynamic
+//! re-placement (the paper's performance-aware allocation closed into a
+//! feedback loop).
+//!
+//! The coordinator samples every compute shard at a fixed simulated-time
+//! epoch (a periodic `MonitorTick` event — no wall-clock anywhere). Each
+//! sample prices the shard's completed and still-queued kernel windows
+//! through the *same* static cost model admission-time placement used
+//! ([`crate::gpu::placement::PlacementCtx::record_cost`]), so "progress" is
+//! measured in predicted-nanosecond units and the admission-time estimate is
+//! the natural prior. Per shard the monitor maintains:
+//!
+//! * an EWMA-smoothed **service rate** (cost units retired per simulated ns),
+//! * a **projected end time** (`now + remaining / rate`, frozen at the value
+//!   it had when the shard drained so an idle shard stays "ahead"),
+//! * an EWMA-smoothed **drift**: `(projected − prior) / prior`, where the
+//!   prior is the shard's admission-time predicted end.
+//!
+//! When the drift spread between the most-behind shard (largest drift, with
+//! migratable queued kernels) and the most-ahead shard (smallest projected
+//! end) exceeds the configured threshold for `hysteresis` consecutive
+//! epochs, the monitor reports the imbalance; the re-placement engine
+//! ([`crate::gpu::replace`]) turns it into a concrete migration. All state
+//! is pure f64/u64 arithmetic over deterministic inputs, so monitoring never
+//! perturbs run-to-run reproducibility.
+
+use crate::sim::SimTime;
+use crate::util::stats::LogHistogram;
+
+/// Monitor knobs (a validated runtime copy of
+/// [`crate::config::ReplaceConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct MonitorCfg {
+    /// Sampling period in simulated ns.
+    pub epoch_ns: u64,
+    /// Drift spread (behind − ahead) that arms a migration.
+    pub drift_threshold: f64,
+    /// Consecutive over-threshold epochs required before reporting.
+    pub hysteresis: u32,
+    /// EWMA smoothing factor for rates and drift, in (0, 1].
+    pub ewma_alpha: f64,
+}
+
+/// One epoch's measured progress of a compute shard, in cost-model units
+/// (predicted ns per [`crate::gpu::placement::PlacementCtx::record_cost`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardSample {
+    /// Cost of kernel records already consumed (launched or retired).
+    pub completed_cost: f64,
+    /// Cost of records still queued (not yet launched).
+    pub remaining_cost: f64,
+    /// Queued (migratable) kernel count.
+    pub queued_kernels: u64,
+}
+
+/// A sustained imbalance: migrate queued work `behind → ahead`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Imbalance {
+    pub behind: usize,
+    pub ahead: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ShardState {
+    /// Admission-time predicted end (ns); the drift denominator.
+    prior_end_ns: f64,
+    last_completed: f64,
+    rate_ewma: f64,
+    drift_ewma: f64,
+    /// Projected end time, frozen once the shard drains.
+    projected_ns: f64,
+    seen_progress: bool,
+}
+
+/// Per-shard drift tracking + the migration trigger.
+#[derive(Debug)]
+pub struct Monitor {
+    cfg: MonitorCfg,
+    shards: Vec<ShardState>,
+    last_tick_ns: SimTime,
+    /// Consecutive epochs the spread stayed over threshold.
+    over: u32,
+    epochs: u64,
+    /// Positive shard drift per epoch, in permille (observability).
+    drift_hist: LogHistogram,
+}
+
+/// Stand-in projection for a shard that has queued work but no observed
+/// progress yet (stalled or just loaded): far behind everything real.
+const STALLED_PROJECTION_NS: f64 = 1e18;
+
+impl Monitor {
+    /// `prior_end_ns[g]` is shard `g`'s admission-time predicted end (the
+    /// sum of its assigned workloads' static estimates).
+    pub fn new(cfg: MonitorCfg, prior_end_ns: Vec<f64>) -> Self {
+        let shards = prior_end_ns
+            .into_iter()
+            .map(|p| ShardState {
+                prior_end_ns: p.max(0.0),
+                last_completed: 0.0,
+                rate_ewma: 0.0,
+                drift_ewma: 0.0,
+                projected_ns: 0.0,
+                seen_progress: false,
+            })
+            .collect();
+        Self { cfg, shards, last_tick_ns: 0, over: 0, epochs: 0, drift_hist: LogHistogram::new() }
+    }
+
+    /// Move `cost_ns` of predicted work from `from`'s prior to `to`'s: a
+    /// migration changes each shard's plan, and drift must keep measuring
+    /// against the *current* plan or the donor would read as recovered (and
+    /// the receiver as suddenly behind) for work that merely moved.
+    pub fn transfer_prior(&mut self, from: usize, to: usize, cost_ns: f64) {
+        let c = cost_ns.max(0.0);
+        self.shards[from].prior_end_ns = (self.shards[from].prior_end_ns - c).max(0.0);
+        self.shards[to].prior_end_ns += c;
+    }
+
+    pub fn epoch_ns(&self) -> SimTime {
+        self.cfg.epoch_ns
+    }
+
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    pub fn drift_hist(&self) -> &LogHistogram {
+        &self.drift_hist
+    }
+
+    /// Smoothed drift of one shard (tests / introspection).
+    pub fn drift(&self, shard: usize) -> f64 {
+        self.shards[shard].drift_ewma
+    }
+
+    /// Ingest one epoch of samples (one per shard, index-aligned with the
+    /// coordinator's shard vector). Returns a sustained imbalance once the
+    /// EWMA drift spread has exceeded the threshold for `hysteresis`
+    /// consecutive epochs; reporting resets the hysteresis window, so
+    /// migrations are paced at least `hysteresis` epochs apart.
+    pub fn observe(&mut self, now: SimTime, samples: &[ShardSample]) -> Option<Imbalance> {
+        debug_assert_eq!(samples.len(), self.shards.len());
+        self.epochs += 1;
+        let dt = now.saturating_sub(self.last_tick_ns).max(1) as f64;
+        self.last_tick_ns = now;
+        let a = self.cfg.ewma_alpha;
+        for (st, s) in self.shards.iter_mut().zip(samples) {
+            let inst = (s.completed_cost - st.last_completed).max(0.0) / dt;
+            st.last_completed = s.completed_cost;
+            if s.remaining_cost > 0.0 || inst > 0.0 {
+                st.rate_ewma =
+                    if st.seen_progress { a * inst + (1.0 - a) * st.rate_ewma } else { inst };
+                st.seen_progress = true;
+            }
+            if s.remaining_cost > 0.0 {
+                st.projected_ns = if st.rate_ewma > 1e-12 {
+                    now as f64 + s.remaining_cost / st.rate_ewma
+                } else {
+                    STALLED_PROJECTION_NS
+                };
+            } else if st.projected_ns == 0.0 || st.projected_ns > now as f64 {
+                // Drained: freeze the projection at (an upper bound of) the
+                // actual end so an idle shard keeps reading as "ahead"
+                // instead of drifting with the clock.
+                st.projected_ns = now as f64;
+            }
+            let drift = if st.prior_end_ns < 1.0 && s.remaining_cost <= 0.0 {
+                // No plan and no work: exactly on plan. (Without this, a
+                // shard that was assigned nothing would read as infinitely
+                // behind its ~zero prior and never qualify as a target.)
+                0.0
+            } else {
+                (st.projected_ns - st.prior_end_ns) / st.prior_end_ns.max(1.0)
+            };
+            st.drift_ewma = a * drift + (1.0 - a) * st.drift_ewma;
+            let permille = (st.drift_ewma.max(0.0) * 1000.0).min(1e18) as u64;
+            self.drift_hist.record(permille);
+        }
+        // Behind: largest smoothed drift among shards with migratable work;
+        // ahead: earliest projected end. Ties break toward the lowest index.
+        let mut behind: Option<usize> = None;
+        for (g, s) in samples.iter().enumerate() {
+            if s.queued_kernels == 0 {
+                continue;
+            }
+            match behind {
+                Some(b) if self.shards[g].drift_ewma <= self.shards[b].drift_ewma => {}
+                _ => behind = Some(g),
+            }
+        }
+        let behind = behind?;
+        let mut ahead = 0usize;
+        for g in 1..self.shards.len() {
+            if self.shards[g].projected_ns < self.shards[ahead].projected_ns {
+                ahead = g;
+            }
+        }
+        if ahead == behind {
+            self.over = 0;
+            return None;
+        }
+        let spread = self.shards[behind].drift_ewma - self.shards[ahead].drift_ewma;
+        if spread <= self.cfg.drift_threshold {
+            self.over = 0;
+            return None;
+        }
+        self.over += 1;
+        if self.over < self.cfg.hysteresis {
+            return None;
+        }
+        self.over = 0;
+        Some(Imbalance { behind, ahead })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MonitorCfg {
+        MonitorCfg { epoch_ns: 1_000, drift_threshold: 0.5, hysteresis: 2, ewma_alpha: 0.5 }
+    }
+
+    fn sample(completed: f64, remaining: f64, queued: u64) -> ShardSample {
+        ShardSample { completed_cost: completed, remaining_cost: remaining, queued_kernels: queued }
+    }
+
+    #[test]
+    fn balanced_shards_never_trigger() {
+        let mut m = Monitor::new(cfg(), vec![10_000.0, 10_000.0]);
+        for e in 1..=50u64 {
+            let done = e as f64 * 200.0;
+            let s = [sample(done, 10_000.0 - done, 10), sample(done, 10_000.0 - done, 10)];
+            assert_eq!(m.observe(e * 1_000, &s), None, "epoch {e}");
+        }
+        assert_eq!(m.epochs(), 50);
+        assert!(m.drift_hist().count() > 0);
+    }
+
+    #[test]
+    fn sustained_skew_triggers_after_hysteresis() {
+        let mut m = Monitor::new(cfg(), vec![10_000.0, 10_000.0]);
+        let mut fired_at = None;
+        for e in 1..=20u64 {
+            // Shard 0 retires cost 10× slower than predicted; shard 1 is on
+            // plan. Both keep queued work.
+            let s = [
+                sample(e as f64 * 100.0, 10_000.0 - e as f64 * 100.0, 8),
+                sample(e as f64 * 1_000.0, (10_000.0 - e as f64 * 1_000.0).max(0.0), 8),
+            ];
+            if let Some(imb) = m.observe(e * 1_000, &s) {
+                assert_eq!(imb.behind, 0);
+                assert_eq!(imb.ahead, 1);
+                fired_at = Some(e);
+                break;
+            }
+        }
+        let e = fired_at.expect("10x skew must trigger");
+        assert!(e >= 2, "hysteresis demands at least 2 epochs, fired at {e}");
+    }
+
+    #[test]
+    fn trigger_resets_hysteresis_window() {
+        let mut m = Monitor::new(cfg(), vec![1_000.0, 1_000.0]);
+        let mut fires = Vec::new();
+        for e in 1..=12u64 {
+            let s = [sample(e as f64 * 1.0, 5_000.0, 8), sample(e as f64 * 500.0, 0.0, 0)];
+            if m.observe(e * 1_000, &s).is_some() {
+                fires.push(e);
+            }
+        }
+        assert!(fires.len() >= 2, "sustained skew should keep firing: {fires:?}");
+        for pair in fires.windows(2) {
+            assert!(pair[1] - pair[0] >= 2, "fires must be ≥ hysteresis apart: {fires:?}");
+        }
+    }
+
+    #[test]
+    fn drained_shard_projection_freezes() {
+        let mut m = Monitor::new(cfg(), vec![1_000.0, 1_000.0]);
+        // Shard 1 finishes in the first epoch; shard 0 crawls with queued
+        // work. The finished shard's drift must not grow with the clock, so
+        // the spread keeps triggering even late in the run.
+        let mut last_fire = 0;
+        for e in 1..=40u64 {
+            let s = [sample(e as f64, 10_000.0, 4), sample(1_000.0, 0.0, 0)];
+            if m.observe(e * 1_000, &s).is_some() {
+                last_fire = e;
+            }
+        }
+        assert!(last_fire >= 38, "triggering must persist late in the run: {last_fire}");
+        assert!(m.drift(1) < m.drift(0));
+    }
+
+    #[test]
+    fn never_assigned_idle_shard_reads_on_plan_and_receives_work() {
+        // Shard 1 was assigned nothing (prior 0). It must read as on-plan
+        // (drift 0), qualify as the ahead target, and after a prior
+        // transfer behave like a planned shard.
+        let mut m = Monitor::new(cfg(), vec![2_000.0, 0.0]);
+        let mut fired = false;
+        for e in 1..=6u64 {
+            let s = [sample(e as f64, 8_000.0, 6), sample(0.0, 0.0, 0)];
+            if let Some(imb) = m.observe(e * 1_000, &s) {
+                assert_eq!(imb, Imbalance { behind: 0, ahead: 1 });
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "an empty shard must be a valid migration target");
+        assert_eq!(m.drift(1), 0.0);
+        m.transfer_prior(0, 1, 1_500.0);
+        assert!((m.shards[0].prior_end_ns - 500.0).abs() < 1e-9);
+        assert!((m.shards[1].prior_end_ns - 1_500.0).abs() < 1e-9);
+        // A transfer larger than the donor's remaining prior clamps at zero
+        // instead of going negative.
+        m.transfer_prior(0, 1, 9_000.0);
+        assert_eq!(m.shards[0].prior_end_ns, 0.0);
+    }
+
+    #[test]
+    fn no_queued_work_means_no_imbalance() {
+        let mut m = Monitor::new(cfg(), vec![1_000.0, 1_000.0]);
+        for e in 1..=10u64 {
+            // Shard 0 is far behind but has nothing left to migrate.
+            let s = [sample(e as f64, 10_000.0, 0), sample(1_000.0, 0.0, 0)];
+            assert_eq!(m.observe(e * 1_000, &s), None);
+        }
+    }
+}

@@ -24,7 +24,7 @@
 //! placement never perturbs run-to-run reproducibility.
 
 use crate::config::SimConfig;
-use crate::gpu::trace::Trace;
+use crate::gpu::trace::{KernelRecord, Trace};
 use std::fmt;
 
 /// Workload→GPU placement policy.
@@ -103,6 +103,24 @@ impl PlacementCtx {
     /// and the striped array multiplies it by the device count.
     fn service_parallelism(&self) -> f64 {
         (self.devices as f64) * (self.queue_slots.min(self.planes_per_device).max(1) as f64)
+    }
+
+    /// Cost of a single kernel record under this system shape — the unit the
+    /// online monitor ([`crate::gpu::monitor`]) sums over completed/queued
+    /// record windows each epoch. Deliberately a separate entry point from
+    /// [`estimate`] (which accumulates in cycle/request space and converts
+    /// once): summing per-record conversions would perturb the admission-time
+    /// estimates' floating-point rounding and with it every static placement
+    /// decision the equivalence suites pin.
+    pub fn record_cost(&self, rec: &KernelRecord) -> CostEstimate {
+        let per_core = (rec.grid.max(1) as u64 + self.cores as u64 - 1) / self.cores as u64;
+        let compute_cycles = rec.weight * rec.cycles_per_block as f64 * per_core as f64;
+        let io_requests = rec.weight * (rec.reads as u64 + rec.writes as u64) as f64;
+        CostEstimate {
+            compute_ns: compute_cycles / self.clock_mhz * 1_000.0,
+            io_requests,
+            io_ns: io_requests * self.read_ns as f64 / self.service_parallelism(),
+        }
     }
 }
 
@@ -265,6 +283,28 @@ mod tests {
         let pa = assign(Placement::PerfAware, &es, 2);
         assert_eq!(pa[0], 0);
         assert!(pa[1..].iter().all(|&g| g == 1));
+    }
+
+    #[test]
+    fn record_cost_sums_close_to_estimate() {
+        use crate::config;
+        let cfg = config::mqms_enterprise();
+        let ctx = PlacementCtx::from_config(&cfg);
+        let trace = crate::workloads::bert::generate(0.0002, 11);
+        let whole = estimate(&trace, &ctx);
+        let mut compute = 0.0f64;
+        let mut io_requests = 0.0f64;
+        let mut io = 0.0f64;
+        for rec in &trace.records {
+            let c = ctx.record_cost(rec);
+            compute += c.compute_ns;
+            io_requests += c.io_requests;
+            io += c.io_ns;
+        }
+        // Same model, different accumulation order: equal to rounding noise.
+        assert!((compute - whole.compute_ns).abs() / whole.compute_ns.max(1.0) < 1e-9);
+        assert!((io_requests - whole.io_requests).abs() / whole.io_requests.max(1.0) < 1e-9);
+        assert!((io - whole.io_ns).abs() / whole.io_ns.max(1.0) < 1e-9);
     }
 
     #[test]

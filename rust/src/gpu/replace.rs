@@ -1,0 +1,288 @@
+//! Dynamic re-placement engine: the actuation half of online
+//! performance-aware allocation.
+//!
+//! The engine owns a [`Monitor`] plus the static cost model
+//! ([`PlacementCtx`]) and, once per `MonitorTick` epoch, prices every
+//! shard's completed/queued kernel windows into [`ShardSample`]s. When the
+//! monitor reports a sustained imbalance it picks a concrete
+//! [`MigrationPlan`]: from the behind shard's workloads, the slot with the
+//! most queued predicted cost donates half of its queued tail (never
+//! in-flight kernels) to the ahead shard. The coordinator executes the plan
+//! with [`crate::gpu::GpuSim::extract_queued_tail`] /
+//! [`crate::gpu::GpuSim::inject_migrated`], which re-namespace request ids
+//! into the destination instance's `1 + (g << 48)` space and carry the
+//! source's rng/region state, so a fixed seed still yields a bit-identical
+//! run.
+//!
+//! Halving the queued tail (rather than moving it whole) makes repeated
+//! triggers converge geometrically instead of ping-ponging the entire
+//! backlog between shards; the config's `max_migrations` caps the total.
+
+use super::monitor::{Monitor, MonitorCfg, ShardSample};
+use super::placement::PlacementCtx;
+use super::trace::KernelRecord;
+use super::GpuSim;
+use crate::config::SimConfig;
+use crate::sim::SimTime;
+use crate::util::jsonlite::Json;
+
+/// One concrete migration decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationPlan {
+    /// Donating (most-behind) shard.
+    pub from: usize,
+    /// Receiving (most-ahead) shard.
+    pub to: usize,
+    /// Local workload slot on `from` whose queued tail moves.
+    pub slot: usize,
+    /// Queued kernels to move (≥ 1, ≤ the slot's queued count).
+    pub kernels: usize,
+}
+
+/// Monitor + migration policy, owned by the coordinator when the `replace`
+/// config block is enabled on a multi-shard run.
+#[derive(Debug)]
+pub struct ReplaceEngine {
+    ctx: PlacementCtx,
+    monitor: Monitor,
+    max_migrations: u32,
+    /// Migrations executed (coordinator-confirmed via
+    /// [`Self::note_migrated_work`]).
+    pub migrations: u64,
+    /// Kernels moved across shards in total.
+    pub migrated_kernels: u64,
+    /// Per-epoch sample scratch, reused across ticks.
+    samples: Vec<ShardSample>,
+    /// Per (shard, slot) prefix sums of record costs — entry `i` is the
+    /// cost of `records[..i]`, so each tick prices a slot with two O(1)
+    /// lookups instead of re-walking every record. Rebuilt only when a
+    /// slot's record count changes (migration extracted its tail) or a new
+    /// slot appears (a migrated continuation landed).
+    cost_prefix: Vec<Vec<Vec<f64>>>,
+}
+
+impl ReplaceEngine {
+    /// `prior_end_ns[g]` is shard `g`'s admission-time predicted end (the
+    /// static placement estimates summed per assignment).
+    pub fn new(cfg: &SimConfig, prior_end_ns: Vec<f64>) -> Self {
+        let r = &cfg.replace;
+        Self {
+            ctx: PlacementCtx::from_config(cfg),
+            monitor: Monitor::new(
+                MonitorCfg {
+                    epoch_ns: r.epoch_ns,
+                    drift_threshold: r.drift_threshold,
+                    hysteresis: r.hysteresis,
+                    ewma_alpha: r.ewma_alpha,
+                },
+                prior_end_ns,
+            ),
+            max_migrations: r.max_migrations,
+            migrations: 0,
+            migrated_kernels: 0,
+            samples: Vec::new(),
+            cost_prefix: Vec::new(),
+        }
+    }
+
+    pub fn epoch_ns(&self) -> SimTime {
+        self.monitor.epoch_ns()
+    }
+
+    /// Refresh the cached cost prefixes for every slot of every shard.
+    /// Record contents never change in place — only a slot's record *count*
+    /// changes (tail extraction) or a new slot appears (injection) — so
+    /// `prefix.len() == records.len() + 1` is a sufficient freshness check.
+    fn refresh_cost_prefixes(&mut self, gpus: &[GpuSim]) {
+        self.cost_prefix.resize_with(gpus.len(), Vec::new);
+        for (gpu, shard_cache) in gpus.iter().zip(self.cost_prefix.iter_mut()) {
+            shard_cache.resize_with(gpu.workload_count(), Vec::new);
+            for (slot, prefix) in shard_cache.iter_mut().enumerate() {
+                let records = gpu.workload_records(slot);
+                if prefix.len() == records.len() + 1 {
+                    continue;
+                }
+                prefix.clear();
+                prefix.reserve(records.len() + 1);
+                prefix.push(0.0);
+                let mut acc = 0.0f64;
+                for rec in records {
+                    acc += self.ctx.record_cost(rec).end_ns();
+                    prefix.push(acc);
+                }
+            }
+        }
+    }
+
+    /// One monitor epoch: sample every shard through the cost model, feed
+    /// the monitor, and turn a sustained imbalance into a migration plan.
+    /// Returns `None` while balanced, under hysteresis, or once the
+    /// migration budget is spent (monitoring continues for observability).
+    pub fn tick(&mut self, now: SimTime, gpus: &[GpuSim]) -> Option<MigrationPlan> {
+        self.refresh_cost_prefixes(gpus);
+        self.samples.clear();
+        for (gpu, shard_cache) in gpus.iter().zip(&self.cost_prefix) {
+            let mut s = ShardSample::default();
+            for (slot, prefix) in shard_cache.iter().enumerate() {
+                let next = gpu.workload_next_record(slot);
+                let total = *prefix.last().unwrap_or(&0.0);
+                s.completed_cost += prefix[next];
+                s.remaining_cost += total - prefix[next];
+                s.queued_kernels += (prefix.len() - 1 - next) as u64;
+            }
+            self.samples.push(s);
+        }
+        let imb = self.monitor.observe(now, &self.samples)?;
+        if self.migrations >= self.max_migrations as u64 {
+            return None;
+        }
+        // Donor slot: the behind shard's workload with the most queued cost
+        // (ties toward the lowest slot, so the choice is deterministic).
+        let gpu = &gpus[imb.behind];
+        let mut best: Option<(usize, f64, usize)> = None;
+        for (slot, prefix) in self.cost_prefix[imb.behind].iter().enumerate() {
+            let next = gpu.workload_next_record(slot);
+            let queued = prefix.len() - 1 - next;
+            if queued == 0 {
+                continue;
+            }
+            let cost = *prefix.last().unwrap_or(&0.0) - prefix[next];
+            match best {
+                Some((_, c, _)) if c >= cost => {}
+                _ => best = Some((slot, cost, queued)),
+            }
+        }
+        let (slot, _, queued) = best?;
+        Some(MigrationPlan { from: imb.behind, to: imb.ahead, slot, kernels: queued.div_ceil(2) })
+    }
+
+    /// Record an executed migration: bump the counters and move the
+    /// migrated records' predicted cost from the donor's prior to the
+    /// receiver's, so drift keeps measuring against each shard's *current*
+    /// plan. Call with the extracted records before injecting them.
+    pub fn note_migrated_work(&mut self, from: usize, to: usize, records: &[KernelRecord]) {
+        let cost: f64 = records.iter().map(|r| self.ctx.record_cost(r).end_ns()).sum();
+        self.monitor.transfer_prior(from, to, cost);
+        self.migrations += 1;
+        self.migrated_kernels += records.len() as u64;
+    }
+
+    /// The `replacement` section of [`crate::metrics::Report`]: migration
+    /// counters plus the drift histogram's summary quantiles (permille).
+    pub fn report_json(&self) -> Json {
+        let h = self.monitor.drift_hist();
+        Json::from_pairs(vec![
+            ("epochs", self.monitor.epochs().into()),
+            ("migrations", self.migrations.into()),
+            ("migrated_kernels", self.migrated_kernels.into()),
+            ("drift_p50_permille", h.p50().into()),
+            ("drift_p99_permille", h.p99().into()),
+            ("drift_max_permille", h.max_seen().into()),
+            ("drift_samples", h.count().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::gpu::trace::{AccessKind, KernelRecord, Trace};
+    use crate::gpu::TaggedGpuEvent;
+    use crate::sim::EventQueue;
+
+    #[derive(Clone, Copy)]
+    struct NoopEv;
+    impl From<TaggedGpuEvent> for NoopEv {
+        fn from(_: TaggedGpuEvent) -> Self {
+            NoopEv
+        }
+    }
+
+    fn trace(kernels: usize, reads: u32) -> Trace {
+        let mut t = Trace { footprint_sectors: 1 << 12, ..Default::default() };
+        let n = t.intern("k");
+        t.records = (0..kernels)
+            .map(|_| KernelRecord {
+                name_id: n,
+                grid: 64,
+                block: 256,
+                cycles_per_block: 1_000,
+                reads,
+                writes: 0,
+                req_sectors: 1,
+                access: AccessKind::Sequential,
+                weight: 1.0,
+            })
+            .collect();
+        t
+    }
+
+    fn engine(gpus: usize) -> ReplaceEngine {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpus = gpus as u32;
+        cfg.replace.enabled = true;
+        cfg.replace.epoch_ns = 1_000;
+        cfg.replace.hysteresis = 1;
+        ReplaceEngine::new(&cfg, vec![1_000.0; gpus])
+    }
+
+    #[test]
+    fn tick_plans_migration_from_stalled_to_idle() {
+        let cfg = config::mqms_enterprise().gpu;
+        let mut q: EventQueue<NoopEv> = EventQueue::new();
+        // Shard 0 holds two workloads, one big; shard 1 is empty/idle.
+        let mut g0 = GpuSim::new(&cfg, 1, 0);
+        g0.add_workload("small", trace(4, 2), 7, 0);
+        g0.add_workload("big", trace(40, 2), 7, 1);
+        let g1 = GpuSim::new(&cfg, 1, 1);
+        let gpus = vec![g0, g1];
+        let mut eng = engine(2);
+        // Epoch 1: shard 0 shows no progress (stalled) while shard 1 is
+        // drained — hysteresis 1 arms immediately.
+        let plan = eng.tick(1_000, &gpus).expect("stalled vs idle must trigger");
+        assert_eq!(plan.from, 0);
+        assert_eq!(plan.to, 1);
+        assert_eq!(plan.slot, 1, "the big workload donates");
+        assert_eq!(plan.kernels, 20, "half the queued tail moves");
+        // Executing the plan moves exactly those kernels.
+        let mut gpus = gpus;
+        let work = gpus[0].extract_queued_tail(plan.slot, plan.kernels).unwrap();
+        assert_eq!(work.records.len(), 20);
+        let slot = gpus[1].inject_migrated(work, &mut q);
+        assert_eq!(gpus[1].workload_count(), 1);
+        assert_eq!(gpus[1].workload_records(slot).len(), 20);
+        assert_eq!(gpus[0].workload_records(1).len(), 20);
+    }
+
+    #[test]
+    fn migration_budget_caps_plans() {
+        let cfg = config::mqms_enterprise().gpu;
+        let mut g0 = GpuSim::new(&cfg, 1, 0);
+        g0.add_workload("big", trace(40, 2), 7, 0);
+        let g1 = GpuSim::new(&cfg, 1, 1);
+        let gpus = vec![g0, g1];
+        let mut eng = engine(2);
+        eng.max_migrations = 1;
+        let plan = eng.tick(1_000, &gpus).expect("first tick must plan");
+        let moved: Vec<KernelRecord> =
+            gpus[plan.from].workload_records(plan.slot)[..plan.kernels].to_vec();
+        eng.note_migrated_work(plan.from, plan.to, &moved);
+        // Budget spent: monitoring continues, planning stops.
+        assert!(eng.tick(2_000, &gpus).is_none());
+        assert!(eng.tick(3_000, &gpus).is_none());
+        assert_eq!(eng.migrations, 1);
+        assert_eq!(eng.migrated_kernels, 20);
+    }
+
+    #[test]
+    fn report_json_has_counters_and_quantiles() {
+        let eng = engine(2);
+        let j = eng.report_json();
+        for key in
+            ["epochs", "migrations", "migrated_kernels", "drift_p99_permille", "drift_samples"]
+        {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+}

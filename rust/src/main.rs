@@ -18,8 +18,10 @@
 //! mqms run --workload bert --scale 0.01 --preset mqms
 //! mqms run --workload rand4k --devices 4
 //! mqms run --workload bert,gpt2,resnet50 --gpus 2 --placement perf-aware
+//! mqms run --workload bert,gpt2 --gpus 2 --placement perf --replace
 //! mqms campaign --presets mqms,baseline --workloads bert,rand4k --devices 1,2,4
 //! mqms campaign --workloads bert --gpus 1,2,4 --placements rr,perf
+//! mqms campaign --workloads bert --gpus 2 --placements perf --replace off,on --csv out.csv
 //! mqms sweep --scale 0.005
 //! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
 //! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
@@ -145,6 +147,8 @@ fn cmd_run(argv: &[String]) -> CliResult {
         .opt("stripe", None, "override stripe granularity in sectors")
         .opt("gpus", None, "override GPU shard count of the compute side")
         .opt("placement", None, "workload→GPU placement: rr | ll | perf")
+        .flag("replace", "enable dynamic re-placement (queued-kernel migration)")
+        .opt("replace-epoch", None, "override the monitor epoch in simulated ns")
         .opt("sched", None, "override scheduler: rr | lc | auto")
         .opt("scheme", None, "override allocation scheme: CWDP | CDWP | WCDP")
         .flag("no-sample", "replay the full trace (skip Allegro sampling)")
@@ -168,6 +172,12 @@ fn cmd_run(argv: &[String]) -> CliResult {
     if let Some(s) = args.get("placement") {
         cfg.placement =
             Placement::parse(s).ok_or_else(|| format!("bad placement `{s}` (rr | ll | perf)"))?;
+    }
+    if args.get_flag("replace") {
+        cfg.replace.enabled = true;
+    }
+    if args.get("replace-epoch").is_some() {
+        cfg.replace.epoch_ns = args.get_u64("replace-epoch").map_err(|e| e.to_string())?;
     }
     if let Some(s) = args.get("sched") {
         cfg.gpu.sched = SchedPolicy::parse(s).ok_or_else(|| format!("bad sched `{s}`"))?;
@@ -218,6 +228,15 @@ fn cmd_run(argv: &[String]) -> CliResult {
         }
         if report.misrouted > 0 {
             eprintln!("WARNING: {} misrouted completions (routing bug)", report.misrouted);
+        }
+        if let Some(rep) = &report.replacement {
+            let n = |k: &str| rep.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+            println!(
+                "replacement: {} migration(s) / {} kernel(s) over {} epoch(s)",
+                n("migrations"),
+                n("migrated_kernels"),
+                n("epochs")
+            );
         }
         let rows: Vec<(String, Vec<String>)> = report
             .workloads
@@ -365,12 +384,22 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     .opt("devices", Some("1,2,4"), "comma-separated device counts")
     .opt("gpus", Some("1"), "comma-separated GPU shard counts")
     .opt("placements", Some("rr"), "comma-separated placements (rr | ll | perf)")
+    .opt("replace", Some("off"), "comma-separated dynamic re-placement values (off | on)")
     .opt("seed", Some("42"), "root rng seed (every cell runs with it)")
     .opt("threads", Some("0"), "worker threads (0 = one per core)")
     .opt("out-dir", None, "write one JSON report per cell plus campaign.json here")
+    .opt("csv", None, "stream figure-ready CSV rows here as cells complete")
     .flag("no-sample", "replay full traces (skip Allegro sampling)")
     .flag("json", "print the merged campaign JSON instead of the table");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+
+    fn parse_on_off(s: &str) -> Option<bool> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" | "true" | "1" | "dyn" => Some(true),
+            "off" | "false" | "0" | "static" => Some(false),
+            _ => None,
+        }
+    }
 
     let cspec = CampaignSpec {
         presets: parse_list(args.get("presets").unwrap(), "preset", |s| {
@@ -385,6 +414,7 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         })?,
         gpus: parse_list(args.get("gpus").unwrap(), "gpu count", |s| s.parse::<u32>().ok())?,
         placements: parse_list(args.get("placements").unwrap(), "placement", Placement::parse)?,
+        replace: parse_list(args.get("replace").unwrap(), "replace value", parse_on_off)?,
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         threads: args.get_u64("threads").map_err(|e| e.to_string())? as usize,
         sampled: !args.get_flag("no-sample"),
@@ -394,7 +424,35 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         "# campaign: {n_cells} cells on {} thread(s)",
         if cspec.threads == 0 { "auto".to_string() } else { cspec.threads.to_string() }
     );
-    let results = campaign::run(&cspec)?;
+    // Stream progress (and CSV rows when requested) as the completed prefix
+    // of the matrix grows, instead of reporting only at the barrier.
+    use std::io::Write as _;
+    let mut csv = match args.get("csv") {
+        Some(path) => {
+            let mut f = std::fs::File::create(path)
+                .map_err(|e| format!("creating {path}: {e}"))?;
+            writeln!(f, "{}", campaign::CSV_HEADER).map_err(|e| format!("writing {path}: {e}"))?;
+            Some((path.to_string(), f))
+        }
+        None => None,
+    };
+    let mut csv_err: Option<String> = None;
+    let results = campaign::run_streaming(&cspec, |i, cell, report| {
+        eprintln!("# [{}/{}] {} done", i + 1, n_cells, cell.label());
+        if let Some((path, f)) = csv.as_mut() {
+            if csv_err.is_none() {
+                if let Err(e) = writeln!(f, "{}", campaign::csv_row(cell, report)) {
+                    csv_err = Some(format!("writing {path}: {e}"));
+                }
+            }
+        }
+    })?;
+    if let Some(e) = csv_err {
+        return Err(e);
+    }
+    if let Some((path, _)) = &csv {
+        eprintln!("# wrote {} CSV rows to {path}", results.len());
+    }
 
     if let Some(dir) = args.get("out-dir") {
         let dir = Path::new(dir);

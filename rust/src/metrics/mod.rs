@@ -10,6 +10,8 @@ use crate::util::stats::Running;
 pub struct SsdSummary {
     iops: f64,
     pub mean_response_ns: f64,
+    pub read_p50_ns: u64,
+    pub write_p50_ns: u64,
     pub read_p99_ns: u64,
     pub write_p99_ns: u64,
     pub completed: u64,
@@ -35,6 +37,8 @@ impl SsdSummary {
         Self {
             iops: ssd.metrics.iops(),
             mean_response_ns: ssd.metrics.mean_response_ns(),
+            read_p50_ns: ssd.metrics.read_resp.p50(),
+            write_p50_ns: ssd.metrics.write_resp.p50(),
             read_p99_ns: ssd.metrics.read_resp.p99(),
             write_p99_ns: ssd.metrics.write_resp.p99(),
             completed: ssd.metrics.completed(),
@@ -52,8 +56,10 @@ impl SsdSummary {
     /// Merge per-device summaries into an array-level aggregate. Counters
     /// sum (for split requests, each device leg counts once); aggregate
     /// IOPS is recomputed over the union active window; mean response is
-    /// completion-weighted; p99s take the worst device (an upper bound —
-    /// the per-device histograms are not mergeable from summaries).
+    /// completion-weighted; p50s and p99s take the worst device (an upper
+    /// bound — the per-device histograms are not mergeable from summaries,
+    /// so the merged "p50" is the worst device's median, not the median of
+    /// the pooled population; read per-device entries for true quantiles).
     ///
     /// Merging a single summary returns it unchanged, so a 1-device array
     /// reports exactly what the bare device would.
@@ -74,6 +80,8 @@ impl SsdSummary {
             m.flash_programs += p.flash_programs;
             m.multiplane_batches += p.multiplane_batches;
             m.write_stalls += p.write_stalls;
+            m.read_p50_ns = m.read_p50_ns.max(p.read_p50_ns);
+            m.write_p50_ns = m.write_p50_ns.max(p.write_p50_ns);
             m.read_p99_ns = m.read_p99_ns.max(p.read_p99_ns);
             m.write_p99_ns = m.write_p99_ns.max(p.write_p99_ns);
             weighted_resp += p.mean_response_ns * p.completed as f64;
@@ -99,6 +107,8 @@ impl SsdSummary {
         Json::from_pairs(vec![
             ("iops", self.iops.into()),
             ("mean_response_ns", self.mean_response_ns.into()),
+            ("read_p50_ns", self.read_p50_ns.into()),
+            ("write_p50_ns", self.write_p50_ns.into()),
             ("read_p99_ns", self.read_p99_ns.into()),
             ("write_p99_ns", self.write_p99_ns.into()),
             ("completed", self.completed.into()),
@@ -203,11 +213,16 @@ pub struct Report {
     /// Per-instance GPU reports (one entry per compute shard; empty when no
     /// trace workloads ran).
     pub gpus: Vec<Json>,
+    /// Dynamic re-placement section (migrations, epochs, drift quantiles).
+    /// `None` when the `replace` policy is disabled — the key is omitted
+    /// from the JSON entirely, keeping replace-off reports byte-identical
+    /// to builds without the subsystem.
+    pub replacement: Option<Json>,
 }
 
 impl Report {
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut pairs = vec![
             ("config", self.config_name.as_str().into()),
             ("end_ns", self.end_ns.into()),
             ("events", self.events.into()),
@@ -225,7 +240,11 @@ impl Report {
             ),
             ("gpu", self.gpu.clone().unwrap_or(Json::Null)),
             ("gpus", Json::Arr(self.gpus.clone())),
-        ])
+        ];
+        if let Some(r) = &self.replacement {
+            pairs.push(("replacement", r.clone()));
+        }
+        Json::from_pairs(pairs)
     }
 
     /// Deterministic JSON view: everything except host wall-clock time, for
@@ -308,6 +327,7 @@ mod tests {
             misrouted: 0,
             gpu: None,
             gpus: Vec::new(),
+            replacement: None,
         };
         let j = r.to_json();
         assert_eq!(j.get("end_ns").unwrap().as_u64(), Some(42));
@@ -322,5 +342,14 @@ mod tests {
         let dj = r.to_json_deterministic();
         assert!(dj.get("wall_s").is_none(), "deterministic view drops wall time");
         assert!(dj.get("end_ns").is_some());
+        // Replace-off reports omit the replacement key entirely.
+        assert!(j.get("replacement").is_none());
+        let mut with = r.clone();
+        with.replacement = Some(Json::from_pairs(vec![("migrations", 3u64.into())]));
+        let wj = with.to_json();
+        assert_eq!(
+            wj.get("replacement").unwrap().get("migrations").unwrap().as_u64(),
+            Some(3)
+        );
     }
 }

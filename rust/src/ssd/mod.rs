@@ -43,7 +43,10 @@ pub enum SsdEvent {
     /// HIL fetch-pipeline tick: arbitrate SQs and process one command.
     Fetch,
     /// FTL processing latency elapsed: hand ready transactions to the TSU.
-    Enqueue(Vec<XactId>),
+    /// Carries a token into the device's [`EnqueuePool`]; the id list lives
+    /// in pooled storage that is recycled after consumption, so the
+    /// steady-state FTL→TSU handoff allocates nothing.
+    Enqueue(u32),
     /// Flash back-end event.
     Tsu(TsuEvent),
     /// Open write-buffer linger expired (fine-grained mapping).
@@ -58,6 +61,59 @@ pub enum SsdEvent {
 /// Sentinel request id for buffered sectors already acknowledged to the
 /// host (ack-on-buffer mode): the flash program credits no one.
 const NO_CLAIM: u64 = u64::MAX;
+
+/// Reusable storage for the ready-transaction batches carried by
+/// [`SsdEvent::Enqueue`]: producers check a buffer out, fill it, and store
+/// it under its token; the consumer takes it, drains it into the TSU, and
+/// recycles it. Buffer capacity is retained across rounds, so the hottest
+/// per-event allocation of the old `Enqueue(Vec<XactId>)` payload is gone
+/// (ROADMAP "allocation-free event payloads").
+#[derive(Debug, Default)]
+struct EnqueuePool {
+    bufs: Vec<Vec<XactId>>,
+    free: Vec<u32>,
+}
+
+impl EnqueuePool {
+    /// Check out an empty batch buffer and its token.
+    fn checkout(&mut self) -> (u32, Vec<XactId>) {
+        match self.free.pop() {
+            Some(t) => {
+                let buf = std::mem::take(&mut self.bufs[t as usize]);
+                debug_assert!(buf.is_empty());
+                (t, buf)
+            }
+            None => {
+                self.bufs.push(Vec::new());
+                ((self.bufs.len() - 1) as u32, Vec::new())
+            }
+        }
+    }
+
+    /// Park a (possibly empty) buffer under its token until its event fires.
+    fn store(&mut self, token: u32, buf: Vec<XactId>) {
+        self.bufs[token as usize] = buf;
+    }
+
+    /// Return an unused (still empty) buffer straight to the free list.
+    fn cancel(&mut self, token: u32, buf: Vec<XactId>) {
+        debug_assert!(buf.is_empty());
+        self.bufs[token as usize] = buf;
+        self.free.push(token);
+    }
+
+    /// Take a scheduled batch for consumption; recycle it afterwards.
+    fn take(&mut self, token: u32) -> Vec<XactId> {
+        std::mem::take(&mut self.bufs[token as usize])
+    }
+
+    /// Recycle a consumed batch buffer (clears it, keeps its capacity).
+    fn recycle(&mut self, token: u32, mut buf: Vec<XactId>) {
+        buf.clear();
+        self.bufs[token as usize] = buf;
+        self.free.push(token);
+    }
+}
 
 impl From<TsuEvent> for SsdEvent {
     fn from(e: TsuEvent) -> Self {
@@ -111,6 +167,8 @@ pub struct SsdSim {
     rng: Pcg64,
     pub metrics: SsdMetrics,
     completions_out: Vec<Completion>,
+    /// Pooled [`SsdEvent::Enqueue`] payload storage.
+    enq: EnqueuePool,
     /// Scratch: completed-transaction ids from one TSU event (reused so the
     /// per-event settle loop allocates nothing in steady state).
     done_scratch: Vec<XactId>,
@@ -139,6 +197,7 @@ impl SsdSim {
             rng: Pcg64::new(seed ^ 0x55D),
             metrics: SsdMetrics::new(cfg.sector_bytes),
             completions_out: Vec::new(),
+            enq: EnqueuePool::default(),
             done_scratch: Vec::new(),
             next_immediate_latency: 1_000, // ~DRAM/controller turnaround
             cfg: cfg.clone(),
@@ -272,13 +331,15 @@ impl SsdSim {
     ) {
         match ev {
             SsdEvent::Fetch => self.on_fetch(now, q),
-            SsdEvent::Enqueue(xids) => {
+            SsdEvent::Enqueue(token) => {
+                let xids = self.enq.take(token);
                 let slab = &self.slab;
                 self.tsu.enqueue_many(
-                    xids.into_iter().map(|x| (x, slab.get(x).cause == XactCause::Gc)),
+                    xids.iter().map(|&x| (x, slab.get(x).cause == XactCause::Gc)),
                     slab,
                     q,
                 );
+                self.enq.recycle(token, xids);
             }
             SsdEvent::Tsu(tev) => {
                 let mut done = std::mem::take(&mut self.done_scratch);
@@ -293,8 +354,12 @@ impl SsdSim {
             SsdEvent::Flush { plane, epoch } => {
                 let buf = &mut self.bufs[plane as usize];
                 if buf.epoch == epoch && !buf.sectors.is_empty() {
-                    let xacts = self.flush_buffer(plane, now, q);
-                    q.schedule_at(now, SsdEvent::Enqueue(xacts).into());
+                    // The enqueue fires even when the flush stalled on space
+                    // and produced nothing — same event stream as ever.
+                    let (token, mut xacts) = self.enq.checkout();
+                    self.flush_buffer(plane, now, q, &mut xacts);
+                    self.enq.store(token, xacts);
+                    q.schedule_at(now, SsdEvent::Enqueue(token).into());
                 } else if buf.epoch == epoch {
                     buf.armed = false;
                 }
@@ -379,7 +444,7 @@ impl SsdSim {
         if by_page.is_empty() {
             return;
         }
-        let mut xids = Vec::with_capacity(by_page.len());
+        let (token, mut xids) = self.enq.checkout();
         for (page, count) in by_page {
             let mut x = Xact::new(
                 XactKind::Read,
@@ -392,7 +457,8 @@ impl SsdSim {
             self.mgr.add_inflight(page.plane, 1);
             xids.push(self.slab.insert(x));
         }
-        q.schedule_in(lat, SsdEvent::Enqueue(xids).into());
+        self.enq.store(token, xids);
+        q.schedule_in(lat, SsdEvent::Enqueue(token).into());
     }
 
     /// Fine-grained write path (§2.2): append sectors into per-plane open
@@ -405,7 +471,7 @@ impl SsdSim {
         q: &mut EventQueue<E>,
     ) {
         let spp = self.geo.sectors_per_page as usize;
-        let mut ready: Vec<XactId> = Vec::new();
+        let (token, mut ready) = self.enq.checkout();
         for i in 0..req.sectors as u64 {
             let lsn = req.lsn + i;
             // Stick to the current fill plane until its open page is full,
@@ -441,7 +507,7 @@ impl SsdSim {
             // allocator spreads concurrent bursts.
             self.mgr.add_inflight(plane, 1);
             if self.bufs[plane as usize].sectors.len() >= spp {
-                ready.extend(self.flush_buffer(plane, now, q));
+                self.flush_buffer(plane, now, q, &mut ready);
             } else if !self.bufs[plane as usize].armed {
                 self.bufs[plane as usize].armed = true;
                 let epoch = self.bufs[plane as usize].epoch;
@@ -451,21 +517,26 @@ impl SsdSim {
                 );
             }
         }
-        if !ready.is_empty() {
-            q.schedule_in(lat, SsdEvent::Enqueue(ready).into());
+        if ready.is_empty() {
+            self.enq.cancel(token, ready);
+        } else {
+            self.enq.store(token, ready);
+            q.schedule_in(lat, SsdEvent::Enqueue(token).into());
         }
     }
 
     /// Program a plane's open buffer (fine-grained mapping), sealing one
     /// flash page per `sectors_per_page` buffered sectors. Under stall
     /// pressure the buffer can exceed one page's worth, so this loops.
-    /// Returns the created transaction(s) — empty on space stall.
+    /// Appends the created transaction(s) to `out` (a pooled enqueue batch
+    /// the caller schedules) — nothing on space stall.
     fn flush_buffer<E: From<SsdEvent> + From<TsuEvent>>(
         &mut self,
         plane: PlaneId,
         now: SimTime,
         q: &mut EventQueue<E>,
-    ) -> Vec<XactId> {
+        out: &mut Vec<XactId>,
+    ) {
         let spp = self.geo.sectors_per_page as usize;
         // Invalidate any armed linger for the pre-flush epoch.
         {
@@ -477,14 +548,13 @@ impl SsdSim {
         if self.fill_plane == Some(plane) {
             self.fill_plane = None;
         }
-        let mut xids = Vec::new();
         while !self.bufs[plane as usize].sectors.is_empty() {
             let Some(page) = self.mgr.alloc_page(plane, Stream::Host) else {
                 // Space exhausted: keep the buffer, retry after GC progress.
                 self.metrics.write_stalls += 1;
                 self.check_gc(plane, now, q);
                 q.schedule_in(50_000, SsdEvent::RetryStalled { plane }.into());
-                return xids;
+                return;
             };
             let buf = &mut self.bufs[plane as usize];
             let take = buf.sectors.len().min(spp);
@@ -525,7 +595,7 @@ impl SsdSim {
                 .map(|(req, sectors)| ReqClaim { req, sectors })
                 .collect();
             x.created_ns = now;
-            xids.push(self.slab.insert(x));
+            out.push(self.slab.insert(x));
             self.check_gc(plane, now, q);
             if self.bufs[plane as usize].sectors.len() < spp {
                 break; // partial page stays buffered for the linger
@@ -541,7 +611,6 @@ impl SsdSim {
                 SsdEvent::Flush { plane, epoch }.into(),
             );
         }
-        xids
     }
 
     /// Coarse (page-level) write path — the MQSim baseline (§2.2): sub-page
@@ -556,7 +625,7 @@ impl SsdSim {
         let spp = self.geo.sectors_per_page as u64;
         let first_lpn = req.lsn / spp;
         let last_lpn = (req.lsn + req.sectors as u64 - 1) / spp;
-        let mut ready: Vec<XactId> = Vec::new();
+        let (token, mut ready) = self.enq.checkout();
         for lpn in first_lpn..=last_lpn {
             let page_start = lpn * spp;
             let lo = req.lsn.max(page_start);
@@ -570,8 +639,11 @@ impl SsdSim {
                 ready.push(xid);
             }
         }
-        if !ready.is_empty() {
-            q.schedule_in(lat, SsdEvent::Enqueue(ready).into());
+        if ready.is_empty() {
+            self.enq.cancel(token, ready);
+        } else {
+            self.enq.store(token, ready);
+            q.schedule_in(lat, SsdEvent::Enqueue(token).into());
         }
     }
 
@@ -647,21 +719,28 @@ impl SsdSim {
     ) {
         // Fine-mapping buffers.
         if !self.bufs[plane as usize].sectors.is_empty() {
-            let xacts = self.flush_buffer(plane, now, q);
-            if !xacts.is_empty() {
-                q.schedule_at(now, SsdEvent::Enqueue(xacts).into());
+            let (token, mut xacts) = self.enq.checkout();
+            self.flush_buffer(plane, now, q, &mut xacts);
+            if xacts.is_empty() {
+                self.enq.cancel(token, xacts);
+            } else {
+                self.enq.store(token, xacts);
+                q.schedule_at(now, SsdEvent::Enqueue(token).into());
             }
         }
         // Coarse-mapping stalled writes.
         let stalled = std::mem::take(&mut self.stalled[plane as usize]);
-        let mut ready = Vec::new();
+        let (token, mut ready) = self.enq.checkout();
         for w in stalled {
             if let Some(xid) = self.coarse_write_one(w.lpn, w.sectors, w.req, w.rmw_old, now, q) {
                 ready.push(xid);
             }
         }
-        if !ready.is_empty() {
-            q.schedule_at(now, SsdEvent::Enqueue(ready).into());
+        if ready.is_empty() {
+            self.enq.cancel(token, ready);
+        } else {
+            self.enq.store(token, ready);
+            q.schedule_at(now, SsdEvent::Enqueue(token).into());
         }
     }
 
@@ -727,7 +806,7 @@ impl SsdSim {
             by_page.entry(slot / spp).or_default().push((slot, logical));
         }
         self.gc.start(plane, victim, by_page.len() as u32);
-        let mut xids = Vec::with_capacity(by_page.len());
+        let (token, mut xids) = self.enq.checkout();
         for (page, payload) in by_page {
             let mut x = Xact::new(
                 XactKind::Read,
@@ -742,7 +821,8 @@ impl SsdSim {
             self.mgr.add_inflight(plane, 1);
             xids.push(self.slab.insert(x));
         }
-        q.schedule_at(now, SsdEvent::Enqueue(xids).into());
+        self.enq.store(token, xids);
+        q.schedule_at(now, SsdEvent::Enqueue(token).into());
     }
 
     /// Advance a plane's GC after one of its transactions completed.
@@ -815,7 +895,7 @@ impl SsdSim {
             return 0;
         }
         let spp = self.geo.sectors_per_page as usize;
-        let mut xids = Vec::new();
+        let (token, mut xids) = self.enq.checkout();
         match self.cfg.mapping {
             MapGranularity::Sector => {
                 for chunk in survivors.chunks(spp) {
@@ -823,7 +903,7 @@ impl SsdSim {
                         // Should not happen with threshold ≥ 2; drop to host
                         // stream semantics by panicking loudly in debug.
                         debug_assert!(false, "GC stream exhausted on plane {plane}");
-                        return xids.len() as u32;
+                        break;
                     };
                     for (i, &lsn) in chunk.iter().enumerate() {
                         let psec = PhysSector { page, slot: i as u32 };
@@ -848,7 +928,7 @@ impl SsdSim {
                 for &lpn in survivors {
                     let Some(page) = self.mgr.alloc_page(plane, Stream::Gc) else {
                         debug_assert!(false, "GC stream exhausted on plane {plane}");
-                        return xids.len() as u32;
+                        break;
                     };
                     if let Some(old) = self.map.map_page(lpn, page) {
                         self.mgr.invalidate(PhysSector { page: old, slot: 0 });
@@ -868,7 +948,12 @@ impl SsdSim {
             }
         }
         let n = xids.len() as u32;
-        q.schedule_at(now, SsdEvent::Enqueue(xids).into());
+        if xids.is_empty() {
+            self.enq.cancel(token, xids);
+        } else {
+            self.enq.store(token, xids);
+            q.schedule_at(now, SsdEvent::Enqueue(token).into());
+        }
         n
     }
 
@@ -890,7 +975,10 @@ impl SsdSim {
         x.created_ns = now;
         self.mgr.add_inflight(plane, 1);
         let xid = self.slab.insert(x);
-        q.schedule_at(now, SsdEvent::Enqueue(vec![xid]).into());
+        let (token, mut xids) = self.enq.checkout();
+        xids.push(xid);
+        self.enq.store(token, xids);
+        q.schedule_at(now, SsdEvent::Enqueue(token).into());
     }
 }
 

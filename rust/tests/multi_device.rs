@@ -30,6 +30,7 @@ fn devices1_cell_reproduces_single_device_run() {
         devices: 1,
         gpus: 1,
         placement: mqms::gpu::placement::Placement::RoundRobin,
+        replace: false,
     };
     let from_campaign = campaign::run_cell(&cell, 42, true).unwrap();
 

@@ -130,6 +130,7 @@ fn campaign_sweeps_gpus_and_placements() {
         devices: vec![1],
         gpus: vec![1, 2],
         placements: vec![Placement::RoundRobin, Placement::PerfAware],
+        replace: vec![false],
         seed: 7,
         threads: 2,
         sampled: true,

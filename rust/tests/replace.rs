@@ -1,0 +1,161 @@
+//! Dynamic re-placement integration tests: the tentpole invariants of the
+//! online monitor + migration engine.
+//!
+//! * `replace` disabled is a strict byte-identical pass-through — a config
+//!   with the `replace` block present (but off) produces exactly the report
+//!   the pre-replacement code path did, knobs notwithstanding.
+//! * Migration conserves work: randomized multi-GPU runs lose and duplicate
+//!   no kernel or I/O request — per-source issued/completed counts match a
+//!   no-replacement run exactly, and totals reconcile with the array.
+//! * Replace-on runs stay deterministic, attribute every completion, and on
+//!   the drift-inducing bundle actually migrate *and* strictly improve the
+//!   compute-side makespan over static PerfAware.
+
+use mqms::bench_support as bs;
+use mqms::config;
+use mqms::gpu::placement::Placement;
+
+/// Canonical deterministic bytes of one run.
+fn run_bytes(cfg: config::SimConfig, seed: u64) -> String {
+    bs::run_bundle(cfg, &bs::drift_bundle(seed)).to_json_deterministic().pretty()
+}
+
+#[test]
+fn replace_off_is_byte_identical_passthrough() {
+    let base = |gpus: u32| {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpus = gpus;
+        cfg.placement = Placement::PerfAware;
+        cfg.gpu.dram_bytes = 0;
+        cfg.seed = 42;
+        cfg
+    };
+    for gpus in [1u32, 2, 4] {
+        let default = run_bytes(base(gpus), 42);
+        // Disabled replace with non-default knobs must change nothing: no
+        // monitor event is ever scheduled, so the event stream is identical.
+        let mut tweaked = base(gpus);
+        tweaked.replace.enabled = false;
+        tweaked.replace.epoch_ns = 1_000;
+        tweaked.replace.drift_threshold = 0.01;
+        tweaked.replace.hysteresis = 1;
+        tweaked.replace.max_migrations = 1_000;
+        tweaked.replace.ewma_alpha = 1.0;
+        assert_eq!(
+            default,
+            run_bytes(tweaked, 42),
+            "replace-off must be byte-identical for gpus={gpus}"
+        );
+        // A config that went through a JSON round-trip behaves the same.
+        let roundtripped = config::SimConfig::from_json(&base(gpus).to_json()).unwrap();
+        assert_eq!(default, run_bytes(roundtripped, 42));
+    }
+    // Replace-off reports carry no replacement section at all.
+    let r = bs::replace_run(2, 1, false, 42);
+    assert!(r.replacement.is_none());
+}
+
+#[test]
+fn migration_conserves_per_source_io_and_kernels() {
+    let mut total_migrations = 0u64;
+    for (gpus, seed) in [(2u32, 7u64), (2, 21), (4, 7), (4, 99)] {
+        let on = bs::replace_run(gpus, 1, true, seed);
+        let off = bs::replace_run(gpus, 1, false, seed);
+        assert_eq!(on.misrouted, 0, "gpus={gpus} seed={seed}: misrouted completions");
+        assert_eq!(on.past_clamps, 0);
+        assert_eq!(off.misrouted, 0);
+        assert_eq!(
+            on.workloads.len(),
+            off.workloads.len(),
+            "same bundle, same per-source report rows"
+        );
+        for (a, b) in on.workloads.iter().zip(&off.workloads) {
+            assert_eq!(a.name, b.name);
+            // DRAM is disabled in replace_run, so per-source request counts
+            // are trace-determined: migration must not lose or duplicate a
+            // single request or kernel.
+            assert_eq!(
+                a.io_completed, b.io_completed,
+                "gpus={gpus} seed={seed}: {} I/O count drifted across migration",
+                a.name
+            );
+            assert_eq!(
+                a.kernels_done, b.kernels_done,
+                "gpus={gpus} seed={seed}: {} kernel count drifted across migration",
+                a.name
+            );
+        }
+        // Totals reconcile with the array on both sides.
+        let total_on: u64 = on.workloads.iter().map(|w| w.io_completed).sum();
+        let total_off: u64 = off.workloads.iter().map(|w| w.io_completed).sum();
+        assert_eq!(total_on, on.ssd.completed);
+        assert_eq!(total_off, off.ssd.completed);
+        assert_eq!(on.ssd.completed, off.ssd.completed);
+        if let Some(rep) = &on.replacement {
+            total_migrations += rep.get("migrations").and_then(|v| v.as_u64()).unwrap_or(0);
+        }
+    }
+    // The property must actually be exercised: the drift bundle migrates.
+    assert!(total_migrations > 0, "conservation test never saw a migration");
+}
+
+#[test]
+fn replace_on_is_deterministic_and_seed_sensitive() {
+    let a = bs::replace_run(2, 1, true, 9);
+    let b = bs::replace_run(2, 1, true, 9);
+    assert_eq!(
+        a.to_json_deterministic().pretty(),
+        b.to_json_deterministic().pretty(),
+        "same seed must give a byte-identical replace-on report"
+    );
+    let c = bs::replace_run(2, 1, true, 10);
+    assert_ne!(a.to_json_deterministic().pretty(), c.to_json_deterministic().pretty());
+    // The replacement section is present and internally consistent.
+    let rep = a.replacement.as_ref().expect("replace-on must report");
+    let epochs = rep.get("epochs").and_then(|v| v.as_u64()).unwrap();
+    assert!(epochs > 0, "monitor must have ticked");
+    assert!(rep.get("drift_samples").and_then(|v| v.as_u64()).unwrap() >= epochs);
+}
+
+#[test]
+fn dynamic_beats_static_perf_aware_on_drift_bundle() {
+    // The bench (benches/replace_drift.rs) pins the full {2,4}×{1,4} grid;
+    // this keeps the cheapest grid point under `cargo test`.
+    let stat = bs::replace_run(2, 1, false, bs::SEED);
+    let dyn_ = bs::replace_run(2, 1, true, bs::SEED);
+    let rep = dyn_.replacement.as_ref().expect("replace-on must report");
+    let migrations = rep.get("migrations").and_then(|v| v.as_u64()).unwrap();
+    assert!(migrations > 0, "drift bundle must trigger migration");
+    let (m_stat, m_dyn) = (bs::gpu_makespan(&stat), bs::gpu_makespan(&dyn_));
+    assert!(
+        m_dyn < m_stat,
+        "dynamic re-placement makespan {m_dyn} must strictly beat static {m_stat}"
+    );
+}
+
+#[test]
+fn replace_campaign_axis_runs_and_stays_attributed() {
+    let spec = mqms::campaign::CampaignSpec {
+        presets: vec!["mqms".into()],
+        workloads: vec!["backprop".into()],
+        scales: vec![0.002],
+        devices: vec![1],
+        gpus: vec![2],
+        placements: vec![Placement::PerfAware],
+        replace: vec![false, true],
+        seed: 7,
+        threads: 2,
+        sampled: true,
+    };
+    let results = mqms::campaign::run(&spec).unwrap();
+    assert_eq!(results.len(), 2);
+    assert!(!results[0].0.replace && results[1].0.replace);
+    assert!(results[1].0.label().ends_with("-dyn"));
+    for (cell, r) in &results {
+        assert!(r.ssd.completed > 0, "{} completed nothing", cell.label());
+        assert_eq!(r.misrouted, 0, "{}", cell.label());
+    }
+    // Only the replace-on cell reports a replacement section.
+    assert!(results[0].1.replacement.is_none());
+    assert!(results[1].1.replacement.is_some());
+}
