@@ -237,6 +237,83 @@ pub fn replace_run(gpus: u32, devices: u32, replace: bool, seed: u64) -> Report 
     run_bundle(cfg, &drift_bundle(seed))
 }
 
+// --- heterogeneous-array study (benches/hetero_array.rs +
+// --- tests/hetero_array.rs) ---------------------------------------------
+
+/// Build a trace of `kernels` fixed-cost kernels (no jitter — every
+/// per-record cost is an exact integer, so compute estimates of two traces
+/// with equal `kernels × cycles` products are *bitwise equal*), each
+/// issuing `reads` sequential 4 KiB reads.
+pub fn hetero_trace(kernels: usize, reads: u32, cycles: u64) -> Trace {
+    use crate::gpu::trace::{AccessKind, KernelRecord};
+    let mut t = Trace { footprint_sectors: 1 << 14, ..Default::default() };
+    let name = t.intern("asym-kernel");
+    t.records = (0..kernels)
+        .map(|_| KernelRecord {
+            name_id: name,
+            grid: 64,
+            block: 256,
+            cycles_per_block: cycles,
+            reads,
+            writes: 0,
+            req_sectors: 1,
+            access: AccessKind::Sequential,
+            weight: 1.0,
+        })
+        .collect();
+    t
+}
+
+/// Asymmetric-I/O bundle for the heterogeneous-array study: one I/O-heavy
+/// workload (30 kernels × 448 reads) plus four compute-only workloads
+/// (60 kernels at half the per-kernel cycles — the same total compute as
+/// the heavy one, summed exactly in integers, so all five *compute*
+/// estimates are bitwise equal). On a *uniform* 4-device enterprise array
+/// every end-time estimate is compute-dominated and exactly equal, so
+/// PerfAware's LPT degenerates to the round-robin assignment — the two
+/// policies tie bit-for-bit. On the {1 enterprise + 3 client} mix the
+/// aggregate service rate collapses, the heavy workload's estimate turns
+/// I/O-dominated, and PerfAware isolates it while round-robin co-locates
+/// it with more compute workloads — which then starve behind the heavy
+/// workload's full retirement pipeline (its kernels park in pipeline slots
+/// waiting on client-class devices, blocking launches). The compute-only
+/// lights touch storage not at all, so the win is a genuine placement
+/// effect, not shared-array cross-talk.
+pub fn asym_io_bundle() -> Vec<WorkloadSpec> {
+    let mut specs = vec![WorkloadSpec::trace("io-heavy", hetero_trace(30, 448, 40_000))];
+    for i in 0..4u64 {
+        specs.push(WorkloadSpec::trace(
+            &format!("compute-light{i}"),
+            hetero_trace(60, 0, 20_000),
+        ));
+    }
+    specs
+}
+
+/// One cell of the heterogeneous-array study: the asymmetric-I/O bundle on
+/// `gpus` shards over a `devices`-wide array under `mix`
+/// ([`config::device_mix`]). DRAM is disabled so every access reaches
+/// storage, and the prefetch pipeline is kept shallow so a shard stalled on
+/// a slow device class shows up as makespan instead of vanishing into
+/// queue depth.
+pub fn hetero_run(
+    gpus: u32,
+    devices: u32,
+    placement: Placement,
+    mix: &str,
+    seed: u64,
+) -> Report {
+    let mut cfg = config::mqms_enterprise();
+    cfg.gpus = gpus;
+    cfg.devices = devices;
+    cfg.placement = placement;
+    cfg.gpu.dram_bytes = 0;
+    cfg.gpu.pipeline_depth = 4;
+    cfg.seed = seed;
+    cfg.device_overrides = config::device_mix(mix, devices).expect("known device mix");
+    run_bundle(cfg, &asym_io_bundle())
+}
+
 // --- hot-path regression harness (benches/hotpath_regression.rs + `mqms
 // --- bench`) -----------------------------------------------------------
 

@@ -1,6 +1,7 @@
 //! Parallel scenario campaigns: expand a `{preset × workload × scale ×
-//! device-count × gpu-count × placement}` matrix into cells and execute
-//! them on `std::thread` workers, one independent co-simulation per cell.
+//! device-count × device-mix × gpu-count × placement × replace × rw-ratio ×
+//! op-ratio}` matrix into cells and execute them on `std::thread` workers,
+//! one independent co-simulation per cell.
 //!
 //! Each cell is a fully self-contained [`CoSim`] seeded from the campaign's
 //! root seed, so results are deterministic per cell; cells are collected in
@@ -8,13 +9,13 @@
 //! summary **byte-identical for any worker-thread count** (host wall-clock
 //! time is excluded via [`Report::to_json_deterministic`]).
 
-use crate::config::SimConfig;
+use crate::config::{self, SimConfig};
 use crate::coordinator::CoSim;
 use crate::gpu::placement::Placement;
 use crate::metrics::Report;
 use crate::util::bench::{ns, si};
 use crate::util::jsonlite::Json;
-use crate::workloads;
+use crate::workloads::{self, WorkloadKind, WorkloadSpec};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -29,6 +30,10 @@ pub struct CampaignSpec {
     pub scales: Vec<f64>,
     /// Device counts for the striped array.
     pub devices: Vec<u32>,
+    /// Named per-device override mixes ([`config::device_mix`]): `uniform`
+    /// is the symmetric pass-through, `mixed` the {1 enterprise + N-1
+    /// client} asymmetric array, `enterprise`/`client` patch every device.
+    pub device_mixes: Vec<String>,
     /// GPU shard counts for the compute side.
     pub gpus: Vec<u32>,
     /// Workload→GPU placement policies to sweep (collapsed to the first
@@ -38,6 +43,14 @@ pub struct CampaignSpec {
     /// entry for `gpus = 1` cells, where migration cannot matter) — static
     /// vs dynamic allocation becomes one axis of the same matrix.
     pub replace: Vec<bool>,
+    /// Read-fraction sweep in `[0, 1]`: each value re-splits every
+    /// workload's accesses (trace records' reads/writes, synth streams'
+    /// `read_fraction`) to that ratio. Empty = leave workloads as authored.
+    pub rw_ratios: Vec<f64>,
+    /// SSD over-provisioning sweep in `(0.05, 1.0]` (GC-pressure axis):
+    /// each value overrides the base `ssd.op_ratio` (per-device override
+    /// patches still apply on top). Empty = keep the preset's value.
+    pub op_ratios: Vec<f64>,
     /// Root seed; every cell runs with this seed (a cell is then directly
     /// comparable to `mqms run --seed <seed>` with the same parameters).
     pub seed: u64,
@@ -54,9 +67,12 @@ impl Default for CampaignSpec {
             workloads: vec!["bert".into(), "rand4k".into()],
             scales: vec![0.005],
             devices: vec![1, 2, 4],
+            device_mixes: vec!["uniform".into()],
             gpus: vec![1],
             placements: vec![Placement::RoundRobin],
             replace: vec![false],
+            rw_ratios: Vec::new(),
+            op_ratios: Vec::new(),
             seed: 42,
             threads: 0,
             sampled: true,
@@ -71,17 +87,24 @@ pub struct Cell {
     pub workload: String,
     pub scale: f64,
     pub devices: u32,
+    /// Named device mix resolved against `devices` ([`config::device_mix`]).
+    pub device_mix: String,
     pub gpus: u32,
     pub placement: Placement,
     /// Dynamic re-placement enabled for this cell.
     pub replace: bool,
+    /// Read-fraction override for every workload (`None` = as authored).
+    pub rw_ratio: Option<f64>,
+    /// `ssd.op_ratio` override (`None` = the preset's value).
+    pub op_ratio: Option<f64>,
 }
 
 impl Cell {
     /// Compact row label for tables and file names. Single-GPU cells keep
     /// the historical `preset/workload@scale×Nd` shape; sharded cells append
     /// the GPU count and placement policy, plus `-dyn` when dynamic
-    /// re-placement is on.
+    /// re-placement is on. Non-default mix / rw / op axis values append
+    /// their own suffixes, so every cell of a swept matrix stays unique.
     pub fn label(&self) -> String {
         let mut s =
             format!("{}/{}@{}x{}d", self.preset, self.workload, self.scale, self.devices);
@@ -90,6 +113,15 @@ impl Cell {
             if self.replace {
                 s.push_str("-dyn");
             }
+        }
+        if self.device_mix != "uniform" {
+            s.push_str(&format!("-{}", self.device_mix));
+        }
+        if let Some(r) = self.rw_ratio {
+            s.push_str(&format!("-rw{r}"));
+        }
+        if let Some(o) = self.op_ratio {
+            s.push_str(&format!("-op{o}"));
         }
         s
     }
@@ -100,29 +132,49 @@ impl Cell {
 /// shard every policy yields the same assignment (and migration is a
 /// no-op), so duplicate cells would differ only in label.
 pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
+    // Empty rw/op axes mean "don't touch the knob": one unset entry, so the
+    // matrix shape (and every historical label) is unchanged until swept.
+    let opt_axis = |vals: &[f64]| -> Vec<Option<f64>> {
+        if vals.is_empty() {
+            vec![None]
+        } else {
+            vals.iter().copied().map(Some).collect()
+        }
+    };
+    let rw_axis = opt_axis(&spec.rw_ratios);
+    let op_axis = opt_axis(&spec.op_ratios);
     let mut cells = Vec::new();
     for preset in &spec.presets {
         for workload in &spec.workloads {
             for &scale in &spec.scales {
                 for &devices in &spec.devices {
-                    for &gpus in &spec.gpus {
-                        for (p, &placement) in spec.placements.iter().enumerate() {
-                            if gpus <= 1 && p > 0 {
-                                continue;
-                            }
-                            for (r, &replace) in spec.replace.iter().enumerate() {
-                                if gpus <= 1 && r > 0 {
+                    for device_mix in &spec.device_mixes {
+                        for &gpus in &spec.gpus {
+                            for (p, &placement) in spec.placements.iter().enumerate() {
+                                if gpus <= 1 && p > 0 {
                                     continue;
                                 }
-                                cells.push(Cell {
-                                    preset: preset.clone(),
-                                    workload: workload.clone(),
-                                    scale,
-                                    devices,
-                                    gpus,
-                                    placement,
-                                    replace,
-                                });
+                                for (r, &replace) in spec.replace.iter().enumerate() {
+                                    if gpus <= 1 && r > 0 {
+                                        continue;
+                                    }
+                                    for &rw_ratio in &rw_axis {
+                                        for &op_ratio in &op_axis {
+                                            cells.push(Cell {
+                                                preset: preset.clone(),
+                                                workload: workload.clone(),
+                                                scale,
+                                                devices,
+                                                device_mix: device_mix.clone(),
+                                                gpus,
+                                                placement,
+                                                replace,
+                                                rw_ratio,
+                                                op_ratio,
+                                            });
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
@@ -152,17 +204,60 @@ pub fn schedule_order(cells: &[Cell]) -> Vec<usize> {
     order
 }
 
-/// Run one cell to completion.
-pub fn run_cell(cell: &Cell, seed: u64, sampled: bool) -> Result<Report, String> {
+/// Resolve one cell to a full validated [`SimConfig`]: the preset with
+/// every axis override applied. A `device_mix` of `"uniform"` leaves the
+/// preset's own `device_overrides` untouched (it is the no-op mix); every
+/// other mix replaces them with the named bundle resolved against the
+/// cell's device count.
+pub fn cell_config(cell: &Cell, seed: u64) -> Result<SimConfig, String> {
     let mut cfg = SimConfig::load_named(&cell.preset)?;
     cfg.seed = seed;
     cfg.devices = cell.devices;
     cfg.gpus = cell.gpus;
     cfg.placement = cell.placement;
     cfg.replace.enabled = cell.replace;
+    if let Some(op) = cell.op_ratio {
+        cfg.ssd.op_ratio = op;
+    }
+    let mix = config::device_mix(&cell.device_mix, cell.devices).ok_or_else(|| {
+        format!(
+            "unknown device mix `{}` (valid: {})",
+            cell.device_mix,
+            config::DEVICE_MIX_NAMES.join(", ")
+        )
+    })?;
+    if cell.device_mix != "uniform" {
+        cfg.device_overrides = mix;
+    }
     cfg.validate()?;
-    let (wspec, _stats) =
+    Ok(cfg)
+}
+
+/// Re-split a workload's accesses to `ratio` reads: trace records keep
+/// their per-kernel access *count* (reads + writes) and re-partition it;
+/// synthetic streams set their per-request read fraction directly.
+fn apply_rw_ratio(spec: &mut WorkloadSpec, ratio: f64) {
+    match &mut spec.kind {
+        WorkloadKind::Synth(p) => p.read_fraction = ratio,
+        WorkloadKind::Trace(t) => {
+            for rec in &mut t.records {
+                let total = rec.reads as u64 + rec.writes as u64;
+                let reads = (((total as f64) * ratio).round() as u64).min(total);
+                rec.reads = reads as u32;
+                rec.writes = (total - reads) as u32;
+            }
+        }
+    }
+}
+
+/// Run one cell to completion.
+pub fn run_cell(cell: &Cell, seed: u64, sampled: bool) -> Result<Report, String> {
+    let cfg = cell_config(cell, seed)?;
+    let (mut wspec, _stats) =
         workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
+    if let Some(rw) = cell.rw_ratio {
+        apply_rw_ratio(&mut wspec, rw);
+    }
     let mut sim = CoSim::new(cfg);
     sim.add_workload(wspec);
     Ok(sim.run())
@@ -208,6 +303,24 @@ pub fn run_streaming(
         if !workloads::is_valid_name(w) {
             // Reuse the canonical error with the valid-name listing.
             workloads::spec_by_name(w, 0.0, spec.seed)?;
+        }
+    }
+    for m in &spec.device_mixes {
+        if config::device_mix(m, 1).is_none() {
+            return Err(format!(
+                "unknown device mix `{m}` (valid: {})",
+                config::DEVICE_MIX_NAMES.join(", ")
+            ));
+        }
+    }
+    for &r in &spec.rw_ratios {
+        if !(0.0..=1.0).contains(&r) {
+            return Err(format!("rw ratio {r} out of [0, 1]"));
+        }
+    }
+    for &o in &spec.op_ratios {
+        if !(o > 0.05 && o <= 1.0) {
+            return Err(format!("op_ratio {o} out of (0.05, 1.0]"));
         }
     }
     let threads = effective_threads(spec.threads, cells.len());
@@ -263,14 +376,26 @@ pub fn summary_json(results: &[(Cell, Report)]) -> Json {
     let cells: Vec<Json> = results
         .iter()
         .map(|(c, r)| {
+            // Per-device resolved-config fingerprints (seed-independent),
+            // so heterogeneous rows are self-describing without replaying
+            // the preset + mix resolution downstream.
+            let fingerprints: Vec<Json> = cell_config(c, 0)
+                .map(|cfg| {
+                    (0..cfg.devices).map(|d| cfg.device_ssd(d).fingerprint().into()).collect()
+                })
+                .unwrap_or_default();
             Json::from_pairs(vec![
                 ("preset", c.preset.as_str().into()),
                 ("workload", c.workload.as_str().into()),
                 ("scale", c.scale.into()),
                 ("devices", (c.devices as u64).into()),
+                ("device_mix", c.device_mix.as_str().into()),
                 ("gpus", (c.gpus as u64).into()),
                 ("placement", c.placement.name().into()),
                 ("replace", c.replace.into()),
+                ("rw_ratio", c.rw_ratio.map(Json::from).unwrap_or(Json::Null)),
+                ("op_ratio", c.op_ratio.map(Json::from).unwrap_or(Json::Null)),
+                ("device_configs", Json::Arr(fingerprints)),
                 ("report", r.to_json_deterministic()),
             ])
         })
@@ -303,27 +428,35 @@ pub const TABLE_HEADERS: [&str; 6] =
 
 /// Figure-ready CSV header: one [`csv_row`] per cell, axes first, then the
 /// headline metrics (makespan, device response p50/p99, events/sec).
-pub const CSV_HEADER: &str = "preset,workload,scale,devices,gpus,placement,replace,\
-end_ns,gpu_makespan_ns,completed,iops,mean_response_ns,\
+pub const CSV_HEADER: &str = "preset,workload,scale,devices,device_mix,gpus,placement,replace,\
+rw_ratio,op_ratio,end_ns,gpu_makespan_ns,completed,iops,mean_response_ns,\
 read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,events_per_sec";
 
 /// One CSV data row matching [`CSV_HEADER`]. Everything except
 /// `events_per_sec` (a host wall-clock rate) is deterministic for a fixed
 /// seed. Axis values never contain commas (preset/workload names are
-/// identifiers or file paths). For multi-device cells the response
-/// quantile columns are worst-device upper bounds (see
-/// [`crate::metrics::SsdSummary::merge`]), exact for `devices = 1`.
+/// identifiers or file paths); unswept rw/op axes print `-`. For
+/// multi-device cells the response quantile columns are worst-device upper
+/// bounds (see [`crate::metrics::SsdSummary::merge`]), exact for
+/// `devices = 1`.
 pub fn csv_row(cell: &Cell, r: &Report) -> String {
     let events_per_sec = if r.wall_s > 0.0 { r.events as f64 / r.wall_s } else { 0.0 };
+    let opt = |v: Option<f64>| match v {
+        Some(x) => x.to_string(),
+        None => "-".to_string(),
+    };
     format!(
-        "{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{:.3}",
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{:.3}",
         cell.preset,
         cell.workload,
         cell.scale,
         cell.devices,
+        cell.device_mix,
         cell.gpus,
         cell.placement.name(),
         if cell.replace { "on" } else { "off" },
+        opt(cell.rw_ratio),
+        opt(cell.op_ratio),
         r.end_ns,
         crate::bench_support::gpu_makespan(r),
         r.ssd.completed,
@@ -384,9 +517,12 @@ mod tests {
             workload: "w".into(),
             scale,
             devices,
+            device_mix: "uniform".into(),
             gpus: 1,
             placement: Placement::RoundRobin,
             replace: false,
+            rw_ratio: None,
+            op_ratio: None,
         };
         let tie = vec![cell(0.01, 1), cell(0.005, 2)];
         assert_eq!(schedule_order(&tie), vec![0, 1]);
@@ -436,6 +572,106 @@ mod tests {
         let labels: std::collections::HashSet<String> =
             cells.iter().map(Cell::label).collect();
         assert_eq!(labels.len(), cells.len(), "labels must stay unique");
+    }
+
+    #[test]
+    fn device_mix_rw_and_op_axes_expand_with_unique_labels() {
+        let spec = CampaignSpec {
+            presets: vec!["a".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.1],
+            devices: vec![4],
+            device_mixes: vec!["uniform".into(), "mixed".into()],
+            rw_ratios: vec![0.5, 1.0],
+            op_ratios: vec![0.5],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&spec);
+        // 2 mixes × 2 rw × 1 op on one grid point.
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].label(), "a/w@0.1x4d-rw0.5-op0.5");
+        assert_eq!(cells[1].label(), "a/w@0.1x4d-rw1-op0.5");
+        assert_eq!(cells[2].label(), "a/w@0.1x4d-mixed-rw0.5-op0.5");
+        let labels: std::collections::HashSet<String> =
+            cells.iter().map(Cell::label).collect();
+        assert_eq!(labels.len(), cells.len(), "labels must stay unique");
+        // Unswept axes leave the historical matrix shape and labels alone.
+        let plain = CampaignSpec {
+            presets: vec!["a".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.1],
+            devices: vec![4],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&plain);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].label(), "a/w@0.1x4d");
+        // Unknown mixes fail before any cell runs.
+        let bad = CampaignSpec {
+            device_mixes: vec!["nope".into()],
+            ..CampaignSpec::default()
+        };
+        let err = run(&bad).unwrap_err();
+        assert!(err.contains("device mix"), "{err}");
+        let bad = CampaignSpec { rw_ratios: vec![1.5], ..CampaignSpec::default() };
+        assert!(run(&bad).is_err());
+        let bad = CampaignSpec { op_ratios: vec![0.01], ..CampaignSpec::default() };
+        assert!(run(&bad).is_err());
+    }
+
+    #[test]
+    fn cell_config_applies_mix_and_op_overrides() {
+        let cell = Cell {
+            preset: "mqms".to_string(),
+            workload: "rand4k".to_string(),
+            scale: 0.001,
+            devices: 4,
+            device_mix: "mixed".to_string(),
+            gpus: 1,
+            placement: Placement::RoundRobin,
+            replace: false,
+            rw_ratio: None,
+            op_ratio: Some(0.5),
+        };
+        let cfg = cell_config(&cell, 7).unwrap();
+        assert_eq!(cfg.device_overrides.len(), 4);
+        assert_eq!(cfg.device_ssd(0).t_read_ns, 45_000, "device 0 is enterprise");
+        assert_eq!(cfg.device_ssd(1).nvme_queues, 2, "devices 1.. are client");
+        assert!((cfg.device_ssd(3).op_ratio - 0.5).abs() < 1e-12, "op axis under the patch");
+        // The uniform mix is a strict no-op on the preset's overrides.
+        let mut uni = cell.clone();
+        uni.device_mix = "uniform".to_string();
+        assert!(cell_config(&uni, 7).unwrap().device_overrides.is_empty());
+    }
+
+    #[test]
+    fn rw_ratio_repartitions_trace_and_synth_workloads() {
+        let mk = |name: &str| workloads::spec_by_name(name, 0.002, 3).unwrap();
+        // Trace: totals preserved, split follows the ratio.
+        let mut spec = mk("backprop");
+        let totals: Vec<u64> = match &spec.kind {
+            WorkloadKind::Trace(t) => {
+                t.records.iter().map(|r| r.reads as u64 + r.writes as u64).collect()
+            }
+            WorkloadKind::Synth(_) => unreachable!("backprop is a trace"),
+        };
+        apply_rw_ratio(&mut spec, 1.0);
+        match &spec.kind {
+            WorkloadKind::Trace(t) => {
+                for (rec, &total) in t.records.iter().zip(&totals) {
+                    assert_eq!(rec.writes, 0, "ratio 1.0 must leave no writes");
+                    assert_eq!(rec.reads as u64, total, "access counts preserved");
+                }
+            }
+            WorkloadKind::Synth(_) => unreachable!(),
+        }
+        // Synth: the per-request fraction is set directly.
+        let mut spec = mk("rand4k");
+        apply_rw_ratio(&mut spec, 0.25);
+        match &spec.kind {
+            WorkloadKind::Synth(p) => assert!((p.read_fraction - 0.25).abs() < 1e-12),
+            WorkloadKind::Trace(_) => unreachable!("rand4k is synthetic"),
+        }
     }
 
     #[test]

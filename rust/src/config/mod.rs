@@ -222,6 +222,25 @@ impl SsdConfig {
         ((self.physical_bytes() as f64 * self.op_ratio) / self.sector_bytes as f64) as u64
     }
 
+    /// Compact one-line shape/timing fingerprint. Campaign summaries embed
+    /// one per device so rows from heterogeneous arrays stay
+    /// self-describing without re-deriving the preset + override chain.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}c{}w{}d{}p-q{}x{}-r{}-w{}-ch{}-op{}",
+            self.channels,
+            self.ways,
+            self.dies,
+            self.planes,
+            self.nvme_queues,
+            self.queue_depth,
+            self.t_read_ns,
+            self.t_program_ns,
+            self.channel_mbps,
+            self.op_ratio
+        )
+    }
+
     /// Validate invariants; returns a human-readable list of violations.
     pub fn validate(&self) -> Result<(), String> {
         let mut errs = Vec::new();
@@ -248,6 +267,152 @@ impl SsdConfig {
         } else {
             Err(errs.join("; "))
         }
+    }
+}
+
+/// Sparse per-device override of the array's base [`SsdConfig`] — the
+/// heterogeneous-array mechanism. Every field is optional; [`SsdPatch::apply`]
+/// patches a clone of the base config, so an empty patch (or one restating
+/// the base values) resolves to an identical device. Geometry the striping
+/// layer depends on globally (`page_bytes`, `sector_bytes`) and the paper's
+/// policy switches are deliberately not patchable, so stripe↔page invariants
+/// and the A/B semantics stay whole-array properties.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SsdPatch {
+    pub channels: Option<u32>,
+    pub ways: Option<u32>,
+    pub dies: Option<u32>,
+    pub planes: Option<u32>,
+    pub op_ratio: Option<f64>,
+    pub t_read_ns: Option<u64>,
+    pub t_program_ns: Option<u64>,
+    pub t_erase_ns: Option<u64>,
+    pub channel_mbps: Option<f64>,
+    pub cmd_overhead_ns: Option<u64>,
+    pub nvme_queues: Option<u32>,
+    pub queue_depth: Option<u32>,
+    pub map_miss_rate: Option<f64>,
+}
+
+impl SsdPatch {
+    /// Resolve the patch against a base config (set fields win).
+    pub fn apply(&self, base: &SsdConfig) -> SsdConfig {
+        let mut c = base.clone();
+        macro_rules! set {
+            ($field:ident) => {
+                if let Some(v) = self.$field {
+                    c.$field = v;
+                }
+            };
+        }
+        set!(channels);
+        set!(ways);
+        set!(dies);
+        set!(planes);
+        set!(op_ratio);
+        set!(t_read_ns);
+        set!(t_program_ns);
+        set!(t_erase_ns);
+        set!(channel_mbps);
+        set!(cmd_overhead_ns);
+        set!(nvme_queues);
+        set!(queue_depth);
+        set!(map_miss_rate);
+        c
+    }
+
+    /// Sparse JSON view: only set fields are emitted.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        macro_rules! put_u {
+            ($key:literal, $field:ident) => {
+                if let Some(v) = self.$field {
+                    pairs.push(($key, (v as u64).into()));
+                }
+            };
+        }
+        macro_rules! put_f {
+            ($key:literal, $field:ident) => {
+                if let Some(v) = self.$field {
+                    pairs.push(($key, v.into()));
+                }
+            };
+        }
+        put_u!("channels", channels);
+        put_u!("ways", ways);
+        put_u!("dies", dies);
+        put_u!("planes", planes);
+        put_f!("op_ratio", op_ratio);
+        put_u!("t_read_ns", t_read_ns);
+        put_u!("t_program_ns", t_program_ns);
+        put_u!("t_erase_ns", t_erase_ns);
+        put_f!("channel_mbps", channel_mbps);
+        put_u!("cmd_overhead_ns", cmd_overhead_ns);
+        put_u!("nvme_queues", nvme_queues);
+        put_u!("queue_depth", queue_depth);
+        put_f!("map_miss_rate", map_miss_rate);
+        Json::from_pairs(pairs)
+    }
+
+    /// Parse a patch object. A `"preset"` key resolves a named patch
+    /// ([`presets::device_patch`]) first; explicit fields then override it.
+    pub fn from_json(j: &Json) -> Result<SsdPatch, String> {
+        let mut p = match j.get("preset").and_then(Json::as_str) {
+            Some(name) => presets::device_patch(name).ok_or_else(|| {
+                format!(
+                    "unknown device patch preset `{name}` (valid: {})",
+                    presets::DEVICE_PATCH_NAMES.join(", ")
+                )
+            })?,
+            None => SsdPatch::default(),
+        };
+        macro_rules! num {
+            ($key:literal, $field:ident, $ty:ty) => {
+                if let Some(v) = j.get($key).and_then(Json::as_f64) {
+                    p.$field = Some(v as $ty);
+                }
+            };
+        }
+        num!("channels", channels, u32);
+        num!("ways", ways, u32);
+        num!("dies", dies, u32);
+        num!("planes", planes, u32);
+        num!("op_ratio", op_ratio, f64);
+        num!("t_read_ns", t_read_ns, u64);
+        num!("t_program_ns", t_program_ns, u64);
+        num!("t_erase_ns", t_erase_ns, u64);
+        num!("channel_mbps", channel_mbps, f64);
+        num!("cmd_overhead_ns", cmd_overhead_ns, u64);
+        num!("nvme_queues", nvme_queues, u32);
+        num!("queue_depth", queue_depth, u32);
+        num!("map_miss_rate", map_miss_rate, f64);
+        Ok(p)
+    }
+}
+
+/// One device's override in a heterogeneous array: device index + patch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceOverride {
+    /// Array device index in `0..devices`.
+    pub device: u32,
+    pub patch: SsdPatch,
+}
+
+impl DeviceOverride {
+    pub fn to_json(&self) -> Json {
+        let mut j = self.patch.to_json();
+        j.set("device", (self.device as u64).into()).expect("patch json is an object");
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<DeviceOverride, String> {
+        let device = j
+            .get("device")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| "device_overrides entry missing `device` index".to_string())?;
+        let device = u32::try_from(device)
+            .map_err(|_| format!("override device index out of range: {device}"))?;
+        Ok(DeviceOverride { device, patch: SsdPatch::from_json(j)? })
     }
 }
 
@@ -360,6 +525,11 @@ pub struct SimConfig {
     pub gpus: u32,
     /// Workload→GPU placement policy (only meaningful when `gpus > 1`).
     pub placement: Placement,
+    /// Sparse per-device [`SsdConfig`] patches making the array
+    /// heterogeneous (e.g. one enterprise device striped with client
+    /// devices). Empty = every device is the base `ssd` config, exactly the
+    /// historical symmetric array.
+    pub device_overrides: Vec<DeviceOverride>,
     /// Online re-placement policy (monitor + queued-kernel migration).
     pub replace: ReplaceConfig,
     pub ssd: SsdConfig,
@@ -368,6 +538,18 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// The resolved [`SsdConfig`] device `dev` of the array runs: the base
+    /// `ssd` block with this device's override patch (if any) applied.
+    pub fn device_ssd(&self, dev: u32) -> SsdConfig {
+        let mut ssd = self.ssd.clone();
+        for o in &self.device_overrides {
+            if o.device == dev {
+                ssd = o.patch.apply(&ssd);
+            }
+        }
+        ssd
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         self.ssd.validate()?;
         let mut errs = Vec::new();
@@ -399,6 +581,34 @@ impl SimConfig {
                 self.ssd.sectors_per_page()
             ));
         }
+        for (i, o) in self.device_overrides.iter().enumerate() {
+            if o.device >= self.devices {
+                errs.push(format!(
+                    "device_overrides[{i}]: device {} out of range (devices = {})",
+                    o.device, self.devices
+                ));
+            }
+            if self.device_overrides[..i].iter().any(|p| p.device == o.device) {
+                errs.push(format!(
+                    "device_overrides[{i}]: duplicate override for device {}",
+                    o.device
+                ));
+            }
+        }
+        if !self.device_overrides.is_empty() {
+            for d in 0..self.devices {
+                let ssd = self.device_ssd(d);
+                if let Err(e) = ssd.validate() {
+                    errs.push(format!("device {d} override resolves invalid: {e}"));
+                } else if self.devices > 1 && ssd.logical_sectors() < self.stripe_sectors {
+                    errs.push(format!(
+                        "device {d} capacity {} below one stripe ({} sectors)",
+                        ssd.logical_sectors(),
+                        self.stripe_sectors
+                    ));
+                }
+            }
+        }
         self.replace.validate(&mut errs);
         if errs.is_empty() {
             Ok(())
@@ -413,7 +623,7 @@ impl SimConfig {
         let g = &self.gpu;
         let p = &self.path;
         let r = &self.replace;
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("name", self.name.as_str().into()),
             ("seed", self.seed.into()),
             ("devices", (self.devices as u64).into()),
@@ -516,7 +726,14 @@ impl SimConfig {
                     ("host_max_outstanding", (p.host_max_outstanding as u64).into()),
                 ]),
             ),
-        ])
+        ]);
+        // Sparse: the key is omitted entirely for symmetric arrays, keeping
+        // pre-heterogeneity config files byte-identical on round-trip.
+        if !self.device_overrides.is_empty() {
+            let arr = self.device_overrides.iter().map(DeviceOverride::to_json).collect();
+            j.set("device_overrides", Json::Arr(arr)).expect("config json is an object");
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<SimConfig, String> {
@@ -539,6 +756,13 @@ impl SimConfig {
         if let Some(v) = j.get("placement").and_then(Json::as_str) {
             cfg.placement =
                 Placement::parse(v).ok_or_else(|| format!("bad placement: {v}"))?;
+        }
+        if let Some(v) = j.get("device_overrides") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| format!("device_overrides must be an array, got {}", v.kind()))?;
+            cfg.device_overrides =
+                arr.iter().map(DeviceOverride::from_json).collect::<Result<_, _>>()?;
         }
         if let Some(r) = j.get("replace") {
             let c = &mut cfg.replace;
@@ -691,7 +915,8 @@ impl SimConfig {
 }
 
 pub use presets::{
-    baseline_mqsim_macsim, client_ssd, mqms_enterprise, pm9a3_like, preset, PRESET_NAMES,
+    baseline_mqsim_macsim, client_ssd, device_mix, device_patch, mqms_enterprise, pm9a3_like,
+    preset, DEVICE_MIX_NAMES, DEVICE_PATCH_NAMES, PRESET_NAMES,
 };
 
 impl SimConfig {
@@ -854,6 +1079,90 @@ mod tests {
         assert_eq!(re.devices, 4);
         assert_eq!(re.stripe_sectors, cfg.stripe_sectors);
         assert_eq!(cfg, re);
+    }
+
+    #[test]
+    fn device_overrides_roundtrip_resolve_and_validate() {
+        let mut cfg = mqms_enterprise();
+        cfg.devices = 4;
+        cfg.device_overrides = device_mix("mixed", 4).unwrap();
+        cfg.validate().unwrap();
+        // Resolution: device 0 is the enterprise patch, the rest client.
+        assert_eq!(cfg.device_ssd(0).t_read_ns, 45_000);
+        assert_eq!(cfg.device_ssd(1).nvme_queues, 2);
+        assert_eq!(cfg.device_ssd(1).queue_depth, 16);
+        // Unpatched fields keep the base value on every device.
+        assert_eq!(cfg.device_ssd(1).page_bytes, cfg.ssd.page_bytes);
+        // JSON round-trip preserves the override list exactly.
+        let re = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, re);
+        // Symmetric configs omit the key entirely.
+        assert!(mqms_enterprise().to_json().get("device_overrides").is_none());
+        // A named preset in an entry resolves, with explicit fields on top.
+        let j = Json::parse(
+            r#"{"devices": 2, "device_overrides": [
+                {"device": 1, "preset": "client", "queue_depth": 8}]}"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.device_ssd(1).nvme_queues, 2);
+        assert_eq!(cfg.device_ssd(1).queue_depth, 8);
+        let bad = Json::parse(r#"{"device_overrides": [{"device": 0, "preset": "nope"}]}"#)
+            .unwrap();
+        assert!(SimConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn bad_device_overrides_rejected() {
+        let base = {
+            let mut c = mqms_enterprise();
+            c.devices = 2;
+            c
+        };
+        // Index beyond the array.
+        let mut c = base.clone();
+        c.device_overrides =
+            vec![DeviceOverride { device: 2, patch: SsdPatch::default() }];
+        assert!(c.validate().is_err());
+        // Duplicate device index.
+        let mut c = base.clone();
+        c.device_overrides = vec![
+            DeviceOverride { device: 0, patch: SsdPatch::default() },
+            DeviceOverride { device: 0, patch: SsdPatch::default() },
+        ];
+        assert!(c.validate().is_err());
+        // A patch that resolves to an invalid per-device config.
+        let mut c = base.clone();
+        c.device_overrides = vec![DeviceOverride {
+            device: 1,
+            patch: SsdPatch { op_ratio: Some(0.01), ..SsdPatch::default() },
+        }];
+        assert!(c.validate().is_err());
+        let mut c = base.clone();
+        c.device_overrides = vec![DeviceOverride {
+            device: 0,
+            patch: SsdPatch { queue_depth: Some(0), ..SsdPatch::default() },
+        }];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn device_mix_names_resolve() {
+        for name in DEVICE_MIX_NAMES {
+            assert!(device_mix(name, 4).is_some(), "{name}");
+        }
+        assert!(device_mix("nope", 4).is_none());
+        assert!(device_mix("uniform", 4).unwrap().is_empty());
+        let mixed = device_mix("mixed", 4).unwrap();
+        assert_eq!(mixed.len(), 4);
+        assert_eq!(mixed[0].patch, device_patch("enterprise").unwrap());
+        assert_eq!(mixed[3].patch, device_patch("client").unwrap());
+        // Fingerprints make resolved devices distinguishable in summaries.
+        let mut cfg = mqms_enterprise();
+        cfg.devices = 4;
+        cfg.device_overrides = mixed;
+        assert_ne!(cfg.device_ssd(0).fingerprint(), cfg.device_ssd(1).fingerprint());
+        assert_eq!(cfg.device_ssd(1).fingerprint(), cfg.device_ssd(2).fingerprint());
     }
 
     #[test]

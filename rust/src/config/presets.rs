@@ -71,6 +71,7 @@ pub fn mqms_enterprise() -> SimConfig {
         stripe_sectors: 64,
         gpus: 1,
         placement: crate::gpu::placement::Placement::RoundRobin,
+        device_overrides: Vec::new(),
         replace: ReplaceConfig::default(),
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
@@ -103,6 +104,7 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         stripe_sectors: 64,
         gpus: 1,
         placement: crate::gpu::placement::Placement::RoundRobin,
+        device_overrides: Vec::new(),
         replace: ReplaceConfig::default(),
         ssd,
         gpu: default_gpu(),
@@ -149,6 +151,75 @@ pub fn pm9a3_like() -> SimConfig {
     cfg.ssd.channel_mbps = 1600.0;
     cfg
 }
+
+/// Named per-device override patch for heterogeneous arrays: the
+/// device-class ends of the §2 comparison, as sparse patches over whatever
+/// base geometry the preset supplies.
+///
+/// * `enterprise` — deep queues and PM9A3-class timing: the device absorbs
+///   dense request bursts at full flash parallelism.
+/// * `client` — few, shallow queues, slower flash, a partial mapping-table
+///   cache: the §2 client controller that saturates an order of magnitude
+///   below enterprise devices on 4 KB random workloads.
+pub fn device_patch(name: &str) -> Option<SsdPatch> {
+    match name {
+        "enterprise" => Some(SsdPatch {
+            nvme_queues: Some(64),
+            queue_depth: Some(256),
+            t_read_ns: Some(45_000),
+            t_program_ns: Some(550_000),
+            channel_mbps: Some(1600.0),
+            ..SsdPatch::default()
+        }),
+        "client" => Some(SsdPatch {
+            nvme_queues: Some(2),
+            queue_depth: Some(16),
+            t_read_ns: Some(65_000),
+            t_program_ns: Some(900_000),
+            channel_mbps: Some(800.0),
+            map_miss_rate: Some(0.35),
+            ..SsdPatch::default()
+        }),
+        _ => None,
+    }
+}
+
+/// All named device patches (JSON `"preset"` keys, help text).
+pub const DEVICE_PATCH_NAMES: [&str; 2] = ["enterprise", "client"];
+
+/// Named whole-array override bundles — the campaign's `device_mixes` axis.
+///
+/// * `uniform` — no overrides: the historical symmetric array (callers keep
+///   any overrides a config file already carries).
+/// * `mixed` — device 0 `enterprise`, every other device `client`: the
+///   asymmetric-backend regime where allocation decisions dominate.
+/// * `enterprise` / `client` — every device patched to that class.
+pub fn device_mix(name: &str, devices: u32) -> Option<Vec<DeviceOverride>> {
+    let all = |patch: SsdPatch| -> Vec<DeviceOverride> {
+        (0..devices).map(|d| DeviceOverride { device: d, patch: patch.clone() }).collect()
+    };
+    match name {
+        "uniform" => Some(Vec::new()),
+        "enterprise" => device_patch("enterprise").map(all),
+        "client" => device_patch("client").map(all),
+        "mixed" => {
+            let ent = device_patch("enterprise")?;
+            let cli = device_patch("client")?;
+            Some(
+                (0..devices)
+                    .map(|d| DeviceOverride {
+                        device: d,
+                        patch: if d == 0 { ent.clone() } else { cli.clone() },
+                    })
+                    .collect(),
+            )
+        }
+        _ => None,
+    }
+}
+
+/// All named device mixes (campaign axis validation, help text).
+pub const DEVICE_MIX_NAMES: [&str; 4] = ["uniform", "mixed", "enterprise", "client"];
 
 /// Client-SSD preset: the §2 observation — even configured with
 /// enterprise-class *physical* parameters, a client-style controller (static

@@ -8,7 +8,11 @@
 //! through the *same* static cost model admission-time placement used
 //! ([`crate::gpu::placement::PlacementCtx::record_cost`]), so "progress" is
 //! measured in predicted-nanosecond units and the admission-time estimate is
-//! the natural prior. Per shard the monitor maintains:
+//! the natural prior. Since the cost model sums I/O service over the
+//! *resolved* per-device configs, a heterogeneous array
+//! (`device_overrides`) shapes both the prior and every projection — drift
+//! is measured against the asymmetric backend the run actually has, not an
+//! idealized symmetric one. Per shard the monitor maintains:
 //!
 //! * an EWMA-smoothed **service rate** (cost units retired per simulated ns),
 //! * a **projected end time** (`now + remaining / rate`, frozen at the value

@@ -14,9 +14,10 @@
 //!   compute.
 //! * [`Placement::PerfAware`] — longest-predicted-first onto the GPU with
 //!   the earliest predicted end time, where each workload's prediction
-//!   combines its compute estimate with an I/O service estimate derived
-//!   from the array shape (device count, per-device NVMe queue capacity,
-//!   flash parallelism). This is the paper's performance-aware allocation
+//!   combines its compute estimate with an I/O service estimate summed over
+//!   the resolved per-device shapes (NVMe queue capacity, flash
+//!   parallelism, timing — heterogeneous arrays priced as the mix they
+//!   are). This is the paper's performance-aware allocation
 //!   applied to the compute side: placement decisions follow predicted
 //!   end-times rather than arrival order.
 //!
@@ -68,41 +69,49 @@ impl fmt::Display for Placement {
     }
 }
 
-/// The system shape a placement estimate is computed against.
+/// The system shape a placement estimate is computed against. Built once
+/// per run from the *resolved* per-device configs, so heterogeneous arrays
+/// (`device_overrides`) price I/O through the actual mix of device shapes
+/// and timings instead of one shape × N — a {1 enterprise + 3 client} array
+/// reads as the sum of its parts to both admission-time placement and the
+/// online monitor's drift projection.
 #[derive(Debug, Clone, Copy)]
 pub struct PlacementCtx {
     /// Devices in the striped array.
     pub devices: u32,
-    /// NVMe capacity of one device (queues × depth): how much concurrency a
-    /// device absorbs before requests queue behind each other.
-    pub queue_slots: u32,
-    /// Flash planes of one device (the service-parallelism ceiling).
-    pub planes_per_device: u32,
     pub cores: u32,
     pub blocks_per_core: u32,
     pub clock_mhz: f64,
-    /// Per-request flash service proxy (tR), ns.
-    pub read_ns: u64,
+    /// Aggregate I/O service rate of the array, requests per ns:
+    /// Σ over devices of `min(NVMe queue slots, flash planes) / t_read` —
+    /// each device contributes its own concurrency ceiling (queue capacity
+    /// vs plane parallelism) at its own flash timing.
+    service_rate: f64,
 }
 
 impl PlacementCtx {
     pub fn from_config(cfg: &SimConfig) -> Self {
+        let devices = cfg.devices.max(1);
+        let mut service_rate = 0.0f64;
+        for d in 0..devices {
+            let ssd = cfg.device_ssd(d);
+            let slots = ssd.nvme_queues.saturating_mul(ssd.queue_depth).max(1);
+            let par = slots.min(ssd.total_planes().max(1)).max(1);
+            service_rate += par as f64 / ssd.t_read_ns.max(1) as f64;
+        }
         Self {
-            devices: cfg.devices.max(1),
-            queue_slots: cfg.ssd.nvme_queues.saturating_mul(cfg.ssd.queue_depth).max(1),
-            planes_per_device: cfg.ssd.total_planes().max(1),
+            devices,
             cores: cfg.gpu.cores.max(1),
             blocks_per_core: cfg.gpu.blocks_per_core.max(1),
             clock_mhz: cfg.gpu.clock_mhz.max(1.0),
-            read_ns: cfg.ssd.t_read_ns.max(1),
+            service_rate,
         }
     }
 
-    /// Requests the storage side services concurrently: per-device
-    /// parallelism is bounded by both NVMe queue capacity and flash planes,
-    /// and the striped array multiplies it by the device count.
-    fn service_parallelism(&self) -> f64 {
-        (self.devices as f64) * (self.queue_slots.min(self.planes_per_device).max(1) as f64)
+    /// Requests per ns the array retires at full concurrency (tests and
+    /// introspection; the estimate divides request counts by it).
+    pub fn service_rate(&self) -> f64 {
+        self.service_rate
     }
 
     /// Cost of a single kernel record under this system shape — the unit the
@@ -119,7 +128,7 @@ impl PlacementCtx {
         CostEstimate {
             compute_ns: compute_cycles / self.clock_mhz * 1_000.0,
             io_requests,
-            io_ns: io_requests * self.read_ns as f64 / self.service_parallelism(),
+            io_ns: io_requests / self.service_rate,
         }
     }
 }
@@ -160,7 +169,7 @@ pub fn estimate(trace: &Trace, ctx: &PlacementCtx) -> CostEstimate {
         io_requests += rec.weight * (rec.reads as u64 + rec.writes as u64) as f64;
     }
     let compute_ns = compute_cycles / ctx.clock_mhz * 1_000.0;
-    let io_ns = io_requests * ctx.read_ns as f64 / ctx.service_parallelism();
+    let io_ns = io_requests / ctx.service_rate;
     CostEstimate { compute_ns, io_requests, io_ns }
 }
 
@@ -323,5 +332,41 @@ mod tests {
         // More devices → more service parallelism → smaller I/O estimate.
         let eb4 = estimate(&big, &ctx4);
         assert!(eb4.io_ns < eb.io_ns);
+    }
+
+    #[test]
+    fn hetero_overrides_reprice_the_io_estimate() {
+        use crate::config::{self, DeviceOverride, SsdPatch};
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = 4;
+        let uniform = PlacementCtx::from_config(&cfg);
+        // {1 enterprise + 3 client}: far less aggregate service capability
+        // than 4 base devices, so the same trace predicts more I/O time.
+        let mut mixed_cfg = cfg.clone();
+        mixed_cfg.device_overrides = config::device_mix("mixed", 4).unwrap();
+        mixed_cfg.validate().unwrap();
+        let mixed = PlacementCtx::from_config(&mixed_cfg);
+        assert!(mixed.service_rate() < uniform.service_rate());
+        let trace = crate::workloads::bert::generate(0.0002, 3);
+        assert!(estimate(&trace, &mixed).io_ns > estimate(&trace, &uniform).io_ns);
+        // Identity overrides resolve to the exact same aggregate rate, so a
+        // uniformly-overridden array prices identically to no overrides.
+        let mut id_cfg = cfg.clone();
+        id_cfg.device_overrides = (0..4)
+            .map(|d| DeviceOverride {
+                device: d,
+                patch: SsdPatch {
+                    t_read_ns: Some(cfg.ssd.t_read_ns),
+                    queue_depth: Some(cfg.ssd.queue_depth),
+                    ..SsdPatch::default()
+                },
+            })
+            .collect();
+        id_cfg.validate().unwrap();
+        let id = PlacementCtx::from_config(&id_cfg);
+        assert_eq!(id.service_rate(), uniform.service_rate());
+        let (a, b) = (estimate(&trace, &id), estimate(&trace, &uniform));
+        assert_eq!(a.io_ns, b.io_ns);
+        assert_eq!(a.compute_ns, b.compute_ns);
     }
 }

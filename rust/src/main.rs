@@ -17,11 +17,14 @@
 //! ```text
 //! mqms run --workload bert --scale 0.01 --preset mqms
 //! mqms run --workload rand4k --devices 4
+//! mqms run --workload rand4k --devices 4 --device-mix mixed
 //! mqms run --workload bert,gpt2,resnet50 --gpus 2 --placement perf-aware
 //! mqms run --workload bert,gpt2 --gpus 2 --placement perf --replace
 //! mqms campaign --presets mqms,baseline --workloads bert,rand4k --devices 1,2,4
 //! mqms campaign --workloads bert --gpus 1,2,4 --placements rr,perf
 //! mqms campaign --workloads bert --gpus 2 --placements perf --replace off,on --csv out.csv
+//! mqms campaign --workloads rand4k --devices 4 --device-mixes uniform,mixed --csv out.csv
+//! mqms campaign --workloads rand4k --rw-ratios 0,0.5,1 --op-ratios 0.7,0.875
 //! mqms sweep --scale 0.005
 //! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
 //! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
@@ -83,7 +86,7 @@ fn usage() -> String {
      COMMANDS:\n\
        run       run workloads through a configuration, print the report\n\
        ab        A/B two presets on the same workloads, print deltas\n\
-       campaign  run a {preset x workload x scale x devices} matrix in parallel\n\
+       campaign  run a {preset x workload x scale x devices x mix x ...} matrix in parallel\n\
        sweep     policy sweep {rr,lc} x {CWDP,CDWP,WCDP} (paper §4)\n\
        bench     hot-path regression benchmark, emits BENCH_PR2.json\n\
        trace     generate a workload trace file\n\
@@ -145,6 +148,11 @@ fn cmd_run(argv: &[String]) -> CliResult {
         .opt("seed", Some("42"), "rng seed")
         .opt("devices", None, "override device count of the striped array")
         .opt("stripe", None, "override stripe granularity in sectors")
+        .opt(
+            "device-mix",
+            None,
+            "named per-device override mix: uniform | mixed | enterprise | client",
+        )
         .opt("gpus", None, "override GPU shard count of the compute side")
         .opt("placement", None, "workload→GPU placement: rr | ll | perf")
         .flag("replace", "enable dynamic re-placement (queued-kernel migration)")
@@ -164,6 +172,16 @@ fn cmd_run(argv: &[String]) -> CliResult {
     }
     if args.get("stripe").is_some() {
         cfg.stripe_sectors = args.get_u64("stripe").map_err(|e| e.to_string())?;
+    }
+    if let Some(m) = args.get("device-mix") {
+        let mix = config::device_mix(m, cfg.devices).ok_or_else(|| {
+            format!("unknown device mix `{m}` (valid: {})", config::DEVICE_MIX_NAMES.join(", "))
+        })?;
+        // `uniform` is the no-op mix: keep any overrides the preset/config
+        // file already carries instead of clearing them.
+        if m != "uniform" {
+            cfg.device_overrides = mix;
+        }
     }
     if args.get("gpus").is_some() {
         let v = args.get_u64("gpus").map_err(|e| e.to_string())?;
@@ -372,7 +390,8 @@ fn parse_list<T>(raw: &str, what: &str, f: impl Fn(&str) -> Option<T>) -> Result
 fn cmd_campaign(argv: &[String]) -> CliResult {
     let spec = Args::new(
         "mqms campaign",
-        "expand a {preset x workload x scale x devices} matrix, run cells in parallel",
+        "expand a {preset x workload x scale x devices x device-mix x gpus x placement x \
+         replace x rw-ratio x op-ratio} matrix, run cells in parallel",
     )
     .opt("presets", Some("mqms,baseline"), "comma-separated presets / config files")
     .opt(
@@ -382,9 +401,16 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     )
     .opt("scales", Some("0.005"), "comma-separated scale factors")
     .opt("devices", Some("1,2,4"), "comma-separated device counts")
+    .opt(
+        "device-mixes",
+        Some("uniform"),
+        "comma-separated device mixes (uniform | mixed | enterprise | client)",
+    )
     .opt("gpus", Some("1"), "comma-separated GPU shard counts")
     .opt("placements", Some("rr"), "comma-separated placements (rr | ll | perf)")
     .opt("replace", Some("off"), "comma-separated dynamic re-placement values (off | on)")
+    .opt("rw-ratios", None, "comma-separated read fractions in [0,1] re-splitting every workload")
+    .opt("op-ratios", None, "comma-separated ssd op_ratio values (GC-pressure sweep)")
     .opt("seed", Some("42"), "root rng seed (every cell runs with it)")
     .opt("threads", Some("0"), "worker threads (0 = one per core)")
     .opt("out-dir", None, "write one JSON report per cell plus campaign.json here")
@@ -412,9 +438,20 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         devices: parse_list(args.get("devices").unwrap(), "device count", |s| {
             s.parse::<u32>().ok()
         })?,
+        device_mixes: parse_list(args.get("device-mixes").unwrap(), "device mix", |s| {
+            Some(s.to_string())
+        })?,
         gpus: parse_list(args.get("gpus").unwrap(), "gpu count", |s| s.parse::<u32>().ok())?,
         placements: parse_list(args.get("placements").unwrap(), "placement", Placement::parse)?,
         replace: parse_list(args.get("replace").unwrap(), "replace value", parse_on_off)?,
+        rw_ratios: match args.get("rw-ratios") {
+            Some(raw) => parse_list(raw, "rw ratio", |s| s.parse::<f64>().ok())?,
+            None => Vec::new(),
+        },
+        op_ratios: match args.get("op-ratios") {
+            Some(raw) => parse_list(raw, "op ratio", |s| s.parse::<f64>().ok())?,
+            None => Vec::new(),
+        },
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         threads: args.get_u64("threads").map_err(|e| e.to_string())? as usize,
         sampled: !args.get_flag("no-sample"),

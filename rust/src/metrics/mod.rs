@@ -25,6 +25,12 @@ pub struct SsdSummary {
     /// summaries can be merged into a correct aggregate IOPS.
     pub first_submit_ns: Option<SimTime>,
     pub last_complete_ns: SimTime,
+    /// True when this summary was merged from several devices: its p50/p99
+    /// fields are then worst-device *upper bounds*, not pooled quantiles
+    /// (per-device histograms are not mergeable from summaries). Surfaced
+    /// as a `quantile_merge` note in the JSON so CSV/report consumers don't
+    /// read the merged "p50" as a true median.
+    pub merged_quantiles: bool,
 }
 
 impl SsdSummary {
@@ -50,6 +56,7 @@ impl SsdSummary {
             write_stalls: ssd.metrics.write_stalls,
             first_submit_ns: ssd.metrics.first_submit_ns,
             last_complete_ns: ssd.metrics.last_complete_ns,
+            merged_quantiles: false,
         }
     }
 
@@ -60,6 +67,8 @@ impl SsdSummary {
     /// bound — the per-device histograms are not mergeable from summaries,
     /// so the merged "p50" is the worst device's median, not the median of
     /// the pooled population; read per-device entries for true quantiles).
+    /// Merged summaries mark this via `merged_quantiles`, which the JSON
+    /// surfaces as `"quantile_merge": "max-upper-bound"`.
     ///
     /// Merging a single summary returns it unchanged, so a 1-device array
     /// reports exactly what the bare device would.
@@ -70,7 +79,7 @@ impl SsdSummary {
         if parts.len() == 1 {
             return parts[0].clone();
         }
-        let mut m = SsdSummary::default();
+        let mut m = SsdSummary { merged_quantiles: true, ..SsdSummary::default() };
         let mut weighted_resp = 0.0;
         for p in parts {
             m.completed += p.completed;
@@ -104,7 +113,7 @@ impl SsdSummary {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut pairs = vec![
             ("iops", self.iops.into()),
             ("mean_response_ns", self.mean_response_ns.into()),
             ("read_p50_ns", self.read_p50_ns.into()),
@@ -120,7 +129,13 @@ impl SsdSummary {
             ("write_stalls", self.write_stalls.into()),
             ("first_submit_ns", self.first_submit_ns.map(Json::from).unwrap_or(Json::Null)),
             ("last_complete_ns", self.last_complete_ns.into()),
-        ])
+        ];
+        // Only merged summaries carry the note, so single-device reports
+        // (where the quantiles are exact) stay byte-identical.
+        if self.merged_quantiles {
+            pairs.push(("quantile_merge", "max-upper-bound".into()));
+        }
+        Json::from_pairs(pairs)
     }
 }
 
@@ -303,6 +318,39 @@ mod tests {
         // Completion-weighted mean: (100·10k + 300·30k)/400 = 25k.
         assert!((m.mean_response_ns - 25_000.0).abs() < 1e-6);
         assert_eq!(SsdSummary::merge(&[]).completed, 0);
+    }
+
+    #[test]
+    fn merged_quantile_note_and_key_names_are_pinned() {
+        let mk = |completed: u64, p50: u64| SsdSummary {
+            completed,
+            read_p50_ns: p50,
+            write_p50_ns: p50,
+            read_p99_ns: 2 * p50,
+            write_p99_ns: 2 * p50,
+            first_submit_ns: Some(0),
+            last_complete_ns: 1_000_000,
+            ..SsdSummary::default()
+        };
+        // Single-device summaries: exact quantiles, pinned key names, and
+        // NO merge note (so 1-device reports stay byte-identical).
+        let single = SsdSummary::merge(std::slice::from_ref(&mk(10, 5_000)));
+        assert!(!single.merged_quantiles);
+        let sj = single.to_json();
+        for key in ["read_p50_ns", "write_p50_ns", "read_p99_ns", "write_p99_ns"] {
+            assert!(sj.get(key).is_some(), "quantile key `{key}` must not drift");
+        }
+        assert!(sj.get("quantile_merge").is_none(), "exact quantiles carry no note");
+        // Merged summaries keep the same value keys but flag them as
+        // worst-device upper bounds.
+        let merged = SsdSummary::merge(&[mk(10, 5_000), mk(10, 9_000)]);
+        assert!(merged.merged_quantiles);
+        assert_eq!(merged.read_p50_ns, 9_000, "merged p50 is the worst device's");
+        let mj = merged.to_json();
+        assert_eq!(mj.get("quantile_merge").unwrap().as_str(), Some("max-upper-bound"));
+        for key in ["read_p50_ns", "write_p50_ns", "read_p99_ns", "write_p99_ns"] {
+            assert!(mj.get(key).is_some(), "quantile key `{key}` must not drift");
+        }
     }
 
     #[test]

@@ -1,5 +1,10 @@
 //! Multi-device striping layer: one logical address space over `N ≥ 1`
-//! identical [`SsdSim`] devices (a ZnG-style flash array).
+//! [`SsdSim`] devices (a ZnG-style flash array). Devices share the base
+//! `ssd` config block by default; sparse `device_overrides` patches make
+//! the array heterogeneous (e.g. one enterprise device striped with client
+//! devices) — each device is built from its own resolved config, and the
+//! striped capacity is the *minimum* per-device capacity so the round-robin
+//! stripe map stays total over every device.
 //!
 //! Global logical sectors are striped round-robin over the devices in
 //! `stripe_sectors`-sized stripes: stripe `s` lives on device `s % N` at
@@ -66,8 +71,9 @@ pub struct SsdArray {
     devs: Vec<SsdSim>,
     n: u64,
     stripe: u64,
-    /// Usable sectors per device (rounded down to a stripe multiple when
-    /// `n > 1` so the stripe map is total; the full device otherwise).
+    /// Usable sectors per device: the minimum device capacity, rounded down
+    /// to a stripe multiple when `n > 1` so the stripe map is total over
+    /// every (possibly heterogeneous) device; the full device otherwise.
     dev_sectors: u64,
     next_split_id: u64,
     /// parent id → merge state, for split requests in flight.
@@ -97,10 +103,13 @@ impl SsdArray {
             .map(|d| {
                 // A 1-wide array must equal the standalone simulator exactly.
                 let seed = if n == 1 { cfg.seed } else { device_seed(cfg.seed, d) };
-                SsdSim::new(&cfg.ssd, seed)
+                SsdSim::new(&cfg.device_ssd(d), seed)
             })
             .collect();
-        let raw = devs[0].logical_sectors();
+        // Heterogeneous devices may expose different capacities; the stripe
+        // map addresses every device uniformly, so the usable per-device
+        // range is the smallest one (identical to devs[0] when symmetric).
+        let raw = devs.iter().map(SsdSim::logical_sectors).min().expect("devices >= 1");
         let dev_sectors = if n == 1 { raw } else { raw - raw % stripe };
         Self {
             devs,
@@ -495,6 +504,32 @@ mod tests {
             let total: u32 = w.arr.chunks(lsn, sectors).iter().map(|c| c.2).sum();
             assert_eq!(total, sectors);
         }
+    }
+
+    #[test]
+    fn hetero_overrides_build_per_device_and_cap_at_min() {
+        use crate::config::{DeviceOverride, SsdPatch};
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = 4;
+        cfg.stripe_sectors = 8;
+        // Device 2 has half the planes: a genuinely smaller device.
+        cfg.device_overrides = vec![DeviceOverride {
+            device: 2,
+            patch: SsdPatch { planes: Some(2), ..SsdPatch::default() },
+        }];
+        cfg.validate().unwrap();
+        let arr = SsdArray::new(&cfg);
+        let small = crate::ssd::SsdSim::new(&cfg.device_ssd(2), 1).logical_sectors();
+        let big = crate::ssd::SsdSim::new(&cfg.device_ssd(0), 1).logical_sectors();
+        assert!(small < big, "patched device must actually shrink");
+        // Striped capacity follows the smallest device on every device.
+        assert_eq!(arr.logical_sectors(), 4 * (small - small % 8));
+        // And a mixed array still runs a striped write to completion.
+        let mut w = ArrayWorld { arr };
+        let mut e: Engine<ArrayWorld> = Engine::new();
+        w.arr.submit(wreq(1, 6, 4), &mut e.queue).unwrap();
+        assert!(e.run(&mut w).quiescent);
+        assert_eq!(w.arr.drain_completions().len(), 1);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! * `alloc = Dynamic` — write pages land on the least-loaded plane
 //!   ([`ftl::Allocator`], §2.1) instead of the static CWDP/CDWP/WCDP plane.
 //! * `mapping = Sector` — fine-grained mapping coalesces small writes into
-//!   open pages ([`SsdSim::flush_buffer`]) instead of expanding each into a
-//!   read-modify-write pair (§2.2).
+//!   open pages (`SsdSim::flush_buffer`, a private path) instead of
+//!   expanding each into a read-modify-write pair (§2.2).
 //!
 //! The simulator is event-driven: drive it by submitting [`IoRequest`]s and
 //! dispatching [`SsdEvent`]s from a [`crate::sim::EventQueue`]; completions
@@ -43,9 +43,9 @@ pub enum SsdEvent {
     /// HIL fetch-pipeline tick: arbitrate SQs and process one command.
     Fetch,
     /// FTL processing latency elapsed: hand ready transactions to the TSU.
-    /// Carries a token into the device's [`EnqueuePool`]; the id list lives
-    /// in pooled storage that is recycled after consumption, so the
-    /// steady-state FTL→TSU handoff allocates nothing.
+    /// Carries a token into the device's `EnqueuePool` (private); the id
+    /// list lives in pooled storage that is recycled after consumption, so
+    /// the steady-state FTL→TSU handoff allocates nothing.
     Enqueue(u32),
     /// Flash back-end event.
     Tsu(TsuEvent),

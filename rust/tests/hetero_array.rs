@@ -1,0 +1,209 @@
+//! Heterogeneous-array integration tests: the tentpole invariants of the
+//! per-device override layer.
+//!
+//! * No overrides and identity overrides (patches restating the base
+//!   values) are byte-identical pass-throughs — the symmetric array is
+//!   untouched by the heterogeneity machinery.
+//! * Override validation rejects bad indices, duplicates, and values that
+//!   resolve to invalid per-device configs.
+//! * Campaigns over a mixed array stay byte-identical for any worker
+//!   thread count, and the mixed cell really differs from the uniform one.
+//! * `gpus = 1` stays placement-invariant even on an asymmetric array.
+
+use mqms::bench_support as bs;
+use mqms::campaign::{self, CampaignSpec};
+use mqms::config::{self, DeviceOverride, SsdPatch};
+use mqms::coordinator::CoSim;
+use mqms::gpu::placement::Placement;
+use mqms::workloads::{self, synth::SynthPattern, WorkloadSpec};
+
+/// Patches that restate the base config's own values on every device.
+fn identity_overrides(cfg: &config::SimConfig) -> Vec<DeviceOverride> {
+    (0..cfg.devices)
+        .map(|d| DeviceOverride {
+            device: d,
+            patch: SsdPatch {
+                channels: Some(cfg.ssd.channels),
+                planes: Some(cfg.ssd.planes),
+                op_ratio: Some(cfg.ssd.op_ratio),
+                t_read_ns: Some(cfg.ssd.t_read_ns),
+                t_program_ns: Some(cfg.ssd.t_program_ns),
+                nvme_queues: Some(cfg.ssd.nvme_queues),
+                queue_depth: Some(cfg.ssd.queue_depth),
+                ..SsdPatch::default()
+            },
+        })
+        .collect()
+}
+
+fn synth_run(devices: u32, overrides: Vec<DeviceOverride>) -> String {
+    let mut cfg = config::mqms_enterprise();
+    cfg.devices = devices;
+    cfg.seed = 42;
+    cfg.device_overrides = overrides;
+    cfg.validate().unwrap();
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::synthetic(
+        "rand4k",
+        SynthPattern::random_4k_write(2_000).with_queue_depth(32),
+    ));
+    sim.run().to_json_deterministic().pretty()
+}
+
+#[test]
+fn identity_overrides_are_byte_identical_passthrough() {
+    for devices in [1u32, 4] {
+        let base = synth_run(devices, Vec::new());
+        let cfg = {
+            let mut c = config::mqms_enterprise();
+            c.devices = devices;
+            c
+        };
+        let with = synth_run(devices, identity_overrides(&cfg));
+        assert_eq!(
+            base, with,
+            "identity overrides on {devices} device(s) must be a byte-identical pass-through"
+        );
+    }
+}
+
+#[test]
+fn uniform_mix_run_matches_no_override_run() {
+    // The hetero study's own "uniform" mix goes through the same resolution
+    // path and must reproduce the no-override co-simulation exactly.
+    let via_mix = bs::hetero_run(2, 4, Placement::PerfAware, "uniform", 42);
+    let plain = {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpus = 2;
+        cfg.devices = 4;
+        cfg.placement = Placement::PerfAware;
+        cfg.gpu.dram_bytes = 0;
+        cfg.gpu.pipeline_depth = 4;
+        cfg.seed = 42;
+        bs::run_bundle(cfg, &bs::asym_io_bundle())
+    };
+    assert_eq!(
+        via_mix.to_json_deterministic().pretty(),
+        plain.to_json_deterministic().pretty(),
+        "the uniform mix must be a strict no-op"
+    );
+}
+
+#[test]
+fn override_validation_rejects_bad_shapes() {
+    let mut cfg = config::mqms_enterprise();
+    cfg.devices = 2;
+    // Out-of-range device index.
+    cfg.device_overrides = vec![DeviceOverride { device: 5, patch: SsdPatch::default() }];
+    assert!(cfg.validate().is_err());
+    // Duplicate index.
+    cfg.device_overrides = vec![
+        DeviceOverride { device: 1, patch: SsdPatch::default() },
+        DeviceOverride { device: 1, patch: SsdPatch::default() },
+    ];
+    assert!(cfg.validate().is_err());
+    // Patch resolving to an invalid device config.
+    cfg.device_overrides = vec![DeviceOverride {
+        device: 0,
+        patch: SsdPatch { op_ratio: Some(0.001), ..SsdPatch::default() },
+    }];
+    assert!(cfg.validate().is_err());
+    cfg.device_overrides = vec![DeviceOverride {
+        device: 0,
+        patch: SsdPatch { nvme_queues: Some(0), ..SsdPatch::default() },
+    }];
+    assert!(cfg.validate().is_err());
+    // A valid mix passes and survives a JSON round-trip.
+    cfg.device_overrides = config::device_mix("mixed", 2).unwrap();
+    cfg.validate().unwrap();
+    let re = config::SimConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(cfg, re);
+}
+
+#[test]
+fn mixed_campaign_is_thread_count_invariant_and_asymmetric() {
+    let summary = |threads: usize| {
+        let spec = CampaignSpec {
+            presets: vec!["mqms".into()],
+            workloads: vec!["rand4k".into()],
+            scales: vec![0.001],
+            devices: vec![2],
+            device_mixes: vec!["uniform".into(), "mixed".into()],
+            seed: 7,
+            threads,
+            sampled: true,
+            ..CampaignSpec::default()
+        };
+        let results = campaign::run(&spec).unwrap();
+        assert_eq!(results.len(), 2);
+        // The mixed backend must actually change the outcome...
+        assert_ne!(
+            results[0].1.end_ns, results[1].1.end_ns,
+            "mixed cell must not reproduce the uniform cell"
+        );
+        // ...and every cell still attributes cleanly.
+        for (cell, r) in &results {
+            assert_eq!(r.misrouted, 0, "{}", cell.label());
+            assert!(r.ssd.completed > 0, "{}", cell.label());
+        }
+        campaign::summary_json(&results).pretty()
+    };
+    let one = summary(1);
+    assert_eq!(one, summary(4), "campaign output must be thread-count-invariant");
+    // The merged summary carries per-device config fingerprints: uniform
+    // cells repeat one fingerprint, the mixed cell mixes two.
+    let j = mqms::util::jsonlite::Json::parse(&one).unwrap();
+    let cells = j.get("cells").unwrap().as_arr().unwrap();
+    let fps = |i: usize| -> Vec<String> {
+        cells[i]
+            .get("device_configs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|f| f.as_str().unwrap().to_string())
+            .collect()
+    };
+    let (uni, mixed) = (fps(0), fps(1));
+    assert_eq!(uni.len(), 2);
+    assert_eq!(uni[0], uni[1], "uniform cell devices are clones");
+    assert_ne!(mixed[0], mixed[1], "mixed cell must be visibly heterogeneous");
+}
+
+#[test]
+fn gpus1_is_placement_invariant_on_a_mixed_array() {
+    let run = |placement: Placement| {
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = 4;
+        cfg.gpus = 1;
+        cfg.placement = placement;
+        cfg.gpu.dram_bytes = 0;
+        cfg.seed = 42;
+        cfg.device_overrides = config::device_mix("mixed", 4).unwrap();
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::trace(
+            "backprop",
+            workloads::rodinia::backprop(0.002, 1),
+        ));
+        sim.add_workload(WorkloadSpec::trace(
+            "hotspot",
+            workloads::rodinia::hotspot(0.002, 2),
+        ));
+        sim.run().to_json_deterministic().pretty()
+    };
+    let rr = run(Placement::RoundRobin);
+    for p in [Placement::LeastLoaded, Placement::PerfAware] {
+        assert_eq!(rr, run(p), "gpus=1 must stay placement-invariant on a mixed array");
+    }
+}
+
+#[test]
+fn mixed_array_multi_gpu_run_is_deterministic() {
+    let run = |seed: u64| {
+        bs::hetero_run(2, 4, Placement::PerfAware, "mixed", seed)
+            .to_json_deterministic()
+            .pretty()
+    };
+    assert_eq!(run(9), run(9), "same seed must give a byte-identical mixed-array report");
+    assert_ne!(run(9), run(10));
+}

@@ -28,9 +28,12 @@ fn devices1_cell_reproduces_single_device_run() {
         workload: "rand4k".to_string(),
         scale: 0.002,
         devices: 1,
+        device_mix: "uniform".to_string(),
         gpus: 1,
         placement: mqms::gpu::placement::Placement::RoundRobin,
         replace: false,
+        rw_ratio: None,
+        op_ratio: None,
     };
     let from_campaign = campaign::run_cell(&cell, 42, true).unwrap();
 

@@ -128,9 +128,12 @@ fn campaign_sweeps_gpus_and_placements() {
         workloads: vec!["backprop".into()],
         scales: vec![0.002],
         devices: vec![1],
+        device_mixes: vec!["uniform".into()],
         gpus: vec![1, 2],
         placements: vec![Placement::RoundRobin, Placement::PerfAware],
         replace: vec![false],
+        rw_ratios: Vec::new(),
+        op_ratios: Vec::new(),
         seed: 7,
         threads: 2,
         sampled: true,

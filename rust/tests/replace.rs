@@ -140,9 +140,12 @@ fn replace_campaign_axis_runs_and_stays_attributed() {
         workloads: vec!["backprop".into()],
         scales: vec![0.002],
         devices: vec![1],
+        device_mixes: vec!["uniform".into()],
         gpus: vec![2],
         placements: vec![Placement::PerfAware],
         replace: vec![false, true],
+        rw_ratios: Vec::new(),
+        op_ratios: Vec::new(),
         seed: 7,
         threads: 2,
         sampled: true,
