@@ -9,7 +9,24 @@
 
 use mqms::bench_support as bs;
 
+/// Audit layer must compile out completely when the feature is off: every
+/// auditor is a zero-sized type, so the structs hosting them (and this
+/// bench's hot path) are bit-for-bit what they were before the hooks landed.
+#[cfg(not(feature = "audit"))]
+fn assert_audit_compiles_out() {
+    use mqms::sim::audit;
+    assert_eq!(std::mem::size_of::<audit::EventMonotonic>(), 0);
+    assert_eq!(std::mem::size_of::<audit::ReqLedger>(), 0);
+    assert_eq!(std::mem::size_of::<audit::Occupancy>(), 0);
+    assert_eq!(std::mem::size_of::<audit::PoolBalance>(), 0);
+    assert_eq!(std::mem::size_of::<audit::ShardNamespace>(), 0);
+    println!("audit feature off: all five auditors are zero-sized (compiled out)");
+}
+
 fn main() {
+    #[cfg(not(feature = "audit"))]
+    assert_audit_compiles_out();
+
     let devices = 4u32;
     let count = 40_000u64;
     let batch = 64usize;

@@ -267,6 +267,7 @@ fn effective_threads(requested: usize, cells: usize) -> usize {
     let t = if requested > 0 {
         requested
     } else {
+        // lint:allow(wall-clock): sizes the worker pool only — results are matrix-ordered and thread-count-invariant
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     };
     t.clamp(1, cells.max(1))

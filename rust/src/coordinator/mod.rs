@@ -15,6 +15,7 @@
 use crate::config::{IoPath, SimConfig};
 use crate::gpu::{self, placement, replace, GpuSim, TaggedGpuEvent};
 use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
+use crate::sim::audit;
 use crate::sim::time::transfer_ns;
 use crate::sim::{Engine, EventQueue, SimTime, World};
 use crate::ssd::nvme::{IoRequest, Opcode};
@@ -147,12 +148,16 @@ pub struct CoWorld {
     /// stream — counted here and surfaced via [`Report::misrouted`] instead
     /// of panicking mid-simulation.
     pub misrouted: u64,
+    /// Event-time monotonicity auditor over the world's event stream
+    /// (no-op unless built with the `audit` feature).
+    mono: audit::EventMonotonic,
 }
 
 impl World for CoWorld {
     type Ev = Ev;
 
     fn handle(&mut self, now: SimTime, ev: Ev, q: &mut EventQueue<Ev>) {
+        self.mono.observe(now);
         match ev {
             Ev::Ssd(ae) => {
                 self.ssd.handle(ae.dev, now, ae.ev, q);
@@ -384,6 +389,18 @@ impl CoWorld {
     fn all_synth_done(&self) -> bool {
         self.synth.iter().all(SynthStream::done)
     }
+
+    /// Aggregate audit check counters across every layer of the world
+    /// (coordinator event stream, SSD array + devices, GPU shards).
+    #[cfg(feature = "audit")]
+    pub fn audit_counters(&self) -> audit::Counters {
+        let mut c = audit::Counters { monotonic: self.mono.checks(), ..Default::default() };
+        c.merge(self.ssd.audit_counters());
+        for g in &self.gpus {
+            c.merge(g.audit_counters());
+        }
+        c
+    }
 }
 
 /// The co-simulation driver: configure, add workloads, run, report.
@@ -396,6 +413,7 @@ pub struct CoSim {
 
 impl CoSim {
     pub fn new(cfg: SimConfig) -> Self {
+        // lint:allow(unwrap): constructor precondition — callers pass a validated config
         cfg.validate().expect("invalid config");
         let ssd = SsdArray::new(&cfg);
         Self {
@@ -414,6 +432,7 @@ impl CoSim {
                 per_source: Vec::new(),
                 source_names: Vec::new(),
                 misrouted: 0,
+                mono: audit::EventMonotonic::default(),
                 cfg,
             },
             engine: Engine::new(),
@@ -440,6 +459,7 @@ impl CoSim {
 
     /// Run with optional simulated-time / event-count bounds.
     pub fn run_bounded(&mut self, until: Option<SimTime>, max_events: Option<u64>) -> Report {
+        // lint:allow(wall-clock): reporting-only wall_s — never feeds simulated time
         let wall0 = std::time::Instant::now();
         if !self.started {
             self.start();
@@ -454,6 +474,11 @@ impl CoSim {
                 "gpu not done at quiescence"
             );
             debug_assert!(self.world.all_synth_done(), "synth streams incomplete");
+            // Audit builds re-check drain unconditionally (the debug_asserts
+            // above compile out in release): is_drained() runs the request-id
+            // conservation and pool-balance drain assertions.
+            #[cfg(feature = "audit")]
+            assert!(self.world.ssd.is_drained(), "ssd not drained at quiescence");
         }
         self.report(stats.end_time, stats.events, wall0.elapsed().as_secs_f64())
     }

@@ -28,7 +28,7 @@ pub mod sched;
 pub mod trace;
 
 use crate::config::GpuConfig;
-use crate::sim::{EventQueue, SimTime};
+use crate::sim::{audit, EventQueue, SimTime};
 use crate::ssd::nvme::{IoRequest, Opcode};
 use crate::util::jsonlite::Json;
 use crate::util::rng::Pcg64;
@@ -147,8 +147,12 @@ pub struct GpuSim {
     workloads: Vec<WorkloadRun>,
     sched: Scheduler,
     running: Option<RunningCompute>,
-    inflight: std::collections::HashMap<u64, KernelInflight>,
-    req_to_kernel: std::collections::HashMap<u64, u64>,
+    /// BTreeMap (not HashMap): nothing iterates these today, but the
+    /// determinism contract for future `--sim-threads` work demands every
+    /// keyed collection on the simulation path have a defined order.
+    inflight: std::collections::BTreeMap<u64, KernelInflight>,
+    req_to_kernel: std::collections::BTreeMap<u64, u64>,
+    ns: audit::ShardNamespace,
     kernel_seq: u64,
     io_out: Vec<IoRequest>,
     next_req_id: u64,
@@ -171,8 +175,9 @@ impl GpuSim {
             workloads: Vec::new(),
             sched: Scheduler::new(cfg, DEFAULT_CHUNK),
             running: None,
-            inflight: std::collections::HashMap::new(),
-            req_to_kernel: std::collections::HashMap::new(),
+            inflight: std::collections::BTreeMap::new(),
+            req_to_kernel: std::collections::BTreeMap::new(),
+            ns: audit::ShardNamespace::default(),
             kernel_seq: 0,
             io_out: Vec::new(),
             next_req_id: 1 + ((instance as u64) << GPU_ID_SHIFT),
@@ -286,6 +291,10 @@ impl GpuSim {
         let Some(kseq) = self.req_to_kernel.remove(&req_id) else {
             return false;
         };
+        // Known id: under `audit`, confirm it really sits in this shard's
+        // `1 + (instance << GPU_ID_SHIFT)` namespace.
+        self.ns.check_id(req_id, self.instance, GPU_ID_SHIFT);
+        // lint:allow(unwrap): req_to_kernel only maps to live inflight entries
         let k = self.inflight.get_mut(&kseq).expect("io for retired kernel");
         debug_assert!(k.io_left > 0);
         k.io_left -= 1;
@@ -314,6 +323,7 @@ impl GpuSim {
                     // Compute finished; the kernel retires when its I/O does.
                     let kseq = run.kseq;
                     self.running = None;
+                    // lint:allow(unwrap): the running kernel was inserted into inflight at launch
                     self.inflight.get_mut(&kseq).unwrap().compute_done = true;
                     self.maybe_retire(kseq, now, q);
                     self.try_launch(now, q);
@@ -386,6 +396,7 @@ impl GpuSim {
     fn start_wave<E: From<TaggedGpuEvent>>(&mut self, start_at: SimTime, q: &mut EventQueue<E>) {
         self.wave_counter += 1;
         let seq = self.wave_counter;
+        // lint:allow(unwrap): callers only start waves while a kernel is running
         let run = self.running.as_mut().expect("start_wave without kernel");
         run.wave_seq = seq;
         let kseq = run.kseq;
@@ -428,6 +439,7 @@ impl GpuSim {
             let lsn = Self::gen_addr(w, &rec);
             let id = self.next_req_id;
             self.next_req_id += 1;
+            self.ns.check_id(id, self.instance, GPU_ID_SHIFT);
             match opcode {
                 Opcode::Read => self.workloads[wid].io_reads += 1,
                 Opcode::Write => self.workloads[wid].io_writes += 1,
@@ -444,6 +456,7 @@ impl GpuSim {
             self.req_to_kernel.insert(id, kseq);
             outstanding += 1;
         }
+        // lint:allow(unwrap): the kernel was inserted into inflight at launch
         self.inflight.get_mut(&kseq).unwrap().io_left += outstanding;
         q.schedule_at(start_at + compute_ns, self.tag(GpuEvent::WaveCompute { seq }).into());
     }
@@ -481,6 +494,7 @@ impl GpuSim {
         if !(k.compute_done && k.io_left == 0) {
             return;
         }
+        // lint:allow(unwrap): indexed just above — the entry exists
         let k = self.inflight.remove(&kseq).unwrap();
         let w = &mut self.workloads[k.workload];
         let duration = now - k.launched_ns;
@@ -492,6 +506,12 @@ impl GpuSim {
     }
 
     // --- reporting ----------------------------------------------------------
+
+    /// Audit check counters for this shard (audit builds).
+    #[cfg(feature = "audit")]
+    pub fn audit_counters(&self) -> audit::Counters {
+        audit::Counters { namespace: self.ns.checks(), ..Default::default() }
+    }
 
     pub fn workload_count(&self) -> usize {
         self.workloads.len()

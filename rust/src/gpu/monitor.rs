@@ -163,6 +163,7 @@ impl Monitor {
                 } else {
                     STALLED_PROJECTION_NS
                 };
+            // lint:allow(float-eq): 0.0 is the exact never-projected sentinel, not a computed value
             } else if st.projected_ns == 0.0 || st.projected_ns > now as f64 {
                 // Drained: freeze the projection at (an upper bound of) the
                 // actual end so an idle shard keeps reading as "ahead"

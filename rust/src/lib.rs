@@ -31,6 +31,7 @@
 //! | [`workloads`] | BERT / GPT-2 / ResNet-50 / Rodinia trace generators |
 //! | [`coordinator`] | world wiring, direct vs host path, run loop |
 //! | [`campaign`] | scenario-matrix expansion + threaded campaign runner |
+//! | [`lint`] | project-specific determinism/robustness linter (`mqms lint`) |
 //! | [`metrics`] | per-device + merged counters, histograms, reports |
 //! | [`runtime`] | PJRT loading/execution of AOT-compiled JAX artifacts |
 //! | [`util`] | rng, stats, jsonlite, cli, quick (prop tests), bench |
@@ -55,6 +56,7 @@ pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod gpu;
+pub mod lint;
 pub mod metrics;
 pub mod runtime;
 pub mod sampling;

@@ -1,0 +1,876 @@
+//! `mqms lint` — project-specific determinism and robustness linter.
+//!
+//! A dependency-free line/token scanner over `rust/src`, `rust/benches`, and
+//! `rust/tests` that mechanizes the determinism review previously done by
+//! hand each PR. The repo's headline guarantees (byte-identical replace-off
+//! passthrough, thread-count-invariant campaigns, `gpus=1` strict
+//! passthrough) only hold if no code path smuggles in wall-clock time,
+//! environment-dependent values, or hash-order iteration — and the planned
+//! `--sim-threads` parallel engine raises the stakes further. The rule list
+//! here is the *contract* that work builds on.
+//!
+//! ## Rules
+//!
+//! | rule | scope | what it flags |
+//! |---|---|---|
+//! | `wall-clock` | `sim` `ssd` `gpu` `coordinator` `campaign` | wall-clock / env-dependent sources |
+//! | `hash-iter` | all of `src` | iteration over `HashMap`/`HashSet` |
+//! | `unwrap` | `coordinator` `ssd` `gpu` | `.unwrap()` / `.expect(` in hot paths |
+//! | `float-eq` | priced paths (`placement` `monitor` `replace` `campaign`) | `==`/`!=` against float literals |
+//! | `structure` | whole tree | unregistered benches, stale `mod` decls, orphan files, dead doc cross-refs |
+//! | `allow-marker` | all of `src` | malformed or unused suppression markers |
+//!
+//! All line rules skip test code: everything at or below the first
+//! `#[cfg(test)]` line of a file is test code by repo convention (test
+//! modules are always the trailing item). The linter's own directory is
+//! exempt from line rules — its pattern tables *are* the needles.
+//!
+//! ## Allow markers
+//!
+//! A finding is suppressed by a justified marker on the same line, or on an
+//! immediately preceding comment-only line:
+//!
+//! ```text
+//! // lint:allow(<rule>): <non-empty reason>
+//! ```
+//!
+//! A marker with an empty reason, an unknown rule name, or no finding to
+//! suppress is itself a diagnostic — markers cannot rot silently.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Lint rule identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    WallClock,
+    HashIter,
+    Unwrap,
+    FloatEq,
+    Structure,
+    AllowMarker,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::WallClock => "wall-clock",
+            Rule::HashIter => "hash-iter",
+            Rule::Unwrap => "unwrap",
+            Rule::FloatEq => "float-eq",
+            Rule::Structure => "structure",
+            Rule::AllowMarker => "allow-marker",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<Rule> {
+        match s {
+            "wall-clock" => Some(Rule::WallClock),
+            "hash-iter" => Some(Rule::HashIter),
+            "unwrap" => Some(Rule::Unwrap),
+            "float-eq" => Some(Rule::FloatEq),
+            "structure" => Some(Rule::Structure),
+            "allow-marker" => Some(Rule::AllowMarker),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One lint finding, keyed to a repo-relative path and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pattern tables
+// ---------------------------------------------------------------------------
+
+/// Wall-clock / environment-dependent sources banned in simulation paths.
+/// Any of these inside `sim`/`ssd`/`gpu`/`coordinator`/`campaign` makes a
+/// run's output depend on the machine, the load, or the time of day.
+const WALL_CLOCK_PATTERNS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "env::var",
+    "var_os(",
+    "available_parallelism",
+    "thread_rng",
+    "from_entropy",
+];
+
+/// Method suffixes that iterate a hash collection in nondeterministic order.
+const HASH_ITER_SUFFIXES: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+    ".retain(",
+];
+
+/// Path prefixes (relative to the repo root) where each scoped rule applies.
+const CLOCK_SCOPE: &[&str] = &[
+    "rust/src/sim",
+    "rust/src/ssd",
+    "rust/src/gpu",
+    "rust/src/coordinator",
+    "rust/src/campaign.rs",
+];
+const UNWRAP_SCOPE: &[&str] = &["rust/src/coordinator", "rust/src/ssd", "rust/src/gpu"];
+const FLOAT_EQ_SCOPE: &[&str] = &[
+    "rust/src/gpu/placement.rs",
+    "rust/src/gpu/monitor.rs",
+    "rust/src/gpu/replace.rs",
+    "rust/src/campaign.rs",
+];
+/// The linter's own sources hold the pattern tables; line rules skip them.
+const SELF_SCOPE: &str = "rust/src/lint";
+
+fn in_scope(path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|p| path.starts_with(p))
+}
+
+// ---------------------------------------------------------------------------
+// Line splitting: code vs comment, with string contents blanked
+// ---------------------------------------------------------------------------
+
+/// Split a source line into (code, comment). String-literal contents are
+/// blanked in the code part so needles never match inside strings; the
+/// comment part is everything from the first `//` outside a string.
+/// Line-based by design: a multi-line string body can in principle leak into
+/// the code part, which is why line rules run only over `rust/src`, where
+/// multi-line literals are rare and a spurious finding is one allow-marker
+/// away from resolution.
+fn split_code_comment(line: &str) -> (String, &str) {
+    let b = line.as_bytes();
+    let mut code = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'"' => {
+                code.push('"');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == b'"' {
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+                code.push('"');
+            }
+            b'\'' if i + 2 < b.len() && (b[i + 1] == b'\\' || b[i + 2] == b'\'') => {
+                // Char literal (not a lifetime): skip to its closing quote.
+                let start = i;
+                i += if b[i + 1] == b'\\' { 2 } else { 1 };
+                while i < b.len() && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+                for _ in start..i.min(b.len()) {
+                    code.push(' ');
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                return (code, &line[i..]);
+            }
+            c => {
+                code.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    (code, "")
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Find word-boundary occurrences of `word` in `code`.
+fn word_positions(code: &str, word: &str) -> Vec<usize> {
+    let cb = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(k) = code[from..].find(word) {
+        let at = from + k;
+        let pre_ok = at == 0 || !is_ident_char(cb[at - 1]);
+        let end = at + word.len();
+        let post_ok = end >= cb.len() || !is_ident_char(cb[end]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+/// Does the text before an occurrence read like a `for .. in [&[mut ]]` head?
+fn is_for_in_prefix(prefix: &str) -> bool {
+    let mut p = prefix.trim_end();
+    if let Some(s) = p.strip_suffix('&') {
+        p = s.trim_end();
+    } else if let Some(s) = p.strip_suffix("mut") {
+        let s = s.trim_end();
+        if let Some(s2) = s.strip_suffix('&') {
+            p = s2.trim_end();
+        } else {
+            return false;
+        }
+    }
+    p == "in" || p.ends_with(" in") || p.ends_with("\tin")
+}
+
+/// Collect identifiers declared as `HashMap`/`HashSet` in this file: typed
+/// bindings/fields (`name: [path::]HashMap<..>`) and constructor bindings
+/// (`name = [path::]HashMap::new()` / `with_capacity`).
+fn collect_hash_idents(code_lines: &[(usize, String, String, bool)]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for (_, code, _, in_test) in code_lines {
+        if *in_test {
+            continue;
+        }
+        for needle in ["HashMap<", "HashSet<"] {
+            if let Some(k) = code.find(needle) {
+                if let Some(id) = ident_before_colon(&code[..k]) {
+                    if !out.contains(&id) {
+                        out.push(id);
+                    }
+                }
+            }
+        }
+        for needle in
+            ["HashMap::new", "HashSet::new", "HashMap::with_capacity", "HashSet::with_capacity"]
+        {
+            if let Some(k) = code.find(needle) {
+                if let Some(id) = ident_before_assign(&code[..k]) {
+                    if !out.contains(&id) {
+                        out.push(id);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `… name :  path::to::` → `name` (the binding a hash type annotates).
+fn ident_before_colon(seg: &str) -> Option<String> {
+    let seg = strip_path_prefix(seg.trim_end());
+    let seg = seg.strip_suffix(':')?.trim_end();
+    take_trailing_ident(seg)
+}
+
+/// `… name =  path::to::` → `name` (the binding a hash constructor fills).
+fn ident_before_assign(seg: &str) -> Option<String> {
+    let seg = strip_path_prefix(seg.trim_end());
+    let seg = seg.strip_suffix('=')?.trim_end();
+    // Skip a type ascription between the name and `=`.
+    let seg = match seg.rfind(':') {
+        Some(k) if !seg[..k].is_empty() => {
+            let head = seg[..k].trim_end();
+            let head = head.strip_suffix(':').unwrap_or(head); // `::` in types
+            head
+        }
+        _ => seg,
+    };
+    take_trailing_ident(seg)
+}
+
+/// Strip a trailing `path::segments::` chain (e.g. `std::collections::`).
+fn strip_path_prefix(mut seg: &str) -> &str {
+    loop {
+        let t = seg.trim_end();
+        if let Some(s) = t.strip_suffix("::") {
+            let mut end = s.len();
+            let sb = s.as_bytes();
+            while end > 0 && is_ident_char(sb[end - 1]) {
+                end -= 1;
+            }
+            seg = &s[..end];
+        } else {
+            return t;
+        }
+    }
+}
+
+fn take_trailing_ident(seg: &str) -> Option<String> {
+    let sb = seg.as_bytes();
+    let mut start = sb.len();
+    while start > 0 && is_ident_char(sb[start - 1]) {
+        start -= 1;
+    }
+    let id = &seg[start..];
+    let ok = !id.is_empty() && !id.as_bytes()[0].is_ascii_digit();
+    // `let`, `mut`, `pub` etc. never name a collection binding.
+    let keyword = matches!(id, "let" | "mut" | "pub" | "in" | "if" | "ref");
+    if ok && !keyword {
+        Some(id.to_string())
+    } else {
+        None
+    }
+}
+
+/// Is the token adjacent to a comparison a float literal (`0.0`, `1.5e3`)?
+fn float_token(tok: &str) -> bool {
+    let tok = tok.trim_matches(|c: char| matches!(c, ',' | ';' | ')' | '(' | '{' | '}' | ']'));
+    let tok = tok.strip_prefix('-').unwrap_or(tok);
+    let mut parts = tok.splitn(2, '.');
+    let (int, frac) = (parts.next().unwrap_or(""), parts.next());
+    match frac {
+        Some(f) => {
+            !int.is_empty()
+                && int.bytes().all(|b| b.is_ascii_digit() || b == b'_')
+                && !f.is_empty()
+                && f.bytes().next().is_some_and(|b| b.is_ascii_digit())
+        }
+        None => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allow markers
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct AllowMarker {
+    line: usize,
+    rule: Rule,
+    /// A marker on a comment-only line covers the next line too.
+    covers_next: bool,
+    used: bool,
+}
+
+/// Parse `lint:allow(<rule>): <reason>` out of a comment; push grammar
+/// errors as diagnostics.
+fn parse_marker(
+    path: &str,
+    line_no: usize,
+    comment: &str,
+    code_is_empty: bool,
+    out: &mut Vec<Diagnostic>,
+) -> Option<AllowMarker> {
+    let k = comment.find("lint:allow")?;
+    let rest = &comment[k + "lint:allow".len()..];
+    let bad = |msg: &str, out: &mut Vec<Diagnostic>| {
+        out.push(Diagnostic {
+            path: path.to_string(),
+            line: line_no,
+            rule: Rule::AllowMarker,
+            message: msg.to_string(),
+        });
+        None
+    };
+    let Some(rest) = rest.strip_prefix('(') else {
+        return bad("malformed marker: expected `lint:allow(<rule>): <reason>`", out);
+    };
+    let Some(close) = rest.find(')') else {
+        return bad("malformed marker: missing `)` after rule name", out);
+    };
+    let rule_name = rest[..close].trim();
+    let Some(rule) = Rule::from_id(rule_name) else {
+        return bad(&format!("unknown rule `{rule_name}` in lint:allow marker"), out);
+    };
+    let tail = &rest[close + 1..];
+    let Some(reason) = tail.strip_prefix(':') else {
+        return bad("malformed marker: expected `: <reason>` after rule", out);
+    };
+    if reason.trim().is_empty() {
+        return bad("lint:allow marker requires a non-empty reason", out);
+    }
+    Some(AllowMarker { line: line_no, rule, covers_next: code_is_empty, used: false })
+}
+
+// ---------------------------------------------------------------------------
+// Per-file line rules
+// ---------------------------------------------------------------------------
+
+/// Run every line rule over one source file. `path` is repo-relative with
+/// `/` separators — it selects which rules apply. This is the unit the
+/// fixture tests drive directly.
+pub fn lint_source(path: &str, content: &str) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if !path.starts_with("rust/src/") || path.starts_with(SELF_SCOPE) {
+        return out;
+    }
+    // Pass 1: split lines, track the test boundary, harvest hash bindings.
+    let mut lines: Vec<(usize, String, String, bool)> = Vec::new();
+    let mut in_test = false;
+    for (i, raw) in content.lines().enumerate() {
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            in_test = true;
+        }
+        let (code, comment) = split_code_comment(raw);
+        lines.push((i + 1, code, comment.to_string(), in_test));
+    }
+    let hash_idents = collect_hash_idents(&lines);
+
+    // Pass 2: markers (grammar-checked), then findings, then suppression.
+    let mut markers: Vec<AllowMarker> = Vec::new();
+    let mut findings: Vec<Diagnostic> = Vec::new();
+    for (line_no, code, comment, test) in &lines {
+        if *test {
+            continue;
+        }
+        if let Some(m) = parse_marker(path, *line_no, comment, code.trim().is_empty(), &mut out) {
+            markers.push(m);
+        }
+
+        if in_scope(path, CLOCK_SCOPE) {
+            for pat in WALL_CLOCK_PATTERNS {
+                if code.contains(pat) {
+                    findings.push(Diagnostic {
+                        path: path.to_string(),
+                        line: *line_no,
+                        rule: Rule::WallClock,
+                        message: format!(
+                            "`{pat}` in a simulation path: output must not depend on \
+                             wall-clock time or the host environment"
+                        ),
+                    });
+                }
+            }
+        }
+        if in_scope(path, UNWRAP_SCOPE) {
+            for pat in [".unwrap()", ".expect("] {
+                if code.contains(pat) {
+                    findings.push(Diagnostic {
+                        path: path.to_string(),
+                        line: *line_no,
+                        rule: Rule::Unwrap,
+                        message: format!(
+                            "`{pat}` in a coordinator/ssd/gpu hot path: justify the \
+                             invariant or propagate the error"
+                        ),
+                    });
+                }
+            }
+        }
+        if in_scope(path, FLOAT_EQ_SCOPE) {
+            let cb = code.as_bytes();
+            let mut from = 0;
+            loop {
+                let rest = &code[from..];
+                let k = match (rest.find("=="), rest.find("!=")) {
+                    (Some(a), Some(b)) => a.min(b),
+                    (Some(a), None) => a,
+                    (None, Some(b)) => b,
+                    (None, None) => break,
+                };
+                let at = from + k;
+                from = at + 2;
+                // Skip `<=`/`>=`-adjacent and chained `=` neighbourhoods.
+                if cb[at] == b'=' && at > 0 && matches!(cb[at - 1], b'<' | b'>' | b'=' | b'!') {
+                    continue;
+                }
+                if at + 2 < cb.len() && cb[at + 2] == b'=' {
+                    continue;
+                }
+                let left = code[..at].trim_end().rsplit(char::is_whitespace).next().unwrap_or("");
+                let right =
+                    code[at + 2..].trim_start().split(char::is_whitespace).next().unwrap_or("");
+                if float_token(left) || float_token(right) {
+                    findings.push(Diagnostic {
+                        path: path.to_string(),
+                        line: *line_no,
+                        rule: Rule::FloatEq,
+                        message: "exact float comparison in a priced path: use a \
+                                  tolerance or an integer sentinel"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        for id in &hash_idents {
+            let mut flagged = false;
+            for at in word_positions(code, id) {
+                let suffix = &code[at + id.len()..];
+                if HASH_ITER_SUFFIXES.iter().any(|s| suffix.starts_with(s))
+                    || is_for_in_prefix(&code[..at])
+                {
+                    findings.push(Diagnostic {
+                        path: path.to_string(),
+                        line: *line_no,
+                        rule: Rule::HashIter,
+                        message: format!(
+                            "iteration over hash collection `{id}`: order is \
+                             nondeterministic — use BTreeMap/BTreeSet or sort first"
+                        ),
+                    });
+                    flagged = true;
+                    break;
+                }
+            }
+            if flagged {
+                break;
+            }
+        }
+    }
+
+    // Suppression: a finding survives unless a matching marker sits on the
+    // same line or on the comment-only line directly above.
+    for f in findings {
+        let mut suppressed = false;
+        for m in markers.iter_mut() {
+            if m.rule == f.rule && (m.line == f.line || (m.covers_next && m.line + 1 == f.line)) {
+                m.used = true;
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            out.push(f);
+        }
+    }
+    for m in &markers {
+        if !m.used {
+            out.push(Diagnostic {
+                path: path.to_string(),
+                line: m.line,
+                rule: Rule::AllowMarker,
+                message: format!(
+                    "unused lint:allow({}) marker: nothing to suppress here",
+                    m.rule
+                ),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Structural checks
+// ---------------------------------------------------------------------------
+
+fn read_to_string(path: &Path) -> Result<String, String> {
+    fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    let mut items: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    items.sort();
+    for p in items {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+/// Every `benches/*.rs` must be a registered `[[bench]]` target — an
+/// unregistered bench silently never builds or runs.
+fn check_bench_registration(root: &Path, out: &mut Vec<Diagnostic>) -> Result<(), String> {
+    let cargo = read_to_string(&root.join("rust/Cargo.toml"))?;
+    let bench_dir = root.join("rust/benches");
+    let mut files = Vec::new();
+    walk_rs(&bench_dir, &mut files)?;
+    for f in files {
+        let name = f.file_name().unwrap_or_default().to_string_lossy().to_string();
+        if !cargo.contains(&format!("benches/{name}")) {
+            out.push(Diagnostic {
+                path: format!("rust/benches/{name}"),
+                line: 1,
+                rule: Rule::Structure,
+                message: format!("bench file not registered in rust/Cargo.toml ({name})"),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Every `mod x;` must resolve to `x.rs` or `x/mod.rs`, and every source
+/// file must be reachable from some `mod` declaration (no orphans).
+fn check_module_graph(root: &Path, out: &mut Vec<Diagnostic>) -> Result<(), String> {
+    let src = root.join("rust/src");
+    let mut files = Vec::new();
+    walk_rs(&src, &mut files)?;
+    let mut declared: Vec<PathBuf> = Vec::new();
+    for f in &files {
+        let content = read_to_string(f)?;
+        let stem = f.file_stem().unwrap_or_default().to_string_lossy().to_string();
+        let dir = f.parent().unwrap_or(&src).to_path_buf();
+        let base =
+            if matches!(stem.as_str(), "lib" | "main" | "mod") { dir } else { dir.join(&stem) };
+        for (i, raw) in content.lines().enumerate() {
+            let t = raw.trim();
+            let decl = t.strip_prefix("pub mod ").or_else(|| t.strip_prefix("mod "));
+            let Some(decl) = decl else { continue };
+            let Some(name) = decl.strip_suffix(';') else { continue };
+            let name = name.trim();
+            if !name.bytes().all(is_ident_char) || name.is_empty() {
+                continue;
+            }
+            let prev_is_cfg_test = i > 0
+                && content
+                    .lines()
+                    .nth(i - 1)
+                    .is_some_and(|p| p.trim_start().starts_with("#[cfg(test)]"));
+            if t.starts_with("mod ") && prev_is_cfg_test {
+                continue; // inline test module declared elsewhere — not a file
+            }
+            let cands = [base.join(format!("{name}.rs")), base.join(name).join("mod.rs")];
+            let hit = cands.iter().find(|c| c.exists());
+            match hit {
+                Some(c) => declared.push(c.clone()),
+                None => {
+                    // Inline `mod name { .. }` bodies never end in `;`, so a
+                    // miss here is a stale file reference.
+                    out.push(Diagnostic {
+                        path: rel(root, f),
+                        line: i + 1,
+                        rule: Rule::Structure,
+                        message: format!(
+                            "stale module reference: `mod {name};` resolves to no file"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for f in &files {
+        let name = f.file_name().unwrap_or_default().to_string_lossy().to_string();
+        if (name == "lib.rs" || name == "main.rs") && f.parent() == Some(src.as_path()) {
+            continue;
+        }
+        if !declared.contains(f) {
+            out.push(Diagnostic {
+                path: rel(root, f),
+                line: 1,
+                rule: Rule::Structure,
+                message: "orphan source file: no `mod` declaration reaches it".to_string(),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Backtick-quoted path-like tokens in the top-level docs must resolve —
+/// stale cross-references in README/ROADMAP/CHANGES misdirect the next PR.
+fn check_doc_refs(root: &Path, out: &mut Vec<Diagnostic>) -> Result<(), String> {
+    for doc in ["README.md", "ROADMAP.md", "CHANGES.md"] {
+        let p = root.join(doc);
+        if !p.exists() {
+            continue;
+        }
+        let text = read_to_string(&p)?;
+        for (i, line) in text.lines().enumerate() {
+            let mut parts = line.split('`');
+            parts.next(); // text before the first backtick
+            while let (Some(tok), _) = (parts.next(), parts.next()) {
+                if !looks_like_repo_path(tok) {
+                    continue;
+                }
+                let resolves = [".", "rust", "rust/src"]
+                    .iter()
+                    .any(|r| root.join(r).join(tok).exists());
+                if !resolves {
+                    out.push(Diagnostic {
+                        path: doc.to_string(),
+                        line: i + 1,
+                        rule: Rule::Structure,
+                        message: format!("doc cross-reference `{tok}` resolves to no file"),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn looks_like_repo_path(tok: &str) -> bool {
+    tok.contains('/')
+        && !tok.contains(' ')
+        && !tok.contains('(')
+        && !tok.contains('{')
+        && !tok.starts_with(['/', '-', '<', '$', '.'])
+        && !tok.starts_with("http")
+        && [".rs", ".toml", ".md", ".yml"].iter().any(|e| tok.ends_with(e))
+}
+
+// ---------------------------------------------------------------------------
+// Tree driver
+// ---------------------------------------------------------------------------
+
+/// Lint the whole repository at `root` (the directory containing `rust/`).
+pub fn lint_tree(root: &Path) -> Result<Vec<Diagnostic>, String> {
+    if !root.join("rust/src").is_dir() {
+        return Err(format!("{} does not look like the repo root (no rust/src)", root.display()));
+    }
+    let mut out = Vec::new();
+    let mut files = Vec::new();
+    walk_rs(&root.join("rust/src"), &mut files)?;
+    for f in &files {
+        let relp = rel(root, f);
+        out.extend(lint_source(&relp, &read_to_string(f)?));
+    }
+    check_bench_registration(root, &mut out)?;
+    check_module_graph(root, &mut out)?;
+    check_doc_refs(root, &mut out)?;
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(out)
+}
+
+/// Walk up from `start` to find the repo root (a directory with `rust/src`).
+pub fn discover_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    for _ in 0..6 {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        dir = dir.parent()?.to_path_buf();
+    }
+    None
+}
+
+/// Render diagnostics as a JSON array (for `mqms lint --json`).
+pub fn to_json(diags: &[Diagnostic]) -> crate::util::jsonlite::Json {
+    use crate::util::jsonlite::Json;
+    Json::Arr(
+        diags
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("path".to_string(), Json::Str(d.path.clone()));
+                m.insert("line".to_string(), Json::Num(d.line as f64));
+                m.insert("rule".to_string(), Json::Str(d.rule.id().to_string()));
+                m.insert("message".to_string(), Json::Str(d.message.clone()));
+                Json::Obj(m)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_strips_strings_and_finds_comments() {
+        let (code, comment) = split_code_comment(r#"let x = "a // not comment"; // real"#);
+        assert!(code.contains("let x = "));
+        assert!(!code.contains("not comment"));
+        assert_eq!(comment, "// real");
+    }
+
+    #[test]
+    fn char_literal_is_not_a_string_opener() {
+        let (code, comment) = split_code_comment("if c == '\"' { x(); } // tail");
+        assert!(code.contains("x();"));
+        assert_eq!(comment, "// tail");
+    }
+
+    #[test]
+    fn hash_ident_harvest_covers_fields_and_lets() {
+        let lines = vec![
+            (1, "    splits: HashMap<u64, SplitState>,".to_string(), String::new(), false),
+            (
+                2,
+                "let mut groups: std::collections::HashMap<(u32, u32), Vec<usize>> =".to_string(),
+                String::new(),
+                false,
+            ),
+            (3, "    let seen = HashSet::new();".to_string(), String::new(), false),
+        ];
+        let ids = collect_hash_idents(&lines);
+        assert_eq!(ids, vec!["splits".to_string(), "groups".to_string(), "seen".to_string()]);
+    }
+
+    #[test]
+    fn for_in_prefix_variants() {
+        assert!(is_for_in_prefix("for (k, v) in "));
+        assert!(is_for_in_prefix("for x in &"));
+        assert!(is_for_in_prefix("for x in &mut "));
+        assert!(!is_for_in_prefix("let within = "));
+    }
+
+    #[test]
+    fn float_token_recognition() {
+        assert!(float_token("0.0"));
+        assert!(float_token("-1.5,"));
+        assert!(float_token("12_0.25"));
+        assert!(!float_token("0"));
+        assert!(!float_token("x.y"));
+        assert!(!float_token("self.0"));
+    }
+
+    #[test]
+    fn scoped_rules_skip_out_of_scope_paths() {
+        let bad = "let t = Instant::now();\n";
+        assert!(lint_source("rust/src/util/bench.rs", bad).is_empty());
+        assert_eq!(lint_source("rust/src/sim/engine.rs", bad).len(), 1);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(lint_source("rust/src/ssd/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn marker_grammar_is_enforced() {
+        let empty_reason = "let a = b.unwrap(); // lint:allow(unwrap):\n";
+        let d = lint_source("rust/src/ssd/mod.rs", empty_reason);
+        assert_eq!(d.len(), 2, "{d:?}"); // bad marker + unsuppressed finding
+        assert!(d.iter().any(|x| x.rule == Rule::AllowMarker));
+        assert!(d.iter().any(|x| x.rule == Rule::Unwrap));
+
+        let unknown = "let a = b.unwrap(); // lint:allow(bogus): because\n";
+        assert!(lint_source("rust/src/ssd/mod.rs", unknown)
+            .iter()
+            .any(|x| x.rule == Rule::AllowMarker));
+    }
+
+    #[test]
+    fn unused_marker_is_flagged() {
+        let src = "// lint:allow(unwrap): nothing here needs it\nlet a = 1;\n";
+        let d = lint_source("rust/src/ssd/mod.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::AllowMarker);
+    }
+
+    #[test]
+    fn previous_line_marker_covers_next_line_only_when_comment_only() {
+        let ok = "// lint:allow(unwrap): slab ids are validated at creation\nlet a = b.unwrap();\n";
+        assert!(lint_source("rust/src/ssd/mod.rs", ok).is_empty());
+        // A marker on a *code* line does not spill to the next line.
+        let spill = "let c = 1; // lint:allow(unwrap): misplaced\nlet a = b.unwrap();\n";
+        let d = lint_source("rust/src/ssd/mod.rs", spill);
+        assert!(d.iter().any(|x| x.rule == Rule::Unwrap));
+    }
+}

@@ -11,6 +11,7 @@
 //! * `sample`   — Allegro-sample a trace file (§3.1)
 //! * `config`   — emit a preset configuration as JSON
 //! * `inspect`  — summarize a trace file
+//! * `lint`     — determinism/robustness linter over the repo tree
 //!
 //! Examples:
 //!
@@ -60,6 +61,7 @@ fn main() -> ExitCode {
         "sample" => cmd_sample(rest),
         "config" => cmd_config(rest),
         "inspect" => cmd_inspect(rest),
+        "lint" => cmd_lint(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -93,6 +95,7 @@ fn usage() -> String {
        sample    Allegro-sample a trace (paper §3.1)\n\
        config    print a preset configuration as JSON\n\
        inspect   summarize a trace file\n\
+       lint      determinism/robustness linter over the repo tree\n\
      \n\
      Run `mqms <COMMAND> --help` for options."
         .to_string()
@@ -670,4 +673,38 @@ fn cmd_inspect(argv: &[String]) -> CliResult {
     let trace = Trace::load(Path::new(path)).map_err(|e| format!("loading {path}: {e}"))?;
     println!("{}", trace.summary().pretty());
     Ok(())
+}
+
+fn cmd_lint(argv: &[String]) -> CliResult {
+    let spec = Args::new(
+        "mqms lint",
+        "determinism/robustness linter: wall-clock, hash-iteration, hot-path \
+         unwrap, float-eq, and structural checks over the repo tree",
+    )
+    .opt("root", None, "repo root (default: discovered from the working directory)")
+    .flag("json", "emit diagnostics as a JSON array");
+    let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
+
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => {
+            let cwd = std::env::current_dir().map_err(|e| format!("getcwd: {e}"))?;
+            mqms::lint::discover_root(&cwd)
+                .ok_or("no repo root (directory containing rust/src) found; use --root")?
+        }
+    };
+    let diags = mqms::lint::lint_tree(&root)?;
+    if args.get_flag("json") {
+        println!("{}", mqms::lint::to_json(&diags).pretty());
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+    }
+    if diags.is_empty() {
+        eprintln!("# lint clean ({})", root.display());
+        Ok(())
+    } else {
+        Err(format!("{} lint finding(s)", diags.len()))
+    }
 }

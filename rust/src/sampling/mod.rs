@@ -110,6 +110,7 @@ pub fn sample(trace: &Trace, cfg: &SamplerConfig, seed: u64) -> (Trace, Sampling
         groups.entry((r.name_id, r.grid, r.block)).or_default().push(i);
     }
     // Deterministic order.
+    // lint:allow(hash-iter): keys are collected then sorted before any use
     let mut keys: Vec<_> = groups.keys().copied().collect();
     keys.sort();
 

@@ -1,0 +1,394 @@
+//! Runtime invariant auditor (cargo feature `audit`).
+//!
+//! The determinism guarantees this repo pins with example-based tests
+//! (byte-identical replace-off passthrough, thread-count-invariant
+//! campaigns) are *consequences* of a handful of conservation laws that
+//! must hold on every run. This module mechanizes those laws as hooks the
+//! simulator layers call at their natural choke points:
+//!
+//! * **Event-time monotonicity** — dispatch timestamps never go backwards
+//!   ([`EventMonotonic`], hooked in the coordinator world and per array
+//!   device).
+//! * **Request-id conservation** — every accepted request id completes
+//!   exactly once, and none are in flight at drain
+//!   ([`ReqLedger`], hooked at the array submit/settle boundary).
+//! * **NVMe occupancy** — queued + outstanding commands never exceed the
+//!   configured queue depth ([`Occupancy`], hooked in `NvmeQueues`).
+//! * **`EnqueuePool` balance** — every checked-out batch buffer is stored
+//!   or cancelled, every stored buffer taken and recycled, and the pool is
+//!   whole at drain ([`PoolBalance`], hooked inside the pool itself).
+//! * **Shard-namespace integrity** — a GPU instance only mints and receives
+//!   request ids in its own `(id - 1) >> GPU_ID_SHIFT` namespace
+//!   ([`ShardNamespace`], hooked at id allocation and completion delivery).
+//!
+//! With the feature **off** (the default), every type here is a zero-sized
+//! struct whose methods are empty `#[inline(always)]` bodies: no fields, no
+//! branches, no cost — the hot path compiles to exactly what it was before
+//! the hooks existed. `benches/hotpath_regression.rs` asserts the
+//! zero-sized property so the guarantee cannot rot.
+//!
+//! With the feature **on**, violations panic with the failing law, and
+//! every struct counts the checks it performed so tests can prove each law
+//! was actually exercised (see `tests/audit.rs`).
+
+use super::time::SimTime;
+
+/// Check counters aggregated across a simulation (audit builds only; used
+/// by `tests/audit.rs` to prove every law was exercised at least once).
+#[cfg(feature = "audit")]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Counters {
+    pub monotonic: u64,
+    pub ledger_submits: u64,
+    pub ledger_completes: u64,
+    pub occupancy: u64,
+    pub pool_ops: u64,
+    pub namespace: u64,
+}
+
+#[cfg(feature = "audit")]
+impl Counters {
+    /// Merge counters from another component.
+    pub fn merge(&mut self, o: Counters) {
+        self.monotonic += o.monotonic;
+        self.ledger_submits += o.ledger_submits;
+        self.ledger_completes += o.ledger_completes;
+        self.occupancy += o.occupancy;
+        self.pool_ops += o.pool_ops;
+        self.namespace += o.namespace;
+    }
+}
+
+#[cfg(feature = "audit")]
+mod enabled {
+    use super::SimTime;
+    use std::collections::BTreeSet;
+
+    /// Dispatch timestamps at one observation point must be nondecreasing.
+    #[derive(Debug, Default, Clone)]
+    pub struct EventMonotonic {
+        last: SimTime,
+        checks: u64,
+    }
+
+    impl EventMonotonic {
+        pub fn observe(&mut self, now: SimTime) {
+            assert!(
+                now >= self.last,
+                "audit: event time went backwards ({} after {})",
+                now,
+                self.last
+            );
+            self.last = now;
+            self.checks += 1;
+        }
+
+        pub fn checks(&self) -> u64 {
+            self.checks
+        }
+    }
+
+    /// Request-id conservation: submitted = completed + rejected + in-flight.
+    /// Deterministic `BTreeSet` — the auditor must not itself introduce
+    /// hash-order effects.
+    #[derive(Debug, Default, Clone)]
+    pub struct ReqLedger {
+        outstanding: BTreeSet<u64>,
+        submits: u64,
+        completes: u64,
+        rejects: u64,
+    }
+
+    impl ReqLedger {
+        pub fn note_submitted(&mut self, id: u64) {
+            assert!(
+                self.outstanding.insert(id),
+                "audit: request id {id} accepted while already in flight"
+            );
+            self.submits += 1;
+        }
+
+        pub fn note_rejected(&mut self) {
+            self.rejects += 1;
+        }
+
+        pub fn note_completed(&mut self, id: u64) {
+            assert!(
+                self.outstanding.remove(&id),
+                "audit: completion for request id {id} that was never accepted \
+                 (or completed twice)"
+            );
+            self.completes += 1;
+        }
+
+        pub fn assert_drained(&self, context: &str) {
+            assert!(
+                self.outstanding.is_empty(),
+                "audit: {} request id(s) still in flight at drain ({context}); \
+                 first: {:?}",
+                self.outstanding.len(),
+                self.outstanding.iter().next()
+            );
+            assert_eq!(
+                self.submits, self.completes,
+                "audit: submitted != completed at drain ({context})"
+            );
+        }
+
+        pub fn submits(&self) -> u64 {
+            self.submits
+        }
+
+        pub fn completes(&self) -> u64 {
+            self.completes
+        }
+    }
+
+    /// Queued + outstanding NVMe commands never exceed the queue depth.
+    #[derive(Debug, Default, Clone)]
+    pub struct Occupancy {
+        checks: u64,
+    }
+
+    impl Occupancy {
+        pub fn check(&mut self, queue: usize, queued: usize, outstanding: u32, depth: u32) {
+            assert!(
+                queued as u64 + outstanding as u64 <= depth as u64,
+                "audit: NVMe queue {queue} over depth: {queued} queued + \
+                 {outstanding} outstanding > {depth} slots"
+            );
+            self.checks += 1;
+        }
+
+        pub fn checks(&self) -> u64 {
+            self.checks
+        }
+    }
+
+    /// `EnqueuePool` buffer-lifecycle balance: free → held → parked →
+    /// held → free (or held → free via cancel). At drain nothing is held
+    /// or parked and the free list covers the whole pool.
+    #[derive(Debug, Default, Clone)]
+    pub struct PoolBalance {
+        held: i64,
+        parked: i64,
+        ops: u64,
+    }
+
+    impl PoolBalance {
+        pub fn note_checkout(&mut self) {
+            self.held += 1;
+            self.ops += 1;
+        }
+
+        pub fn note_store(&mut self) {
+            self.held -= 1;
+            self.parked += 1;
+            self.ops += 1;
+            assert!(self.held >= 0, "audit: pool store without checkout");
+        }
+
+        pub fn note_cancel(&mut self) {
+            self.held -= 1;
+            self.ops += 1;
+            assert!(self.held >= 0, "audit: pool cancel without checkout");
+        }
+
+        pub fn note_take(&mut self) {
+            self.parked -= 1;
+            self.held += 1;
+            self.ops += 1;
+            assert!(self.parked >= 0, "audit: pool take without store");
+        }
+
+        pub fn note_recycle(&mut self) {
+            self.held -= 1;
+            self.ops += 1;
+            assert!(self.held >= 0, "audit: pool recycle without take");
+        }
+
+        pub fn assert_drained(&self, free: usize, cap: usize) {
+            assert!(
+                self.held == 0 && self.parked == 0,
+                "audit: enqueue pool unbalanced at drain ({} held, {} parked)",
+                self.held,
+                self.parked
+            );
+            assert_eq!(
+                free, cap,
+                "audit: enqueue pool free list does not cover the pool at drain"
+            );
+        }
+
+        pub fn ops(&self) -> u64 {
+            self.ops
+        }
+    }
+
+    /// GPU request ids must stay inside their instance's namespace.
+    #[derive(Debug, Default, Clone)]
+    pub struct ShardNamespace {
+        checks: u64,
+    }
+
+    impl ShardNamespace {
+        pub fn check_id(&mut self, id: u64, instance: u32, shift: u32) {
+            assert_eq!(
+                ((id - 1) >> shift) as u32,
+                instance,
+                "audit: request id {id} outside shard namespace of instance {instance}"
+            );
+            self.checks += 1;
+        }
+
+        pub fn checks(&self) -> u64 {
+            self.checks
+        }
+    }
+}
+
+#[cfg(feature = "audit")]
+pub use enabled::{EventMonotonic, Occupancy, PoolBalance, ReqLedger, ShardNamespace};
+
+#[cfg(not(feature = "audit"))]
+mod disabled {
+    use super::SimTime;
+
+    /// Inert stand-in: zero-sized, methods compile to nothing.
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct EventMonotonic;
+
+    impl EventMonotonic {
+        #[inline(always)]
+        pub fn observe(&mut self, _now: SimTime) {}
+    }
+
+    /// Inert stand-in: zero-sized, methods compile to nothing.
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct ReqLedger;
+
+    impl ReqLedger {
+        #[inline(always)]
+        pub fn note_submitted(&mut self, _id: u64) {}
+        #[inline(always)]
+        pub fn note_rejected(&mut self) {}
+        #[inline(always)]
+        pub fn note_completed(&mut self, _id: u64) {}
+        #[inline(always)]
+        pub fn assert_drained(&self, _context: &str) {}
+    }
+
+    /// Inert stand-in: zero-sized, methods compile to nothing.
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct Occupancy;
+
+    impl Occupancy {
+        #[inline(always)]
+        pub fn check(&mut self, _queue: usize, _queued: usize, _outstanding: u32, _depth: u32) {}
+    }
+
+    /// Inert stand-in: zero-sized, methods compile to nothing.
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct PoolBalance;
+
+    impl PoolBalance {
+        #[inline(always)]
+        pub fn note_checkout(&mut self) {}
+        #[inline(always)]
+        pub fn note_store(&mut self) {}
+        #[inline(always)]
+        pub fn note_cancel(&mut self) {}
+        #[inline(always)]
+        pub fn note_take(&mut self) {}
+        #[inline(always)]
+        pub fn note_recycle(&mut self) {}
+        #[inline(always)]
+        pub fn assert_drained(&self, _free: usize, _cap: usize) {}
+    }
+
+    /// Inert stand-in: zero-sized, methods compile to nothing.
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct ShardNamespace;
+
+    impl ShardNamespace {
+        #[inline(always)]
+        pub fn check_id(&mut self, _id: u64, _instance: u32, _shift: u32) {}
+    }
+}
+
+#[cfg(not(feature = "audit"))]
+pub use disabled::{EventMonotonic, Occupancy, PoolBalance, ReqLedger, ShardNamespace};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(not(feature = "audit"))]
+    fn disabled_auditors_are_zero_sized() {
+        assert_eq!(std::mem::size_of::<EventMonotonic>(), 0);
+        assert_eq!(std::mem::size_of::<ReqLedger>(), 0);
+        assert_eq!(std::mem::size_of::<Occupancy>(), 0);
+        assert_eq!(std::mem::size_of::<PoolBalance>(), 0);
+        assert_eq!(std::mem::size_of::<ShardNamespace>(), 0);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    fn ledger_conserves_ids() {
+        let mut l = ReqLedger::default();
+        l.note_submitted(7);
+        l.note_rejected();
+        l.note_completed(7);
+        l.assert_drained("test");
+        assert_eq!(l.submits(), 1);
+        assert_eq!(l.completes(), 1);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    #[should_panic(expected = "never accepted")]
+    fn ledger_rejects_unmatched_completion() {
+        let mut l = ReqLedger::default();
+        l.note_completed(9);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    #[should_panic(expected = "went backwards")]
+    fn monotonic_rejects_time_travel() {
+        let mut m = EventMonotonic::default();
+        m.observe(10);
+        m.observe(5);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    #[should_panic(expected = "over depth")]
+    fn occupancy_rejects_overfull_queue() {
+        let mut o = Occupancy::default();
+        o.check(0, 8, 1, 8);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    fn pool_balance_round_trip() {
+        let mut p = PoolBalance::default();
+        p.note_checkout();
+        p.note_store();
+        p.note_take();
+        p.note_recycle();
+        p.note_checkout();
+        p.note_cancel();
+        p.assert_drained(3, 3);
+        assert_eq!(p.ops(), 6);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    #[should_panic(expected = "outside shard namespace")]
+    fn namespace_rejects_foreign_id() {
+        let mut n = ShardNamespace::default();
+        n.check_id(1 + (3u64 << 48), 2, 48);
+    }
+}

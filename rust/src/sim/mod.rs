@@ -5,6 +5,7 @@
 //! [`Engine`] drives a [`World`] (the dispatcher owning all component state)
 //! to quiescence or to a time bound.
 
+pub mod audit;
 pub mod engine;
 pub mod events;
 pub mod time;

@@ -24,10 +24,11 @@
 //! changes to become shardable.
 
 use crate::config::SimConfig;
+use crate::sim::audit;
 use crate::sim::{EventQueue, SimTime};
 use crate::ssd::nvme::{Completion, IoRequest};
 use crate::ssd::{SsdEvent, SsdSim};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// An SSD event tagged with the device it belongs to.
 #[derive(Debug, Clone)]
@@ -76,11 +77,18 @@ pub struct SsdArray {
     /// every (possibly heterogeneous) device; the full device otherwise.
     dev_sectors: u64,
     next_split_id: u64,
-    /// parent id → merge state, for split requests in flight.
-    splits: HashMap<u64, SplitState>,
+    /// parent id → merge state, for split requests in flight. Ordered maps:
+    /// nothing iterates them today, but merge bookkeeping sits one refactor
+    /// away from the report path, and `BTreeMap` makes any future iteration
+    /// deterministic by construction (see the `hash-iter` lint rule).
+    splits: BTreeMap<u64, SplitState>,
     /// sub-request id → parent id.
-    sub_parent: HashMap<u64, u64>,
+    sub_parent: BTreeMap<u64, u64>,
     merged_out: Vec<Completion>,
+    /// Request-id conservation auditor (zero-sized unless `audit` is on).
+    ledger: audit::ReqLedger,
+    /// Dispatch-time monotonicity auditor (zero-sized unless `audit` is on).
+    mono: audit::EventMonotonic,
     /// Relay queue: devices schedule device-local events here, the array
     /// forwards them into the world queue tagged with the device id.
     proxy: EventQueue<SsdEvent>,
@@ -96,6 +104,7 @@ pub struct SsdArray {
 
 impl SsdArray {
     pub fn new(cfg: &SimConfig) -> Self {
+        // lint:allow(unwrap): constructor precondition — callers pass a validated config
         cfg.validate().expect("invalid config");
         let n = cfg.devices.max(1) as u64;
         let stripe = cfg.stripe_sectors.max(1);
@@ -109,6 +118,7 @@ impl SsdArray {
         // Heterogeneous devices may expose different capacities; the stripe
         // map addresses every device uniformly, so the usable per-device
         // range is the smallest one (identical to devs[0] when symmetric).
+        // lint:allow(unwrap): `n = devices.max(1)` guarantees at least one device
         let raw = devs.iter().map(SsdSim::logical_sectors).min().expect("devices >= 1");
         let dev_sectors = if n == 1 { raw } else { raw - raw % stripe };
         Self {
@@ -117,9 +127,11 @@ impl SsdArray {
             stripe,
             dev_sectors,
             next_split_id: 0,
-            splits: HashMap::new(),
-            sub_parent: HashMap::new(),
+            splits: BTreeMap::new(),
+            sub_parent: BTreeMap::new(),
             merged_out: Vec::new(),
+            ledger: audit::ReqLedger::default(),
+            mono: audit::EventMonotonic::default(),
             proxy: EventQueue::new(),
             scratch_chunks: Vec::new(),
             scratch_subs: Vec::new(),
@@ -268,8 +280,14 @@ impl SsdArray {
             sub.device = dev;
             let queue = self.devs[dev as usize].queue_for_req(&sub);
             return match self.dev_submit(dev, queue, sub, q) {
-                Ok(()) => Ok(()),
-                Err(_) => Err(req),
+                Ok(()) => {
+                    self.ledger.note_submitted(req.id);
+                    Ok(())
+                }
+                Err(_) => {
+                    self.ledger.note_rejected();
+                    Err(req)
+                }
             };
         }
         let mut chunks = std::mem::take(&mut self.scratch_chunks);
@@ -285,8 +303,14 @@ impl SsdArray {
             sub.device = dev;
             let queue = self.devs[dev as usize].queue_for_req(&sub);
             return match self.dev_submit(dev, queue, sub, q) {
-                Ok(()) => Ok(()),
-                Err(_) => Err(req),
+                Ok(()) => {
+                    self.ledger.note_submitted(req.id);
+                    Ok(())
+                }
+                Err(_) => {
+                    self.ledger.note_rejected();
+                    Err(req)
+                }
             };
         }
         // All-or-nothing split: materialize the sub-requests (resolving each
@@ -326,8 +350,10 @@ impl SsdArray {
         if !fits {
             subs.clear();
             self.scratch_subs = subs;
+            self.ledger.note_rejected();
             return Err(req);
         }
+        self.ledger.note_submitted(req.id);
         self.next_split_id += subs.len() as u64;
         req.device = subs[0].0.device;
         let n_subs = subs.len() as u32;
@@ -376,6 +402,7 @@ impl SsdArray {
         ev: SsdEvent,
         q: &mut EventQueue<E>,
     ) {
+        self.mono.observe(now);
         self.proxy.set_now(now);
         self.devs[dev as usize].handle(now, ev, &mut self.proxy);
         self.forward(dev, q);
@@ -388,15 +415,20 @@ impl SsdArray {
     /// Fold one device completion into the merged stream.
     fn settle(&mut self, c: Completion) {
         if c.id < SPLIT_ID_BASE {
+            self.ledger.note_completed(c.id);
             self.merged_out.push(c);
             return;
         }
+        // lint:allow(unwrap): every sub-request id was registered at split submit
         let parent_id = self.sub_parent.remove(&c.id).expect("completion for unknown sub-request");
+        // lint:allow(unwrap): split state outlives its last sub-request by construction
         let st = self.splits.get_mut(&parent_id).expect("split state missing");
         st.remaining -= 1;
         st.complete_ns = st.complete_ns.max(c.complete_ns);
         if st.remaining == 0 {
+            // lint:allow(unwrap): get_mut above proved the entry exists
             let st = self.splits.remove(&parent_id).unwrap();
+            self.ledger.note_completed(parent_id);
             let p = st.parent;
             self.merged_out.push(Completion {
                 id: p.id,
@@ -432,7 +464,28 @@ impl SsdArray {
 
     /// Every device drained and no split merge outstanding?
     pub fn is_drained(&self) -> bool {
-        self.splits.is_empty() && self.devs.iter().all(SsdSim::is_drained)
+        let drained = self.splits.is_empty() && self.devs.iter().all(SsdSim::is_drained);
+        if drained {
+            // No-op unless the `audit` feature is on: at drain every
+            // accepted request id must have completed exactly once.
+            self.ledger.assert_drained("ssd array");
+        }
+        drained
+    }
+
+    /// Audit check counters for the array and its devices (audit builds).
+    #[cfg(feature = "audit")]
+    pub fn audit_counters(&self) -> audit::Counters {
+        let mut c = audit::Counters {
+            monotonic: self.mono.checks(),
+            ledger_submits: self.ledger.submits(),
+            ledger_completes: self.ledger.completes(),
+            ..Default::default()
+        };
+        for d in &self.devs {
+            c.merge(d.audit_counters());
+        }
+        c
     }
 
     /// Causality clamps observed on the device relay queue (see

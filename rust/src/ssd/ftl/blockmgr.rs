@@ -156,6 +156,7 @@ impl BlockMgr {
             p.blocks[b as usize].write_ptr = 0;
             *open = Some(b);
         }
+        // lint:allow(unwrap): the branch above just filled `open` when it was None
         let b = open.unwrap();
         let blk = &mut p.blocks[b as usize];
         let page = blk.write_ptr;
@@ -222,6 +223,7 @@ impl BlockMgr {
         } else {
             (
                 self.geo.sectors_per_block(),
+                // lint:allow(unwrap): documented above — a valid_count > 0 block without rmap is corrupt and must fail loudly
                 blk.rmap.as_deref().expect("valid sectors require rmap"),
             )
         };

@@ -92,6 +92,7 @@ impl GcController {
     /// Erase completed: collection over.
     pub fn finish(&mut self, plane: PlaneId) -> u32 {
         let st = self.plane_mut(plane);
+        // lint:allow(unwrap): finish() is only scheduled by an active collection holding the victim
         let victim = st.victim.take().expect("finish without active GC");
         st.erase_inflight = false;
         self.collections_finished += 1;

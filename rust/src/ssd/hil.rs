@@ -42,6 +42,7 @@ impl Hil {
     /// Credit `sectors` serviced sectors to request `id`. When the request is
     /// fully serviced, returns `(queue_to_release, completion_record)`.
     pub fn credit(&mut self, id: u64, sectors: u32, now: SimTime) -> Option<(usize, Completion)> {
+        // lint:allow(unwrap): the TSU only credits ids the HIL admitted — a miss is a wiring bug
         let live = self.live.get_mut(&id).expect("credit to unknown request");
         debug_assert!(
             live.remaining_sectors >= sectors,
@@ -50,6 +51,7 @@ impl Hil {
         );
         live.remaining_sectors -= sectors;
         if live.remaining_sectors == 0 {
+            // lint:allow(unwrap): get_mut above proved the entry exists
             let Live { req, queue, .. } = self.live.remove(&id).unwrap();
             match req.opcode {
                 Opcode::Read => self.completed_reads += 1,

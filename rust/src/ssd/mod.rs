@@ -26,6 +26,7 @@ pub mod xact;
 pub use array::{ArrayEvent, SsdArray};
 
 use crate::config::{MapGranularity, SsdConfig};
+use crate::sim::audit;
 use crate::sim::{EventQueue, SimTime};
 use crate::util::rng::Pcg64;
 use addr::{Geometry, PhysSector, PlaneId};
@@ -72,11 +73,14 @@ const NO_CLAIM: u64 = u64::MAX;
 struct EnqueuePool {
     bufs: Vec<Vec<XactId>>,
     free: Vec<u32>,
+    /// Checkout/store balance auditor (zero-sized unless `audit` is on).
+    bal: audit::PoolBalance,
 }
 
 impl EnqueuePool {
     /// Check out an empty batch buffer and its token.
     fn checkout(&mut self) -> (u32, Vec<XactId>) {
+        self.bal.note_checkout();
         match self.free.pop() {
             Some(t) => {
                 let buf = std::mem::take(&mut self.bufs[t as usize]);
@@ -92,11 +96,13 @@ impl EnqueuePool {
 
     /// Park a (possibly empty) buffer under its token until its event fires.
     fn store(&mut self, token: u32, buf: Vec<XactId>) {
+        self.bal.note_store();
         self.bufs[token as usize] = buf;
     }
 
     /// Return an unused (still empty) buffer straight to the free list.
     fn cancel(&mut self, token: u32, buf: Vec<XactId>) {
+        self.bal.note_cancel();
         debug_assert!(buf.is_empty());
         self.bufs[token as usize] = buf;
         self.free.push(token);
@@ -104,14 +110,21 @@ impl EnqueuePool {
 
     /// Take a scheduled batch for consumption; recycle it afterwards.
     fn take(&mut self, token: u32) -> Vec<XactId> {
+        self.bal.note_take();
         std::mem::take(&mut self.bufs[token as usize])
     }
 
     /// Recycle a consumed batch buffer (clears it, keeps its capacity).
     fn recycle(&mut self, token: u32, mut buf: Vec<XactId>) {
+        self.bal.note_recycle();
         buf.clear();
         self.bufs[token as usize] = buf;
         self.free.push(token);
+    }
+
+    /// Conservation at drain: nothing held or parked, free list whole.
+    fn audit_drained(&self) {
+        self.bal.assert_drained(self.free.len(), self.bufs.len());
     }
 }
 
@@ -177,6 +190,7 @@ pub struct SsdSim {
 
 impl SsdSim {
     pub fn new(cfg: &SsdConfig, seed: u64) -> Self {
+        // lint:allow(unwrap): constructor precondition — callers pass a validated config
         cfg.validate().expect("invalid ssd config");
         let geo = Geometry::new(cfg);
         let planes = geo.total_planes() as usize;
@@ -285,6 +299,7 @@ impl SsdSim {
                             let page = self
                                 .mgr
                                 .alloc_page(plane, Stream::Host)
+                                // lint:allow(unwrap): preload is setup, not simulation — a full device is a config error worth aborting on
                                 .expect("preload exhausted plane space");
                             (page, 0)
                         }
@@ -306,6 +321,7 @@ impl SsdSim {
                     let page = self
                         .mgr
                         .alloc_page(plane, Stream::Host)
+                        // lint:allow(unwrap): preload is setup, not simulation — a full device is a config error worth aborting on
                         .expect("preload exhausted plane space");
                     self.map.map_page(lpn, page);
                     self.mgr.mark_valid(PhysSector { page, slot: 0 }, lpn);
@@ -316,10 +332,27 @@ impl SsdSim {
 
     /// All queues empty and no transaction in flight?
     pub fn is_drained(&self) -> bool {
-        self.nvme.pending() == 0
+        let drained = self.nvme.pending() == 0
             && self.hil.in_service() == 0
             && self.tsu.is_drained()
-            && self.slab.is_empty()
+            && self.slab.is_empty();
+        if drained {
+            // No-op unless the `audit` feature is on: at drain the enqueue
+            // pool must be whole (every checkout stored/cancelled, every
+            // store taken and recycled).
+            self.enq.audit_drained();
+        }
+        drained
+    }
+
+    /// Audit check counters for this device (audit builds only).
+    #[cfg(feature = "audit")]
+    pub fn audit_counters(&self) -> audit::Counters {
+        audit::Counters {
+            occupancy: self.nvme.audit_occupancy_checks(),
+            pool_ops: self.enq.bal.ops(),
+            ..Default::default()
+        }
     }
 
     /// Dispatch one SSD event.
@@ -827,12 +860,14 @@ impl SsdSim {
 
     /// Advance a plane's GC after one of its transactions completed.
     fn gc_step<E: From<SsdEvent> + From<TsuEvent>>(&mut self, x: &Xact, now: SimTime, q: &mut EventQueue<E>) {
+        // lint:allow(unwrap): gc_step is only reached for GC-cause xacts, which always carry a plane
         let plane = x.gc_plane.expect("GC xact without plane");
         match x.kind {
             XactKind::Read => {
                 // Re-verify survivors (the host may have overwritten them
                 // while the read was in flight), then program them into the
                 // GC stream.
+                // lint:allow(unwrap): a GC read in flight implies an elected victim block
                 let victim = self.gc.plane(plane).victim.expect("GC read without victim");
                 let mut survivors: Vec<u64> = Vec::new();
                 for &(slot, logical) in &x.gc_payload {
@@ -877,6 +912,7 @@ impl SsdSim {
             }
         }
         if self.gc.plane(plane).ready_to_erase() {
+            // lint:allow(unwrap): ready_to_erase() implies the victim is still set
             let victim = self.gc.plane(plane).victim.unwrap();
             self.issue_gc_erase(plane, victim, now, q);
         }

@@ -6,6 +6,7 @@
 //! queue depth bounds the device-visible concurrency (the §2 queue-depth
 //! scaling study).
 
+use crate::sim::audit;
 use crate::sim::SimTime;
 use std::collections::VecDeque;
 
@@ -62,6 +63,8 @@ pub struct NvmeQueues {
     fetch_armed: Vec<bool>,
     pub total_submitted: u64,
     pub total_rejected: u64,
+    /// Occupancy auditor (zero-sized unless the `audit` feature is on).
+    occ_audit: audit::Occupancy,
 }
 
 impl NvmeQueues {
@@ -74,6 +77,7 @@ impl NvmeQueues {
             fetch_armed: vec![false; queues as usize],
             total_submitted: 0,
             total_rejected: 0,
+            occ_audit: audit::Occupancy::default(),
         }
     }
 
@@ -103,7 +107,19 @@ impl NvmeQueues {
         }
         self.queues[queue].push_back(req);
         self.total_submitted += 1;
+        self.occ_audit.check(
+            queue,
+            self.queues[queue].len(),
+            self.outstanding[queue],
+            self.depth,
+        );
         Ok(())
+    }
+
+    /// Occupancy checks performed (audit builds; 0-cost stub otherwise).
+    #[cfg(feature = "audit")]
+    pub fn audit_occupancy_checks(&self) -> u64 {
+        self.occ_audit.checks()
     }
 
     /// Round-robin pick of a non-empty queue whose fetch slot is free, then

@@ -107,14 +107,17 @@ impl XactSlab {
     }
 
     pub fn get(&self, id: XactId) -> &Xact {
+        // lint:allow(unwrap): slab ids are handed out by insert and retired exactly once
         self.slots[id as usize].as_ref().expect("stale xact id")
     }
 
     pub fn get_mut(&mut self, id: XactId) -> &mut Xact {
+        // lint:allow(unwrap): slab ids are handed out by insert and retired exactly once
         self.slots[id as usize].as_mut().expect("stale xact id")
     }
 
     pub fn remove(&mut self, id: XactId) -> Xact {
+        // lint:allow(unwrap): slab ids are handed out by insert and retired exactly once
         let x = self.slots[id as usize].take().expect("double remove");
         self.free.push(id);
         self.live -= 1;

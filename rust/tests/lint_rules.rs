@@ -1,0 +1,205 @@
+//! Fixture tests for `mqms lint`: each fixture is a small source snippet
+//! driven through `lint_source` with the exact expected diagnostics, plus a
+//! whole-tree run that must come back clean — the same invocation CI gates
+//! on, so a red fixture here means a red `mqms lint` gate.
+
+use mqms::lint::{discover_root, lint_source, lint_tree, Rule};
+use std::path::Path;
+
+/// (line, rule) pairs, the order `lint_source` reports them in.
+fn rules(path: &str, src: &str) -> Vec<(usize, Rule)> {
+    lint_source(path, src).into_iter().map(|d| (d.line, d.rule)).collect()
+}
+
+// --- wall-clock ------------------------------------------------------------
+
+#[test]
+fn wall_clock_flagged_in_simulation_scope_with_exact_message() {
+    let d = lint_source("rust/src/sim/engine.rs", "let t0 = std::time::Instant::now();\n");
+    assert_eq!(d.len(), 1);
+    assert_eq!(
+        d[0].to_string(),
+        "rust/src/sim/engine.rs:1: [wall-clock] `Instant::now` in a simulation path: \
+         output must not depend on wall-clock time or the host environment"
+    );
+}
+
+#[test]
+fn every_wall_clock_source_is_caught() {
+    for bad in [
+        "let t = SystemTime::now();",
+        "let v = std::env::var(\"SEED\");",
+        "let n = std::thread::available_parallelism();",
+        "let r = rand::thread_rng();",
+    ] {
+        let d = rules("rust/src/coordinator/mod.rs", bad);
+        assert_eq!(d, vec![(1, Rule::WallClock)], "missed: {bad}");
+    }
+}
+
+#[test]
+fn wall_clock_outside_scope_is_ignored() {
+    assert!(rules("rust/src/util/bench.rs", "let t0 = Instant::now();\n").is_empty());
+    assert!(rules("rust/src/cli.rs", "let t0 = Instant::now();\n").is_empty());
+}
+
+#[test]
+fn wall_clock_in_comment_or_string_is_ignored() {
+    assert!(rules("rust/src/sim/engine.rs", "// avoid Instant::now here\n").is_empty());
+    assert!(rules("rust/src/sim/engine.rs", "let m = \"Instant::now banned\";\n").is_empty());
+}
+
+// --- hash-iter -------------------------------------------------------------
+
+#[test]
+fn hash_map_iteration_is_flagged() {
+    let src = "let m: HashMap<u32, u32> = HashMap::new();\n\
+               for (k, v) in &m {}\n";
+    let d = rules("rust/src/gpu/mod.rs", src);
+    assert_eq!(d, vec![(2, Rule::HashIter)]);
+}
+
+#[test]
+fn hash_keys_and_drain_are_flagged() {
+    let src = "let mut groups: std::collections::HashMap<u32, u32> = Default::default();\n\
+               let ks: Vec<_> = groups.keys().copied().collect();\n\
+               groups.drain();\n";
+    let d = rules("rust/src/sampling/mod.rs", src);
+    assert_eq!(d, vec![(2, Rule::HashIter), (3, Rule::HashIter)]);
+}
+
+#[test]
+fn hash_lookup_without_iteration_is_fine() {
+    let src = "let live: HashMap<u64, u32> = HashMap::new();\n\
+               let v = live.get(&7);\n\
+               let n = live.len();\n";
+    assert!(rules("rust/src/ssd/hil.rs", src).is_empty());
+}
+
+#[test]
+fn btree_iteration_is_fine() {
+    let src = "let m: BTreeMap<u64, u32> = BTreeMap::new();\n\
+               for (k, v) in &m {}\n";
+    assert!(rules("rust/src/ssd/array.rs", src).is_empty());
+}
+
+#[test]
+fn hash_iter_suppressed_by_justified_marker() {
+    let src = "let mut g: HashMap<u32, u32> = HashMap::new();\n\
+               // lint:allow(hash-iter): keys are sorted before use\n\
+               let mut ks: Vec<_> = g.keys().copied().collect();\n\
+               ks.sort();\n";
+    assert!(rules("rust/src/sampling/mod.rs", src).is_empty());
+}
+
+// --- unwrap ----------------------------------------------------------------
+
+#[test]
+fn unwrap_flagged_in_hot_path_with_exact_message() {
+    let d = lint_source("rust/src/coordinator/mod.rs", "let x = opt.unwrap();\n");
+    assert_eq!(d.len(), 1);
+    assert_eq!(
+        d[0].to_string(),
+        "rust/src/coordinator/mod.rs:1: [unwrap] `.unwrap()` in a coordinator/ssd/gpu \
+         hot path: justify the invariant or propagate the error"
+    );
+}
+
+#[test]
+fn expect_flagged_and_marker_on_same_line_suppresses() {
+    let bare = "let x = opt.expect(\"missing\");\n";
+    assert_eq!(rules("rust/src/ssd/mod.rs", bare), vec![(1, Rule::Unwrap)]);
+    let marked =
+        "let x = opt.expect(\"missing\"); // lint:allow(unwrap): upheld by constructor\n";
+    assert!(rules("rust/src/ssd/mod.rs", marked).is_empty());
+}
+
+#[test]
+fn unwrap_or_is_not_unwrap() {
+    assert!(rules("rust/src/ssd/mod.rs", "let x = opt.unwrap_or(1);\n").is_empty());
+}
+
+#[test]
+fn test_code_is_exempt_from_line_rules() {
+    let src = "fn live() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   fn f() { x.unwrap(); let t = Instant::now(); }\n\
+               }\n";
+    assert!(rules("rust/src/ssd/mod.rs", src).is_empty());
+}
+
+// --- float-eq --------------------------------------------------------------
+
+#[test]
+fn float_equality_flagged_in_priced_paths() {
+    let d = lint_source("rust/src/gpu/monitor.rs", "if x == 0.0 { y(); }\n");
+    assert_eq!(d.len(), 1);
+    assert_eq!(
+        d[0].to_string(),
+        "rust/src/gpu/monitor.rs:1: [float-eq] exact float comparison in a priced \
+         path: use a tolerance or an integer sentinel"
+    );
+    assert_eq!(rules("rust/src/campaign.rs", "if 1.5 != rho { }\n"), vec![(1, Rule::FloatEq)]);
+}
+
+#[test]
+fn float_ordering_and_integer_equality_are_fine() {
+    for ok in ["if x <= 0.0 { }", "if x >= 1.5 { }", "if n == 0 { }", "if a == b { }"] {
+        assert!(rules("rust/src/gpu/monitor.rs", ok).is_empty(), "false positive: {ok}");
+    }
+}
+
+#[test]
+fn float_eq_outside_priced_paths_is_ignored() {
+    assert!(rules("rust/src/gpu/sched.rs", "if x == 0.0 { }\n").is_empty());
+}
+
+// --- allow-marker grammar --------------------------------------------------
+
+#[test]
+fn marker_with_empty_reason_is_a_diagnostic() {
+    let d = lint_source("rust/src/ssd/mod.rs", "let a = b.unwrap(); // lint:allow(unwrap):\n");
+    // The malformed marker is reported AND the finding it failed to cover.
+    assert_eq!(d.len(), 2, "{d:?}");
+    assert!(d.iter().any(|x| x.rule == Rule::AllowMarker
+        && x.message.contains("non-empty reason")));
+    assert!(d.iter().any(|x| x.rule == Rule::Unwrap));
+}
+
+#[test]
+fn marker_with_unknown_rule_is_a_diagnostic() {
+    let d = lint_source("rust/src/ssd/mod.rs", "// lint:allow(bogus): because\nlet a = 1;\n");
+    assert_eq!(d.len(), 1);
+    assert_eq!(d[0].rule, Rule::AllowMarker);
+    assert!(d[0].message.contains("unknown rule `bogus`"));
+}
+
+#[test]
+fn unused_marker_is_a_diagnostic() {
+    let d = lint_source("rust/src/ssd/mod.rs", "// lint:allow(unwrap): nothing here\nlet a = 1;\n");
+    assert_eq!(d.len(), 1);
+    assert!(d[0].message.contains("unused lint:allow(unwrap)"));
+}
+
+#[test]
+fn marker_must_match_the_rule_it_suppresses() {
+    // A wall-clock marker cannot hide an unwrap finding: both the finding
+    // and the unused marker are reported.
+    let src = "// lint:allow(wall-clock): wrong rule\nlet a = b.unwrap();\n";
+    let d = rules("rust/src/ssd/mod.rs", src);
+    assert_eq!(d, vec![(1, Rule::AllowMarker), (2, Rule::Unwrap)]);
+}
+
+// --- whole tree ------------------------------------------------------------
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let root = discover_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("repo root");
+    let diags = lint_tree(&root).expect("lint_tree runs");
+    assert!(
+        diags.is_empty(),
+        "repo must be lint-clean; findings:\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
