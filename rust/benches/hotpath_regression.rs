@@ -20,7 +20,8 @@ fn assert_audit_compiles_out() {
     assert_eq!(std::mem::size_of::<audit::Occupancy>(), 0);
     assert_eq!(std::mem::size_of::<audit::PoolBalance>(), 0);
     assert_eq!(std::mem::size_of::<audit::ShardNamespace>(), 0);
-    println!("audit feature off: all five auditors are zero-sized (compiled out)");
+    assert_eq!(std::mem::size_of::<audit::DegradedState>(), 0);
+    println!("audit feature off: all six auditors are zero-sized (compiled out)");
 }
 
 fn main() {

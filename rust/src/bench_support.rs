@@ -237,6 +237,34 @@ pub fn replace_run(gpus: u32, devices: u32, replace: bool, seed: u64) -> Report 
     run_bundle(cfg, &drift_bundle(seed))
 }
 
+// --- fault-injection / graceful-degradation study
+// --- (benches/fault_degradation.rs + tests/faults.rs) -------------------
+
+/// One cell of the fault study: the drift bundle (so dynamic re-placement
+/// has queued tails to migrate) under a named fault scenario
+/// ([`config::fault_scenario`], victim = last device). The same knobs as
+/// [`replace_run`] — PerfAware placement, DRAM off, shallow prefetch
+/// pipeline — so `scenario = "none"` with `replace` off reproduces that
+/// study's fault-free cell byte-for-byte.
+pub fn fault_run(
+    gpus: u32,
+    devices: u32,
+    scenario: &str,
+    replace: bool,
+    seed: u64,
+) -> Report {
+    let mut cfg = config::mqms_enterprise();
+    cfg.gpus = gpus;
+    cfg.devices = devices;
+    cfg.placement = Placement::PerfAware;
+    cfg.gpu.dram_bytes = 0;
+    cfg.gpu.pipeline_depth = 4;
+    cfg.replace.enabled = replace;
+    cfg.faults = config::fault_scenario(scenario, devices).expect("known fault scenario");
+    cfg.seed = seed;
+    run_bundle(cfg, &drift_bundle(seed))
+}
+
 // --- heterogeneous-array study (benches/hetero_array.rs +
 // --- tests/hetero_array.rs) ---------------------------------------------
 

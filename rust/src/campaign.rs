@@ -1,7 +1,7 @@
 //! Parallel scenario campaigns: expand a `{preset × workload × scale ×
 //! device-count × device-mix × gpu-count × placement × replace × rw-ratio ×
-//! op-ratio}` matrix into cells and execute them on `std::thread` workers,
-//! one independent co-simulation per cell.
+//! op-ratio × faults}` matrix into cells and execute them on `std::thread`
+//! workers, one independent co-simulation per cell.
 //!
 //! Each cell is a fully self-contained [`CoSim`] seeded from the campaign's
 //! root seed, so results are deterministic per cell; cells are collected in
@@ -51,6 +51,11 @@ pub struct CampaignSpec {
     /// each value overrides the base `ssd.op_ratio` (per-device override
     /// patches still apply on top). Empty = keep the preset's value.
     pub op_ratios: Vec<f64>,
+    /// Named fault scenarios ([`config::fault_scenario`]) to sweep:
+    /// `none` is the fault-free pass-through; `transient` / `gc-storm` /
+    /// `degrade` / `dropout` inject the corresponding per-device schedule
+    /// resolved against the cell's device count.
+    pub faults: Vec<String>,
     /// Root seed; every cell runs with this seed (a cell is then directly
     /// comparable to `mqms run --seed <seed>` with the same parameters).
     pub seed: u64,
@@ -73,6 +78,7 @@ impl Default for CampaignSpec {
             replace: vec![false],
             rw_ratios: Vec::new(),
             op_ratios: Vec::new(),
+            faults: vec!["none".into()],
             seed: 42,
             threads: 0,
             sampled: true,
@@ -97,6 +103,9 @@ pub struct Cell {
     pub rw_ratio: Option<f64>,
     /// `ssd.op_ratio` override (`None` = the preset's value).
     pub op_ratio: Option<f64>,
+    /// Named fault scenario resolved against `devices`
+    /// ([`config::fault_scenario`]); `"none"` is the fault-free cell.
+    pub faults: String,
 }
 
 impl Cell {
@@ -123,6 +132,9 @@ impl Cell {
         if let Some(o) = self.op_ratio {
             s.push_str(&format!("-op{o}"));
         }
+        if self.faults != "none" {
+            s.push_str(&format!("-{}", self.faults));
+        }
         s
     }
 }
@@ -143,6 +155,12 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
     };
     let rw_axis = opt_axis(&spec.rw_ratios);
     let op_axis = opt_axis(&spec.op_ratios);
+    // An empty faults axis means "fault-free", matching the rw/op idiom.
+    let fault_axis: Vec<String> = if spec.faults.is_empty() {
+        vec!["none".to_string()]
+    } else {
+        spec.faults.clone()
+    };
     let mut cells = Vec::new();
     for preset in &spec.presets {
         for workload in &spec.workloads {
@@ -160,18 +178,21 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
                                     }
                                     for &rw_ratio in &rw_axis {
                                         for &op_ratio in &op_axis {
-                                            cells.push(Cell {
-                                                preset: preset.clone(),
-                                                workload: workload.clone(),
-                                                scale,
-                                                devices,
-                                                device_mix: device_mix.clone(),
-                                                gpus,
-                                                placement,
-                                                replace,
-                                                rw_ratio,
-                                                op_ratio,
-                                            });
+                                            for faults in &fault_axis {
+                                                cells.push(Cell {
+                                                    preset: preset.clone(),
+                                                    workload: workload.clone(),
+                                                    scale,
+                                                    devices,
+                                                    device_mix: device_mix.clone(),
+                                                    gpus,
+                                                    placement,
+                                                    replace,
+                                                    rw_ratio,
+                                                    op_ratio,
+                                                    faults: faults.clone(),
+                                                });
+                                            }
                                         }
                                     }
                                 }
@@ -218,6 +239,18 @@ pub fn cell_config(cell: &Cell, seed: u64) -> Result<SimConfig, String> {
     cfg.replace.enabled = cell.replace;
     if let Some(op) = cell.op_ratio {
         cfg.ssd.op_ratio = op;
+    }
+    // Like `device_mix`'s `"uniform"`, `"none"` is the pass-through: a
+    // file preset's own fault plan survives an unswept axis.
+    let plan = config::fault_scenario(&cell.faults, cell.devices).ok_or_else(|| {
+        format!(
+            "unknown fault scenario `{}` (valid: {})",
+            cell.faults,
+            config::FAULT_SCENARIO_NAMES.join(", ")
+        )
+    })?;
+    if cell.faults != "none" {
+        cfg.faults = plan;
     }
     let mix = config::device_mix(&cell.device_mix, cell.devices).ok_or_else(|| {
         format!(
@@ -324,6 +357,14 @@ pub fn run_streaming(
             return Err(format!("op_ratio {o} out of (0.05, 1.0]"));
         }
     }
+    for f in &spec.faults {
+        if config::fault_scenario(f, 1).is_none() {
+            return Err(format!(
+                "unknown fault scenario `{f}` (valid: {})",
+                config::FAULT_SCENARIO_NAMES.join(", ")
+            ));
+        }
+    }
     let threads = effective_threads(spec.threads, cells.len());
     // Workers claim cells in cost order (expensive first); results land in
     // matrix-order slots, so the merged output is schedule-independent.
@@ -396,6 +437,7 @@ pub fn summary_json(results: &[(Cell, Report)]) -> Json {
                 ("replace", c.replace.into()),
                 ("rw_ratio", c.rw_ratio.map(Json::from).unwrap_or(Json::Null)),
                 ("op_ratio", c.op_ratio.map(Json::from).unwrap_or(Json::Null)),
+                ("faults", c.faults.as_str().into()),
                 ("device_configs", Json::Arr(fingerprints)),
                 ("report", r.to_json_deterministic()),
             ])
@@ -430,7 +472,7 @@ pub const TABLE_HEADERS: [&str; 6] =
 /// Figure-ready CSV header: one [`csv_row`] per cell, axes first, then the
 /// headline metrics (makespan, device response p50/p99, events/sec).
 pub const CSV_HEADER: &str = "preset,workload,scale,devices,device_mix,gpus,placement,replace,\
-rw_ratio,op_ratio,end_ns,gpu_makespan_ns,completed,iops,mean_response_ns,\
+rw_ratio,op_ratio,faults,end_ns,gpu_makespan_ns,completed,iops,mean_response_ns,\
 read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,events_per_sec";
 
 /// One CSV data row matching [`CSV_HEADER`]. Everything except
@@ -447,7 +489,7 @@ pub fn csv_row(cell: &Cell, r: &Report) -> String {
         None => "-".to_string(),
     };
     format!(
-        "{},{},{},{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{:.3}",
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{:.3}",
         cell.preset,
         cell.workload,
         cell.scale,
@@ -458,6 +500,7 @@ pub fn csv_row(cell: &Cell, r: &Report) -> String {
         if cell.replace { "on" } else { "off" },
         opt(cell.rw_ratio),
         opt(cell.op_ratio),
+        cell.faults,
         r.end_ns,
         crate::bench_support::gpu_makespan(r),
         r.ssd.completed,
@@ -524,6 +567,7 @@ mod tests {
             replace: false,
             rw_ratio: None,
             op_ratio: None,
+            faults: "none".into(),
         };
         let tie = vec![cell(0.01, 1), cell(0.005, 2)];
         assert_eq!(schedule_order(&tie), vec![0, 1]);
@@ -633,6 +677,7 @@ mod tests {
             replace: false,
             rw_ratio: None,
             op_ratio: Some(0.5),
+            faults: "none".to_string(),
         };
         let cfg = cell_config(&cell, 7).unwrap();
         assert_eq!(cfg.device_overrides.len(), 4);
@@ -643,6 +688,40 @@ mod tests {
         let mut uni = cell.clone();
         uni.device_mix = "uniform".to_string();
         assert!(cell_config(&uni, 7).unwrap().device_overrides.is_empty());
+    }
+
+    #[test]
+    fn faults_axis_expands_resolves_and_rejects_unknown_names() {
+        let spec = CampaignSpec {
+            presets: vec!["a".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.1],
+            devices: vec![2],
+            faults: vec!["none".into(), "dropout".into()],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 2);
+        // The fault-free cell keeps its historical label.
+        assert_eq!(cells[0].label(), "a/w@0.1x2d");
+        assert_eq!(cells[1].label(), "a/w@0.1x2d-dropout");
+        let labels: std::collections::HashSet<String> =
+            cells.iter().map(Cell::label).collect();
+        assert_eq!(labels.len(), cells.len(), "labels must stay unique");
+        // The scenario resolves into the cell's config against its device
+        // count (victim = last device), and `none` stays fault-free.
+        let mut cell = cells[1].clone();
+        cell.preset = "mqms".to_string();
+        let cfg = cell_config(&cell, 7).unwrap();
+        assert!(cfg.faults.enabled());
+        assert_eq!(cfg.faults.devices[0].device, 1);
+        let mut none = cell.clone();
+        none.faults = "none".to_string();
+        assert!(!cell_config(&none, 7).unwrap().faults.enabled());
+        // Unknown scenarios fail before any cell runs.
+        let bad = CampaignSpec { faults: vec!["nope".into()], ..CampaignSpec::default() };
+        let err = run(&bad).unwrap_err();
+        assert!(err.contains("fault scenario"), "{err}");
     }
 
     #[test]

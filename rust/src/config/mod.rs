@@ -492,6 +492,297 @@ impl ReplaceConfig {
     }
 }
 
+/// One device's fault schedule inside a [`FaultPlan`]. All times are
+/// simulated ns; every mechanism is off at its default value, so a spec
+/// that only names a device injects nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Array device index in `0..devices`.
+    pub device: u32,
+    /// Probability a read command pays one ECC re-read
+    /// (`ecc_retry_ns`) — transient media errors. 0.0 = never.
+    pub read_error_rate: f64,
+    /// Added service latency per transient read error, ns.
+    pub ecc_retry_ns: u64,
+    /// Period of the device's recurring stall window (GC-storm
+    /// emulation), ns. 0 = no stalls.
+    pub stall_period_ns: u64,
+    /// Width of the stall window at the start of each period: commands
+    /// serviced inside it wait until the window ends, ns.
+    pub stall_ns: u64,
+    /// Simulated time the device starts slowing down. 0 = no ramp.
+    pub degrade_after_ns: u64,
+    /// Time over which the slowdown ramps from 0 to `degrade_max_ns`.
+    pub degrade_ramp_ns: u64,
+    /// Added per-command latency once the ramp saturates, ns.
+    pub degrade_max_ns: u64,
+    /// Simulated time the device drops out permanently (stops answering;
+    /// in-flight and future commands fail). 0 = never.
+    pub fail_at_ns: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            device: 0,
+            read_error_rate: 0.0,
+            ecc_retry_ns: 60_000,
+            stall_period_ns: 0,
+            stall_ns: 0,
+            degrade_after_ns: 0,
+            degrade_ramp_ns: 1_000_000,
+            degrade_max_ns: 0,
+            fail_at_ns: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Does this spec inject anything at all?
+    pub fn active(&self) -> bool {
+        self.read_error_rate > 0.0
+            || (self.stall_period_ns > 0 && self.stall_ns > 0)
+            || self.degrade_max_ns > 0
+            || self.fail_at_ns > 0
+    }
+}
+
+/// Deterministic fault-injection plan: per-device fault schedules plus the
+/// NVMe command-timeout / retry policy the coordinator applies. Off by
+/// default — with the default plan no injector is built, no timeout events
+/// are scheduled, and a run is byte-identical to the fault-free engine
+/// (pinned by `tests/faults.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// NVMe command deadline, ns: commands older than this complete with an
+    /// error status and are retried by the coordinator. 0 = timeouts off.
+    pub cmd_timeout_ns: u64,
+    /// Retry attempts per failed request before it is counted as `failed`
+    /// and delivered back as an error.
+    pub max_retries: u32,
+    /// Deterministic retry backoff: attempt `k` resubmits after
+    /// `k * retry_backoff_ns`.
+    pub retry_backoff_ns: u64,
+    /// Cap on SQ-full retry rounds per request (the coordinator's
+    /// `pending_submit` loop); beyond it the request is counted as
+    /// `retry_exhausted`. High default: unreachable in healthy runs.
+    pub max_sq_retry_rounds: u32,
+    /// Per-device fault schedules (at most one per device).
+    pub devices: Vec<FaultSpec>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            cmd_timeout_ns: 0,
+            max_retries: 3,
+            retry_backoff_ns: 100_000,
+            max_sq_retry_rounds: 65_536,
+            devices: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Anything to inject or enforce? (The SQ-round cap alone does not count
+    /// as "enabled": it is pure bookkeeping below the cap.)
+    pub fn enabled(&self) -> bool {
+        self.cmd_timeout_ns > 0 || self.devices.iter().any(FaultSpec::active)
+    }
+
+    /// The fault schedule for one device, if any.
+    pub fn spec_for(&self, dev: u32) -> Option<&FaultSpec> {
+        self.devices.iter().find(|s| s.device == dev)
+    }
+
+    fn validate(&self, errs: &mut Vec<String>, devices: u32) {
+        if self.retry_backoff_ns == 0 {
+            errs.push("faults.retry_backoff_ns must be ≥ 1".to_string());
+        }
+        if self.max_sq_retry_rounds == 0 {
+            errs.push("faults.max_sq_retry_rounds must be ≥ 1".to_string());
+        }
+        for (i, s) in self.devices.iter().enumerate() {
+            if s.device >= devices {
+                errs.push(format!(
+                    "faults.devices[{i}]: device {} out of range (devices = {devices})",
+                    s.device
+                ));
+            }
+            if self.devices[..i].iter().any(|p| p.device == s.device) {
+                errs.push(format!(
+                    "faults.devices[{i}]: duplicate schedule for device {}",
+                    s.device
+                ));
+            }
+            if !(0.0..=1.0).contains(&s.read_error_rate) {
+                errs.push(format!(
+                    "faults.devices[{i}]: read_error_rate {} out of [0, 1]",
+                    s.read_error_rate
+                ));
+            }
+            if s.read_error_rate > 0.0 && s.ecc_retry_ns == 0 {
+                errs.push(format!(
+                    "faults.devices[{i}]: read errors need ecc_retry_ns ≥ 1"
+                ));
+            }
+            if s.stall_ns > 0 && s.stall_period_ns <= s.stall_ns {
+                errs.push(format!(
+                    "faults.devices[{i}]: stall_period_ns {} must exceed stall_ns {}",
+                    s.stall_period_ns, s.stall_ns
+                ));
+            }
+            if s.degrade_max_ns > 0 && s.degrade_ramp_ns == 0 {
+                errs.push(format!(
+                    "faults.devices[{i}]: degradation needs degrade_ramp_ns ≥ 1"
+                ));
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|s| {
+                Json::from_pairs(vec![
+                    ("device", (s.device as u64).into()),
+                    ("read_error_rate", s.read_error_rate.into()),
+                    ("ecc_retry_ns", s.ecc_retry_ns.into()),
+                    ("stall_period_ns", s.stall_period_ns.into()),
+                    ("stall_ns", s.stall_ns.into()),
+                    ("degrade_after_ns", s.degrade_after_ns.into()),
+                    ("degrade_ramp_ns", s.degrade_ramp_ns.into()),
+                    ("degrade_max_ns", s.degrade_max_ns.into()),
+                    ("fail_at_ns", s.fail_at_ns.into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("cmd_timeout_ns", self.cmd_timeout_ns.into()),
+            ("max_retries", (self.max_retries as u64).into()),
+            ("retry_backoff_ns", self.retry_backoff_ns.into()),
+            ("max_sq_retry_rounds", (self.max_sq_retry_rounds as u64).into()),
+            ("devices", Json::Arr(devices)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let mut p = FaultPlan::default();
+        if let Some(v) = j.get("cmd_timeout_ns").and_then(Json::as_u64) {
+            p.cmd_timeout_ns = v;
+        }
+        if let Some(v) = j.get("max_retries").and_then(Json::as_u64) {
+            p.max_retries =
+                u32::try_from(v).map_err(|_| format!("faults.max_retries out of range: {v}"))?;
+        }
+        if let Some(v) = j.get("retry_backoff_ns").and_then(Json::as_u64) {
+            p.retry_backoff_ns = v;
+        }
+        if let Some(v) = j.get("max_sq_retry_rounds").and_then(Json::as_u64) {
+            p.max_sq_retry_rounds = u32::try_from(v)
+                .map_err(|_| format!("faults.max_sq_retry_rounds out of range: {v}"))?;
+        }
+        if let Some(v) = j.get("devices") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| format!("faults.devices must be an array, got {}", v.kind()))?;
+            p.devices = arr
+                .iter()
+                .map(|e| {
+                    let device = e
+                        .get("device")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| "faults.devices entry missing `device` index".to_string())?;
+                    let mut s = FaultSpec {
+                        device: u32::try_from(device)
+                            .map_err(|_| format!("fault device index out of range: {device}"))?,
+                        ..FaultSpec::default()
+                    };
+                    if let Some(v) = e.get("read_error_rate").and_then(Json::as_f64) {
+                        s.read_error_rate = v;
+                    }
+                    macro_rules! num_u64 {
+                        ($key:literal, $field:ident) => {
+                            if let Some(v) = e.get($key).and_then(Json::as_u64) {
+                                s.$field = v;
+                            }
+                        };
+                    }
+                    num_u64!("ecc_retry_ns", ecc_retry_ns);
+                    num_u64!("stall_period_ns", stall_period_ns);
+                    num_u64!("stall_ns", stall_ns);
+                    num_u64!("degrade_after_ns", degrade_after_ns);
+                    num_u64!("degrade_ramp_ns", degrade_ramp_ns);
+                    num_u64!("degrade_max_ns", degrade_max_ns);
+                    num_u64!("fail_at_ns", fail_at_ns);
+                    Ok(s)
+                })
+                .collect::<Result<_, String>>()?;
+        }
+        Ok(p)
+    }
+}
+
+/// Named fault scenarios — the `faults` campaign-axis vocabulary. The victim
+/// device is always the last one (`devices - 1`) so a sweep over device
+/// counts keeps exactly one victim. Returns `None` for an unknown name.
+pub fn fault_scenario(name: &str, devices: u32) -> Option<FaultPlan> {
+    let victim = devices.saturating_sub(1);
+    let mut plan = FaultPlan::default();
+    match name {
+        "none" => {}
+        "transient" => {
+            // Every device sees sporadic ECC re-reads.
+            plan.devices = (0..devices)
+                .map(|d| FaultSpec {
+                    device: d,
+                    read_error_rate: 0.02,
+                    ecc_retry_ns: 60_000,
+                    ..FaultSpec::default()
+                })
+                .collect();
+        }
+        "gc-storm" => {
+            // The victim stalls 600 µs out of every 2 ms.
+            plan.devices = vec![FaultSpec {
+                device: victim,
+                stall_period_ns: 2_000_000,
+                stall_ns: 600_000,
+                ..FaultSpec::default()
+            }];
+        }
+        "degrade" => {
+            // The victim slows by up to 400 µs/command over a 4 ms ramp.
+            plan.devices = vec![FaultSpec {
+                device: victim,
+                degrade_after_ns: 1_000_000,
+                degrade_ramp_ns: 4_000_000,
+                degrade_max_ns: 400_000,
+                ..FaultSpec::default()
+            }];
+        }
+        "dropout" => {
+            // The victim dies at 2 ms; timeouts + bounded retries recover
+            // what they can and the rest surfaces as counted failures.
+            plan.cmd_timeout_ns = 1_500_000;
+            plan.max_retries = 2;
+            plan.retry_backoff_ns = 50_000;
+            plan.devices = vec![FaultSpec {
+                device: victim,
+                fail_at_ns: 2_000_000,
+                ..FaultSpec::default()
+            }];
+        }
+        _ => return None,
+    }
+    Some(plan)
+}
+
+/// Valid [`fault_scenario`] names.
+pub const FAULT_SCENARIO_NAMES: [&str; 5] =
+    ["none", "transient", "gc-storm", "degrade", "dropout"];
+
 /// GPU↔SSD path configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PathConfig {
@@ -532,6 +823,9 @@ pub struct SimConfig {
     pub device_overrides: Vec<DeviceOverride>,
     /// Online re-placement policy (monitor + queued-kernel migration).
     pub replace: ReplaceConfig,
+    /// Deterministic fault-injection plan (per-device schedules + NVMe
+    /// timeout/retry policy). Default = no faults, byte-identical runs.
+    pub faults: FaultPlan,
     pub ssd: SsdConfig,
     pub gpu: GpuConfig,
     pub path: PathConfig,
@@ -610,6 +904,7 @@ impl SimConfig {
             }
         }
         self.replace.validate(&mut errs);
+        self.faults.validate(&mut errs, self.devices);
         if errs.is_empty() {
             Ok(())
         } else {
@@ -733,6 +1028,10 @@ impl SimConfig {
             let arr = self.device_overrides.iter().map(DeviceOverride::to_json).collect();
             j.set("device_overrides", Json::Arr(arr)).expect("config json is an object");
         }
+        // Sparse: fault-free configs stay byte-identical on round-trip.
+        if self.faults != FaultPlan::default() {
+            j.set("faults", self.faults.to_json()).expect("config json is an object");
+        }
         j
     }
 
@@ -786,6 +1085,9 @@ impl SimConfig {
             if let Some(v) = r.get("ewma_alpha").and_then(Json::as_f64) {
                 c.ewma_alpha = v;
             }
+        }
+        if let Some(f) = j.get("faults") {
+            cfg.faults = FaultPlan::from_json(f)?;
         }
         if let Some(s) = j.get("ssd") {
             let c = &mut cfg.ssd;
@@ -1067,6 +1369,74 @@ mod tests {
         rj.set("epoch_ns", 0u64.into()).unwrap();
         j.set("replace", rj).unwrap();
         assert!(SimConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn fault_plan_roundtrips_and_validates() {
+        // Presets default to the fault-free plan, and the key is sparse.
+        assert_eq!(mqms_enterprise().faults, FaultPlan::default());
+        assert!(!mqms_enterprise().faults.enabled());
+        assert!(mqms_enterprise().to_json().get("faults").is_none());
+        let mut cfg = mqms_enterprise();
+        cfg.devices = 4;
+        cfg.faults.cmd_timeout_ns = 1_500_000;
+        cfg.faults.max_retries = 2;
+        cfg.faults.retry_backoff_ns = 50_000;
+        cfg.faults.devices = vec![
+            FaultSpec { device: 1, read_error_rate: 0.05, ..FaultSpec::default() },
+            FaultSpec { device: 3, fail_at_ns: 2_000_000, ..FaultSpec::default() },
+        ];
+        cfg.validate().unwrap();
+        assert!(cfg.faults.enabled());
+        assert!(cfg.faults.spec_for(3).is_some());
+        assert!(cfg.faults.spec_for(0).is_none());
+        let re = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, re);
+        // Bad knob values are load errors, not silent defaults.
+        let mut bad = cfg.clone();
+        bad.faults.devices[0].device = 9;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.faults.devices[1].device = 1; // duplicate
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.faults.devices[0].read_error_rate = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.faults.devices[0] = FaultSpec {
+            device: 1,
+            stall_period_ns: 100,
+            stall_ns: 100,
+            ..FaultSpec::default()
+        };
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.faults.retry_backoff_ns = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.faults.max_sq_retry_rounds = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fault_scenarios_resolve_and_validate() {
+        for name in FAULT_SCENARIO_NAMES {
+            let plan = fault_scenario(name, 4).unwrap_or_else(|| panic!("{name}"));
+            let mut cfg = mqms_enterprise();
+            cfg.devices = 4;
+            cfg.faults = plan;
+            cfg.validate().unwrap();
+        }
+        assert!(fault_scenario("nope", 4).is_none());
+        assert_eq!(fault_scenario("none", 4), Some(FaultPlan::default()));
+        // Victim is always the last device.
+        let drop = fault_scenario("dropout", 4).unwrap();
+        assert_eq!(drop.devices.len(), 1);
+        assert_eq!(drop.devices[0].device, 3);
+        assert!(drop.cmd_timeout_ns > 0);
+        let storm = fault_scenario("gc-storm", 2).unwrap();
+        assert_eq!(storm.devices[0].device, 1);
+        assert!(fault_scenario("transient", 4).unwrap().devices.len() == 4);
     }
 
     #[test]

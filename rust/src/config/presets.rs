@@ -73,6 +73,7 @@ pub fn mqms_enterprise() -> SimConfig {
         placement: crate::gpu::placement::Placement::RoundRobin,
         device_overrides: Vec::new(),
         replace: ReplaceConfig::default(),
+        faults: FaultPlan::default(),
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
         path: PathConfig {
@@ -106,6 +107,7 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         placement: crate::gpu::placement::Placement::RoundRobin,
         device_overrides: Vec::new(),
         replace: ReplaceConfig::default(),
+        faults: FaultPlan::default(),
         ssd,
         gpu: default_gpu(),
         path: PathConfig {

@@ -18,12 +18,13 @@ use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
 use crate::sim::audit;
 use crate::sim::time::transfer_ns;
 use crate::sim::{Engine, EventQueue, SimTime, World};
-use crate::ssd::nvme::{IoRequest, Opcode};
+use crate::ssd::nvme::{Completion, IoRequest, Opcode};
 use crate::ssd::{ArrayEvent, SsdArray};
 use crate::workloads::{synth::SynthPattern, WorkloadKind, WorkloadSpec};
 use crate::gpu::trace::AccessKind;
+use crate::util::jsonlite::Json;
 use crate::util::rng::Pcg64;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Unified co-simulation event alphabet.
 #[derive(Debug, Clone)]
@@ -39,6 +40,10 @@ pub enum Ev {
     HostDelivered { req_id: u64, source: u32 },
     /// Synthetic stream refill retry.
     SynthRefill { stream: usize },
+    /// Deterministic-backoff resubmission of a request that failed on the
+    /// device (command timeout or dropout). Scheduled only by the fault
+    /// path, so fault-free runs see a byte-identical event stream.
+    RetryFaulted(IoRequest),
     /// Periodic progress-monitor epoch for dynamic re-placement. Scheduled
     /// only when the `replace` policy is enabled on a multi-shard run, so a
     /// replace-off world sees a byte-identical event stream.
@@ -148,6 +153,21 @@ pub struct CoWorld {
     /// stream — counted here and surfaced via [`Report::misrouted`] instead
     /// of panicking mid-simulation.
     pub misrouted: u64,
+    /// Requests whose fault-retry budget is exhausted: the error completion
+    /// was delivered back to the requester and the loss counted here —
+    /// never a panic, never a leaked request id.
+    pub failed: u64,
+    /// Fault-path resubmissions issued (deterministic backoff).
+    pub fault_retries: u64,
+    /// Requests dropped from the SQ-full retry loop after
+    /// `faults.max_sq_retry_rounds` rounds (also counted in `failed`).
+    pub retry_exhausted: u64,
+    /// Per-request fault-retry attempt counts (entries removed once the
+    /// request finally succeeds or is counted `failed`).
+    fault_attempts: BTreeMap<u64, u32>,
+    /// Per-request SQ-full retry-round counts (cleared when the backlog
+    /// drains; bookkeeping only until the configured cap is reached).
+    sq_rounds: BTreeMap<u64, u32>,
     /// Event-time monotonicity auditor over the world's event stream
     /// (no-op unless built with the `audit` feature).
     mono: audit::EventMonotonic,
@@ -186,10 +206,18 @@ impl World for CoWorld {
             Ev::SynthRefill { stream } => {
                 self.refill_synth(stream, q);
             }
+            Ev::RetryFaulted(req) => {
+                self.try_submit(req, q);
+            }
             Ev::MonitorTick => {
                 self.monitor_tick(now, q);
             }
         }
+        // Any event can surface device failures (a submission can fail fast
+        // against a dropped device without scheduling anything), so the
+        // failure drain runs unconditionally. Fault-free runs take one
+        // empty-vec check and return.
+        self.drain_faulted(now, q);
     }
 }
 
@@ -226,7 +254,13 @@ impl CoWorld {
             return;
         }
         let plan = match self.replace.as_mut() {
-            Some(eng) => eng.tick(now, &self.gpus),
+            Some(eng) => {
+                // Device-health feed: with a dead device under the array the
+                // monitor drops to "any positive spread, one epoch" so queued
+                // kernel tails evacuate the degraded shards promptly.
+                eng.set_degraded(self.ssd.any_dead(now));
+                eng.tick(now, &self.gpus)
+            }
             None => return,
         };
         if let Some(plan) = plan {
@@ -254,6 +288,10 @@ impl CoWorld {
     fn after_ssd(&mut self, now: SimTime, q: &mut EventQueue<Ev>) {
         let completions = self.ssd.drain_completions();
         for c in completions {
+            if !self.fault_attempts.is_empty() {
+                // A retried request finally made it: forget its attempts.
+                self.fault_attempts.remove(&c.id);
+            }
             let src = c.source as usize;
             if src < self.per_source.len() {
                 self.per_source[src].record(c.submit_ns, c.complete_ns);
@@ -296,8 +334,133 @@ impl CoWorld {
         if !self.pending_submit.is_empty() {
             std::mem::swap(&mut self.pending_submit, &mut self.retry_scratch);
             self.ssd.submit_batch(self.retry_scratch.drain(..), q, &mut self.pending_submit);
+            self.cap_sq_rounds(now, q);
+        }
+        if self.pending_submit.is_empty() && !self.sq_rounds.is_empty() {
+            self.sq_rounds.clear();
         }
         self.drain_gpu_io(now, q);
+    }
+
+    /// Bound the SQ-full retry loop: every request still rejected after a
+    /// batched retry round burns one of its `max_sq_retry_rounds`; past the
+    /// cap it leaves `pending_submit` as a counted `retry_exhausted` (and
+    /// `failed`) anomaly, with a synthetic error completion delivered to the
+    /// requester so the id does not leak. The default cap is far above any
+    /// healthy run's round count, so this is bookkeeping only until a fault
+    /// scenario wedges the queues.
+    fn cap_sq_rounds(&mut self, now: SimTime, q: &mut EventQueue<Ev>) {
+        let cap = self.cfg.faults.max_sq_retry_rounds;
+        let mut i = 0usize;
+        while i < self.pending_submit.len() {
+            let id = self.pending_submit[i].id;
+            let rounds = self.sq_rounds.entry(id).or_insert(0);
+            *rounds += 1;
+            if *rounds <= cap {
+                i += 1;
+                continue;
+            }
+            let req = self.pending_submit.remove(i);
+            self.sq_rounds.remove(&req.id);
+            self.fault_attempts.remove(&req.id);
+            self.retry_exhausted += 1;
+            self.failed += 1;
+            let c = Completion {
+                id: req.id,
+                opcode: req.opcode,
+                lsn: req.lsn,
+                sectors: req.sectors,
+                submit_ns: req.submit_ns,
+                complete_ns: now,
+                source: req.source,
+                device: req.device,
+            };
+            self.finish_failed(c, now, q);
+        }
+    }
+
+    /// Drain device-side failures (command timeouts, dropout rejections) and
+    /// apply the bounded retry policy to each. Loops because finishing a
+    /// failure can issue fresh requests that themselves fail fast against a
+    /// dead device within the same event.
+    fn drain_faulted(&mut self, now: SimTime, q: &mut EventQueue<Ev>) {
+        loop {
+            let failed = self.ssd.drain_failed();
+            if failed.is_empty() {
+                return;
+            }
+            for c in failed {
+                self.on_failed(c, now, q);
+            }
+            self.drain_gpu_io(now, q);
+        }
+    }
+
+    /// One failed completion off the device: resubmit with deterministic
+    /// backoff (`attempt * retry_backoff_ns`) while the budget lasts, then
+    /// count the request as `failed` and deliver the error completion to its
+    /// requester — never a panic, never a leaked request id.
+    fn on_failed(&mut self, c: Completion, now: SimTime, q: &mut EventQueue<Ev>) {
+        let attempts = {
+            let e = self.fault_attempts.entry(c.id).or_insert(0);
+            *e += 1;
+            *e
+        };
+        if attempts <= self.cfg.faults.max_retries {
+            self.fault_retries += 1;
+            // The array restored the request's global lsn on failure, so the
+            // retry re-stripes cleanly; the original submit timestamp rides
+            // along so response time spans every attempt.
+            let req = IoRequest {
+                id: c.id,
+                opcode: c.opcode,
+                lsn: c.lsn,
+                sectors: c.sectors,
+                submit_ns: c.submit_ns,
+                source: c.source,
+                device: 0,
+            };
+            let backoff = self.cfg.faults.retry_backoff_ns.saturating_mul(u64::from(attempts));
+            q.schedule_in(backoff, Ev::RetryFaulted(req));
+        } else {
+            self.fault_attempts.remove(&c.id);
+            self.failed += 1;
+            self.finish_failed(c, now, q);
+        }
+    }
+
+    /// Terminal failure: hand the error completion back to whoever issued
+    /// the request, mirroring the success routing (minus latency credit, so
+    /// per-source response metrics only measure served I/O). Streams stay
+    /// closed-loop and every GPU kernel unblocks; the loss itself is already
+    /// counted in `failed`.
+    fn finish_failed(&mut self, c: Completion, now: SimTime, q: &mut EventQueue<Ev>) {
+        let src = c.source as usize;
+        if src >= self.gpu_sources {
+            let stream = src - self.gpu_sources;
+            if c.id < SYNTH_ID_BASE || stream >= self.synth.len() {
+                self.misrouted += 1;
+                return;
+            }
+            let s = &mut self.synth[stream];
+            s.completed += 1;
+            s.outstanding = s.outstanding.saturating_sub(1);
+            self.refill_synth(stream, q);
+        } else if c.id >= SYNTH_ID_BASE {
+            self.misrouted += 1;
+        } else {
+            match self.cfg.path.path {
+                IoPath::Direct => self.deliver_to_gpu(c.source, c.id, now, q),
+                IoPath::HostMediated => {
+                    // The host still pays the completion interrupt, and the
+                    // freed slot admits the next queued request.
+                    q.schedule_in(
+                        self.cfg.path.host_complete_ns,
+                        Ev::HostDelivered { req_id: c.id, source: c.source },
+                    );
+                }
+            }
+        }
     }
 
     /// Pull newly generated I/O from every GPU shard and route it down the
@@ -432,6 +595,11 @@ impl CoSim {
                 per_source: Vec::new(),
                 source_names: Vec::new(),
                 misrouted: 0,
+                failed: 0,
+                fault_retries: 0,
+                retry_exhausted: 0,
+                fault_attempts: BTreeMap::new(),
+                sq_rounds: BTreeMap::new(),
                 mono: audit::EventMonotonic::default(),
                 cfg,
             },
@@ -652,6 +820,36 @@ impl CoSim {
             .collect();
         let ssd_devices: Vec<SsdSummary> =
             w.ssd.devices().iter().map(SsdSummary::from_sim).collect();
+        // Sparse like `replacement`: emitted when the fault layer is
+        // configured or any anomaly was counted, absent otherwise so
+        // fault-free reports stay byte-identical.
+        let faults = if w.cfg.faults.enabled() || w.failed > 0 || w.retry_exhausted > 0 {
+            let devices: Vec<Json> = w
+                .ssd
+                .device_health(end_ns)
+                .iter()
+                .map(|h| {
+                    Json::from_pairs(vec![
+                        ("device", u64::from(h.device).into()),
+                        ("dead", h.dead.into()),
+                        ("transient_errors", h.transient_errors.into()),
+                        ("stall_injected_ns", h.stall_injected_ns.into()),
+                        ("degrade_injected_ns", h.degrade_injected_ns.into()),
+                        ("timeouts", h.timeouts.into()),
+                        ("dropped", h.dropped.into()),
+                    ])
+                })
+                .collect();
+            Some(Json::from_pairs(vec![
+                ("failed", w.failed.into()),
+                ("retries", w.fault_retries.into()),
+                ("retry_exhausted", w.retry_exhausted.into()),
+                ("dead_rejects", w.ssd.dead_rejects.into()),
+                ("devices", Json::Arr(devices)),
+            ]))
+        } else {
+            None
+        };
         Report {
             config_name: w.cfg.name.clone(),
             ssd: SsdSummary::merge(&ssd_devices),
@@ -665,6 +863,7 @@ impl CoSim {
             gpu: if w.gpus.is_empty() { None } else { Some(gpu::merged_report(&w.gpus)) },
             gpus: w.gpus.iter().map(GpuSim::report).collect(),
             replacement: w.replace.as_ref().map(replace::ReplaceEngine::report_json),
+            faults,
         }
     }
 }
@@ -807,6 +1006,61 @@ mod tests {
             g.get("kernels_launched").and_then(|v| v.as_u64()).unwrap()
         };
         assert!(report.gpus.iter().all(|g| launched(g) > 0), "idle shard");
+    }
+
+    #[test]
+    fn dropout_counts_failures_and_conserves_ids() {
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = 2;
+        cfg.faults = config::fault_scenario("dropout", cfg.devices).expect("known scenario");
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k",
+            SynthPattern::random_4k_write(20_000).with_queue_depth(32),
+        ));
+        let report = sim.run();
+        let w = sim.world();
+        assert_eq!(report.misrouted, 0, "every outcome must stay attributed");
+        assert!(w.failed > 0, "victim dropout must surface counted failures");
+        assert!(w.fault_retries > 0, "failures retry before they are counted");
+        // The stream stays closed-loop: every request ends as a served
+        // completion or a counted terminal failure — nothing leaks.
+        assert_eq!(report.ssd.completed + w.failed, 20_000);
+        let faults = report.faults.as_ref().expect("fault section present");
+        assert_eq!(faults.get("failed").and_then(Json::as_u64), Some(w.failed));
+        let devs = match faults.get("devices") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("devices must be an array, got {other:?}"),
+        };
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[1].get("dead").and_then(Json::as_bool), Some(true));
+        assert_eq!(devs[0].get("dead").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn dropout_on_host_mediated_path_still_quiesces() {
+        let mut cfg = config::baseline_mqsim_macsim();
+        cfg.devices = 2;
+        cfg.gpu.dram_bytes = 0;
+        let mut plan = config::fault_scenario("dropout", cfg.devices).expect("known scenario");
+        // Kill the victim almost immediately so the workload runs most of
+        // its life degraded, whatever its total duration.
+        plan.devices[0].fail_at_ns = 100_000;
+        cfg.faults = plan;
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::trace(
+            "lavamd",
+            workloads::rodinia::lavamd(0.005, 3),
+        ));
+        let report = sim.run();
+        let w = sim.world();
+        assert_eq!(report.misrouted, 0);
+        assert!(w.failed > 0, "dead device must fail some host-mediated I/O");
+        assert!(
+            report.workloads[0].kernels_done > 0,
+            "kernels must unblock past failed I/O"
+        );
+        assert!(report.faults.is_some());
     }
 
     #[test]

@@ -85,6 +85,10 @@ pub struct Monitor {
     /// Consecutive epochs the spread stayed over threshold.
     over: u32,
     epochs: u64,
+    /// Degraded mode (a storage device dropped out): any positive drift
+    /// spread triggers on the next epoch — waiting out the normal threshold
+    /// and hysteresis would leave kernel tails parked behind a dead device.
+    degraded: bool,
     /// Positive shard drift per epoch, in permille (observability).
     drift_hist: LogHistogram,
 }
@@ -108,7 +112,22 @@ impl Monitor {
                 seen_progress: false,
             })
             .collect();
-        Self { cfg, shards, last_tick_ns: 0, over: 0, epochs: 0, drift_hist: LogHistogram::new() }
+        Self {
+            cfg,
+            shards,
+            last_tick_ns: 0,
+            over: 0,
+            epochs: 0,
+            degraded: false,
+            drift_hist: LogHistogram::new(),
+        }
+    }
+
+    /// Enter (or leave) degraded mode: with a dead device behind some shard,
+    /// the trigger drops to "any positive spread, one epoch" so queued work
+    /// evacuates promptly.
+    pub fn set_degraded(&mut self, degraded: bool) {
+        self.degraded = degraded;
     }
 
     /// Move `cost_ns` of predicted work from `from`'s prior to `to`'s: a
@@ -206,12 +225,14 @@ impl Monitor {
             return None;
         }
         let spread = self.shards[behind].drift_ewma - self.shards[ahead].drift_ewma;
-        if spread <= self.cfg.drift_threshold {
+        let threshold = if self.degraded { 0.0 } else { self.cfg.drift_threshold };
+        let hysteresis = if self.degraded { 1 } else { self.cfg.hysteresis };
+        if spread <= threshold {
             self.over = 0;
             return None;
         }
         self.over += 1;
-        if self.over < self.cfg.hysteresis {
+        if self.over < hysteresis {
             return None;
         }
         self.over = 0;
@@ -322,6 +343,30 @@ mod tests {
         // instead of going negative.
         m.transfer_prior(0, 1, 9_000.0);
         assert_eq!(m.shards[0].prior_end_ns, 0.0);
+    }
+
+    #[test]
+    fn degraded_mode_triggers_on_any_positive_spread() {
+        // Mild skew that stays under the 0.5 threshold: never fires normally.
+        let run = |degraded: bool| {
+            let mut m = Monitor::new(cfg(), vec![10_000.0, 10_000.0]);
+            m.set_degraded(degraded);
+            let mut fired = None;
+            for e in 1..=20u64 {
+                // Shard 0 retires slightly slower than plan; shard 1 on plan.
+                let s = [
+                    sample(e as f64 * 800.0, 10_000.0 - e as f64 * 800.0, 8),
+                    sample(e as f64 * 1_000.0, (10_000.0 - e as f64 * 1_000.0).max(0.0), 8),
+                ];
+                if m.observe(e * 1_000, &s).is_some() {
+                    fired = Some(e);
+                    break;
+                }
+            }
+            fired
+        };
+        assert_eq!(run(false), None, "mild skew must stay under the threshold");
+        assert!(run(true).is_some(), "degraded mode must evacuate on mild skew");
     }
 
     #[test]

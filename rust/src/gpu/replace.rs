@@ -89,6 +89,13 @@ impl ReplaceEngine {
         self.monitor.epoch_ns()
     }
 
+    /// Feed device-health into the trigger: with a dead device behind some
+    /// shard the monitor drops to "any positive spread, one epoch" so queued
+    /// kernel tails evacuate promptly (see [`Monitor::set_degraded`]).
+    pub fn set_degraded(&mut self, degraded: bool) {
+        self.monitor.set_degraded(degraded);
+    }
+
     /// Refresh the cached cost prefixes for every slot of every shard.
     /// Record contents never change in place — only a slot's record *count*
     /// changes (tail extraction) or a new slot appears (injection) — so

@@ -26,6 +26,8 @@
 //! mqms campaign --workloads bert --gpus 2 --placements perf --replace off,on --csv out.csv
 //! mqms campaign --workloads rand4k --devices 4 --device-mixes uniform,mixed --csv out.csv
 //! mqms campaign --workloads rand4k --rw-ratios 0,0.5,1 --op-ratios 0.7,0.875
+//! mqms campaign --workloads rand4k --devices 2 --faults none,dropout --csv out.csv
+//! mqms run --workload rand4k --devices 2 --faults dropout --json
 //! mqms sweep --scale 0.005
 //! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
 //! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
@@ -160,6 +162,11 @@ fn cmd_run(argv: &[String]) -> CliResult {
         .opt("placement", None, "workload→GPU placement: rr | ll | perf")
         .flag("replace", "enable dynamic re-placement (queued-kernel migration)")
         .opt("replace-epoch", None, "override the monitor epoch in simulated ns")
+        .opt(
+            "faults",
+            None,
+            "named fault scenario: none | transient | gc-storm | degrade | dropout",
+        )
         .opt("sched", None, "override scheduler: rr | lc | auto")
         .opt("scheme", None, "override allocation scheme: CWDP | CDWP | WCDP")
         .flag("no-sample", "replay the full trace (skip Allegro sampling)")
@@ -199,6 +206,16 @@ fn cmd_run(argv: &[String]) -> CliResult {
     }
     if args.get("replace-epoch").is_some() {
         cfg.replace.epoch_ns = args.get_u64("replace-epoch").map_err(|e| e.to_string())?;
+    }
+    if let Some(f) = args.get("faults") {
+        // Explicit on `run` (unlike the campaign axis): `--faults none`
+        // clears whatever plan a config file carries.
+        cfg.faults = config::fault_scenario(f, cfg.devices).ok_or_else(|| {
+            format!(
+                "unknown fault scenario `{f}` (valid: {})",
+                config::FAULT_SCENARIO_NAMES.join(", ")
+            )
+        })?;
     }
     if let Some(s) = args.get("sched") {
         cfg.gpu.sched = SchedPolicy::parse(s).ok_or_else(|| format!("bad sched `{s}`"))?;
@@ -257,6 +274,15 @@ fn cmd_run(argv: &[String]) -> CliResult {
                 n("migrations"),
                 n("migrated_kernels"),
                 n("epochs")
+            );
+        }
+        if let Some(f) = &report.faults {
+            let n = |k: &str| f.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+            println!(
+                "faults: {} failed / {} retried / {} retry-exhausted",
+                n("failed"),
+                n("retries"),
+                n("retry_exhausted")
             );
         }
         let rows: Vec<(String, Vec<String>)> = report
@@ -394,7 +420,7 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     let spec = Args::new(
         "mqms campaign",
         "expand a {preset x workload x scale x devices x device-mix x gpus x placement x \
-         replace x rw-ratio x op-ratio} matrix, run cells in parallel",
+         replace x rw-ratio x op-ratio x faults} matrix, run cells in parallel",
     )
     .opt("presets", Some("mqms,baseline"), "comma-separated presets / config files")
     .opt(
@@ -414,6 +440,11 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     .opt("replace", Some("off"), "comma-separated dynamic re-placement values (off | on)")
     .opt("rw-ratios", None, "comma-separated read fractions in [0,1] re-splitting every workload")
     .opt("op-ratios", None, "comma-separated ssd op_ratio values (GC-pressure sweep)")
+    .opt(
+        "faults",
+        Some("none"),
+        "comma-separated fault scenarios (none | transient | gc-storm | degrade | dropout)",
+    )
     .opt("seed", Some("42"), "root rng seed (every cell runs with it)")
     .opt("threads", Some("0"), "worker threads (0 = one per core)")
     .opt("out-dir", None, "write one JSON report per cell plus campaign.json here")
@@ -455,6 +486,9 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
             Some(raw) => parse_list(raw, "op ratio", |s| s.parse::<f64>().ok())?,
             None => Vec::new(),
         },
+        faults: parse_list(args.get("faults").unwrap(), "fault scenario", |s| {
+            Some(s.to_string())
+        })?,
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         threads: args.get_u64("threads").map_err(|e| e.to_string())? as usize,
         sampled: !args.get_flag("no-sample"),

@@ -233,6 +233,10 @@ pub struct Report {
     /// from the JSON entirely, keeping replace-off reports byte-identical
     /// to builds without the subsystem.
     pub replacement: Option<Json>,
+    /// Fault-layer section (anomaly counters plus per-device health).
+    /// `None` when no fault plan is configured and no anomaly was counted,
+    /// so fault-free reports stay byte-identical.
+    pub faults: Option<Json>,
 }
 
 impl Report {
@@ -258,6 +262,9 @@ impl Report {
         ];
         if let Some(r) = &self.replacement {
             pairs.push(("replacement", r.clone()));
+        }
+        if let Some(f) = &self.faults {
+            pairs.push(("faults", f.clone()));
         }
         Json::from_pairs(pairs)
     }
@@ -376,6 +383,7 @@ mod tests {
             gpu: None,
             gpus: Vec::new(),
             replacement: None,
+            faults: None,
         };
         let j = r.to_json();
         assert_eq!(j.get("end_ns").unwrap().as_u64(), Some(42));
@@ -390,8 +398,15 @@ mod tests {
         let dj = r.to_json_deterministic();
         assert!(dj.get("wall_s").is_none(), "deterministic view drops wall time");
         assert!(dj.get("end_ns").is_some());
-        // Replace-off reports omit the replacement key entirely.
+        // Replace-off / fault-free reports omit their keys entirely.
         assert!(j.get("replacement").is_none());
+        assert!(j.get("faults").is_none());
+        let mut faulty = r.clone();
+        faulty.faults = Some(Json::from_pairs(vec![("failed", 2u64.into())]));
+        assert_eq!(
+            faulty.to_json().get("faults").unwrap().get("failed").unwrap().as_u64(),
+            Some(2)
+        );
         let mut with = r.clone();
         with.replacement = Some(Json::from_pairs(vec![("migrations", 3u64.into())]));
         let wj = with.to_json();

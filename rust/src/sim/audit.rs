@@ -20,6 +20,9 @@
 //! * **Shard-namespace integrity** — a GPU instance only mints and receives
 //!   request ids in its own `(id - 1) >> GPU_ID_SHIFT` namespace
 //!   ([`ShardNamespace`], hooked at id allocation and completion delivery).
+//! * **Degraded routing** — no submission reaches a device that has
+//!   dropped out: the array's fail-fast paths must intercept it first
+//!   ([`DegradedState`], hooked at the array's device-submit boundary).
 //!
 //! With the feature **off** (the default), every type here is a zero-sized
 //! struct whose methods are empty `#[inline(always)]` bodies: no fields, no
@@ -44,6 +47,7 @@ pub struct Counters {
     pub occupancy: u64,
     pub pool_ops: u64,
     pub namespace: u64,
+    pub degraded: u64,
 }
 
 #[cfg(feature = "audit")]
@@ -56,6 +60,7 @@ impl Counters {
         self.occupancy += o.occupancy;
         self.pool_ops += o.pool_ops;
         self.namespace += o.namespace;
+        self.degraded += o.degraded;
     }
 }
 
@@ -245,10 +250,30 @@ mod enabled {
             self.checks
         }
     }
+
+    /// No submission may be routed to a dropped device.
+    #[derive(Debug, Default, Clone)]
+    pub struct DegradedState {
+        checks: u64,
+    }
+
+    impl DegradedState {
+        pub fn check_submit(&mut self, dev: u32, dead: bool) {
+            assert!(
+                !dead,
+                "audit: submission routed to dropped device {dev}"
+            );
+            self.checks += 1;
+        }
+
+        pub fn checks(&self) -> u64 {
+            self.checks
+        }
+    }
 }
 
 #[cfg(feature = "audit")]
-pub use enabled::{EventMonotonic, Occupancy, PoolBalance, ReqLedger, ShardNamespace};
+pub use enabled::{DegradedState, EventMonotonic, Occupancy, PoolBalance, ReqLedger, ShardNamespace};
 
 #[cfg(not(feature = "audit"))]
 mod disabled {
@@ -314,10 +339,19 @@ mod disabled {
         #[inline(always)]
         pub fn check_id(&mut self, _id: u64, _instance: u32, _shift: u32) {}
     }
+
+    /// Inert stand-in: zero-sized, methods compile to nothing.
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct DegradedState;
+
+    impl DegradedState {
+        #[inline(always)]
+        pub fn check_submit(&mut self, _dev: u32, _dead: bool) {}
+    }
 }
 
 #[cfg(not(feature = "audit"))]
-pub use disabled::{EventMonotonic, Occupancy, PoolBalance, ReqLedger, ShardNamespace};
+pub use disabled::{DegradedState, EventMonotonic, Occupancy, PoolBalance, ReqLedger, ShardNamespace};
 
 #[cfg(test)]
 mod tests {
@@ -331,6 +365,7 @@ mod tests {
         assert_eq!(std::mem::size_of::<Occupancy>(), 0);
         assert_eq!(std::mem::size_of::<PoolBalance>(), 0);
         assert_eq!(std::mem::size_of::<ShardNamespace>(), 0);
+        assert_eq!(std::mem::size_of::<DegradedState>(), 0);
     }
 
     #[test]
@@ -390,5 +425,22 @@ mod tests {
     fn namespace_rejects_foreign_id() {
         let mut n = ShardNamespace::default();
         n.check_id(1 + (3u64 << 48), 2, 48);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    fn degraded_counts_live_routes() {
+        let mut d = DegradedState::default();
+        d.check_submit(0, false);
+        d.check_submit(1, false);
+        assert_eq!(d.checks(), 2);
+    }
+
+    #[test]
+    #[cfg(feature = "audit")]
+    #[should_panic(expected = "dropped device")]
+    fn degraded_rejects_route_to_dead_device() {
+        let mut d = DegradedState::default();
+        d.check_submit(3, true);
     }
 }

@@ -26,6 +26,7 @@
 use crate::config::SimConfig;
 use crate::sim::audit;
 use crate::sim::{EventQueue, SimTime};
+use crate::ssd::fault::FaultInjector;
 use crate::ssd::nvme::{Completion, IoRequest};
 use crate::ssd::{SsdEvent, SsdSim};
 use std::collections::BTreeMap;
@@ -65,6 +66,27 @@ struct SplitState {
     parent: IoRequest,
     remaining: u32,
     complete_ns: SimTime,
+    /// Any leg completed with an error status: the merged parent completion
+    /// is an error too (all-or-nothing host semantics).
+    failed: bool,
+}
+
+/// Per-device health snapshot (fault telemetry for `Report`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceHealth {
+    pub device: u32,
+    /// Device has dropped out (permanent failure).
+    pub dead: bool,
+    /// Transient read errors injected (ECC re-reads).
+    pub transient_errors: u64,
+    /// Total stall-window latency injected, ns.
+    pub stall_injected_ns: u64,
+    /// Total degradation-ramp latency injected, ns.
+    pub degrade_injected_ns: u64,
+    /// Commands failed by the NVMe deadline.
+    pub timeouts: u64,
+    /// Commands failed by device dropout.
+    pub dropped: u64,
 }
 
 /// A striped array of SSD simulators behind one logical address space.
@@ -85,8 +107,17 @@ pub struct SsdArray {
     /// sub-request id → parent id.
     sub_parent: BTreeMap<u64, u64>,
     merged_out: Vec<Completion>,
+    /// Merged error-status completions (timeouts, dropout failures, dead
+    /// fail-fasts), lsn restored to the global address space so the
+    /// coordinator can resubmit.
+    failed_merged: Vec<Completion>,
+    /// Requests fail-fasted because their target device had dropped out.
+    pub dead_rejects: u64,
     /// Request-id conservation auditor (zero-sized unless `audit` is on).
     ledger: audit::ReqLedger,
+    /// Degraded-routing auditor: no submission may reach a dropped device
+    /// (zero-sized unless `audit` is on).
+    degraded: audit::DegradedState,
     /// Dispatch-time monotonicity auditor (zero-sized unless `audit` is on).
     mono: audit::EventMonotonic,
     /// Relay queue: devices schedule device-local events here, the array
@@ -108,13 +139,26 @@ impl SsdArray {
         cfg.validate().expect("invalid config");
         let n = cfg.devices.max(1) as u64;
         let stripe = cfg.stripe_sectors.max(1);
-        let devs: Vec<SsdSim> = (0..n as u32)
+        let mut devs: Vec<SsdSim> = (0..n as u32)
             .map(|d| {
                 // A 1-wide array must equal the standalone simulator exactly.
                 let seed = if n == 1 { cfg.seed } else { device_seed(cfg.seed, d) };
                 SsdSim::new(&cfg.device_ssd(d), seed)
             })
             .collect();
+        // Install per-device fault schedules; the fault-free plan (the
+        // default) installs nothing so the array stays byte-identical to the
+        // pre-fault engine.
+        if cfg.faults.enabled() {
+            for (d, dev) in devs.iter_mut().enumerate() {
+                let inj = cfg
+                    .faults
+                    .spec_for(d as u32)
+                    .filter(|s| s.active())
+                    .map(|s| FaultInjector::new(cfg.seed, s.clone()));
+                dev.set_faults(inj, cfg.faults.cmd_timeout_ns);
+            }
+        }
         // Heterogeneous devices may expose different capacities; the stripe
         // map addresses every device uniformly, so the usable per-device
         // range is the smallest one (identical to devs[0] when symmetric).
@@ -130,7 +174,10 @@ impl SsdArray {
             splits: BTreeMap::new(),
             sub_parent: BTreeMap::new(),
             merged_out: Vec::new(),
+            failed_merged: Vec::new(),
+            dead_rejects: 0,
             ledger: audit::ReqLedger::default(),
+            degraded: audit::DegradedState::default(),
             mono: audit::EventMonotonic::default(),
             proxy: EventQueue::new(),
             scratch_chunks: Vec::new(),
@@ -275,6 +322,10 @@ impl SsdArray {
             || req.lsn / self.stripe == (req.lsn + req.sectors as u64 - 1) / self.stripe;
         if single_stripe {
             let (dev, local) = self.locate(req.lsn);
+            if self.devs[dev as usize].fault_dead(q.now()) {
+                self.fail_fast_dead(req, q.now());
+                return Ok(());
+            }
             let mut sub = req;
             sub.lsn = local;
             sub.device = dev;
@@ -292,6 +343,16 @@ impl SsdArray {
         }
         let mut chunks = std::mem::take(&mut self.scratch_chunks);
         self.chunks_into(req.lsn, req.sectors, &mut chunks);
+        // All-or-nothing over a dropped device: the whole request fails fast
+        // rather than half-placing onto surviving legs.
+        if chunks
+            .iter()
+            .any(|&(dev, _, _)| self.devs[dev as usize].fault_dead(q.now()))
+        {
+            self.scratch_chunks = chunks;
+            self.fail_fast_dead(req, q.now());
+            return Ok(());
+        }
         if chunks.len() == 1 {
             // Defensive: with round-robin striping a multi-stripe request on
             // n > 1 devices always splits, but a future stripe map may
@@ -364,9 +425,30 @@ impl SsdArray {
         }
         subs.clear();
         self.scratch_subs = subs;
-        self.splits
-            .insert(req.id, SplitState { parent: req, remaining: n_subs, complete_ns: 0 });
+        self.splits.insert(
+            req.id,
+            SplitState { parent: req, remaining: n_subs, complete_ns: 0, failed: false },
+        );
         Ok(())
+    }
+
+    /// Accept-and-fail a request whose target device has dropped out: the
+    /// host sees an immediate error completion instead of a hang, and the
+    /// id is conserved (submitted and completed in one step).
+    fn fail_fast_dead(&mut self, req: IoRequest, now: SimTime) {
+        self.dead_rejects += 1;
+        self.ledger.note_submitted(req.id);
+        self.ledger.note_completed(req.id);
+        self.failed_merged.push(Completion {
+            id: req.id,
+            opcode: req.opcode,
+            lsn: req.lsn,
+            sectors: req.sectors,
+            submit_ns: req.submit_ns,
+            complete_ns: now,
+            source: req.source,
+            device: req.device,
+        });
     }
 
     fn dev_submit<E: From<ArrayEvent>>(
@@ -376,6 +458,10 @@ impl SsdArray {
         req: IoRequest,
         q: &mut EventQueue<E>,
     ) -> Result<(), IoRequest> {
+        // Invariant (audit builds): no submission reaches a dropped device —
+        // the fail-fast paths above must have filtered it.
+        self.degraded
+            .check_submit(dev, self.devs[dev as usize].fault_dead(self.proxy.now()));
         let res = self.devs[dev as usize].submit(queue, req, &mut self.proxy);
         self.forward(dev, q);
         res
@@ -408,15 +494,37 @@ impl SsdArray {
         self.forward(dev, q);
         let comps = self.devs[dev as usize].drain_completions();
         for c in comps {
-            self.settle(c);
+            self.settle(c, false);
+        }
+        let failed = self.devs[dev as usize].drain_failed();
+        for c in failed {
+            self.settle(c, true);
         }
     }
 
-    /// Fold one device completion into the merged stream.
-    fn settle(&mut self, c: Completion) {
+    /// Inverse of [`SsdArray::locate`]: map a `(device, device-local
+    /// sector)` pair back to the global logical sector.
+    fn unlocate(&self, dev: u32, local: u64) -> u64 {
+        if self.n == 1 {
+            return local;
+        }
+        let stripe_idx = (local / self.stripe) * self.n + dev as u64;
+        stripe_idx * self.stripe + local % self.stripe
+    }
+
+    /// Fold one device completion into the merged stream. `failed` marks an
+    /// error-status completion (timeout / dropout).
+    fn settle(&mut self, c: Completion, failed: bool) {
         if c.id < SPLIT_ID_BASE {
             self.ledger.note_completed(c.id);
-            self.merged_out.push(c);
+            if failed {
+                // Restore the global lsn so the coordinator can resubmit.
+                let mut c = c;
+                c.lsn = self.unlocate(c.device, c.lsn);
+                self.failed_merged.push(c);
+            } else {
+                self.merged_out.push(c);
+            }
             return;
         }
         // lint:allow(unwrap): every sub-request id was registered at split submit
@@ -425,12 +533,13 @@ impl SsdArray {
         let st = self.splits.get_mut(&parent_id).expect("split state missing");
         st.remaining -= 1;
         st.complete_ns = st.complete_ns.max(c.complete_ns);
+        st.failed |= failed;
         if st.remaining == 0 {
             // lint:allow(unwrap): get_mut above proved the entry exists
             let st = self.splits.remove(&parent_id).unwrap();
             self.ledger.note_completed(parent_id);
             let p = st.parent;
-            self.merged_out.push(Completion {
+            let merged = Completion {
                 id: p.id,
                 opcode: p.opcode,
                 lsn: p.lsn,
@@ -439,13 +548,52 @@ impl SsdArray {
                 complete_ns: st.complete_ns,
                 source: p.source,
                 device: p.device,
-            });
+            };
+            if st.failed {
+                self.failed_merged.push(merged);
+            } else {
+                self.merged_out.push(merged);
+            }
         }
     }
 
     /// Drain merged host completions accumulated since the last call.
     pub fn drain_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.merged_out)
+    }
+
+    /// Drain merged error-status completions (lsn in global address space).
+    pub fn drain_failed(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.failed_merged)
+    }
+
+    /// Any device dropped out by `now`?
+    pub fn any_dead(&self, now: SimTime) -> bool {
+        self.devs.iter().any(|d| d.fault_dead(now))
+    }
+
+    /// Per-device health snapshot at `now` (fault telemetry for `Report`).
+    pub fn device_health(&self, now: SimTime) -> Vec<DeviceHealth> {
+        self.devs
+            .iter()
+            .enumerate()
+            .map(|(d, dev)| {
+                let (te, st, dg) = dev
+                    .fault()
+                    .map_or((0, 0, 0), |f| {
+                        (f.transient_errors, f.stall_injected_ns, f.degrade_injected_ns)
+                    });
+                DeviceHealth {
+                    device: d as u32,
+                    dead: dev.fault_dead(now),
+                    transient_errors: te,
+                    stall_injected_ns: st,
+                    degrade_injected_ns: dg,
+                    timeouts: dev.fault_timeouts,
+                    dropped: dev.fault_dropped,
+                }
+            })
+            .collect()
     }
 
     /// Install a pre-existing data image over a global sector range.
@@ -480,6 +628,7 @@ impl SsdArray {
             monotonic: self.mono.checks(),
             ledger_submits: self.ledger.submits(),
             ledger_completes: self.ledger.completes(),
+            degraded: self.degraded.checks(),
             ..Default::default()
         };
         for d in &self.devs {
@@ -631,6 +780,61 @@ mod tests {
             // All 16 sectors landed as valid flash data on that device.
             assert_eq!(w.arr.device(d).mgr.total_valid(), 16);
         }
+    }
+
+    #[test]
+    fn unlocate_inverts_locate() {
+        let (w, _) = world(4, 8);
+        for lsn in [0u64, 7, 8, 31, 32, 100, 501] {
+            let (dev, local) = w.arr.locate(lsn);
+            assert_eq!(w.arr.unlocate(dev, local), lsn);
+        }
+        let (w1, _) = world(1, 8);
+        assert_eq!(w1.arr.unlocate(0, 123), 123);
+    }
+
+    #[test]
+    fn dead_device_fails_fast_and_restores_global_lsn() {
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = 2;
+        cfg.stripe_sectors = 8;
+        cfg.faults.devices.push(crate::config::FaultSpec {
+            device: 1,
+            fail_at_ns: 1,
+            ..crate::config::FaultSpec::default()
+        });
+        cfg.validate().unwrap();
+        let mut w = ArrayWorld { arr: SsdArray::new(&cfg) };
+        let mut e: Engine<ArrayWorld> = Engine::new();
+        // Submitted at t=0 (device not yet dead): the dropout drain at the
+        // first fetch fails it, with the global lsn restored.
+        w.arr.submit(wreq(1, 8, 4), &mut e.queue).unwrap();
+        assert!(e.run(&mut w).quiescent);
+        assert!(w.arr.drain_completions().is_empty());
+        let f = w.arr.drain_failed();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].id, 1);
+        assert_eq!(f[0].lsn, 8);
+        // The device is now visibly dead: submissions fail fast.
+        assert!(w.arr.any_dead(e.queue.now()));
+        w.arr.submit(wreq(2, 8, 4), &mut e.queue).unwrap();
+        let f = w.arr.drain_failed();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].id, 2);
+        assert_eq!(w.arr.dead_rejects, 1);
+        // A split straddling the dead device fails whole (all-or-nothing).
+        w.arr.submit(wreq(3, 6, 4), &mut e.queue).unwrap();
+        assert_eq!(w.arr.drain_failed().len(), 1);
+        assert_eq!(w.arr.dead_rejects, 2);
+        // The healthy device still serves its stripes.
+        w.arr.submit(wreq(4, 0, 4), &mut e.queue).unwrap();
+        assert!(e.run(&mut w).quiescent);
+        assert_eq!(w.arr.drain_completions().len(), 1);
+        let health = w.arr.device_health(e.queue.now());
+        assert!(!health[0].dead);
+        assert!(health[1].dead);
+        assert_eq!(health[1].dropped, 1);
+        assert!(w.arr.is_drained());
     }
 
     #[test]

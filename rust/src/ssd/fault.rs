@@ -1,0 +1,195 @@
+//! Deterministic per-device fault injector — the runtime half of
+//! [`crate::config::FaultPlan`].
+//!
+//! One injector per scheduled device, owned by its [`crate::ssd::SsdSim`].
+//! Every decision is a pure function of simulated time and a dedicated
+//! [`Pcg64`] stream seeded by splitmix64 from `root_seed ^ FAULT_SEED_SALT`
+//! (via [`device_seed`]): the device simulator's own rng stream is never
+//! touched, so a fault-free plan builds no injector and the run is
+//! byte-identical to the fault-free engine — and a given `(seed, plan)`
+//! reproduces the exact same fault schedule on every run and thread count.
+//!
+//! Mechanisms (see [`crate::config::FaultSpec`]):
+//!
+//! * **Transient read errors** — with `read_error_rate`, a read command pays
+//!   one ECC re-read (`ecc_retry_ns`) of extra service latency.
+//! * **Stall windows** — the first `stall_ns` of every `stall_period_ns`
+//!   period freezes service (GC-storm emulation): commands landing inside
+//!   the window wait until it ends.
+//! * **Degradation ramp** — from `degrade_after_ns`, per-command latency
+//!   ramps linearly to `degrade_max_ns` over `degrade_ramp_ns`.
+//! * **Dropout** — from `fail_at_ns` the device is [`FaultInjector::dead`]:
+//!   the device fails its queued and in-flight commands and answers nothing
+//!   new (handled by `SsdSim`/`SsdArray`, which consult `dead`).
+
+use crate::config::FaultSpec;
+use crate::sim::SimTime;
+use crate::ssd::array::device_seed;
+use crate::util::rng::Pcg64;
+
+/// Salt folded into the root seed before the per-device splitmix64 stream,
+/// so injector rng streams are independent of the device simulators' own
+/// seed derivation.
+const FAULT_SEED_SALT: u64 = 0xFA17_5EED;
+
+/// Seeded fault state for one device.
+#[derive(Debug)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+    rng: Pcg64,
+    /// Transient read errors injected (ECC re-reads).
+    pub transient_errors: u64,
+    /// Total stall-window latency injected, ns.
+    pub stall_injected_ns: u64,
+    /// Total degradation-ramp latency injected, ns.
+    pub degrade_injected_ns: u64,
+}
+
+impl FaultInjector {
+    /// Build the injector for `spec.device` from the run's root seed.
+    pub fn new(root_seed: u64, spec: FaultSpec) -> Self {
+        let rng = Pcg64::new(device_seed(root_seed ^ FAULT_SEED_SALT, spec.device));
+        Self {
+            spec,
+            rng,
+            transient_errors: 0,
+            stall_injected_ns: 0,
+            degrade_injected_ns: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Has the device dropped out by `now`?
+    pub fn dead(&self, now: SimTime) -> bool {
+        self.spec.fail_at_ns > 0 && now >= self.spec.fail_at_ns
+    }
+
+    /// Extra service latency injected into one command processed at `now`.
+    /// Consumes the injector's rng stream (reads only, and only when a
+    /// transient error rate is configured) — deterministic per
+    /// `(seed, spec, call sequence)`.
+    pub fn service_penalty(&mut self, now: SimTime, is_read: bool) -> SimTime {
+        let s = &self.spec;
+        let mut extra = 0u64;
+        if is_read && s.read_error_rate > 0.0 && self.rng.chance(s.read_error_rate) {
+            extra += s.ecc_retry_ns;
+            self.transient_errors += 1;
+        }
+        if s.stall_period_ns > 0 && s.stall_ns > 0 {
+            let phase = now % s.stall_period_ns;
+            if phase < s.stall_ns {
+                let wait = s.stall_ns - phase;
+                extra += wait;
+                self.stall_injected_ns += wait;
+            }
+        }
+        if s.degrade_max_ns > 0 && now >= s.degrade_after_ns {
+            let into = now - s.degrade_after_ns;
+            let ramp = s.degrade_ramp_ns.max(1);
+            let add = s.degrade_max_ns.saturating_mul(into.min(ramp)) / ramp;
+            extra += add;
+            self.degrade_injected_ns += add;
+        }
+        extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(device: u32) -> FaultSpec {
+        FaultSpec { device, ..FaultSpec::default() }
+    }
+
+    #[test]
+    fn default_spec_injects_nothing() {
+        let mut f = FaultInjector::new(42, spec(0));
+        for t in [0u64, 1_000, 1_000_000, u64::MAX / 2] {
+            assert_eq!(f.service_penalty(t, true), 0);
+            assert_eq!(f.service_penalty(t, false), 0);
+            assert!(!f.dead(t));
+        }
+        assert_eq!(f.transient_errors, 0);
+    }
+
+    #[test]
+    fn transient_errors_hit_reads_at_the_configured_rate() {
+        let mut s = spec(0);
+        s.read_error_rate = 0.25;
+        s.ecc_retry_ns = 777;
+        let mut f = FaultInjector::new(42, s);
+        let mut hits = 0u64;
+        for t in 0..10_000u64 {
+            let p = f.service_penalty(t, true);
+            if p > 0 {
+                assert_eq!(p, 777);
+                hits += 1;
+            }
+            // Writes never pay ECC re-reads.
+            assert_eq!(f.service_penalty(t, false), 0);
+        }
+        assert_eq!(hits, f.transient_errors);
+        assert!((1_500..3_500).contains(&hits), "rate far off: {hits}");
+    }
+
+    #[test]
+    fn same_seed_same_schedule_different_seed_differs() {
+        let mut s = spec(1);
+        s.read_error_rate = 0.1;
+        let run = |seed: u64| -> Vec<u64> {
+            let mut f = FaultInjector::new(seed, s.clone());
+            (0..500u64).map(|t| f.service_penalty(t, true)).collect()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn stall_window_waits_until_the_window_ends() {
+        let mut s = spec(0);
+        s.stall_period_ns = 1_000;
+        s.stall_ns = 300;
+        let mut f = FaultInjector::new(1, s);
+        // Inside the window: wait out the remainder.
+        assert_eq!(f.service_penalty(0, false), 300);
+        assert_eq!(f.service_penalty(100, false), 200);
+        assert_eq!(f.service_penalty(299, false), 1);
+        // Outside: free.
+        assert_eq!(f.service_penalty(300, false), 0);
+        assert_eq!(f.service_penalty(999, false), 0);
+        // Next period stalls again.
+        assert_eq!(f.service_penalty(1_050, false), 250);
+        assert_eq!(f.stall_injected_ns, 300 + 200 + 1 + 250);
+    }
+
+    #[test]
+    fn degradation_ramps_then_saturates() {
+        let mut s = spec(0);
+        s.degrade_after_ns = 1_000;
+        s.degrade_ramp_ns = 1_000;
+        s.degrade_max_ns = 400;
+        let mut f = FaultInjector::new(1, s);
+        assert_eq!(f.service_penalty(0, false), 0);
+        assert_eq!(f.service_penalty(999, false), 0);
+        assert_eq!(f.service_penalty(1_000, false), 0);
+        assert_eq!(f.service_penalty(1_500, false), 200);
+        assert_eq!(f.service_penalty(2_000, false), 400);
+        // Saturated: never exceeds the max.
+        assert_eq!(f.service_penalty(100_000, false), 400);
+    }
+
+    #[test]
+    fn dropout_flips_dead_at_fail_time() {
+        let mut s = spec(2);
+        s.fail_at_ns = 5_000;
+        let f = FaultInjector::new(1, s);
+        assert!(!f.dead(0));
+        assert!(!f.dead(4_999));
+        assert!(f.dead(5_000));
+        assert!(f.dead(u64::MAX));
+    }
+}

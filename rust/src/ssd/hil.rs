@@ -6,7 +6,7 @@
 
 use super::nvme::{Completion, IoRequest, Opcode};
 use crate::sim::SimTime;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// In-service request state.
 #[derive(Debug)]
@@ -17,9 +17,16 @@ struct Live {
 }
 
 /// Request tracker.
+///
+/// `live` is a `BTreeMap` (not a hash map) so that failing every in-service
+/// request at device dropout walks ids in a deterministic order.
 #[derive(Debug, Default)]
 pub struct Hil {
-    live: HashMap<u64, Live>,
+    live: BTreeMap<u64, Live>,
+    /// Sector credits still owed to force-failed requests: flash transactions
+    /// already in flight for a failed id land here and are consumed silently
+    /// instead of crediting a request that no longer exists.
+    zombies: BTreeMap<u64, u32>,
     pub completed_reads: u64,
     pub completed_writes: u64,
 }
@@ -42,6 +49,19 @@ impl Hil {
     /// Credit `sectors` serviced sectors to request `id`. When the request is
     /// fully serviced, returns `(queue_to_release, completion_record)`.
     pub fn credit(&mut self, id: u64, sectors: u32, now: SimTime) -> Option<(usize, Completion)> {
+        // A force-failed request's in-flight flash work still completes;
+        // swallow those credits without building a completion.
+        if let Some(left) = self.zombies.get_mut(&id) {
+            debug_assert!(
+                *left >= sectors,
+                "zombie over-credit: req {id} has {left} left, credited {sectors}"
+            );
+            *left = left.saturating_sub(sectors);
+            if *left == 0 {
+                self.zombies.remove(&id);
+            }
+            return None;
+        }
         // lint:allow(unwrap): the TSU only credits ids the HIL admitted — a miss is a wiring bug
         let live = self.live.get_mut(&id).expect("credit to unknown request");
         debug_assert!(
@@ -73,6 +93,44 @@ impl Hil {
         } else {
             None
         }
+    }
+
+    /// Fail an in-service request (command timeout or device dropout).
+    /// The live entry is removed and an error completion built; any sectors
+    /// the flash back-end still owes become zombie credits so late
+    /// transactions settle silently. Returns `None` when the id is not in
+    /// service (already completed, or never fetched).
+    pub fn force_fail(&mut self, id: u64, now: SimTime) -> Option<(usize, Completion)> {
+        let Live { req, queue, remaining_sectors } = self.live.remove(&id)?;
+        if remaining_sectors > 0 {
+            self.zombies.insert(id, remaining_sectors);
+        }
+        Some((
+            queue,
+            Completion {
+                id: req.id,
+                opcode: req.opcode,
+                lsn: req.lsn,
+                sectors: req.sectors,
+                submit_ns: req.submit_ns,
+                complete_ns: now,
+                source: req.source,
+                device: req.device,
+            },
+        ))
+    }
+
+    /// Fail every in-service request in ascending-id order (device dropout).
+    pub fn force_fail_all(&mut self, now: SimTime) -> Vec<(usize, Completion)> {
+        let ids: Vec<u64> = self.live.keys().copied().collect();
+        ids.into_iter()
+            .filter_map(|id| self.force_fail(id, now))
+            .collect()
+    }
+
+    /// Force-failed requests still owed flash credits.
+    pub fn zombies(&self) -> usize {
+        self.zombies.len()
     }
 
     pub fn in_service(&self) -> usize {
@@ -111,6 +169,40 @@ mod tests {
         let mut h = Hil::new();
         h.admit(req(1, 2, Opcode::Read), 0);
         h.credit(1, 3, 10);
+    }
+
+    #[test]
+    fn force_fail_builds_error_completion_and_swallows_late_credits() {
+        let mut h = Hil::new();
+        h.admit(req(1, 4, Opcode::Read), 2);
+        assert!(h.credit(1, 1, 100).is_none());
+        let (queue, c) = h.force_fail(1, 150).unwrap();
+        assert_eq!(queue, 2);
+        assert_eq!(c.id, 1);
+        assert_eq!(c.complete_ns, 150);
+        assert_eq!(h.in_service(), 0);
+        assert_eq!(h.zombies(), 1);
+        // Failed requests don't count as completed.
+        assert_eq!(h.completed_reads, 0);
+        // The 3 outstanding sectors drain silently.
+        assert!(h.credit(1, 2, 200).is_none());
+        assert!(h.credit(1, 1, 250).is_none());
+        assert_eq!(h.zombies(), 0);
+        // Stale force-fail misses.
+        assert!(h.force_fail(1, 300).is_none());
+    }
+
+    #[test]
+    fn force_fail_all_walks_ids_in_order() {
+        let mut h = Hil::new();
+        h.admit(req(5, 1, Opcode::Write), 0);
+        h.admit(req(2, 2, Opcode::Read), 1);
+        let failed = h.force_fail_all(400);
+        let ids: Vec<u64> = failed.iter().map(|(_, c)| c.id).collect();
+        assert_eq!(ids, vec![2, 5]);
+        assert_eq!(h.in_service(), 0);
+        // Both were fully unserved, so both leave zombie credits behind.
+        assert_eq!(h.zombies(), 2);
     }
 
     #[test]

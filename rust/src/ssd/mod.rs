@@ -16,6 +16,7 @@
 
 pub mod addr;
 pub mod array;
+pub mod fault;
 pub mod ftl;
 pub mod hil;
 pub mod metrics;
@@ -30,6 +31,7 @@ use crate::sim::audit;
 use crate::sim::{EventQueue, SimTime};
 use crate::util::rng::Pcg64;
 use addr::{Geometry, PhysSector, PlaneId};
+use fault::FaultInjector;
 use ftl::{Allocator, BlockMgr, GcController, Mapping, Stream};
 use hil::Hil;
 use metrics::SsdMetrics;
@@ -57,6 +59,10 @@ pub enum SsdEvent {
     Immediate { req: u64, sectors: u32 },
     /// Retry a write stalled on space exhaustion (waiting for GC).
     RetryStalled { plane: PlaneId },
+    /// NVMe command deadline: if the request is still queued or in service
+    /// when this fires, it completes with an error status (scheduled at
+    /// submit only when a command timeout is configured).
+    Timeout { req: u64, queue: usize },
 }
 
 /// Sentinel request id for buffered sectors already acknowledged to the
@@ -180,6 +186,19 @@ pub struct SsdSim {
     rng: Pcg64,
     pub metrics: SsdMetrics,
     completions_out: Vec<Completion>,
+    /// Requests that completed with an error status (timeout / dropout) —
+    /// drained separately from `completions_out` so the coordinator can
+    /// retry them.
+    failed_out: Vec<Completion>,
+    /// Fault schedule for this device (`None` when the plan is fault-free:
+    /// the fault-free path builds no injector and stays byte-identical).
+    fault: Option<FaultInjector>,
+    /// NVMe command deadline; 0 disables timeout events entirely.
+    cmd_timeout_ns: SimTime,
+    /// Commands failed by the deadline.
+    pub fault_timeouts: u64,
+    /// Commands failed by device dropout.
+    pub fault_dropped: u64,
     /// Pooled [`SsdEvent::Enqueue`] payload storage.
     enq: EnqueuePool,
     /// Scratch: completed-transaction ids from one TSU event (reused so the
@@ -211,6 +230,11 @@ impl SsdSim {
             rng: Pcg64::new(seed ^ 0x55D),
             metrics: SsdMetrics::new(cfg.sector_bytes),
             completions_out: Vec::new(),
+            failed_out: Vec::new(),
+            fault: None,
+            cmd_timeout_ns: 0,
+            fault_timeouts: 0,
+            fault_dropped: 0,
             enq: EnqueuePool::default(),
             done_scratch: Vec::new(),
             next_immediate_latency: 1_000, // ~DRAM/controller turnaround
@@ -221,6 +245,23 @@ impl SsdSim {
     /// Logical sector capacity of the device.
     pub fn logical_sectors(&self) -> u64 {
         self.map.logical_sectors()
+    }
+
+    /// Install the fault schedule for this device. `None` + 0 (the default)
+    /// is the fault-free engine: no injector rng stream, no timeout events.
+    pub fn set_faults(&mut self, fault: Option<FaultInjector>, cmd_timeout_ns: SimTime) {
+        self.fault = fault;
+        self.cmd_timeout_ns = cmd_timeout_ns;
+    }
+
+    /// The device's fault injector, when one is scheduled.
+    pub fn fault(&self) -> Option<&FaultInjector> {
+        self.fault.as_ref()
+    }
+
+    /// Has this device dropped out by `now`?
+    pub fn fault_dead(&self, now: SimTime) -> bool {
+        self.fault.as_ref().is_some_and(|f| f.dead(now))
     }
 
     /// Queue to submit to for a given source (simple striping).
@@ -259,6 +300,12 @@ impl SsdSim {
         let now = q.now();
         self.nvme.submit(queue, req, now)?;
         self.metrics.note_submit(now);
+        if self.cmd_timeout_ns > 0 {
+            q.schedule_in(
+                self.cmd_timeout_ns,
+                SsdEvent::Timeout { req: req.id, queue }.into(),
+            );
+        }
         if !self.nvme.fetch_armed() {
             self.nvme.set_fetch_armed(true);
             q.schedule_in(self.cfg.fetch_ns, SsdEvent::Fetch.into());
@@ -269,6 +316,11 @@ impl SsdSim {
     /// Drain completions accumulated since the last call.
     pub fn drain_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions_out)
+    }
+
+    /// Drain error-status completions (timeouts, dropout failures).
+    pub fn drain_failed(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.failed_out)
     }
 
     /// Install a pre-existing data image over `[lsn_start, lsn_start+sectors)`
@@ -334,6 +386,7 @@ impl SsdSim {
     pub fn is_drained(&self) -> bool {
         let drained = self.nvme.pending() == 0
             && self.hil.in_service() == 0
+            && self.hil.zombies() == 0
             && self.tsu.is_drained()
             && self.slab.is_empty();
         if drained {
@@ -399,12 +452,17 @@ impl SsdSim {
             }
             SsdEvent::Immediate { req, sectors } => self.credit(req, sectors, now),
             SsdEvent::RetryStalled { plane } => self.retry_stalled(plane, now, q),
+            SsdEvent::Timeout { req, queue } => self.on_timeout(req, queue, now),
         }
     }
 
     // --- fetch & request processing ------------------------------------------
 
     fn on_fetch<E: From<SsdEvent> + From<TsuEvent>>(&mut self, now: SimTime, q: &mut EventQueue<E>) {
+        if self.fault_dead(now) {
+            self.fail_all_dead(now);
+            return;
+        }
         if let Some((queue, req)) = self.nvme.fetch_next() {
             self.hil.admit(req, queue);
             self.process_request(req, now, q);
@@ -413,6 +471,54 @@ impl SsdSim {
             q.schedule_in(self.cfg.fetch_ns, SsdEvent::Fetch.into());
         } else {
             self.nvme.set_fetch_armed(false);
+        }
+    }
+
+    /// Device dropout: fail every queued and in-service command with an
+    /// error completion and stop the fetch pipeline. In-flight flash work
+    /// finishes internally; its credits drain as HIL zombies.
+    fn fail_all_dead(&mut self, now: SimTime) {
+        for r in self.nvme.drain_queued() {
+            self.fault_dropped += 1;
+            self.failed_out.push(Completion {
+                id: r.id,
+                opcode: r.opcode,
+                lsn: r.lsn,
+                sectors: r.sectors,
+                submit_ns: r.submit_ns,
+                complete_ns: now,
+                source: r.source,
+                device: r.device,
+            });
+        }
+        for (queue, c) in self.hil.force_fail_all(now) {
+            self.fault_dropped += 1;
+            self.nvme.complete(queue);
+            self.failed_out.push(c);
+        }
+        self.nvme.set_fetch_armed(false);
+    }
+
+    /// NVMe command deadline fired: fail the request if it is still queued
+    /// (abort in place) or in service (error completion + zombie credits);
+    /// a request that already completed makes this a stale no-op.
+    fn on_timeout(&mut self, id: u64, queue: usize, now: SimTime) {
+        if let Some(r) = self.nvme.remove_queued(queue, id) {
+            self.fault_timeouts += 1;
+            self.failed_out.push(Completion {
+                id: r.id,
+                opcode: r.opcode,
+                lsn: r.lsn,
+                sectors: r.sectors,
+                submit_ns: r.submit_ns,
+                complete_ns: now,
+                source: r.source,
+                device: r.device,
+            });
+        } else if let Some((q_rel, c)) = self.hil.force_fail(id, now) {
+            self.fault_timeouts += 1;
+            self.nvme.complete(q_rel);
+            self.failed_out.push(c);
         }
     }
 
@@ -429,7 +535,10 @@ impl SsdSim {
         now: SimTime,
         q: &mut EventQueue<E>,
     ) {
-        let lat = self.ftl_latency();
+        let mut lat = self.ftl_latency();
+        if let Some(f) = self.fault.as_mut() {
+            lat += f.service_penalty(now, req.opcode == Opcode::Read);
+        }
         match req.opcode {
             Opcode::Read => self.process_read(req, lat, now, q),
             Opcode::Write => match self.cfg.mapping {
@@ -1358,5 +1467,85 @@ mod tests {
         let c = w.ssd.drain_completions().pop().unwrap();
         // Response must include tPROG at minimum.
         assert!(c.complete_ns - c.submit_ns >= cfg.ssd.t_program_ns);
+    }
+
+    #[test]
+    fn command_timeout_fails_request_and_device_still_drains() {
+        let cfg = config::mqms_enterprise();
+        let (mut w, mut e) = world(&cfg);
+        // Deadline far below tPROG: the write must miss it.
+        w.ssd.set_faults(None, 10_000);
+        w.ssd.submit(0, wreq(1, 0, 1), &mut e.queue).unwrap();
+        let stats = e.run(&mut w);
+        assert!(stats.quiescent);
+        assert_eq!(w.ssd.fault_timeouts, 1);
+        let failed = w.ssd.drain_failed();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].id, 1);
+        // No success completion for a timed-out command; the in-flight
+        // program's credit drains as a zombie and the device is whole.
+        assert!(w.ssd.drain_completions().is_empty());
+        assert!(w.ssd.is_drained());
+    }
+
+    #[test]
+    fn timeout_after_completion_is_a_stale_no_op() {
+        let cfg = config::mqms_enterprise();
+        let (mut w, mut e) = world(&cfg);
+        // Deadline comfortably above tPROG: the command wins the race.
+        w.ssd.set_faults(None, 100_000_000);
+        w.ssd.submit(0, wreq(1, 0, 1), &mut e.queue).unwrap();
+        let stats = e.run(&mut w);
+        assert!(stats.quiescent);
+        assert_eq!(w.ssd.fault_timeouts, 0);
+        assert!(w.ssd.drain_failed().is_empty());
+        assert_eq!(w.ssd.drain_completions().len(), 1);
+        assert!(w.ssd.is_drained());
+    }
+
+    #[test]
+    fn dropout_fails_queued_commands_with_error_status() {
+        let cfg = config::mqms_enterprise();
+        let (mut w, mut e) = world(&cfg);
+        let spec = crate::config::FaultSpec {
+            fail_at_ns: 1, // dead before the first fetch fires
+            ..crate::config::FaultSpec::default()
+        };
+        w.ssd.set_faults(Some(FaultInjector::new(cfg.seed, spec)), 0);
+        w.ssd.submit(0, wreq(1, 0, 1), &mut e.queue).unwrap();
+        w.ssd.submit(0, rreq(2, 8, 1), &mut e.queue).unwrap();
+        let stats = e.run(&mut w);
+        assert!(stats.quiescent);
+        assert_eq!(w.ssd.fault_dropped, 2);
+        let failed = w.ssd.drain_failed();
+        assert_eq!(failed.len(), 2);
+        assert!(w.ssd.drain_completions().is_empty());
+        assert!(w.ssd.is_drained());
+    }
+
+    #[test]
+    fn degradation_penalty_slows_service() {
+        let respond = |spec: Option<crate::config::FaultSpec>| {
+            let cfg = config::mqms_enterprise();
+            let (mut w, mut e) = world(&cfg);
+            if let Some(s) = spec {
+                w.ssd.set_faults(Some(FaultInjector::new(cfg.seed, s)), 0);
+            }
+            w.ssd.submit(0, wreq(1, 0, 4), &mut e.queue).unwrap();
+            e.run(&mut w);
+            let c = w.ssd.drain_completions().pop().unwrap();
+            c.complete_ns - c.submit_ns
+        };
+        let clean = respond(None);
+        let degraded = respond(Some(crate::config::FaultSpec {
+            degrade_after_ns: 0,
+            degrade_ramp_ns: 1,
+            degrade_max_ns: 2_000_000,
+            ..crate::config::FaultSpec::default()
+        }));
+        assert!(
+            degraded >= clean + 2_000_000,
+            "degraded {degraded} vs clean {clean}"
+        );
     }
 }

@@ -143,6 +143,26 @@ impl NvmeQueues {
         self.outstanding[queue] -= 1;
     }
 
+    /// Remove a still-queued command by id (NVMe abort semantics: a command
+    /// that timed out before the device fetched it is cancelled in place).
+    /// Returns the request if it was found; `None` means the command already
+    /// left the SQ (in service or completed) and the caller must look there.
+    pub fn remove_queued(&mut self, queue: usize, id: u64) -> Option<IoRequest> {
+        let pos = self.queues[queue].iter().position(|r| r.id == id)?;
+        self.queues[queue].remove(pos)
+    }
+
+    /// Drain every queued command across all SQs in deterministic
+    /// (queue-major, FIFO) order — device dropout fails everything that was
+    /// still waiting to be fetched.
+    pub fn drain_queued(&mut self) -> Vec<IoRequest> {
+        let mut out = Vec::new();
+        for q in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+
     pub fn pending(&self) -> usize {
         self.queues.iter().map(VecDeque::len).sum()
     }
@@ -218,6 +238,32 @@ mod tests {
     #[test]
     fn fetch_on_empty_returns_none() {
         let mut nq = NvmeQueues::new(2, 4);
+        assert!(nq.fetch_next().is_none());
+    }
+
+    #[test]
+    fn remove_queued_cancels_in_place() {
+        let mut nq = NvmeQueues::new(1, 4);
+        nq.submit(0, req(1), 10).unwrap();
+        nq.submit(0, req(2), 20).unwrap();
+        let cancelled = nq.remove_queued(0, 1).unwrap();
+        assert_eq!(cancelled.id, 1);
+        // Already gone: second attempt misses.
+        assert!(nq.remove_queued(0, 1).is_none());
+        // Remaining command still fetches, and the freed slot is reusable.
+        assert_eq!(nq.pending(), 1);
+        assert_eq!(nq.fetch_next().unwrap().1.id, 2);
+    }
+
+    #[test]
+    fn drain_queued_empties_all_queues_in_order() {
+        let mut nq = NvmeQueues::new(2, 4);
+        nq.submit(0, req(1), 0).unwrap();
+        nq.submit(1, req(2), 0).unwrap();
+        nq.submit(0, req(3), 0).unwrap();
+        let ids: Vec<u64> = nq.drain_queued().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3, 2]);
+        assert_eq!(nq.pending(), 0);
         assert!(nq.fetch_next().is_none());
     }
 }

@@ -95,6 +95,36 @@ fn multi_gpu_sharded_run_passes_audit() {
 }
 
 #[test]
+fn dropout_retry_storm_conserves_ids_and_checks_degraded_routing() {
+    // A victim device dies mid-run: in-flight commands are force-failed,
+    // fail-fast error completions are retried by the coordinator (each
+    // resubmission is a fresh ledger entry for the same id), and the
+    // terminal failures are delivered. The ledger must balance across the
+    // whole timeout → retry → failure lifecycle, and every surviving
+    // submission must pass the degraded-routing check (a route to the dead
+    // device would panic here under audit).
+    let mut cfg = config::mqms_enterprise();
+    cfg.devices = 2;
+    cfg.faults = config::fault_scenario("dropout", cfg.devices).expect("known scenario");
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::synthetic(
+        "rand4k",
+        SynthPattern::random_4k_write(20_000).with_queue_depth(32),
+    ));
+    let report = sim.run();
+    assert_eq!(report.misrouted, 0);
+    let w = sim.world();
+    assert!(w.failed > 0, "the fault path must actually be exercised");
+    let c = sim.world().audit_counters();
+    assert_eq!(c.ledger_submits, c.ledger_completes, "id conservation across retries broken");
+    assert!(
+        c.ledger_submits > 20_000,
+        "retried ids must re-enter the ledger as fresh submissions"
+    );
+    assert!(c.degraded > 0, "degraded-routing law never checked");
+}
+
+#[test]
 fn rejection_heavy_stream_keeps_the_ledger_balanced() {
     // A queue depth far above the device's SQ slots forces rejected
     // submissions (ledger rejects) and coordinator retries; conservation

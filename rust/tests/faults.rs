@@ -1,0 +1,238 @@
+//! Fault-injection integration tests: the tentpole invariants of the
+//! deterministic fault layer (`config::FaultPlan` → `ssd::fault` →
+//! coordinator timeout/retry → degraded-mode re-placement).
+//!
+//! * Faults off is a strict byte-identical pass-through — a config with the
+//!   `faults` block present (but inert) produces exactly the report the
+//!   fault-free engine does, retry knobs notwithstanding.
+//! * Device dropout degrades gracefully: failures are retried, then counted
+//!   and delivered (never hung, never leaked — per-source kernel counts
+//!   still finish), queued tails migrate off the dying shard, and the
+//!   closed-loop conservation `successes + failed = total` holds.
+//! * The same seed reproduces the same fault schedule byte-for-byte, for
+//!   every named scenario, and the injected mechanism actually fired.
+//! * The SQ-full retry queue is bounded: an unreachable cap is pure
+//!   bookkeeping, a tight cap surfaces counted `retry_exhausted` anomalies.
+//! * A campaign swept over the `faults` axis stays thread-count-invariant.
+
+use mqms::bench_support as bs;
+use mqms::campaign::{self, CampaignSpec};
+use mqms::config::{self, FaultSpec};
+use mqms::coordinator::CoSim;
+use mqms::gpu::placement::Placement;
+use mqms::metrics::Report;
+use mqms::util::jsonlite::Json;
+use mqms::workloads::{synth::SynthPattern, WorkloadSpec};
+
+/// Canonical deterministic bytes of one run.
+fn run_bytes(cfg: config::SimConfig, seed: u64) -> String {
+    bs::run_bundle(cfg, &bs::drift_bundle(seed)).to_json_deterministic().pretty()
+}
+
+/// One counter out of the report's `faults` section (0 when absent).
+fn fault_counter(r: &Report, key: &str) -> u64 {
+    r.faults.as_ref().and_then(|f| f.get(key)).and_then(Json::as_u64).unwrap_or(0)
+}
+
+/// Per-device health rows out of the report's `faults` section.
+fn health_rows(r: &Report) -> Vec<Json> {
+    match r.faults.as_ref().and_then(|f| f.get("devices")) {
+        Some(Json::Arr(v)) => v.clone(),
+        other => panic!("faults.devices must be an array, got {other:?}"),
+    }
+}
+
+fn health_sum(r: &Report, key: &str) -> u64 {
+    health_rows(r).iter().map(|d| d.get(key).and_then(Json::as_u64).unwrap_or(0)).sum()
+}
+
+/// Requests attributed across all per-source report rows (successes only —
+/// terminal failures are delivered but not latency-recorded).
+fn attributed_io(r: &Report) -> u64 {
+    r.workloads.iter().map(|w| w.io_completed).sum()
+}
+
+#[test]
+fn faults_off_is_byte_identical_passthrough() {
+    let base = |gpus: u32| {
+        let mut cfg = config::mqms_enterprise();
+        cfg.gpus = gpus;
+        cfg.devices = 2;
+        cfg.placement = Placement::PerfAware;
+        cfg.gpu.dram_bytes = 0;
+        cfg.seed = 42;
+        cfg
+    };
+    for gpus in [1u32, 2] {
+        let default = run_bytes(base(gpus), 42);
+        // The resolved `none` scenario is the default plan.
+        let mut named = base(gpus);
+        named.faults = config::fault_scenario("none", named.devices).unwrap();
+        assert_eq!(default, run_bytes(named, 42), "`none` must resolve to the default plan");
+        // An inert plan with non-default retry knobs must change nothing:
+        // no injector is built, no timeout event is ever scheduled, and the
+        // retry policy is dead code without a failure to retry.
+        let mut tweaked = base(gpus);
+        tweaked.faults.max_retries = 1;
+        tweaked.faults.retry_backoff_ns = 7;
+        tweaked.faults.devices = vec![FaultSpec { device: 0, ..FaultSpec::default() }];
+        assert!(!tweaked.faults.enabled(), "an all-zero spec injects nothing");
+        tweaked.validate().unwrap();
+        assert_eq!(
+            default,
+            run_bytes(tweaked.clone(), 42),
+            "inert faults block must be byte-identical for gpus={gpus}"
+        );
+        // A config that went through a JSON round-trip behaves the same.
+        let roundtripped = config::SimConfig::from_json(&tweaked.to_json()).unwrap();
+        assert_eq!(default, run_bytes(roundtripped, 42));
+    }
+    // The fault study's `none` cell reproduces the replace study's
+    // fault-free cell byte-for-byte, and carries no faults section at all.
+    let none = bs::fault_run(2, 2, "none", false, 42);
+    assert!(none.faults.is_none(), "fault-free reports must omit the faults section");
+    assert_eq!(
+        none.to_json_deterministic().pretty(),
+        bs::replace_run(2, 2, false, 42).to_json_deterministic().pretty()
+    );
+}
+
+#[test]
+fn dropout_fails_boundedly_migrates_and_conserves_work() {
+    let none = bs::fault_run(2, 4, "none", true, bs::SEED);
+    let faulty = bs::fault_run(2, 4, "dropout", true, bs::SEED);
+    for (label, r) in [("none", &none), ("dropout", &faulty)] {
+        assert_eq!(r.misrouted, 0, "{label}: every outcome must stay attributed");
+        assert_eq!(r.past_clamps, 0, "{label}: causality clamps");
+    }
+
+    // The victim (last device) died; its peers stayed healthy.
+    let health = health_rows(&faulty);
+    assert_eq!(health.len(), 4);
+    for (d, row) in health.iter().enumerate() {
+        assert_eq!(
+            row.get("dead").and_then(Json::as_bool),
+            Some(d == 3),
+            "only device 3 may die under `dropout`"
+        );
+    }
+
+    // Failures surfaced, bounded, and retried first.
+    let failed = fault_counter(&faulty, "failed");
+    assert!(failed > 0, "victim dropout must surface counted failures");
+    assert!(fault_counter(&faulty, "retries") > 0, "failures retry before they are counted");
+
+    // Closed-loop conservation: with DRAM off the bundle's request total is
+    // trace-determined, and every request ends exactly once — as a
+    // latency-recorded success or a counted, delivered terminal failure.
+    let total = attributed_io(&none);
+    assert_eq!(
+        attributed_io(&faulty) + failed,
+        total,
+        "successes + failures must cover the trace-determined request total"
+    );
+    assert!(failed < total, "a 1-of-4 victim must not fail the whole bundle");
+
+    // Failed I/O is still delivered: no kernel hangs on a dead device.
+    assert_eq!(none.workloads.len(), faulty.workloads.len());
+    for (a, b) in none.workloads.iter().zip(&faulty.workloads) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kernels_done, b.kernels_done, "{}: kernels must finish degraded", a.name);
+    }
+
+    // Degraded-mode re-placement actually evacuated queued tails.
+    let migrations = faulty
+        .replacement
+        .as_ref()
+        .and_then(|j| j.get("migrations"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0);
+    assert!(migrations > 0, "device death must trigger migrations off the degraded shard");
+}
+
+#[test]
+fn same_seed_reproduces_the_same_fault_schedule() {
+    for scenario in ["transient", "gc-storm", "degrade", "dropout"] {
+        let a = bs::fault_run(2, 4, scenario, true, bs::SEED);
+        let b = bs::fault_run(2, 4, scenario, true, bs::SEED);
+        assert_eq!(
+            a.to_json_deterministic().pretty(),
+            b.to_json_deterministic().pretty(),
+            "{scenario}: same seed + plan must reproduce the identical report"
+        );
+        // Each scenario's mechanism demonstrably fired...
+        let (key, evidence) = match scenario {
+            "transient" => ("transient_errors", health_sum(&a, "transient_errors")),
+            "gc-storm" => ("stall_injected_ns", health_sum(&a, "stall_injected_ns")),
+            "degrade" => ("degrade_injected_ns", health_sum(&a, "degrade_injected_ns")),
+            _ => ("failed", fault_counter(&a, "failed")),
+        };
+        assert!(evidence > 0, "{scenario}: {key} must be nonzero");
+        // ...and only dropout is allowed to fail I/O.
+        if scenario != "dropout" {
+            assert_eq!(
+                fault_counter(&a, "failed"),
+                0,
+                "{scenario}: latency-only faults must not fail I/O"
+            );
+        }
+    }
+}
+
+#[test]
+fn sq_retry_cap_surfaces_exhausted_retries() {
+    // A queue depth far above the device's SQ slots forces rejected
+    // submissions into the coordinator's retry queue; a tight round cap
+    // turns the deepest stragglers into counted `retry_exhausted` anomalies
+    // instead of unbounded requeueing — and the run still quiesces with
+    // every request accounted for.
+    let mut cfg = config::mqms_enterprise();
+    cfg.faults.max_sq_retry_rounds = 1;
+    assert!(!cfg.faults.enabled(), "the SQ cap alone must not enable injection");
+    let mut sim = CoSim::new(cfg);
+    sim.add_workload(WorkloadSpec::synthetic(
+        "sat",
+        SynthPattern::random_4k_write(4_000).with_queue_depth(2048),
+    ));
+    let report = sim.run();
+    let w = sim.world();
+    assert_eq!(report.misrouted, 0);
+    assert!(w.retry_exhausted > 0, "a 1-round cap must exhaust deep stragglers");
+    assert_eq!(w.failed, w.retry_exhausted, "exhaustion is the only failure source here");
+    assert_eq!(report.ssd.completed + w.failed, 4_000, "nothing leaks at the cap");
+    // The anomaly surfaces the faults section even with injection disabled.
+    assert_eq!(fault_counter(&report, "retry_exhausted"), w.retry_exhausted);
+}
+
+#[test]
+fn fault_campaign_is_thread_count_invariant() {
+    let summary = |threads: usize| {
+        let spec = CampaignSpec {
+            presets: vec!["mqms".into()],
+            workloads: vec!["rand4k".into()],
+            scales: vec![0.01],
+            devices: vec![2],
+            faults: vec!["none".into(), "dropout".into()],
+            seed: 42,
+            threads,
+            sampled: true,
+            ..CampaignSpec::default()
+        };
+        let results = campaign::run(&spec).unwrap();
+        assert_eq!(results.len(), 2);
+        let (none_cell, none) = &results[0];
+        let (faulty_cell, faulty) = &results[1];
+        assert_eq!(none_cell.label(), "mqms/rand4k@0.01x2d");
+        assert_eq!(faulty_cell.label(), "mqms/rand4k@0.01x2d-dropout");
+        // The fault-free cell is untouched; the dropout cell fails part of
+        // the stream but conserves the closed-loop total.
+        assert!(none.faults.is_none());
+        assert_eq!(none.ssd.completed, 10_000);
+        let failed = fault_counter(faulty, "failed");
+        assert!(failed > 0, "dropout cell must surface counted failures");
+        assert_eq!(faulty.ssd.completed + failed, 10_000);
+        campaign::summary_json(&results).pretty()
+    };
+    let one = summary(1);
+    assert_eq!(one, summary(4), "fault campaign output must be thread-count-invariant");
+}
