@@ -1,0 +1,64 @@
+//! §Perf — sharded-engine scaling benchmark (PR 8 onward).
+//!
+//! Runs the saturating 16-device × 4-GPU cell once per engine thread count
+//! {1, 2, 4} and writes `BENCH_SIM_THREADS.json` (events/sec per thread
+//! count, speedup over sequential, byte-identity verdicts). The shape
+//! assertions are the tentpole's two contracts: every threaded report is
+//! byte-identical to the sequential one, and 4 threads clear a real
+//! speedup on this event-dense configuration.
+
+use mqms::bench_support as bs;
+
+fn main() {
+    let devices = 16u32;
+    let gpus = 4u32;
+    let seed = bs::SEED;
+    let counts = [1u32, 2, 4];
+
+    let runs: Vec<(u32, mqms::metrics::Report)> = counts
+        .iter()
+        .map(|&t| (t, bs::sim_threads_run(devices, gpus, t, seed)))
+        .collect();
+
+    println!("## §Perf — sharded engine, {devices} devices x {gpus} GPUs");
+    let base = &runs[0].1;
+    let rate = |r: &mqms::metrics::Report| {
+        if r.wall_s > 0.0 {
+            r.events as f64 / r.wall_s
+        } else {
+            0.0
+        }
+    };
+    let base_rate = rate(base);
+    let base_bytes = base.to_json_deterministic().pretty();
+    for (t, r) in &runs {
+        let speedup = if base_rate > 0.0 { rate(r) / base_rate } else { 0.0 };
+        println!(
+            "sim-threads {t}: {:.0} events/s ({speedup:.3}x), {} events, sim end {} ns",
+            rate(r),
+            r.events,
+            r.end_ns
+        );
+        assert_eq!(
+            r.to_json_deterministic().pretty(),
+            base_bytes,
+            "sim-threads {t} must be byte-identical to sequential"
+        );
+        assert_eq!(r.past_clamps, 0, "sim-threads {t}: causality clamps");
+        assert_eq!(r.misrouted, 0, "sim-threads {t}: misrouted completions");
+    }
+
+    let report = bs::sim_threads_report(devices, gpus, seed, &runs);
+    std::fs::write("BENCH_SIM_THREADS.json", report.pretty())
+        .expect("writing BENCH_SIM_THREADS.json");
+    println!("wrote BENCH_SIM_THREADS.json");
+
+    // The tentpole's perf claim: the event-dense 16-device cell must scale.
+    let four = runs.iter().find(|(t, _)| *t == 4).expect("4-thread run present");
+    let speedup = if base_rate > 0.0 { rate(&four.1) / base_rate } else { 0.0 };
+    assert!(
+        speedup > 1.5,
+        "4-thread speedup {speedup:.3}x must exceed 1.5x on 16 devices x 4 GPUs"
+    );
+    println!("shape OK: threaded runs byte-identical, 4-thread speedup {speedup:.3}x > 1.5x");
+}

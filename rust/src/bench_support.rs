@@ -253,6 +253,19 @@ pub fn fault_run(
     replace: bool,
     seed: u64,
 ) -> Report {
+    run_bundle(fault_cfg(gpus, devices, scenario, replace, seed), &drift_bundle(seed))
+}
+
+/// The resolved config of one [`fault_run`] cell, exposed so the parallel
+/// engine's byte-identity tests can rerun the identical cell with only
+/// `sim_threads` changed.
+pub fn fault_cfg(
+    gpus: u32,
+    devices: u32,
+    scenario: &str,
+    replace: bool,
+    seed: u64,
+) -> SimConfig {
     let mut cfg = config::mqms_enterprise();
     cfg.gpus = gpus;
     cfg.devices = devices;
@@ -262,7 +275,87 @@ pub fn fault_run(
     cfg.replace.enabled = replace;
     cfg.faults = config::fault_scenario(scenario, devices).expect("known fault scenario");
     cfg.seed = seed;
-    run_bundle(cfg, &drift_bundle(seed))
+    cfg
+}
+
+// --- parallel intra-run engine study (benches/sim_threads_scaling.rs +
+// --- tests/sim_threads.rs) ----------------------------------------------
+
+/// Config for one cell of the sharded-engine study: a `devices`-wide array
+/// under `gpus` compute shards with an explicit engine thread count. DRAM
+/// is disabled so every access reaches storage — the event stream is
+/// device-dominated, the regime the sharded engine parallelizes.
+pub fn sim_threads_cfg(devices: u32, gpus: u32, sim_threads: u32, seed: u64) -> SimConfig {
+    let mut cfg = config::mqms_enterprise();
+    cfg.devices = devices;
+    cfg.gpus = gpus;
+    cfg.gpu.dram_bytes = 0;
+    cfg.sim_threads = sim_threads;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Saturating bundle for the scaling study: one BERT instance per compute
+/// shard keeps every GPU issuing I/O while a deep random-write stream keeps
+/// every device's queues full — dense per-device event traffic, so
+/// lookahead windows carry enough work to amortize the merge barrier.
+pub fn sim_threads_bundle(gpus: u32, seed: u64) -> Vec<WorkloadSpec> {
+    use crate::workloads::synth::SynthPattern;
+    let mut specs: Vec<WorkloadSpec> = (0..gpus as u64)
+        .map(|i| {
+            WorkloadSpec::trace(
+                &format!("llm{i}"),
+                workloads::bert::generate(0.0002, seed ^ (i + 1)),
+            )
+        })
+        .collect();
+    specs.push(WorkloadSpec::synthetic(
+        "rand4k",
+        SynthPattern::random_4k_write(30_000).with_queue_depth(256),
+    ));
+    specs
+}
+
+/// One measured cell of the scaling study. The returned [`Report`] carries
+/// both the deterministic payload (byte-compared across thread counts) and
+/// the host wall-clock (`wall_s`) the speedup figures divide.
+pub fn sim_threads_run(devices: u32, gpus: u32, sim_threads: u32, seed: u64) -> Report {
+    run_bundle(sim_threads_cfg(devices, gpus, sim_threads, seed), &sim_threads_bundle(gpus, seed))
+}
+
+/// `BENCH_SIM_THREADS.json` payload: per-thread-count event rates plus the
+/// byte-identity verdict against the sequential run. `runs` pairs each
+/// engine thread count with its report; the first entry is the baseline.
+pub fn sim_threads_report(devices: u32, gpus: u32, seed: u64, runs: &[(u32, Report)]) -> Json {
+    let base = &runs[0].1;
+    let base_rate = if base.wall_s > 0.0 { base.events as f64 / base.wall_s } else { 0.0 };
+    let base_bytes = base.to_json_deterministic().pretty();
+    let rows: Vec<Json> = runs
+        .iter()
+        .map(|(t, r)| {
+            let rate = if r.wall_s > 0.0 { r.events as f64 / r.wall_s } else { 0.0 };
+            Json::from_pairs(vec![
+                ("sim_threads", u64::from(*t).into()),
+                ("events", r.events.into()),
+                ("sim_end_ns", r.end_ns.into()),
+                ("wall_s", r.wall_s.into()),
+                ("events_per_sec", rate.into()),
+                ("speedup", (if base_rate > 0.0 { rate / base_rate } else { 0.0 }).into()),
+                (
+                    "byte_identical",
+                    (r.to_json_deterministic().pretty() == base_bytes).into(),
+                ),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("bench", "sim_threads_scaling".into()),
+        ("devices", u64::from(devices).into()),
+        ("gpus", u64::from(gpus).into()),
+        ("seed", seed.into()),
+        ("sim_threads", Json::Arr(runs.iter().map(|(t, _)| u64::from(*t).into()).collect())),
+        ("runs", Json::Arr(rows)),
+    ])
 }
 
 // --- heterogeneous-array study (benches/hetero_array.rs +

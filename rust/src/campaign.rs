@@ -61,6 +61,12 @@ pub struct CampaignSpec {
     pub seed: u64,
     /// Worker threads; 0 = one per available core, capped at the cell count.
     pub threads: usize,
+    /// Event-engine threads *inside* every cell ([`SimConfig::sim_threads`]):
+    /// 1 runs the sequential engine; ≥ 2 shards each cell's run without
+    /// changing its output bytes. Composes multiplicatively with `threads`,
+    /// so [`run_streaming`] rejects combinations that oversubscribe the
+    /// host before any cell starts.
+    pub sim_threads: u32,
     /// Allegro-sample trace workloads before replay (as `mqms run` does).
     pub sampled: bool,
 }
@@ -81,6 +87,7 @@ impl Default for CampaignSpec {
             faults: vec!["none".into()],
             seed: 42,
             threads: 0,
+            sim_threads: 1,
             sampled: true,
         }
     }
@@ -283,9 +290,13 @@ fn apply_rw_ratio(spec: &mut WorkloadSpec, ratio: f64) {
     }
 }
 
-/// Run one cell to completion.
-pub fn run_cell(cell: &Cell, seed: u64, sampled: bool) -> Result<Report, String> {
-    let cfg = cell_config(cell, seed)?;
+/// Run one cell to completion. `sim_threads` selects the event engine
+/// inside the cell (1 = sequential); it never changes the report bytes, so
+/// callers comparing cells may mix values freely.
+pub fn run_cell(cell: &Cell, seed: u64, sampled: bool, sim_threads: u32) -> Result<Report, String> {
+    let mut cfg = cell_config(cell, seed)?;
+    cfg.sim_threads = sim_threads;
+    cfg.validate()?;
     let (mut wspec, _stats) =
         workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
     if let Some(rw) = cell.rw_ratio {
@@ -365,7 +376,29 @@ pub fn run_streaming(
             ));
         }
     }
+    if spec.sim_threads == 0 {
+        return Err("sim-threads must be ≥ 1 (1 = the sequential engine)".to_string());
+    }
     let threads = effective_threads(spec.threads, cells.len());
+    // The two thread knobs compose multiplicatively: every campaign worker
+    // would spin up its own `sim_threads`-wide engine pool. Reject the
+    // oversubscribed product up front — silently thrashing the host would
+    // make the "parallelism never changes output bytes" contract look
+    // broken (timeouts, swapping) when only the scheduling collapsed.
+    if spec.sim_threads > 1 {
+        // lint:allow(wall-clock): host-capacity admission check only — it rejects a run outright, never shapes simulation results
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let want = threads.saturating_mul(spec.sim_threads as usize);
+        if want > cores {
+            return Err(format!(
+                "oversubscribed: --threads {threads} × --sim-threads {} = {want} \
+                 simulation threads exceeds the {cores} available core(s); \
+                 lower --threads (campaign workers) or --sim-threads \
+                 (engine threads per cell)",
+                spec.sim_threads
+            ));
+        }
+    }
     // Workers claim cells in cost order (expensive first); results land in
     // matrix-order slots, so the merged output is schedule-independent.
     let order = schedule_order(&cells);
@@ -384,7 +417,7 @@ pub fn run_streaming(
                     break;
                 }
                 let i = order[k];
-                let r = run_cell(&cells[i], spec.seed, spec.sampled);
+                let r = run_cell(&cells[i], spec.seed, spec.sampled, spec.sim_threads);
                 *slots[i].lock().unwrap() = Some(r);
                 let mut st = stream.lock().unwrap();
                 while st.0 < cells.len() {
@@ -785,6 +818,20 @@ mod tests {
             assert_eq!(row, &csv_row(cell, report));
             assert!(row.starts_with(&format!("mqms,rand4k,0.001,{},", cell.devices)));
         }
+    }
+
+    #[test]
+    fn sim_threads_oversubscription_is_rejected_naming_both_knobs() {
+        // A product no host satisfies: the check fires before any cell runs.
+        let bad = CampaignSpec { threads: 4, sim_threads: 1_000_000, ..CampaignSpec::default() };
+        let err = run(&bad).unwrap_err();
+        assert!(
+            err.contains("--sim-threads") && err.contains("--threads"),
+            "error must name both knobs: {err}"
+        );
+        assert!(err.contains("oversubscribed"), "{err}");
+        let zero = CampaignSpec { sim_threads: 0, ..CampaignSpec::default() };
+        assert!(run(&zero).unwrap_err().contains("sim-threads"));
     }
 
     #[test]

@@ -446,8 +446,19 @@ pub struct GpuConfig {
 pub struct ReplaceConfig {
     /// Master switch (only meaningful when `gpus > 1`).
     pub enabled: bool,
-    /// Monitor sampling period in simulated ns (`MonitorTick` cadence).
+    /// Monitor sampling period in simulated ns (`MonitorTick` cadence) when
+    /// `adaptive_epoch` is off, and the fallback period when the admission
+    /// prior is unusable.
     pub epoch_ns: u64,
+    /// Scale the epoch from the admission-time makespan estimate
+    /// (prior / 100, clamped to `[epoch_min_ns, epoch_max_ns]`) so
+    /// monitoring costs O(100) events per run regardless of scale, instead
+    /// of a fixed cadence that hot-spots long horizons.
+    pub adaptive_epoch: bool,
+    /// Lower clamp for the adaptive epoch, ns.
+    pub epoch_min_ns: u64,
+    /// Upper clamp for the adaptive epoch, ns.
+    pub epoch_max_ns: u64,
     /// EWMA drift spread (behind − ahead, relative to the static prior)
     /// that arms a migration.
     pub drift_threshold: f64,
@@ -464,6 +475,9 @@ impl Default for ReplaceConfig {
         Self {
             enabled: false,
             epoch_ns: 250_000,
+            adaptive_epoch: true,
+            epoch_min_ns: 50_000,
+            epoch_max_ns: 5_000_000,
             drift_threshold: 0.25,
             hysteresis: 2,
             max_migrations: 64,
@@ -476,6 +490,15 @@ impl ReplaceConfig {
     fn validate(&self, errs: &mut Vec<String>) {
         if self.epoch_ns == 0 {
             errs.push("replace.epoch_ns must be ≥ 1".to_string());
+        }
+        if self.epoch_min_ns == 0 {
+            errs.push("replace.epoch_min_ns must be ≥ 1".to_string());
+        }
+        if self.epoch_min_ns > self.epoch_max_ns {
+            errs.push(format!(
+                "replace.epoch_min_ns {} exceeds epoch_max_ns {}",
+                self.epoch_min_ns, self.epoch_max_ns
+            ));
         }
         if !(self.drift_threshold > 0.0 && self.drift_threshold.is_finite()) {
             errs.push(format!(
@@ -826,6 +849,12 @@ pub struct SimConfig {
     /// Deterministic fault-injection plan (per-device schedules + NVMe
     /// timeout/retry policy). Default = no faults, byte-identical runs.
     pub faults: FaultPlan,
+    /// Worker threads for the conservative-parallel engine
+    /// (`--sim-threads`). 1 = the sequential engine, untouched; ≥ 2 runs the
+    /// sharded engine, whose output is byte-identical by construction — the
+    /// knob trades wall clock only and is deliberately excluded from
+    /// fingerprints and reports except as a provenance field.
+    pub sim_threads: u32,
     pub ssd: SsdConfig,
     pub gpu: GpuConfig,
     pub path: PathConfig,
@@ -905,6 +934,9 @@ impl SimConfig {
         }
         self.replace.validate(&mut errs);
         self.faults.validate(&mut errs, self.devices);
+        if self.sim_threads == 0 {
+            errs.push("sim_threads must be ≥ 1 (1 = sequential engine)".to_string());
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -930,6 +962,9 @@ impl SimConfig {
                 Json::from_pairs(vec![
                     ("enabled", r.enabled.into()),
                     ("epoch_ns", r.epoch_ns.into()),
+                    ("adaptive_epoch", r.adaptive_epoch.into()),
+                    ("epoch_min_ns", r.epoch_min_ns.into()),
+                    ("epoch_max_ns", r.epoch_max_ns.into()),
                     ("drift_threshold", r.drift_threshold.into()),
                     ("hysteresis", (r.hysteresis as u64).into()),
                     ("max_migrations", (r.max_migrations as u64).into()),
@@ -1032,6 +1067,13 @@ impl SimConfig {
         if self.faults != FaultPlan::default() {
             j.set("faults", self.faults.to_json()).expect("config json is an object");
         }
+        // Sparse: sequential configs stay byte-identical on round-trip. The
+        // knob never changes simulated output (the sharded engine replays
+        // the identical event stream), so it is provenance, not physics.
+        if self.sim_threads != 1 {
+            j.set("sim_threads", u64::from(self.sim_threads).into())
+                .expect("config json is an object");
+        }
         j
     }
 
@@ -1071,6 +1113,15 @@ impl SimConfig {
             if let Some(v) = r.get("epoch_ns").and_then(Json::as_u64) {
                 c.epoch_ns = v;
             }
+            if let Some(v) = r.get("adaptive_epoch").and_then(Json::as_bool) {
+                c.adaptive_epoch = v;
+            }
+            if let Some(v) = r.get("epoch_min_ns").and_then(Json::as_u64) {
+                c.epoch_min_ns = v;
+            }
+            if let Some(v) = r.get("epoch_max_ns").and_then(Json::as_u64) {
+                c.epoch_max_ns = v;
+            }
             if let Some(v) = r.get("drift_threshold").and_then(Json::as_f64) {
                 c.drift_threshold = v;
             }
@@ -1088,6 +1139,10 @@ impl SimConfig {
         }
         if let Some(f) = j.get("faults") {
             cfg.faults = FaultPlan::from_json(f)?;
+        }
+        if let Some(v) = j.get("sim_threads").and_then(Json::as_u64) {
+            cfg.sim_threads =
+                u32::try_from(v).map_err(|_| format!("sim_threads out of range: {v}"))?;
         }
         if let Some(s) = j.get("ssd") {
             let c = &mut cfg.ssd;

@@ -74,6 +74,7 @@ pub fn mqms_enterprise() -> SimConfig {
         device_overrides: Vec::new(),
         replace: ReplaceConfig::default(),
         faults: FaultPlan::default(),
+        sim_threads: 1,
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
         path: PathConfig {
@@ -108,6 +109,7 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         device_overrides: Vec::new(),
         replace: ReplaceConfig::default(),
         faults: FaultPlan::default(),
+        sim_threads: 1,
         ssd,
         gpu: default_gpu(),
         path: PathConfig {

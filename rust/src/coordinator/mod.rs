@@ -16,10 +16,14 @@ use crate::config::{IoPath, SimConfig};
 use crate::gpu::{self, placement, replace, GpuSim, TaggedGpuEvent};
 use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
 use crate::sim::audit;
+use crate::sim::sharded::{
+    EventClass, GhostPos, SchedRec, ShardJob, ShardResult, ShardWorld, ShardedEngine,
+    StagedEvent,
+};
 use crate::sim::time::transfer_ns;
 use crate::sim::{Engine, EventQueue, SimTime, World};
 use crate::ssd::nvme::{Completion, IoRequest, Opcode};
-use crate::ssd::{ArrayEvent, SsdArray};
+use crate::ssd::{ArrayEvent, SsdArray, SsdEvent, SsdSim, StagedEffect};
 use crate::workloads::{synth::SynthPattern, WorkloadKind, WorkloadSpec};
 use crate::gpu::trace::AccessKind;
 use crate::util::jsonlite::Json;
@@ -218,6 +222,145 @@ impl World for CoWorld {
         // failure drain runs unconditionally. Fault-free runs take one
         // empty-vec check and return.
         self.drain_faulted(now, q);
+    }
+}
+
+/// Conservative-parallel decomposition (`--sim-threads`): one shard per SSD
+/// device, everything else (GPU shards, host path, synth streams, monitor)
+/// coordinator-owned on the replay path.
+///
+/// Why the quiet set is safe to pre-execute: `Enqueue`/`Tsu`/`Flush`/
+/// `Immediate`/`RetryStalled` touch only the device's own FTL/TSU/GC state
+/// plus its RNG, and their single externally visible effect — the completion
+/// credit — is staged ([`SsdSim::set_staging`]) for commit at the merge
+/// barrier. The coordinator-side code that can run concurrently with a
+/// window ([`SsdSim::submit`]) touches only the NVMe submission queues and
+/// submit-side metrics, which no quiet event reads (occupancy is released by
+/// the *staged* credit, so submits observe sequential occupancy). `Fetch`
+/// (admission, fault/RNG draws, NVMe reads) and `Timeout` (failure path) are
+/// loud: they run on the replay path, and pre-execution for their shard
+/// stops at the first one in the window.
+impl ShardWorld for CoWorld {
+    type Shard = SsdSim;
+    type Fx = Vec<StagedEffect>;
+
+    fn shard_count(&self) -> usize {
+        self.ssd.device_count()
+    }
+
+    fn lookahead(&self) -> SimTime {
+        // Every event path crossing into a device from outside it is a
+        // `submit`, which schedules no earlier than `fetch_ns` (doorbell-to-
+        // fetch) and `cmd_timeout_ns` (when armed) ahead; the array-wide
+        // minimum bounds how far a window can safely pre-execute.
+        let mut l = SimTime::MAX;
+        for d in 0..self.cfg.devices {
+            l = l.min(self.cfg.device_ssd(d).fetch_ns);
+        }
+        if self.cfg.faults.cmd_timeout_ns > 0 {
+            l = l.min(self.cfg.faults.cmd_timeout_ns);
+        }
+        if l == SimTime::MAX {
+            0
+        } else {
+            l
+        }
+    }
+
+    fn classify(&self, ev: &Ev) -> EventClass {
+        match ev {
+            Ev::Ssd(ae) if ae.ev.is_quiet() => EventClass::Quiet(ae.dev as usize),
+            Ev::Ssd(ae) => EventClass::Loud(ae.dev as usize),
+            _ => EventClass::Coord,
+        }
+    }
+
+    fn take_shards(&mut self) -> Vec<SsdSim> {
+        self.ssd.take_devices()
+    }
+
+    fn put_shards(&mut self, shards: Vec<SsdSim>) {
+        self.ssd.put_devices(shards);
+    }
+
+    fn run_shard(job: ShardJob<Self>) -> ShardResult<Self> {
+        let ShardJob { shard, state: mut dev, work, exec_bound } = job;
+        let dev_id = shard as u32;
+        dev.set_staging(true);
+        // The shard frontier replays this device's slice of the global
+        // stream: seeded entries keep their original position, worker-chased
+        // follow-ups get tokens resolved at commit time. Local sequence
+        // numbers preserve the global relative order because both are
+        // assigned in the same order (seeds in `(time, seq)` order first,
+        // then follow-ups as execution reaches them).
+        let mut frontier: EventQueue<(GhostPos, SsdEvent)> =
+            EventQueue::with_capacity(work.len());
+        for (at, seq, ev) in work {
+            match ev {
+                Ev::Ssd(ae) => {
+                    debug_assert_eq!(ae.dev, dev_id, "event shipped to the wrong shard");
+                    frontier.schedule_at(at, (GhostPos::Orig(seq), ae.ev));
+                }
+                // The engine ships only events this world classified
+                // `Quiet`, which are all device events.
+                _ => debug_assert!(false, "non-device event in a shard worklist"),
+            }
+        }
+        // Stand-in for the array's proxy queue: collects the follow-ups one
+        // event schedules, in the exact order `SsdArray::forward` would have
+        // relayed them to the global queue.
+        let mut staging: EventQueue<SsdEvent> = EventQueue::new();
+        let mut sched_buf: Vec<(SimTime, SsdEvent)> = Vec::new();
+        let mut staged = Vec::new();
+        let mut next_token = 0u64;
+        while let Some((t, (pos, sev))) = frontier.pop() {
+            staging.set_now(t);
+            dev.handle(t, sev, &mut staging);
+            sched_buf.clear();
+            staging.drain_into(&mut sched_buf);
+            let mut scheds = Vec::with_capacity(sched_buf.len());
+            for (at, ev) in sched_buf.drain(..) {
+                // Chase quiet follow-ups strictly inside the execution
+                // bound; a follow-up landing exactly on a loud event's
+                // timestamp sequences *after* it and must stay live.
+                if ev.is_quiet() && at < exec_bound {
+                    let tk = next_token;
+                    next_token += 1;
+                    scheds.push(SchedRec::Ghost(at, tk));
+                    frontier.schedule_at(at, (GhostPos::Token(tk), ev));
+                } else {
+                    scheds.push(SchedRec::Live(at, Ev::Ssd(ArrayEvent { dev: dev_id, ev })));
+                }
+            }
+            let mut fx = Vec::new();
+            dev.drain_staged_into(&mut fx);
+            staged.push(StagedEvent { at: t, pos, scheds, fx });
+        }
+        dev.set_staging(false);
+        let clamps = staging.past_clamps();
+        ShardResult { shard, state: dev, staged, clamps }
+    }
+
+    fn commit_ghost(
+        &mut self,
+        shard: usize,
+        now: SimTime,
+        fx: Vec<StagedEffect>,
+        q: &mut EventQueue<Ev>,
+    ) {
+        // Mirror the sequential quiet-event path exactly, minus the device
+        // handling (already done on the worker) and the follow-up forwarding
+        // (already committed by the engine's replay): event monotonicity
+        // audit, staged completion settlement, completion fallout, failure
+        // drain.
+        self.mono.observe(now);
+        self.ssd.commit_staged(shard as u32, now, fx);
+        self.after_ssd(now, q);
+        self.drain_faulted(now, q);
+    }
+
+    fn add_clamps(&mut self, n: u64) {
+        self.ssd.add_staging_clamps(n);
     }
 }
 
@@ -570,6 +713,11 @@ impl CoWorld {
 pub struct CoSim {
     world: CoWorld,
     engine: Engine<CoWorld>,
+    /// Conservative-parallel engine, built lazily on the first run with
+    /// `cfg.sim_threads >= 2` (its worker pool persists across bounded
+    /// resumes). `None` on sequential runs — `--sim-threads 1` takes the
+    /// sequential engine untouched.
+    sharded: Option<ShardedEngine<CoWorld>>,
     specs: Vec<WorkloadSpec>,
     started: bool,
 }
@@ -604,6 +752,7 @@ impl CoSim {
                 cfg,
             },
             engine: Engine::new(),
+            sharded: None,
             specs: Vec::new(),
             started: false,
         }
@@ -632,7 +781,17 @@ impl CoSim {
         if !self.started {
             self.start();
         }
-        let stats = self.engine.run_until(&mut self.world, until, max_events);
+        // The sharded engine replays the identical global event stream, so
+        // the choice here changes wall-clock only, never a byte of output.
+        // Event caps are a sequential-only debugging feature: a cap can cut
+        // a lookahead window mid-flight, so capped runs stay sequential.
+        let stats = if self.world.cfg.sim_threads >= 2 && max_events.is_none() {
+            let threads = self.world.cfg.sim_threads as usize;
+            let sharded = self.sharded.get_or_insert_with(|| ShardedEngine::new(threads));
+            sharded.run_until(&mut self.engine.queue, &mut self.world, until)
+        } else {
+            self.engine.run_until(&mut self.world, until, max_events)
+        };
         // A quiescent world must be fully drained unless bounded.
         if stats.quiescent {
             debug_assert!(self.world.pending_submit.is_empty());

@@ -654,13 +654,42 @@ impl GpuSim {
     }
 }
 
+/// One merged-view workload row: every fragment of a source — the original
+/// slot plus any migrated continuations, wherever they landed — folded into
+/// a single logical workload. Counters (kernels, I/O, DRAM hits) and the
+/// predicted cost sum across fragments; the logical workload ends when its
+/// *last* fragment ends. `name`/`hit_rate` are invariant across fragments
+/// (a continuation carries the source's identity), so the first fragment
+/// speaks for all.
+fn folded_workload_json(frags: &[&WorkloadRun]) -> Json {
+    if frags.len() == 1 {
+        return GpuSim::workload_json(frags[0]);
+    }
+    let first = frags[0];
+    Json::from_pairs(vec![
+        ("name", first.name.as_str().into()),
+        ("source", (first.source as u64).into()),
+        ("kernels_done", frags.iter().map(|w| w.kernels_done).sum::<u64>().into()),
+        ("predicted_end_ns", frags.iter().map(|w| w.predicted_ns).sum::<f64>().into()),
+        ("actual_end_ns", frags.iter().map(|w| w.end_ns).max().unwrap_or(0).into()),
+        ("io_reads", frags.iter().map(|w| w.io_reads).sum::<u64>().into()),
+        ("io_writes", frags.iter().map(|w| w.io_writes).sum::<u64>().into()),
+        ("dram_hits", frags.iter().map(|w| w.dram_hits).sum::<u64>().into()),
+        ("hit_rate", first.hit_rate.into()),
+        ("fragments", (frags.len() as u64).into()),
+    ])
+}
+
 /// Merge per-instance GPU reports into one compute-side aggregate, the way
 /// [`crate::metrics::SsdSummary::merge`] folds per-device SSD summaries:
 /// counters and busy/stall times sum across shards, and the per-workload
 /// entries are re-ordered by global source id so the merged view reads like
-/// one big GPU running every workload. A single instance merges to exactly
-/// its own [`GpuSim::report`] (minus nothing), so `gpus = 1` reports are
-/// unchanged by the sharding layer.
+/// one big GPU running every workload. When dynamic re-placement split a
+/// source across shards, its fragments fold into one logical row (see
+/// [`folded_workload_json`]) — the per-instance reports keep the fragment
+/// view, so migration detail is never lost, only de-duplicated here. A
+/// single instance merges to exactly its own [`GpuSim::report`] (minus
+/// nothing), so `gpus = 1` reports are unchanged by the sharding layer.
 pub fn merged_report(gpus: &[GpuSim]) -> Json {
     if gpus.len() == 1 {
         return gpus[0].report();
@@ -669,14 +698,19 @@ pub fn merged_report(gpus: &[GpuSim]) -> Json {
     let mut busy_ns: SimTime = 0;
     let mut io_stall_ns: SimTime = 0;
     let mut chunk_switches = 0u64;
-    let mut per: Vec<(u32, Json)> = Vec::new();
+    // Fragments grouped by source, shard-major within a group (stable, so
+    // the original slot precedes its continuations for same-shard splits).
+    let mut per: Vec<(u32, Vec<&WorkloadRun>)> = Vec::new();
     for g in gpus {
         kernels_launched += g.kernels_launched;
         busy_ns += g.busy_ns;
         io_stall_ns += g.io_stall_ns;
         chunk_switches += g.sched.chunk_switches;
         for w in &g.workloads {
-            per.push((w.source, GpuSim::workload_json(w)));
+            match per.iter_mut().find(|(source, _)| *source == w.source) {
+                Some((_, frags)) => frags.push(w),
+                None => per.push((w.source, vec![w])),
+            }
         }
     }
     per.sort_by_key(|(source, _)| *source);
@@ -686,7 +720,7 @@ pub fn merged_report(gpus: &[GpuSim]) -> Json {
         ("busy_ns", busy_ns.into()),
         ("io_stall_ns", io_stall_ns.into()),
         ("chunk_switches", chunk_switches.into()),
-        ("workloads", Json::Arr(per.into_iter().map(|(_, j)| j).collect())),
+        ("workloads", Json::Arr(per.iter().map(|(_, f)| folded_workload_json(f)).collect())),
     ])
 }
 
@@ -1018,6 +1052,70 @@ mod tests {
         assert!(ids.iter().any(|&id| id > 1 << GPU_ID_SHIFT));
         let unique: std::collections::HashSet<u64> = ids.iter().copied().collect();
         assert_eq!(unique.len(), ids.len(), "request ids must stay unique");
+    }
+
+    #[test]
+    fn merged_report_folds_migrated_fragments_into_one_row() {
+        let mut cfg = config::mqms_enterprise().gpu;
+        cfg.dram_bytes = 0;
+        let total = 12usize;
+        let mut g0 = GpuSim::new(&cfg, 42, 0);
+        g0.add_workload("a", tiny_trace(total, 4, 1.0), 7, 0);
+        let mut g1 = GpuSim::new(&cfg, 42, 1);
+        let mut q: EventQueue<GpuOrIo> = EventQueue::new();
+        g0.start(1 << 20, 4096, &mut q);
+        let mut steps = 0;
+        let mut migrated = 0usize;
+        let mut guard = 0;
+        while guard < 1_000_000 {
+            guard += 1;
+            let Some((now, ev)) = q.pop() else { break };
+            match ev {
+                GpuOrIo::Gpu(t) => {
+                    let g = if t.gpu == 0 { &mut g0 } else { &mut g1 };
+                    g.handle(now, t.ev, &mut q);
+                }
+                GpuOrIo::IoDone(id) => {
+                    let g = if id < 1 << GPU_ID_SHIFT { &mut g0 } else { &mut g1 };
+                    assert!(g.io_completed(id, now, &mut q));
+                }
+            }
+            for g in [&mut g0, &mut g1] {
+                for req in g.drain_io() {
+                    q.schedule_in(5_000, GpuOrIo::IoDone(req.id));
+                }
+            }
+            steps += 1;
+            if steps == 10 && migrated == 0 {
+                let queued = g0.workload_records(0).len() - g0.workload_next_record(0);
+                let work = g0.extract_queued_tail(0, queued.div_ceil(2)).unwrap();
+                migrated = work.records.len();
+                g1.inject_migrated(work, &mut q);
+            }
+        }
+        assert!(migrated > 0);
+        assert!(g0.all_done() && g1.all_done());
+        let gpus = vec![g0, g1];
+        let merged = merged_report(&gpus);
+        let rows = merged.get("workloads").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1, "fragments of one source fold to one row");
+        let row = &rows[0];
+        assert_eq!(row.get("kernels_done").unwrap().as_u64(), Some(total as u64));
+        assert_eq!(row.get("fragments").unwrap().as_u64(), Some(2));
+        let end = row.get("actual_end_ns").unwrap().as_u64().unwrap();
+        assert_eq!(
+            end,
+            gpus[0].actual_end_ns(0).max(gpus[1].actual_end_ns(0)),
+            "logical workload ends when its last fragment ends"
+        );
+        let io: u64 = gpus
+            .iter()
+            .flat_map(|g| g.report().get("workloads").unwrap().as_arr().unwrap().to_vec())
+            .map(|w| w.get("io_reads").unwrap().as_u64().unwrap())
+            .sum();
+        assert_eq!(row.get("io_reads").unwrap().as_u64(), Some(io));
+        // The per-instance view keeps the fragment detail.
+        assert_eq!(gpus[1].report().get("workloads").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -64,13 +64,31 @@ pub struct ReplaceEngine {
 impl ReplaceEngine {
     /// `prior_end_ns[g]` is shard `g`'s admission-time predicted end (the
     /// static placement estimates summed per assignment).
+    ///
+    /// With `adaptive_epoch` on, the monitor cadence scales with the run:
+    /// the predicted makespan (the largest prior) divided by 100, clamped to
+    /// the validated `[epoch_min_ns, epoch_max_ns]` band, so monitoring
+    /// costs O(100) epochs per run whether the workload finishes in
+    /// microseconds or minutes. An unusable prior (empty, non-finite, or
+    /// ≤ 0 — e.g. every shard idle at admission) falls back to the fixed
+    /// `epoch_ns`.
     pub fn new(cfg: &SimConfig, prior_end_ns: Vec<f64>) -> Self {
         let r = &cfg.replace;
+        let epoch_ns = if r.adaptive_epoch {
+            let makespan = prior_end_ns.iter().fold(0.0f64, |a, &b| a.max(b));
+            if makespan.is_finite() && makespan > 0.0 {
+                ((makespan / 100.0) as u64).clamp(r.epoch_min_ns, r.epoch_max_ns)
+            } else {
+                r.epoch_ns
+            }
+        } else {
+            r.epoch_ns
+        };
         Self {
             ctx: PlacementCtx::from_config(cfg),
             monitor: Monitor::new(
                 MonitorCfg {
-                    epoch_ns: r.epoch_ns,
+                    epoch_ns,
                     drift_threshold: r.drift_threshold,
                     hysteresis: r.hysteresis,
                     ewma_alpha: r.ewma_alpha,
@@ -229,9 +247,33 @@ mod tests {
         let mut cfg = config::mqms_enterprise();
         cfg.gpus = gpus as u32;
         cfg.replace.enabled = true;
+        cfg.replace.adaptive_epoch = false;
         cfg.replace.epoch_ns = 1_000;
         cfg.replace.hysteresis = 1;
         ReplaceEngine::new(&cfg, vec![1_000.0; gpus])
+    }
+
+    #[test]
+    fn adaptive_epoch_scales_with_prior_and_clamps() {
+        let mut cfg = config::mqms_enterprise();
+        cfg.replace.enabled = true;
+        cfg.replace.adaptive_epoch = true;
+        cfg.replace.epoch_ns = 100_000;
+        cfg.replace.epoch_min_ns = 50_000;
+        cfg.replace.epoch_max_ns = 5_000_000;
+        // Mid-band: makespan / 100.
+        let eng = ReplaceEngine::new(&cfg, vec![3_000_000.0, 20_000_000.0]);
+        assert_eq!(eng.epoch_ns(), 200_000);
+        // Short run clamps to the floor, long run to the ceiling.
+        assert_eq!(ReplaceEngine::new(&cfg, vec![80_000.0]).epoch_ns(), 50_000);
+        assert_eq!(ReplaceEngine::new(&cfg, vec![4e10]).epoch_ns(), 5_000_000);
+        // Unusable priors fall back to the fixed cadence.
+        assert_eq!(ReplaceEngine::new(&cfg, vec![]).epoch_ns(), 100_000);
+        assert_eq!(ReplaceEngine::new(&cfg, vec![0.0, -5.0]).epoch_ns(), 100_000);
+        assert_eq!(ReplaceEngine::new(&cfg, vec![f64::NAN]).epoch_ns(), 100_000);
+        // The knob off restores the historical fixed epoch.
+        cfg.replace.adaptive_epoch = false;
+        assert_eq!(ReplaceEngine::new(&cfg, vec![20_000_000.0]).epoch_ns(), 100_000);
     }
 
     #[test]

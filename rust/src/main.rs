@@ -28,6 +28,7 @@
 //! mqms campaign --workloads rand4k --rw-ratios 0,0.5,1 --op-ratios 0.7,0.875
 //! mqms campaign --workloads rand4k --devices 2 --faults none,dropout --csv out.csv
 //! mqms run --workload rand4k --devices 2 --faults dropout --json
+//! mqms run --workload rand4k --devices 8 --sim-threads 4
 //! mqms sweep --scale 0.005
 //! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
 //! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
@@ -169,6 +170,11 @@ fn cmd_run(argv: &[String]) -> CliResult {
         )
         .opt("sched", None, "override scheduler: rr | lc | auto")
         .opt("scheme", None, "override allocation scheme: CWDP | CDWP | WCDP")
+        .opt(
+            "sim-threads",
+            None,
+            "event-engine worker threads (1 = sequential; N ≥ 2 shards the run, same output)",
+        )
         .flag("no-sample", "replay the full trace (skip Allegro sampling)")
         .flag("json", "print the full JSON report");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
@@ -222,6 +228,11 @@ fn cmd_run(argv: &[String]) -> CliResult {
     }
     if let Some(s) = args.get("scheme") {
         cfg.ssd.scheme = AddrScheme::parse(s).ok_or_else(|| format!("bad scheme `{s}`"))?;
+    }
+    if args.get("sim-threads").is_some() {
+        let v = args.get_u64("sim-threads").map_err(|e| e.to_string())?;
+        cfg.sim_threads =
+            u32::try_from(v).map_err(|_| format!("sim-threads out of range: {v}"))?;
     }
     cfg.validate()?;
     let scale = args.get_f64("scale").map_err(|e| e.to_string())?;
@@ -447,6 +458,11 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     )
     .opt("seed", Some("42"), "root rng seed (every cell runs with it)")
     .opt("threads", Some("0"), "worker threads (0 = one per core)")
+    .opt(
+        "sim-threads",
+        Some("1"),
+        "event-engine threads inside every cell (composes with --threads; see oversubscription check)",
+    )
     .opt("out-dir", None, "write one JSON report per cell plus campaign.json here")
     .opt("csv", None, "stream figure-ready CSV rows here as cells complete")
     .flag("no-sample", "replay full traces (skip Allegro sampling)")
@@ -491,6 +507,10 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         })?,
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         threads: args.get_u64("threads").map_err(|e| e.to_string())? as usize,
+        sim_threads: {
+            let v = args.get_u64("sim-threads").map_err(|e| e.to_string())?;
+            u32::try_from(v).map_err(|_| format!("sim-threads out of range: {v}"))?
+        },
         sampled: !args.get_flag("no-sample"),
     };
     let n_cells = campaign::expand(&cspec).len();

@@ -175,6 +175,67 @@ impl<E> EventQueue<E> {
         }
         self.now = saved_now;
     }
+
+    // --- sharded-engine primitives (crate-internal) -------------------------
+    //
+    // The conservative parallel engine ([`crate::sim::sharded`]) replays
+    // pre-executed events as "ghosts" against this queue so the global
+    // `(time, seq)` stream — and therefore every scheduling decision — is
+    // bit-identical to the sequential engine. These hooks expose exactly the
+    // bookkeeping that replay needs and nothing more.
+
+    /// `(time, seq)` of the next event without popping it. The replay loop
+    /// merges this against ghost positions to decide whether the next global
+    /// step is a live event or a pre-executed one.
+    #[inline]
+    pub(crate) fn peek_pos(&self) -> Option<(SimTime, u64)> {
+        self.heap.peek().map(|e| (e.at, e.seq))
+    }
+
+    /// Advance the clock to `t` without popping (ghost replay: the event at
+    /// `t` was already executed on a worker; only the clock and sequence
+    /// bookkeeping remain to be mirrored here).
+    #[inline]
+    pub(crate) fn advance_now(&mut self, t: SimTime) {
+        debug_assert!(t >= self.now, "ghost replay into the past: {} < {}", t, self.now);
+        self.now = t;
+    }
+
+    /// Burn one sequence number exactly as [`EventQueue::schedule_at`] would
+    /// (counting it as scheduled), without pushing an entry — the entry was
+    /// pre-executed on a worker and its effects are committed separately.
+    /// Returns the burned seq so replay can address follow-up ghosts.
+    #[inline]
+    pub(crate) fn alloc_seq(&mut self) -> u64 {
+        let s = self.seq;
+        self.seq += 1;
+        self.scheduled_total += 1;
+        s
+    }
+
+    /// Re-insert an entry under its original `(at, seq)` position without
+    /// touching the seq/scheduled counters (undo of a window extraction).
+    #[inline]
+    pub(crate) fn restore_entry(&mut self, at: SimTime, seq: u64, ev: E) {
+        self.heap.push(Entry { at, seq, ev });
+    }
+
+    /// Pop every entry with `at < horizon` in global `(at, seq)` order,
+    /// keeping each entry's original seq so it can be restored or replayed
+    /// at its exact sequential position. The clock does not move.
+    pub(crate) fn extract_before(&mut self, horizon: SimTime, out: &mut Vec<(SimTime, u64, E)>) {
+        while self.heap.peek().map_or(false, |e| e.at < horizon) {
+            let e = self.heap.pop().expect("peeked non-empty");
+            out.push((e.at, e.seq, e.ev));
+        }
+    }
+
+    /// Fold causality clamps observed on a worker-local staging queue into
+    /// this queue's counter, so reports count them wherever they occurred.
+    #[inline]
+    pub(crate) fn add_past_clamps(&mut self, n: u64) {
+        self.clamped_past += n;
+    }
 }
 
 #[cfg(test)]
@@ -315,6 +376,43 @@ mod tests {
         q.drain_into(&mut out);
         assert_eq!(out.len(), 3);
         assert_eq!(out[2], (6, "next"));
+    }
+
+    #[test]
+    fn extract_restore_roundtrip_preserves_positions() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5, "a"); // seq 0
+        q.schedule_at(3, "b"); // seq 1
+        q.schedule_at(9, "c"); // seq 2
+        q.schedule_at(5, "d"); // seq 3
+        let mut win = Vec::new();
+        q.extract_before(9, &mut win);
+        assert_eq!(win, vec![(3, 1, "b"), (5, 0, "a"), (5, 3, "d")]);
+        assert_eq!(q.now(), 0, "extraction must not advance the clock");
+        assert_eq!(q.peek_pos(), Some((9, 2)));
+        for (at, seq, ev) in win {
+            q.restore_entry(at, seq, ev);
+        }
+        // Restoration reproduces the exact original stream.
+        assert_eq!(q.pop(), Some((3, "b")));
+        assert_eq!(q.pop(), Some((5, "a")));
+        assert_eq!(q.pop(), Some((5, "d")));
+        assert_eq!(q.pop(), Some((9, "c")));
+        // Counters unchanged by the round trip: next seq continues from 4.
+        q.schedule_at(9, "e");
+        assert_eq!(q.peek_pos(), Some((9, 4)));
+        assert_eq!(q.scheduled_total(), 5);
+    }
+
+    #[test]
+    fn alloc_seq_mirrors_schedule_bookkeeping() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.schedule_at(1, 0); // seq 0
+        assert_eq!(q.alloc_seq(), 1);
+        assert_eq!(q.scheduled_total(), 2);
+        q.schedule_at(1, 2); // must take seq 2
+        assert_eq!(q.pop(), Some((1, 0)));
+        assert_eq!(q.peek_pos(), Some((1, 2)));
     }
 
     #[test]

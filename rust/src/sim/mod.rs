@@ -8,8 +8,10 @@
 pub mod audit;
 pub mod engine;
 pub mod events;
+pub mod sharded;
 pub mod time;
 
 pub use engine::{Engine, World};
 pub use events::EventQueue;
+pub use sharded::{ShardWorld, ShardedEngine};
 pub use time::{SimTime, MICROS, MILLIS, SECS};

@@ -1,0 +1,809 @@
+//! Conservative parallel discrete-event engine with deterministic replay.
+//!
+//! The sequential [`Engine`](super::engine::Engine) dispatches one global
+//! `(time, seq)`-ordered event stream. This module parallelizes *within* a
+//! run while reproducing that stream bit-for-bit:
+//!
+//! 1. **Window.** Pop every event earlier than a lookahead horizon
+//!    `t0 + L`, where `L` is the minimum cross-shard latency
+//!    ([`ShardWorld::lookahead`]): no event executed inside the window can
+//!    schedule into another shard before the horizon, so shards are causally
+//!    independent up to it.
+//! 2. **Partition.** Each event is classified ([`ShardWorld::classify`]) as
+//!    shard-local and side-effect-free toward other shards ("quiet"), shard-
+//!    owned but coupling ("loud"), or coordinator-owned. Quiet events that
+//!    precede their shard's first loud event are pre-executed on workers;
+//!    everything else is restored to the queue untouched.
+//! 3. **Pre-execution.** Each worker replays its shard's quiet events in
+//!    exact `(time, seq)` order against the shard state, *staging* any
+//!    externally visible effect ([`ShardWorld::run_shard`]) instead of
+//!    applying it. Quiet follow-ups landing inside the shard's execution
+//!    bound are chased on the worker; all other follow-ups are recorded
+//!    verbatim.
+//! 4. **Merge replay.** The owner thread merges pre-executed "ghosts" with
+//!    the live queue in global `(time, seq)` order: a ghost commits its
+//!    recorded schedules (burning exactly the sequence numbers the
+//!    sequential engine would have burned) and its staged effects
+//!    ([`ShardWorld::commit_ghost`]); a live event is dispatched normally.
+//!
+//! The merge step is what makes `--sim-threads N` byte-identical to the
+//! sequential engine: every scheduling decision, sequence number, clock
+//! advance and cross-shard effect happens at the same global position it
+//! would have sequentially — only the shard-internal state transitions ran
+//! early, and those are confined to state no other event reads in between.
+
+use std::any::Any;
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::engine::{RunStats, World};
+use super::events::EventQueue;
+use super::time::SimTime;
+
+/// How an event relates to the shard topology (see [`ShardWorld::classify`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventClass {
+    /// Coordinator-owned: always dispatched on the sequential replay path.
+    Coord,
+    /// Shard-owned but coupling (reads shared state, faults, admission):
+    /// dispatched on the replay path, and a barrier for pre-execution — the
+    /// shard's quiet events after it stay live too.
+    Loud(usize),
+    /// Shard-local and pre-executable on a worker.
+    Quiet(usize),
+}
+
+/// Global position of a pre-executed event: either its original queue entry
+/// (original sequence number preserved by extraction) or a worker-chased
+/// follow-up addressed by a shard-local token until replay assigns the real
+/// sequence number at commit time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GhostPos {
+    /// Extracted from the queue at `(at, seq)`.
+    Orig(u64),
+    /// Scheduled during pre-execution; resolved via the token map when the
+    /// parent ghost commits.
+    Token(u64),
+}
+
+/// One schedule a pre-executed event performed, recorded in order so replay
+/// can burn sequence numbers exactly as the sequential engine would.
+#[derive(Debug)]
+pub enum SchedRec<E> {
+    /// A follow-up that was *not* pre-executed: pushed onto the live queue
+    /// at commit time, taking the next sequence number.
+    Live(SimTime, E),
+    /// A follow-up that *was* pre-executed on the worker: burns the next
+    /// sequence number and maps its token to the burned `(at, seq)`.
+    Ghost(SimTime, u64),
+}
+
+/// A pre-executed event: its time and global position, the schedules it
+/// performed, and the staged externally visible effects to commit.
+pub struct StagedEvent<W: ShardWorld> {
+    /// Execution (and replay) timestamp.
+    pub at: SimTime,
+    /// Global position — original seq or follow-up token.
+    pub pos: GhostPos,
+    /// Schedules performed, in order.
+    pub scheds: Vec<SchedRec<W::Ev>>,
+    /// Staged cross-shard effects, applied by [`ShardWorld::commit_ghost`].
+    pub fx: W::Fx,
+}
+
+/// One shard's slice of a window, shipped to a worker.
+pub struct ShardJob<W: ShardWorld> {
+    /// Shard index (stable across the run).
+    pub shard: usize,
+    /// Owned shard state, returned in the [`ShardResult`].
+    pub state: W::Shard,
+    /// Eligible quiet events in global `(time, seq)` order.
+    pub work: Vec<(SimTime, u64, W::Ev)>,
+    /// Pre-execute follow-ups strictly before this bound only (the window
+    /// horizon, cut to the shard's first loud event).
+    pub exec_bound: SimTime,
+}
+
+/// A worker's answer: the shard state back, plus every pre-executed event
+/// in execution order and any causality clamps its staging queue counted.
+pub struct ShardResult<W: ShardWorld> {
+    /// Shard index this result belongs to.
+    pub shard: usize,
+    /// The advanced shard state.
+    pub state: W::Shard,
+    /// Pre-executed events in execution (= global restricted) order.
+    pub staged: Vec<StagedEvent<W>>,
+    /// Past-clamp count observed on the worker's staging queue.
+    pub clamps: u64,
+}
+
+/// A [`World`] that can be decomposed into shards for conservative parallel
+/// execution. Implementations carry the burden of proof that quiet events
+/// touch no state a concurrently dispatched event reads — the engine
+/// guarantees only the windowing, ordering, and replay mechanics.
+pub trait ShardWorld: World + Sized {
+    /// Owned per-shard state shipped to workers.
+    type Shard: Send + 'static;
+    /// Staged effects of one pre-executed event.
+    type Fx: Send + 'static;
+
+    /// Number of shards (stable for the lifetime of a run).
+    fn shard_count(&self) -> usize;
+
+    /// Minimum latency of any event-schedule crossing *into* a shard from
+    /// outside it. `0` disables pre-execution (the engine degenerates to
+    /// sequential stepping).
+    fn lookahead(&self) -> SimTime;
+
+    /// Classify an event against the shard topology.
+    fn classify(&self, ev: &Self::Ev) -> EventClass;
+
+    /// Surrender the shard states (restored by [`ShardWorld::put_shards`]
+    /// before any non-engine code can observe the world again).
+    fn take_shards(&mut self) -> Vec<Self::Shard>;
+
+    /// Restore the shard states taken by [`ShardWorld::take_shards`].
+    fn put_shards(&mut self, shards: Vec<Self::Shard>);
+
+    /// Pre-execute one shard's window slice on a worker thread. Runs without
+    /// `&self` — everything it may touch must travel in the job.
+    fn run_shard(job: ShardJob<Self>) -> ShardResult<Self>;
+
+    /// Commit one pre-executed event at its exact global position: apply its
+    /// staged effects and any owner-side bookkeeping the sequential path
+    /// would have performed while handling it.
+    fn commit_ghost(
+        &mut self,
+        shard: usize,
+        now: SimTime,
+        fx: Self::Fx,
+        q: &mut EventQueue<Self::Ev>,
+    );
+
+    /// Fold causality clamps counted on worker staging queues into wherever
+    /// the world reports the sequential engine's clamps from.
+    fn add_clamps(&mut self, n: u64);
+}
+
+/// Payload a worker thread sends back: the result, or the panic it caught.
+type WorkerReply<W> = Result<ShardResult<W>, Box<dyn Any + Send>>;
+
+/// A persistent pool of worker threads, fed shard jobs round-robin by shard
+/// index so a given shard always lands on the same worker (cache warmth;
+/// determinism never depends on it). Dropping the pool closes the job
+/// channels and joins every worker.
+struct WorkerPool<W: ShardWorld> {
+    jobs: Vec<mpsc::Sender<ShardJob<W>>>,
+    results: mpsc::Receiver<WorkerReply<W>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<W: ShardWorld + 'static> WorkerPool<W>
+where
+    W::Ev: Send + 'static,
+{
+    fn spawn(n: usize) -> Self {
+        let (res_tx, res_rx) = mpsc::channel::<WorkerReply<W>>();
+        let mut jobs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<ShardJob<W>>();
+            let out = res_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for job in rx {
+                    // A panic inside shard code must not poison the pool
+                    // silently: ship the payload back and let the owner
+                    // resume the unwind on its own thread.
+                    let reply = catch_unwind(AssertUnwindSafe(|| W::run_shard(job)));
+                    if out.send(reply).is_err() {
+                        break;
+                    }
+                }
+            }));
+            jobs.push(tx);
+        }
+        Self { jobs, results: res_rx, handles }
+    }
+}
+
+impl<W: ShardWorld> Drop for WorkerPool<W> {
+    fn drop(&mut self) {
+        // Closing the job channels ends each worker's receive loop.
+        self.jobs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Below this many pre-executable events in a window, thread hand-off costs
+/// more than it saves: the window is dispatched sequentially instead.
+const MIN_PARALLEL: usize = 16;
+
+/// The conservative parallel engine. Opt-in and fully interchangeable with
+/// the sequential [`Engine`](super::engine::Engine): given the same queue
+/// and world it produces the identical event stream, statistics, and final
+/// state — the contract every `--sim-threads` test pins down.
+pub struct ShardedEngine<W: ShardWorld + 'static>
+where
+    W::Ev: Send + 'static,
+{
+    threads: usize,
+    /// Pre-execution density threshold (overridable in tests to force the
+    /// parallel path on small workloads).
+    min_parallel: usize,
+    pool: Option<WorkerPool<W>>,
+    /// Window scratch: extracted `(at, seq, ev)` entries.
+    win: Vec<(SimTime, u64, W::Ev)>,
+    /// Window scratch: per-entry classification, parallel to `win`.
+    classes: Vec<EventClass>,
+    /// Per-shard worklists (scratch, swapped into jobs).
+    work: Vec<Vec<(SimTime, u64, W::Ev)>>,
+    /// Per-shard pre-executed events awaiting replay, execution order.
+    ghosts: Vec<VecDeque<StagedEvent<W>>>,
+    /// Per-shard follow-up token → committed `(at, seq)` position.
+    tokens: Vec<BTreeMap<u64, (SimTime, u64)>>,
+}
+
+impl<W: ShardWorld + 'static> ShardedEngine<W>
+where
+    W::Ev: Send + 'static,
+{
+    /// An engine dispatching pre-execution across `threads` workers
+    /// (clamped to ≥ 1). Workers spawn lazily on the first parallel window.
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            min_parallel: MIN_PARALLEL,
+            pool: None,
+            win: Vec::new(),
+            classes: Vec::new(),
+            work: Vec::new(),
+            ghosts: Vec::new(),
+            tokens: Vec::new(),
+        }
+    }
+
+    #[cfg(test)]
+    fn set_min_parallel(&mut self, n: usize) {
+        self.min_parallel = n;
+    }
+
+    /// Run until the queue drains or simulated time would pass `until`
+    /// (events at exactly `until` are still processed) — the same contract
+    /// as the sequential engine's `run_until` with no event cap.
+    pub fn run_until(
+        &mut self,
+        queue: &mut EventQueue<W::Ev>,
+        world: &mut W,
+        until: Option<SimTime>,
+    ) -> RunStats {
+        let shards = world.shard_count();
+        self.work.resize_with(shards, Vec::new);
+        self.ghosts.resize_with(shards, VecDeque::new);
+        self.tokens.resize_with(shards, BTreeMap::new);
+        let lookahead = world.lookahead();
+        let mut events = 0u64;
+        loop {
+            let Some(t0) = queue.peek_time() else {
+                return RunStats {
+                    end_time: queue.now(),
+                    events,
+                    quiescent: true,
+                    past_clamps: queue.past_clamps(),
+                };
+            };
+            if let Some(bound) = until {
+                if t0 > bound {
+                    return RunStats {
+                        end_time: queue.now(),
+                        events,
+                        quiescent: false,
+                        past_clamps: queue.past_clamps(),
+                    };
+                }
+            }
+            // Events at exactly `until` still run, so the window may extend
+            // one past it; `extract_before` is strict.
+            let mut horizon = t0.saturating_add(lookahead);
+            if let Some(bound) = until {
+                horizon = horizon.min(bound.saturating_add(1));
+            }
+            if horizon <= t0 {
+                // Degenerate lookahead: nothing can be pre-executed. Step
+                // the t0 cohort (and its same-time follow-ups) sequentially.
+                while queue.peek_time() == Some(t0) {
+                    let (t, ev) = queue.pop().expect("peeked non-empty");
+                    world.handle(t, ev, queue);
+                    events += 1;
+                }
+                continue;
+            }
+            events += self.run_window(queue, world, horizon, shards);
+        }
+    }
+
+    /// One lookahead window: partition, pre-execute, merge-replay. Returns
+    /// the number of events dispatched.
+    fn run_window(
+        &mut self,
+        queue: &mut EventQueue<W::Ev>,
+        world: &mut W,
+        horizon: SimTime,
+        shards: usize,
+    ) -> u64 {
+        self.win.clear();
+        self.classes.clear();
+        queue.extract_before(horizon, &mut self.win);
+
+        // Pass 1: classify, find each shard's first loud event, and count
+        // how many quiet events precede it (= pre-executable).
+        let mut first_loud_at: Vec<Option<SimTime>> = vec![None; shards];
+        let mut first_loud_idx: Vec<usize> = vec![usize::MAX; shards];
+        let mut eligible = 0usize;
+        for (i, (at, _seq, ev)) in self.win.iter().enumerate() {
+            let class = world.classify(ev);
+            match class {
+                EventClass::Loud(s) if first_loud_idx[s] == usize::MAX => {
+                    first_loud_idx[s] = i;
+                    first_loud_at[s] = Some(*at);
+                }
+                EventClass::Quiet(s) if i < first_loud_idx[s] => eligible += 1,
+                _ => {}
+            }
+            self.classes.push(class);
+        }
+
+        if eligible < self.min_parallel {
+            // Too sparse to pay the hand-off: restore and step sequentially
+            // to the horizon (new events landing inside it included).
+            for (at, seq, ev) in self.win.drain(..) {
+                queue.restore_entry(at, seq, ev);
+            }
+            let mut events = 0u64;
+            while queue.peek_time().map_or(false, |t| t < horizon) {
+                let (t, ev) = queue.pop().expect("peeked non-empty");
+                world.handle(t, ev, queue);
+                events += 1;
+            }
+            return events;
+        }
+
+        // Pass 2: move eligible quiet events to their shard worklist,
+        // restore everything else at its original position.
+        for (i, (at, seq, ev)) in self.win.drain(..).enumerate() {
+            match self.classes[i] {
+                EventClass::Quiet(s) if i < first_loud_idx[s] => {
+                    self.work[s].push((at, seq, ev));
+                }
+                _ => queue.restore_entry(at, seq, ev),
+            }
+        }
+
+        // Pre-execute: ship each non-empty worklist with its shard state.
+        let pool = self
+            .pool
+            .get_or_insert_with(|| WorkerPool::spawn(self.threads));
+        let mut slots: Vec<Option<W::Shard>> =
+            world.take_shards().into_iter().map(Some).collect();
+        debug_assert_eq!(slots.len(), shards, "shard count changed mid-run");
+        let mut outstanding = 0usize;
+        for s in 0..shards {
+            if self.work[s].is_empty() {
+                continue;
+            }
+            let exec_bound = first_loud_at[s].map_or(horizon, |t| t.min(horizon));
+            let job = ShardJob {
+                shard: s,
+                state: slots[s].take().expect("shard taken once per window"),
+                work: std::mem::take(&mut self.work[s]),
+                exec_bound,
+            };
+            pool.jobs[s % self.threads]
+                .send(job)
+                .expect("worker pool alive");
+            outstanding += 1;
+        }
+        let mut clamps = 0u64;
+        for _ in 0..outstanding {
+            match pool.results.recv().expect("worker pool alive") {
+                Ok(r) => {
+                    debug_assert!(self.ghosts[r.shard].is_empty());
+                    slots[r.shard] = Some(r.state);
+                    self.ghosts[r.shard] = VecDeque::from(r.staged);
+                    clamps += r.clamps;
+                }
+                Err(panic) => resume_unwind(panic),
+            }
+        }
+        world.put_shards(
+            slots
+                .into_iter()
+                .map(|s| s.expect("every shard returned"))
+                .collect(),
+        );
+        world.add_clamps(clamps);
+
+        // Merge replay: advance the global stream strictly in `(time, seq)`
+        // order, committing ghosts and dispatching live events — including
+        // any the dispatches newly schedule inside the window.
+        let mut events = 0u64;
+        loop {
+            let mut ghost: Option<(SimTime, u64, usize)> = None;
+            for s in 0..shards {
+                let Some(front) = self.ghosts[s].front() else { continue };
+                let (at, seq) = match front.pos {
+                    GhostPos::Orig(seq) => (front.at, seq),
+                    GhostPos::Token(tk) => {
+                        *self.tokens[s].get(&tk).expect("parent ghost committed first")
+                    }
+                };
+                if ghost.map_or(true, |(gt, gs, _)| (at, seq) < (gt, gs)) {
+                    ghost = Some((at, seq, s));
+                }
+            }
+            let live = queue.peek_pos();
+            let take_ghost = match (ghost, live) {
+                (Some((gt, gs, _)), Some((lt, ls))) => (gt, gs) < (lt, ls),
+                (Some(_), None) => true,
+                // Every ghost lies before the horizon, so once they are
+                // drained the live frontier alone decides when to stop.
+                (None, Some((lt, _))) => {
+                    if lt >= horizon {
+                        break;
+                    }
+                    false
+                }
+                (None, None) => break,
+            };
+            if take_ghost {
+                let (gt, _gs, s) = ghost.expect("take_ghost implies a ghost");
+                let ev = self.ghosts[s].pop_front().expect("front just peeked");
+                if let GhostPos::Token(tk) = ev.pos {
+                    self.tokens[s].remove(&tk);
+                }
+                queue.advance_now(gt);
+                for rec in ev.scheds {
+                    match rec {
+                        SchedRec::Live(at, e) => queue.schedule_at(at, e),
+                        SchedRec::Ghost(at, tk) => {
+                            let seq = queue.alloc_seq();
+                            self.tokens[s].insert(tk, (at, seq));
+                        }
+                    }
+                }
+                world.commit_ghost(s, gt, ev.fx, queue);
+            } else {
+                let (t, ev) = queue.pop().expect("live event peeked");
+                world.handle(t, ev, queue);
+            }
+            events += 1;
+        }
+        debug_assert!(self.ghosts.iter().all(VecDeque::is_empty));
+        debug_assert!(self.tokens.iter().all(BTreeMap::is_empty));
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::Engine;
+
+    /// Toy sharded world: `n` counter shards. Quiet `Work` events fold a
+    /// payload into the shard state, emit a record (the staged effect), and
+    /// chase follow-up work; `Loud` events read *global* state into the
+    /// shard, coupling it; `Tick` is the coordinator fanning work out. The
+    /// sequential and sharded runs must agree on every byte of state.
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    enum ToyEv {
+        Work { shard: usize, payload: u64 },
+        Loud { shard: usize },
+        Tick { round: u64 },
+    }
+
+    #[derive(Debug, Default, Clone, PartialEq, Eq)]
+    struct ToyShard {
+        value: u64,
+        local_log: Vec<(SimTime, u64)>,
+    }
+
+    impl ToyShard {
+        /// Shard-local handling of one quiet event: returns (absolute-time
+        /// follow-ups, staged records).
+        fn work(
+            &mut self,
+            now: SimTime,
+            payload: u64,
+            shard: usize,
+        ) -> (Vec<(SimTime, ToyEv)>, Vec<u64>) {
+            self.value = self.value.wrapping_mul(6364136223846793005).wrapping_add(payload);
+            self.local_log.push((now, payload));
+            let mut follow = Vec::new();
+            if payload > 2 {
+                // Deterministic chase: spawn nearer and farther follow-ups
+                // so some land inside the exec bound and some outside.
+                follow.push((now + 3 + payload % 5, ToyEv::Work { shard, payload: payload / 2 }));
+                if payload % 3 == 0 {
+                    follow.push((now + 40, ToyEv::Work { shard, payload: payload - 1 }));
+                }
+            }
+            (follow, vec![self.value % 1000])
+        }
+    }
+
+    struct ToyWorld {
+        shards: Vec<ToyShard>,
+        global: Vec<(SimTime, u64)>,
+        lookahead: SimTime,
+        rounds: u64,
+    }
+
+    impl ToyWorld {
+        fn new(n: usize, lookahead: SimTime, rounds: u64) -> Self {
+            Self { shards: vec![ToyShard::default(); n], global: Vec::new(), lookahead, rounds }
+        }
+
+        fn seed(&self, q: &mut EventQueue<ToyEv>) {
+            q.schedule_at(0, ToyEv::Tick { round: 0 });
+        }
+    }
+
+    impl World for ToyWorld {
+        type Ev = ToyEv;
+        fn handle(&mut self, now: SimTime, ev: ToyEv, q: &mut EventQueue<ToyEv>) {
+            match ev {
+                ToyEv::Work { shard, payload } => {
+                    let (follow, fx) = self.shards[shard].work(now, payload, shard);
+                    for (at, e) in follow {
+                        q.schedule_at(at, e);
+                    }
+                    for f in fx {
+                        self.global.push((now, f));
+                    }
+                }
+                ToyEv::Loud { shard } => {
+                    // Couples shard and global state in both directions.
+                    self.global.push((now, self.shards[shard].value % 97));
+                    self.shards[shard].value ^= self.global.len() as u64;
+                }
+                ToyEv::Tick { round } => {
+                    let n = self.shards.len() as u64;
+                    for i in 0..(4 * n) {
+                        let shard = (i % n) as usize;
+                        let payload = 3 + (round * 7 + i * 13) % 23;
+                        q.schedule_at(now + 5 + i % 11, ToyEv::Work { shard, payload });
+                    }
+                    self.global.push((now, self.shards[(round % n) as usize].value % 97));
+                    if round % 2 == 1 {
+                        q.schedule_at(now + 9, ToyEv::Loud { shard: (round % n) as usize });
+                    }
+                    if round + 1 < self.rounds {
+                        q.schedule_at(now + 100, ToyEv::Tick { round: round + 1 });
+                    }
+                }
+            }
+        }
+    }
+
+    impl ShardWorld for ToyWorld {
+        type Shard = ToyShard;
+        type Fx = Vec<u64>;
+
+        fn shard_count(&self) -> usize {
+            self.shards.len()
+        }
+
+        fn lookahead(&self) -> SimTime {
+            self.lookahead
+        }
+
+        fn classify(&self, ev: &ToyEv) -> EventClass {
+            match ev {
+                ToyEv::Work { shard, .. } => EventClass::Quiet(*shard),
+                ToyEv::Loud { shard } => EventClass::Loud(*shard),
+                ToyEv::Tick { .. } => EventClass::Coord,
+            }
+        }
+
+        fn take_shards(&mut self) -> Vec<ToyShard> {
+            std::mem::take(&mut self.shards)
+        }
+
+        fn put_shards(&mut self, shards: Vec<ToyShard>) {
+            assert!(self.shards.is_empty());
+            self.shards = shards;
+        }
+
+        fn run_shard(job: ShardJob<Self>) -> ShardResult<Self> {
+            let ShardJob { shard, state: mut sim, work, exec_bound } = job;
+            let mut frontier: EventQueue<(GhostPos, u64)> =
+                EventQueue::with_capacity(work.len());
+            for (at, seq, ev) in work {
+                match ev {
+                    ToyEv::Work { shard: s, payload } => {
+                        assert_eq!(s, shard);
+                        frontier.schedule_at(at, (GhostPos::Orig(seq), payload));
+                    }
+                    other => panic!("non-quiet event in worklist: {other:?}"),
+                }
+            }
+            let mut staged = Vec::new();
+            let mut next_token = 0u64;
+            while let Some((t, (pos, payload))) = frontier.pop() {
+                let (follow, fx) = sim.work(t, payload, shard);
+                let mut scheds = Vec::with_capacity(follow.len());
+                for (at, e) in follow {
+                    match e {
+                        ToyEv::Work { payload: p, .. } if at < exec_bound => {
+                            let tk = next_token;
+                            next_token += 1;
+                            frontier.schedule_at(at, (GhostPos::Token(tk), p));
+                            scheds.push(SchedRec::Ghost(at, tk));
+                        }
+                        e => scheds.push(SchedRec::Live(at, e)),
+                    }
+                }
+                staged.push(StagedEvent { at: t, pos, scheds, fx });
+            }
+            ShardResult { shard, state: sim, staged, clamps: frontier.past_clamps() }
+        }
+
+        fn commit_ghost(
+            &mut self,
+            _shard: usize,
+            now: SimTime,
+            fx: Vec<u64>,
+            _q: &mut EventQueue<ToyEv>,
+        ) {
+            for f in fx {
+                self.global.push((now, f));
+            }
+        }
+
+        fn add_clamps(&mut self, _n: u64) {}
+    }
+
+    fn run_sequential(
+        n: usize,
+        lookahead: SimTime,
+        rounds: u64,
+        until: Option<SimTime>,
+    ) -> (ToyWorld, RunStats) {
+        let mut w = ToyWorld::new(n, lookahead, rounds);
+        let mut e = Engine::new();
+        w.seed(&mut e.queue);
+        let stats = e.run_until(&mut w, until, None);
+        (w, stats)
+    }
+
+    fn run_sharded(
+        n: usize,
+        lookahead: SimTime,
+        rounds: u64,
+        until: Option<SimTime>,
+        threads: usize,
+        min_parallel: usize,
+    ) -> (ToyWorld, RunStats) {
+        let mut w = ToyWorld::new(n, lookahead, rounds);
+        let mut q = EventQueue::new();
+        w.seed(&mut q);
+        let mut e = ShardedEngine::new(threads);
+        e.set_min_parallel(min_parallel);
+        let stats = e.run_until(&mut q, &mut w, until);
+        (w, stats)
+    }
+
+    fn assert_identical(a: &(ToyWorld, RunStats), b: &(ToyWorld, RunStats)) {
+        assert_eq!(a.0.global, b.0.global, "global effect log diverged");
+        assert_eq!(a.0.shards, b.0.shards, "shard states diverged");
+        assert_eq!(a.1, b.1, "run stats diverged");
+    }
+
+    #[test]
+    fn sharded_matches_sequential_exactly() {
+        for &threads in &[1usize, 2, 4] {
+            for &n in &[1usize, 3, 4] {
+                for &lookahead in &[7u64, 25, 1000] {
+                    let seq = run_sequential(n, lookahead, 6, None);
+                    let par = run_sharded(n, lookahead, 6, None, threads, 1);
+                    assert_identical(&seq, &par);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_sequential_under_time_bound() {
+        for &until in &[0u64, 9, 57, 110, 305] {
+            let seq = run_sequential(3, 20, 8, Some(until));
+            let par = run_sharded(3, 20, 8, Some(until), 2, 1);
+            assert_identical(&seq, &par);
+        }
+    }
+
+    #[test]
+    fn zero_lookahead_degenerates_to_sequential_stepping() {
+        let seq = run_sequential(2, 0, 4, None);
+        let par = run_sharded(2, 0, 4, None, 2, 1);
+        assert_identical(&seq, &par);
+    }
+
+    #[test]
+    fn sparse_windows_take_the_sequential_path() {
+        // A high threshold keeps every window below MIN_PARALLEL: the run
+        // must still match (and never spawn a pool — exercised implicitly).
+        let seq = run_sequential(4, 50, 5, None);
+        let par = run_sharded(4, 50, 5, None, 4, usize::MAX);
+        assert_identical(&seq, &par);
+    }
+
+    #[test]
+    fn empty_queue_is_quiescent_at_t0() {
+        let mut w = ToyWorld::new(2, 10, 0);
+        let mut q: EventQueue<ToyEv> = EventQueue::new();
+        let mut e = ShardedEngine::new(2);
+        let stats = e.run_until(&mut q, &mut w, None);
+        assert!(stats.quiescent);
+        assert_eq!(stats.events, 0);
+        assert_eq!(stats.end_time, 0);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_owner() {
+        struct PanicWorld(ToyWorld);
+        impl World for PanicWorld {
+            type Ev = ToyEv;
+            fn handle(&mut self, now: SimTime, ev: ToyEv, q: &mut EventQueue<ToyEv>) {
+                self.0.handle(now, ev, q);
+            }
+        }
+        impl ShardWorld for PanicWorld {
+            type Shard = ToyShard;
+            type Fx = Vec<u64>;
+            fn shard_count(&self) -> usize {
+                self.0.shard_count()
+            }
+            fn lookahead(&self) -> SimTime {
+                self.0.lookahead()
+            }
+            fn classify(&self, ev: &ToyEv) -> EventClass {
+                self.0.classify(ev)
+            }
+            fn take_shards(&mut self) -> Vec<ToyShard> {
+                self.0.take_shards()
+            }
+            fn put_shards(&mut self, shards: Vec<ToyShard>) {
+                self.0.put_shards(shards)
+            }
+            fn run_shard(_job: ShardJob<Self>) -> ShardResult<Self> {
+                panic!("shard blew up");
+            }
+            fn commit_ghost(
+                &mut self,
+                shard: usize,
+                now: SimTime,
+                fx: Vec<u64>,
+                q: &mut EventQueue<ToyEv>,
+            ) {
+                self.0.commit_ghost(shard, now, fx, q)
+            }
+            fn add_clamps(&mut self, n: u64) {
+                self.0.add_clamps(n)
+            }
+        }
+        let result = std::panic::catch_unwind(|| {
+            let mut w = PanicWorld(ToyWorld::new(2, 1000, 4));
+            let mut q = EventQueue::new();
+            w.0.seed(&mut q);
+            let mut e = ShardedEngine::new(2);
+            e.set_min_parallel(1);
+            e.run_until(&mut q, &mut w, None);
+        });
+        let err = result.expect_err("worker panic must propagate");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "shard blew up");
+    }
+}

@@ -643,6 +643,50 @@ impl SsdArray {
         self.proxy.past_clamps()
     }
 
+    // --- sharded-engine glue (crate-internal) -------------------------------
+
+    /// Move every device out for a worker phase (sharded engine). The array
+    /// must not receive events until [`SsdArray::put_devices`] returns them;
+    /// the engine upholds this by running the phase to completion before any
+    /// replay dispatch.
+    pub(crate) fn take_devices(&mut self) -> Vec<SsdSim> {
+        std::mem::take(&mut self.devs)
+    }
+
+    /// Return the devices taken by [`SsdArray::take_devices`], in device
+    /// order.
+    pub(crate) fn put_devices(&mut self, devs: Vec<SsdSim>) {
+        debug_assert!(self.devs.is_empty(), "put_devices over live devices");
+        debug_assert_eq!(devs.len(), self.n as usize, "device set changed size");
+        self.devs = devs;
+    }
+
+    /// Commit the staged effects of one pre-executed device event at its
+    /// exact sequential position: release the deferred NVMe occupancy and
+    /// settle the completions, mirroring what [`SsdArray::handle`] does
+    /// around a live dispatch (monotonicity observation, proxy clock align,
+    /// success-path settlement — staged events never produce failures).
+    pub(crate) fn commit_staged(
+        &mut self,
+        dev: u32,
+        now: SimTime,
+        fx: Vec<crate::ssd::StagedEffect>,
+    ) {
+        self.mono.observe(now);
+        self.proxy.set_now(now);
+        for e in fx {
+            self.devs[dev as usize].apply_staged_complete(e.queue);
+            self.settle(e.completion, false);
+        }
+    }
+
+    /// Fold causality clamps observed on worker-local staging queues into
+    /// this array's relay-queue counter, so [`SsdArray::past_clamps`] counts
+    /// them exactly where the sequential engine would have (device-side).
+    pub(crate) fn add_staging_clamps(&mut self, n: u64) {
+        self.proxy.add_past_clamps(n);
+    }
+
     /// Completed requests summed over all devices (sub-requests count once
     /// per device leg; host-visible counts come from the coordinator).
     pub fn total_completed(&self) -> u64 {

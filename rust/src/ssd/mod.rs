@@ -65,6 +65,36 @@ pub enum SsdEvent {
     Timeout { req: u64, queue: usize },
 }
 
+impl SsdEvent {
+    /// Device-local ("quiet") events never read the fault/rng streams, never
+    /// fail requests, and touch the NVMe queues only through the completion
+    /// credit — their single externally visible effect. The sharded engine
+    /// ([`crate::sim::sharded`]) may pre-execute quiet events on a worker
+    /// with that credit staged for deterministic commit at the merge barrier.
+    /// `Fetch` (fault/rng/admission) and `Timeout` (failure path) are "loud"
+    /// and always run on the sequential replay path.
+    pub(crate) fn is_quiet(&self) -> bool {
+        matches!(
+            self,
+            SsdEvent::Enqueue(_)
+                | SsdEvent::Tsu(_)
+                | SsdEvent::Flush { .. }
+                | SsdEvent::Immediate { .. }
+                | SsdEvent::RetryStalled { .. }
+        )
+    }
+}
+
+/// One deferred completion credit from a staged (worker-side) execution:
+/// everything [`SsdSim::credit`] would have done beyond this device's own
+/// state — the NVMe occupancy release and the outward completion — captured
+/// for the owner to apply at the event's exact sequential position.
+#[derive(Debug, Clone)]
+pub struct StagedEffect {
+    pub(crate) queue: usize,
+    pub(crate) completion: Completion,
+}
+
 /// Sentinel request id for buffered sectors already acknowledged to the
 /// host (ack-on-buffer mode): the flash program credits no one.
 const NO_CLAIM: u64 = u64::MAX;
@@ -205,6 +235,11 @@ pub struct SsdSim {
     /// per-event settle loop allocates nothing in steady state).
     done_scratch: Vec<XactId>,
     next_immediate_latency: SimTime,
+    /// Staged-execution mode (sharded engine, worker side): completion
+    /// credits accumulate in `staged_out` instead of touching the NVMe
+    /// queues / `completions_out`, for deterministic commit by the owner.
+    staging: bool,
+    staged_out: Vec<StagedEffect>,
 }
 
 impl SsdSim {
@@ -238,6 +273,8 @@ impl SsdSim {
             enq: EnqueuePool::default(),
             done_scratch: Vec::new(),
             next_immediate_latency: 1_000, // ~DRAM/controller turnaround
+            staging: false,
+            staged_out: Vec::new(),
             cfg: cfg.clone(),
         }
     }
@@ -890,10 +927,39 @@ impl SsdSim {
 
     fn credit(&mut self, req: u64, sectors: u32, now: SimTime) {
         if let Some((queue, completion)) = self.hil.credit(req, sectors, now) {
-            self.nvme.complete(queue);
+            // Metrics stay on the execution side in both modes: the staged
+            // path runs this device's events in the same relative order as
+            // the sequential engine, so per-device accumulation (including
+            // float summation order) is bit-identical.
             self.metrics.record_completion(&completion);
-            self.completions_out.push(completion);
+            if self.staging {
+                self.staged_out.push(StagedEffect { queue, completion });
+            } else {
+                self.nvme.complete(queue);
+                self.completions_out.push(completion);
+            }
         }
+    }
+
+    /// Enter/leave staged-execution mode (sharded engine, worker side).
+    /// While staging, completion credits are deferred into
+    /// [`SsdSim::drain_staged_into`] instead of applied to the NVMe queues.
+    pub(crate) fn set_staging(&mut self, on: bool) {
+        debug_assert!(self.staged_out.is_empty(), "staging toggled with effects pending");
+        self.staging = on;
+    }
+
+    /// Move the effects staged since the last call into `out` (appending),
+    /// preserving execution order.
+    pub(crate) fn drain_staged_into(&mut self, out: &mut Vec<StagedEffect>) {
+        out.append(&mut self.staged_out);
+    }
+
+    /// Owner-side commit of a staged credit's NVMe occupancy release — the
+    /// counterpart of the `nvme.complete` the worker deferred. The staged
+    /// completion itself is settled by the array/coordinator.
+    pub(crate) fn apply_staged_complete(&mut self, queue: usize) {
+        self.nvme.complete(queue);
     }
 
     fn finish_xact<E: From<SsdEvent> + From<TsuEvent>>(&mut self, xid: XactId, now: SimTime, q: &mut EventQueue<E>) {

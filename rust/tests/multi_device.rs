@@ -34,8 +34,9 @@ fn devices1_cell_reproduces_single_device_run() {
         replace: false,
         rw_ratio: None,
         op_ratio: None,
+        faults: "none".to_string(),
     };
-    let from_campaign = campaign::run_cell(&cell, 42, true).unwrap();
+    let from_campaign = campaign::run_cell(&cell, 42, true, 1).unwrap();
 
     let mut cfg = config::mqms_enterprise();
     cfg.seed = 42;

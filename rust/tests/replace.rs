@@ -146,8 +146,10 @@ fn replace_campaign_axis_runs_and_stays_attributed() {
         replace: vec![false, true],
         rw_ratios: Vec::new(),
         op_ratios: Vec::new(),
+        faults: vec!["none".into()],
         seed: 7,
         threads: 2,
+        sim_threads: 1,
         sampled: true,
     };
     let results = mqms::campaign::run(&spec).unwrap();

@@ -1,0 +1,167 @@
+//! Parallel intra-run engine integration tests: the tentpole contract of
+//! the sharded event engine (`SimConfig::sim_threads`).
+//!
+//! * `--sim-threads N` is **byte-identical** to the sequential engine for
+//!   every cell shape the suite exercises: both presets, single- and
+//!   multi-device arrays, single- and multi-GPU compute, dynamic
+//!   re-placement on, and all five named fault scenarios.
+//! * Thread counts above the shard count (and above the host's cores) are
+//!   legal and change nothing but wall-clock.
+//! * Under the `audit` feature the dropout retry-storm run passes every
+//!   invariant check with the sharded engine, exactly as it does
+//!   sequentially (see `tests/audit.rs`).
+
+use mqms::bench_support as bs;
+use mqms::config::{self, SimConfig};
+use mqms::gpu::placement::Placement;
+use mqms::metrics::Report;
+use mqms::workloads::{synth::SynthPattern, WorkloadSpec};
+
+/// Canonical deterministic bytes of one report.
+fn bytes(r: &Report) -> String {
+    r.to_json_deterministic().pretty()
+}
+
+/// Run the drift bundle through `cfg` with an explicit engine thread count.
+fn drift_bytes(mut cfg: SimConfig, sim_threads: u32, seed: u64) -> String {
+    cfg.sim_threads = sim_threads;
+    bytes(&bs::run_bundle(cfg, &bs::drift_bundle(seed)))
+}
+
+#[test]
+fn threaded_runs_byte_identical_across_presets_devices_and_gpus() {
+    let base = |preset: &str, devices: u32, gpus: u32| {
+        let mut cfg = match preset {
+            "mqms" => config::mqms_enterprise(),
+            _ => config::baseline_mqsim_macsim(),
+        };
+        cfg.devices = devices;
+        cfg.gpus = gpus;
+        cfg.placement = Placement::PerfAware;
+        cfg.gpu.dram_bytes = 0;
+        cfg.seed = 42;
+        cfg
+    };
+    for preset in ["mqms", "baseline"] {
+        for devices in [1u32, 4] {
+            for gpus in [1u32, 2] {
+                let sequential = drift_bytes(base(preset, devices, gpus), 1, 42);
+                for threads in [2u32, 4, 8] {
+                    assert_eq!(
+                        sequential,
+                        drift_bytes(base(preset, devices, gpus), threads, 42),
+                        "{preset} x {devices}d x {gpus}g: sim-threads {threads} \
+                         must be byte-identical to sequential"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_runs_byte_identical_with_replace_on() {
+    // The drift bundle migrates under PerfAware + replace (see
+    // tests/replace.rs); the monitor, migration, and continuation machinery
+    // must all land at identical positions under the sharded engine.
+    for (gpus, devices) in [(2u32, 1u32), (2, 2), (4, 4)] {
+        let cfg = || bs::fault_cfg(gpus, devices, "none", true, bs::SEED);
+        let sequential = drift_bytes(cfg(), 1, bs::SEED);
+        for threads in [2u32, 4, 8] {
+            assert_eq!(
+                sequential,
+                drift_bytes(cfg(), threads, bs::SEED),
+                "replace-on {gpus}g x {devices}d: sim-threads {threads} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_runs_byte_identical_under_every_fault_scenario() {
+    // Timeouts shrink the lookahead horizon (cmd_timeout_ns joins the min)
+    // and dropout exercises loud Timeout/Fetch events, degraded routing,
+    // and forced failures — none of which may reorder under sharding.
+    for &scenario in config::FAULT_SCENARIO_NAMES.iter() {
+        let cfg = || bs::fault_cfg(2, 4, scenario, true, bs::SEED);
+        let sequential = drift_bytes(cfg(), 1, bs::SEED);
+        for threads in [2u32, 4] {
+            assert_eq!(
+                sequential,
+                drift_bytes(cfg(), threads, bs::SEED),
+                "{scenario}: sim-threads {threads} must be byte-identical to sequential"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_saturating_synth_stream_byte_identical() {
+    // Deep closed-loop queues maximize window density — the regime where
+    // the sharded engine actually pre-executes large batches per worker.
+    let run = |sim_threads: u32| {
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = 8;
+        cfg.seed = 7;
+        cfg.sim_threads = sim_threads;
+        bytes(&bs::run_bundle(
+            cfg,
+            &[WorkloadSpec::synthetic(
+                "rand4k",
+                SynthPattern::random_4k_write(5_000).with_queue_depth(64),
+            )],
+        ))
+    };
+    let sequential = run(1);
+    for threads in [2u32, 4, 8] {
+        assert_eq!(sequential, run(threads), "synth stream diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn sim_threads_survives_config_json_roundtrip() {
+    let mut cfg = config::mqms_enterprise();
+    cfg.sim_threads = 4;
+    let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(back.sim_threads, 4);
+    // The default stays sparse: no `sim_threads` key, parsed back as 1.
+    let plain = SimConfig::from_json(&config::mqms_enterprise().to_json()).unwrap();
+    assert_eq!(plain.sim_threads, 1);
+    // Zero is rejected at validation, not silently run.
+    let mut bad = config::mqms_enterprise();
+    bad.sim_threads = 0;
+    assert!(bad.validate().is_err());
+}
+
+/// The audit suite's dropout retry-storm (see
+/// `tests/audit.rs::dropout_retry_storm_conserves_ids_and_checks_degraded_routing`)
+/// rerun on the sharded engine: every invariant law must hold per shard and
+/// across merge barriers, with the same counters the sequential run reports.
+#[cfg(feature = "audit")]
+#[test]
+fn audited_dropout_retry_storm_passes_with_four_threads() {
+    use mqms::coordinator::CoSim;
+    let run = |sim_threads: u32| {
+        let mut cfg = config::mqms_enterprise();
+        cfg.devices = 2;
+        cfg.faults = config::fault_scenario("dropout", cfg.devices).expect("known scenario");
+        cfg.sim_threads = sim_threads;
+        let mut sim = CoSim::new(cfg);
+        sim.add_workload(WorkloadSpec::synthetic(
+            "rand4k",
+            SynthPattern::random_4k_write(20_000).with_queue_depth(32),
+        ));
+        let report = sim.run();
+        assert_eq!(report.misrouted, 0);
+        let w = sim.world();
+        assert!(w.failed > 0, "the fault path must actually be exercised");
+        let c = sim.world().audit_counters();
+        assert_eq!(c.ledger_submits, c.ledger_completes, "id conservation broken");
+        assert!(c.degraded > 0, "degraded-routing law never checked");
+        (bytes(&report), c.ledger_submits)
+    };
+    let (seq_bytes, seq_submits) = run(1);
+    let (par_bytes, par_submits) = run(4);
+    assert_eq!(seq_bytes, par_bytes, "audited threaded run diverged from sequential");
+    assert_eq!(seq_submits, par_submits, "audit counters must match across engines");
+}
