@@ -1,0 +1,86 @@
+//! §Perf — tracing overhead benchmark (PR 9).
+//!
+//! Runs the replace-on drift bundle twice — trace disabled, then trace
+//! enabled — and writes `BENCH_TRACE.json` with both event rates. In a
+//! build without the `trace` cargo feature the recorder must be a
+//! zero-sized type whose hooks compile out entirely: the two runs are then
+//! byte-identical, which this bench asserts. With the feature on, the
+//! traced run may only be modestly slower (loose noise band — the bench is
+//! a regression canary, not a microbenchmark).
+
+use mqms::bench_support as bs;
+use mqms::metrics::Report;
+use mqms::sim::trace::TraceRecorder;
+use mqms::util::jsonlite::Json;
+
+/// The recorder must compile out completely when the feature is off: the
+/// structs hosting it (devices, TSUs, GPU shards, the coordinator) are
+/// bit-for-bit what they were before the hooks landed.
+#[cfg(not(feature = "trace"))]
+fn assert_trace_compiles_out() {
+    assert_eq!(std::mem::size_of::<TraceRecorder>(), 0);
+    println!("trace feature off: the recorder is zero-sized (compiled out)");
+}
+
+fn run(trace: bool) -> Report {
+    let mut cfg = bs::fault_cfg(2, 4, "none", true, bs::SEED);
+    cfg.trace.enabled = trace;
+    bs::run_bundle(cfg, &bs::drift_bundle(bs::SEED))
+}
+
+fn rate(r: &Report) -> f64 {
+    if r.wall_s > 0.0 {
+        r.events as f64 / r.wall_s
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    #[cfg(not(feature = "trace"))]
+    assert_trace_compiles_out();
+
+    let off = run(false);
+    let on = run(true);
+    let (rate_off, rate_on) = (rate(&off), rate(&on));
+    let ratio = if rate_off > 0.0 { rate_on / rate_off } else { 0.0 };
+
+    println!("## §Perf — tracing overhead (drift bundle, 2g x 4d, replace on)");
+    println!("trace off: {} events, {:.0} events/sec", off.events, rate_off);
+    println!("trace on:  {} events, {:.0} events/sec", on.events, rate_on);
+    println!("on/off event-rate ratio: {ratio:.3}");
+
+    // Feature off: `cfg.trace.enabled` is inert — same events, same bytes.
+    #[cfg(not(feature = "trace"))]
+    {
+        assert_eq!(
+            off.to_json_deterministic().pretty(),
+            on.to_json_deterministic().pretty(),
+            "trace-off build must be byte-identical with trace.enabled set"
+        );
+        println!("trace feature off: enabled flag is inert (byte-identical runs)");
+    }
+
+    let report = Json::from_pairs(vec![
+        ("bench", "trace_overhead".into()),
+        ("feature_trace", cfg!(feature = "trace").into()),
+        ("recorder_bytes", (std::mem::size_of::<TraceRecorder>() as u64).into()),
+        ("events_trace_off", off.events.into()),
+        ("events_per_sec_trace_off", rate_off.into()),
+        ("events_trace_on", on.events.into()),
+        ("events_per_sec_trace_on", rate_on.into()),
+        ("event_rate_ratio", ratio.into()),
+    ]);
+    std::fs::write("BENCH_TRACE.json", report.pretty()).expect("writing BENCH_TRACE.json");
+    println!("wrote BENCH_TRACE.json");
+
+    // Canaries: real throughput in both modes, and tracing inside a very
+    // loose noise band (shared CI runners jitter hard — this only catches
+    // pathological slowdowns like an accidental hot-path allocation).
+    assert!(rate_off > 0.0, "zero event rate with trace off");
+    assert!(rate_on > 0.0, "zero event rate with trace on");
+    assert!(
+        ratio > 0.1,
+        "traced run is >10x slower than untraced ({ratio:.3}) — hot-path regression"
+    );
+}

@@ -69,6 +69,12 @@ pub struct CampaignSpec {
     pub sim_threads: u32,
     /// Allegro-sample trace workloads before replay (as `mqms run` does).
     pub sampled: bool,
+    /// Write per-cell trace files into this directory: `<label>.trace.json`
+    /// (Chrome trace-event JSON) and `<label>.timeseries.csv`, with `/` in
+    /// labels replaced by `_` so every file name is flat. Cells run with
+    /// [`config::TraceConfig::enabled`] set; in a build without the `trace`
+    /// cargo feature the recorder is a no-op ZST and no files are written.
+    pub trace_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for CampaignSpec {
@@ -89,6 +95,7 @@ impl Default for CampaignSpec {
             threads: 0,
             sim_threads: 1,
             sampled: true,
+            trace_dir: None,
         }
     }
 }
@@ -294,8 +301,27 @@ fn apply_rw_ratio(spec: &mut WorkloadSpec, ratio: f64) {
 /// inside the cell (1 = sequential); it never changes the report bytes, so
 /// callers comparing cells may mix values freely.
 pub fn run_cell(cell: &Cell, seed: u64, sampled: bool, sim_threads: u32) -> Result<Report, String> {
+    run_cell_traced(cell, seed, sampled, sim_threads, false).map(|(r, _)| r)
+}
+
+/// Like [`run_cell`], but `trace = true` additionally enables the cell's
+/// [`config::TraceConfig`] and returns the drained Chrome trace-event JSON
+/// plus time-series CSV alongside the report. The trace payload is `None`
+/// when tracing was not requested or the build lacks the `trace` cargo
+/// feature (the recorder is then a no-op ZST). Tracing never changes the
+/// report bytes: spans are recorded off the hot path at sim-time stamps.
+pub fn run_cell_traced(
+    cell: &Cell,
+    seed: u64,
+    sampled: bool,
+    sim_threads: u32,
+    trace: bool,
+) -> Result<(Report, Option<(Json, String)>), String> {
     let mut cfg = cell_config(cell, seed)?;
     cfg.sim_threads = sim_threads;
+    if trace {
+        cfg.trace.enabled = true;
+    }
     cfg.validate()?;
     let (mut wspec, _stats) =
         workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
@@ -304,7 +330,9 @@ pub fn run_cell(cell: &Cell, seed: u64, sampled: bool, sim_threads: u32) -> Resu
     }
     let mut sim = CoSim::new(cfg);
     sim.add_workload(wspec);
-    Ok(sim.run())
+    let report = sim.run();
+    let trace_out = if trace { sim.take_trace() } else { None };
+    Ok((report, trace_out))
 }
 
 fn effective_threads(requested: usize, cells: usize) -> usize {
@@ -399,6 +427,10 @@ pub fn run_streaming(
             ));
         }
     }
+    if let Some(dir) = &spec.trace_dir {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create trace dir {}: {e}", dir.display()))?;
+    }
     // Workers claim cells in cost order (expensive first); results land in
     // matrix-order slots, so the merged output is schedule-independent.
     let order = schedule_order(&cells);
@@ -417,7 +449,27 @@ pub fn run_streaming(
                     break;
                 }
                 let i = order[k];
-                let r = run_cell(&cells[i], spec.seed, spec.sampled, spec.sim_threads);
+                let r = run_cell_traced(
+                    &cells[i],
+                    spec.seed,
+                    spec.sampled,
+                    spec.sim_threads,
+                    spec.trace_dir.is_some(),
+                )
+                .and_then(|(report, trace)| {
+                    if let (Some(dir), Some((json, csv))) = (spec.trace_dir.as_ref(), trace) {
+                        // Labels are unique per cell (pinned by tests), so
+                        // per-cell trace files never collide.
+                        let stem = cells[i].label().replace('/', "_");
+                        let jp = dir.join(format!("{stem}.trace.json"));
+                        std::fs::write(&jp, json.pretty())
+                            .map_err(|e| format!("cannot write {}: {e}", jp.display()))?;
+                        let cp = dir.join(format!("{stem}.timeseries.csv"));
+                        std::fs::write(&cp, csv)
+                            .map_err(|e| format!("cannot write {}: {e}", cp.display()))?;
+                    }
+                    Ok(report)
+                });
                 *slots[i].lock().unwrap() = Some(r);
                 let mut st = stream.lock().unwrap();
                 while st.0 < cells.len() {
@@ -502,11 +554,20 @@ pub fn table_rows(results: &[(Cell, Report)]) -> Vec<(String, Vec<String>)> {
 pub const TABLE_HEADERS: [&str; 6] =
     ["cell", "IOPS", "mean resp", "end time", "completed", "clamps"];
 
+/// Comment line emitted (leading `#`) above [`CSV_HEADER`]: documents the
+/// quantile-merge caveat in-band so a CSV detached from this doc still
+/// carries it. Consumers must skip `#`-prefixed lines before parsing.
+pub const CSV_NOTE: &str = "# response quantile columns (read/write p50/p99) are exact for \
+devices=1 and worst-device upper bounds for merged multi-device summaries; \
+the quantile_merge column says which regime each row is in";
+
 /// Figure-ready CSV header: one [`csv_row`] per cell, axes first, then the
-/// headline metrics (makespan, device response p50/p99, events/sec).
+/// headline metrics (makespan, device response p50/p99, events/sec). The
+/// `quantile_merge` column is `exact` or `max-upper-bound` (see
+/// [`crate::metrics::SsdSummary::merge`] and [`CSV_NOTE`]).
 pub const CSV_HEADER: &str = "preset,workload,scale,devices,device_mix,gpus,placement,replace,\
 rw_ratio,op_ratio,faults,end_ns,gpu_makespan_ns,completed,iops,mean_response_ns,\
-read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,events_per_sec";
+read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,quantile_merge,events_per_sec";
 
 /// One CSV data row matching [`CSV_HEADER`]. Everything except
 /// `events_per_sec` (a host wall-clock rate) is deterministic for a fixed
@@ -514,7 +575,7 @@ read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,events_per_sec";
 /// identifiers or file paths); unswept rw/op axes print `-`. For
 /// multi-device cells the response quantile columns are worst-device upper
 /// bounds (see [`crate::metrics::SsdSummary::merge`]), exact for
-/// `devices = 1`.
+/// `devices = 1` — the `quantile_merge` column carries the regime per row.
 pub fn csv_row(cell: &Cell, r: &Report) -> String {
     let events_per_sec = if r.wall_s > 0.0 { r.events as f64 / r.wall_s } else { 0.0 };
     let opt = |v: Option<f64>| match v {
@@ -522,7 +583,7 @@ pub fn csv_row(cell: &Cell, r: &Report) -> String {
         None => "-".to_string(),
     };
     format!(
-        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{:.3}",
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{},{:.3}",
         cell.preset,
         cell.workload,
         cell.scale,
@@ -543,6 +604,7 @@ pub fn csv_row(cell: &Cell, r: &Report) -> String {
         r.ssd.read_p99_ns,
         r.ssd.write_p50_ns,
         r.ssd.write_p99_ns,
+        if r.ssd.merged_quantiles { "max-upper-bound" } else { "exact" },
         events_per_sec,
     )
 }
@@ -813,10 +875,17 @@ mod tests {
         for row in &rows {
             assert_eq!(row.split(',').count(), n_cols, "row arity: {row}");
         }
-        // Streamed rows describe the same reports the barrier returned.
+        // The in-band caveat is a comment (consumers skip `#` lines) and
+        // never collides with the header or a data row.
+        assert!(CSV_NOTE.starts_with('#'));
+        assert!(!CSV_HEADER.starts_with('#'));
+        // Streamed rows describe the same reports the barrier returned, and
+        // the quantile_merge column tracks the merge regime per cell.
         for (row, (cell, report)) in rows.iter().zip(&results) {
             assert_eq!(row, &csv_row(cell, report));
             assert!(row.starts_with(&format!("mqms,rand4k,0.001,{},", cell.devices)));
+            let expect = if cell.devices > 1 { ",max-upper-bound," } else { ",exact," };
+            assert!(row.contains(expect), "quantile_merge regime in: {row}");
         }
     }
 

@@ -515,6 +515,35 @@ impl ReplaceConfig {
     }
 }
 
+/// Sim-time tracing / telemetry configuration (`sim/trace.rs`). Off by
+/// default: with `enabled = false` no recorder is armed, no sampler events
+/// are scheduled, and a run is byte-identical to a build without the
+/// `trace` cargo feature (pinned by `tests/trace.rs`). Enabling it only
+/// takes effect in a `--features trace` build — the CLI rejects `--trace`
+/// otherwise rather than silently emitting nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Master switch for lifecycle spans and time-series sampling.
+    pub enabled: bool,
+    /// Time-series sampling period in simulated ns (per-device sampler
+    /// cadence, and the shard-row cadence when re-placement is off).
+    pub sample_ns: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { enabled: false, sample_ns: 250_000 }
+    }
+}
+
+impl TraceConfig {
+    fn validate(&self, errs: &mut Vec<String>) {
+        if self.enabled && self.sample_ns == 0 {
+            errs.push("trace.sample_ns must be ≥ 1 when trace.enabled".to_string());
+        }
+    }
+}
+
 /// One device's fault schedule inside a [`FaultPlan`]. All times are
 /// simulated ns; every mechanism is off at its default value, so a spec
 /// that only names a device injects nothing.
@@ -855,6 +884,9 @@ pub struct SimConfig {
     /// knob trades wall clock only and is deliberately excluded from
     /// fingerprints and reports except as a provenance field.
     pub sim_threads: u32,
+    /// Sim-time tracing / telemetry (requires the `trace` cargo feature to
+    /// take effect). Default = off, byte-identical runs.
+    pub trace: TraceConfig,
     pub ssd: SsdConfig,
     pub gpu: GpuConfig,
     pub path: PathConfig,
@@ -934,6 +966,7 @@ impl SimConfig {
         }
         self.replace.validate(&mut errs);
         self.faults.validate(&mut errs, self.devices);
+        self.trace.validate(&mut errs);
         if self.sim_threads == 0 {
             errs.push("sim_threads must be ≥ 1 (1 = sequential engine)".to_string());
         }
@@ -1074,6 +1107,18 @@ impl SimConfig {
             j.set("sim_threads", u64::from(self.sim_threads).into())
                 .expect("config json is an object");
         }
+        // Sparse: trace-off configs stay byte-identical on round-trip.
+        if self.trace != TraceConfig::default() {
+            let t = &self.trace;
+            j.set(
+                "trace",
+                Json::from_pairs(vec![
+                    ("enabled", t.enabled.into()),
+                    ("sample_ns", t.sample_ns.into()),
+                ]),
+            )
+            .expect("config json is an object");
+        }
         j
     }
 
@@ -1143,6 +1188,15 @@ impl SimConfig {
         if let Some(v) = j.get("sim_threads").and_then(Json::as_u64) {
             cfg.sim_threads =
                 u32::try_from(v).map_err(|_| format!("sim_threads out of range: {v}"))?;
+        }
+        if let Some(t) = j.get("trace") {
+            let c = &mut cfg.trace;
+            if let Some(v) = t.get("enabled").and_then(Json::as_bool) {
+                c.enabled = v;
+            }
+            if let Some(v) = t.get("sample_ns").and_then(Json::as_u64) {
+                c.sample_ns = v;
+            }
         }
         if let Some(s) = j.get("ssd") {
             let c = &mut cfg.ssd;

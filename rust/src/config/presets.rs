@@ -75,6 +75,7 @@ pub fn mqms_enterprise() -> SimConfig {
         replace: ReplaceConfig::default(),
         faults: FaultPlan::default(),
         sim_threads: 1,
+        trace: TraceConfig::default(),
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
         path: PathConfig {
@@ -110,6 +111,7 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         replace: ReplaceConfig::default(),
         faults: FaultPlan::default(),
         sim_threads: 1,
+        trace: TraceConfig::default(),
         ssd,
         gpu: default_gpu(),
         path: PathConfig {

@@ -13,7 +13,7 @@
 //!   processing latency.
 
 use crate::config::{IoPath, SimConfig};
-use crate::gpu::{self, placement, replace, GpuSim, TaggedGpuEvent};
+use crate::gpu::{self, monitor, placement, replace, GpuSim, TaggedGpuEvent};
 use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
 use crate::sim::audit;
 use crate::sim::sharded::{
@@ -21,6 +21,7 @@ use crate::sim::sharded::{
     StagedEvent,
 };
 use crate::sim::time::transfer_ns;
+use crate::sim::trace::{names, SampleRow, TraceRecorder, TraceSink, PID_COORD, PID_GPU_BASE};
 use crate::sim::{Engine, EventQueue, SimTime, World};
 use crate::ssd::nvme::{Completion, IoRequest, Opcode};
 use crate::ssd::{ArrayEvent, SsdArray, SsdEvent, SsdSim, StagedEffect};
@@ -28,6 +29,7 @@ use crate::workloads::{synth::SynthPattern, WorkloadKind, WorkloadSpec};
 use crate::gpu::trace::AccessKind;
 use crate::util::jsonlite::Json;
 use crate::util::rng::Pcg64;
+use crate::util::stats::LogHistogram;
 use std::collections::{BTreeMap, VecDeque};
 
 /// Unified co-simulation event alphabet.
@@ -175,6 +177,17 @@ pub struct CoWorld {
     /// Event-time monotonicity auditor over the world's event stream
     /// (no-op unless built with the `audit` feature).
     mono: audit::EventMonotonic,
+    /// Coordinator-side span recorder (retry / terminal-failure / migration
+    /// instants under [`PID_COORD`]); a zero-sized no-op unless tracing.
+    trace: TraceRecorder,
+    /// Per-device response-time histograms, fed only from completions the
+    /// coordinator has already delivered — never from live device internals
+    /// a shard worker could still be mutating. Empty (and never touched)
+    /// unless tracing or dynamic re-placement wants the observations.
+    dev_resp: Vec<LogHistogram>,
+    /// Trace-only monitor cadence: keeps the shard time-series sampled when
+    /// `replace` does not own the tick. 0 when unused.
+    trace_tick_ns: SimTime,
 }
 
 impl World for CoWorld {
@@ -396,15 +409,39 @@ impl CoWorld {
         if self.gpus.iter().all(GpuSim::all_done) {
             return;
         }
+        // Trace time-series: one shard row per compute shard per epoch.
+        if self.trace.is_enabled() {
+            for (g, gpu) in self.gpus.iter().enumerate() {
+                let mut row = SampleRow::shard(now, g as u32);
+                row.queued_kernels = (0..gpu.workload_count())
+                    .map(|s| {
+                        (gpu.workload_records(s).len() - gpu.workload_next_record(s)) as u64
+                    })
+                    .sum();
+                row.drift_permille =
+                    self.replace.as_ref().map_or(0, |e| e.drift_permille(g));
+                self.trace.sample(row);
+            }
+        }
+        let obs = self.device_obs();
         let plan = match self.replace.as_mut() {
             Some(eng) => {
                 // Device-health feed: with a dead device under the array the
                 // monitor drops to "any positive spread, one epoch" so queued
                 // kernel tails evacuate the degraded shards promptly.
                 eng.set_degraded(self.ssd.any_dead(now));
+                // Storage observations (worst-device response quantiles and
+                // queue depth) shape the trigger — see `Monitor::observe`.
+                eng.set_device_obs(obs);
                 eng.tick(now, &self.gpus)
             }
-            None => return,
+            None => {
+                // Trace-only cadence: keep sampling while compute runs.
+                if self.trace_tick_ns > 0 {
+                    q.schedule_in(self.trace_tick_ns, Ev::MonitorTick);
+                }
+                return;
+            }
         };
         if let Some(plan) = plan {
             if plan.from != plan.to {
@@ -412,6 +449,7 @@ impl CoWorld {
                     self.gpus[plan.from].extract_queued_tail(plan.slot, plan.kernels);
                 if let Some(work) = extracted {
                     let src = work.source as usize;
+                    self.trace.instant(now, plan.to as u32, src as u64, names::MIGRATION);
                     if let Some(eng) = self.replace.as_mut() {
                         eng.note_migrated_work(plan.from, plan.to, &work.records);
                     }
@@ -423,6 +461,28 @@ impl CoWorld {
         if let Some(eng) = &self.replace {
             q.schedule_in(eng.epoch_ns(), Ev::MonitorTick);
         }
+    }
+
+    /// Worst-device storage observations from coordinator-side accumulators:
+    /// response quantiles out of `dev_resp` (fed in [`CoWorld::after_ssd`])
+    /// and the submit-side NVMe queue-depth high-water. Reading the metrics
+    /// here is engine-invariant — submits run on the replay path, so their
+    /// high-water observes sequential occupancy under `--sim-threads` too.
+    fn device_obs(&self) -> monitor::DeviceObs {
+        let mut obs = monitor::DeviceObs::default();
+        for h in &self.dev_resp {
+            if h.count() == 0 {
+                continue;
+            }
+            obs.response_p50_ns = obs.response_p50_ns.max(h.p50());
+            obs.response_p99_ns = obs.response_p99_ns.max(h.p99());
+        }
+        if !self.dev_resp.is_empty() {
+            for d in self.ssd.devices() {
+                obs.queue_depth_hw = obs.queue_depth_hw.max(d.metrics.qd_highwater);
+            }
+        }
+        obs
     }
 
     /// Process SSD fallout: completions (credit per-source metrics, notify
@@ -438,6 +498,11 @@ impl CoWorld {
             let src = c.source as usize;
             if src < self.per_source.len() {
                 self.per_source[src].record(c.submit_ns, c.complete_ns);
+            }
+            if !self.dev_resp.is_empty() {
+                if let Some(h) = self.dev_resp.get_mut(c.device as usize) {
+                    h.record(c.complete_ns.saturating_sub(c.submit_ns));
+                }
             }
             if src >= self.gpu_sources {
                 // Synthetic-stream source; its ids must sit in the synth
@@ -551,6 +616,8 @@ impl CoWorld {
         };
         if attempts <= self.cfg.faults.max_retries {
             self.fault_retries += 1;
+            // tid carries the attempt number; matching is by (name, id).
+            self.trace.instant(now, attempts, c.id, names::REQ_RETRY);
             // The array restored the request's global lsn on failure, so the
             // retry re-stripes cleanly; the original submit timestamp rides
             // along so response time spans every attempt.
@@ -578,6 +645,7 @@ impl CoWorld {
     /// closed-loop and every GPU kernel unblocks; the loss itself is already
     /// counted in `failed`.
     fn finish_failed(&mut self, c: Completion, now: SimTime, q: &mut EventQueue<Ev>) {
+        self.trace.instant(now, 0, c.id, names::REQ_FAILED);
         let src = c.source as usize;
         if src >= self.gpu_sources {
             let stream = src - self.gpu_sources;
@@ -749,6 +817,9 @@ impl CoSim {
                 fault_attempts: BTreeMap::new(),
                 sq_rounds: BTreeMap::new(),
                 mono: audit::EventMonotonic::default(),
+                trace: TraceRecorder::default(),
+                dev_resp: Vec::new(),
+                trace_tick_ns: 0,
                 cfg,
             },
             engine: Engine::new(),
@@ -938,6 +1009,52 @@ impl CoSim {
                 .queue
                 .schedule_at(self.engine.queue.now(), Ev::SynthRefill { stream: i });
         }
+        // Tracing: enable the coordinator recorder first so the rest keys
+        // off `is_enabled()` — always false in a feature-off build, which
+        // dead-code-eliminates the block and keeps the event stream (and
+        // therefore every byte of output) identical to an untraced run.
+        if self.world.cfg.trace.enabled {
+            self.world.trace.enable(PID_COORD);
+        }
+        if self.world.trace.is_enabled() {
+            let sample_ns = self.world.cfg.trace.sample_ns;
+            self.world.ssd.enable_trace(sample_ns);
+            for (g, gpu) in self.world.gpus.iter_mut().enumerate() {
+                gpu.trace.enable(PID_GPU_BASE + g as u32);
+            }
+            // Replace-off runs still sample the per-shard time-series.
+            if self.world.replace.is_none() && !self.world.gpus.is_empty() {
+                self.world.trace_tick_ns = sample_ns;
+                self.engine.queue.schedule_in(sample_ns, Ev::MonitorTick);
+            }
+        }
+        // Storage observations feed the re-placement monitor (trace-off
+        // included) and the device response time-series.
+        if self.world.replace.is_some() || self.world.trace.is_enabled() {
+            self.world.dev_resp =
+                (0..self.world.cfg.devices).map(|_| LogHistogram::new()).collect();
+        }
+    }
+
+    /// Drain every component's trace buffers into one sorted sink and
+    /// render both export formats: the Chrome trace-event JSON and the
+    /// time-series CSV. `None` when tracing was off (or the `trace` feature
+    /// is compiled out). Call after the run; draining consumes the buffers.
+    pub fn take_trace(&mut self) -> Option<(Json, String)> {
+        if !self.world.trace.is_enabled() {
+            return None;
+        }
+        let mut sink = TraceSink::default();
+        // Fixed component concatenation order (array, then each device and
+        // its TSU, then GPU shards, then the coordinator) + the stable sort
+        // make cross-component ties engine-invariant.
+        self.world.ssd.drain_trace(&mut sink);
+        for gpu in &mut self.world.gpus {
+            gpu.trace.drain_into(&mut sink);
+        }
+        self.world.trace.drain_into(&mut sink);
+        sink.sort();
+        Some((sink.chrome_json(), sink.timeseries_csv()))
     }
 
     fn report(&self, end_ns: SimTime, events: u64, wall_s: f64) -> Report {
@@ -974,6 +1091,8 @@ impl CoSim {
                     end_ns: end,
                     predicted_end_ns: predicted,
                     kernels_done: kernels,
+                    response_p50_ns: acc.resp_hist.p50(),
+                    response_p99_ns: acc.resp_hist.p99(),
                 }
             })
             .collect();
@@ -1023,6 +1142,7 @@ impl CoSim {
             gpus: w.gpus.iter().map(GpuSim::report).collect(),
             replacement: w.replace.as_ref().map(replace::ReplaceEngine::report_json),
             faults,
+            profile: self.sharded.as_ref().map(|e| e.profile().to_json()),
         }
     }
 }

@@ -28,6 +28,9 @@ pub mod sched;
 pub mod trace;
 
 use crate::config::GpuConfig;
+// Aliased import: `trace` below is this module's *kernel-trace* input format,
+// while `span` is the sim-time tracing recorder's event-name table.
+use crate::sim::trace::{names as span, TraceRecorder};
 use crate::sim::{audit, EventQueue, SimTime};
 use crate::ssd::nvme::{IoRequest, Opcode};
 use crate::util::jsonlite::Json;
@@ -164,6 +167,9 @@ pub struct GpuSim {
     pub kernels_launched: u64,
     /// Set when compute is idle but the retirement pipeline is full.
     pipeline_blocked_since: Option<SimTime>,
+    /// Sim-time span recorder (zero-sized no-op unless the `trace` feature
+    /// is on and the coordinator enabled it with this shard's pid).
+    pub trace: TraceRecorder,
 }
 
 impl GpuSim {
@@ -187,6 +193,7 @@ impl GpuSim {
             io_stall_ns: 0,
             kernels_launched: 0,
             pipeline_blocked_since: None,
+            trace: TraceRecorder::default(),
         }
     }
 
@@ -323,6 +330,7 @@ impl GpuSim {
                     // Compute finished; the kernel retires when its I/O does.
                     let kseq = run.kseq;
                     self.running = None;
+                    self.trace.end(now, 0, kseq, span::KERNEL_COMPUTE);
                     // lint:allow(unwrap): the running kernel was inserted into inflight at launch
                     self.inflight.get_mut(&kseq).unwrap().compute_done = true;
                     self.maybe_retire(kseq, now, q);
@@ -346,11 +354,15 @@ impl GpuSim {
         if self.inflight.len() >= self.cfg.pipeline_depth.max(1) as usize {
             if self.pipeline_blocked_since.is_none() {
                 self.pipeline_blocked_since = Some(now);
+                // Span id = stall start time: unique per stall (a new stall
+                // can only begin after the previous one ended).
+                self.trace.begin(now, 0, now, span::GPU_IO_STALL);
             }
             return;
         }
         if let Some(t0) = self.pipeline_blocked_since.take() {
             self.io_stall_ns += now.saturating_sub(t0);
+            self.trace.end(now, 0, t0, span::GPU_IO_STALL);
         }
         let ready: Vec<bool> = self.workloads.iter().map(|w| !w.done()).collect();
         let next_blocks: Vec<u32> = self
@@ -370,6 +382,8 @@ impl GpuSim {
         let waves = (rec.grid + wave_blocks - 1) / wave_blocks;
         self.kernel_seq += 1;
         let kseq = self.kernel_seq;
+        self.trace.begin(now, wid as u32, kseq, span::KERNEL);
+        self.trace.begin(now, 0, kseq, span::KERNEL_COMPUTE);
         self.inflight.insert(
             kseq,
             KernelInflight {
@@ -496,6 +510,7 @@ impl GpuSim {
         }
         // lint:allow(unwrap): indexed just above — the entry exists
         let k = self.inflight.remove(&kseq).unwrap();
+        self.trace.end(now, k.workload as u32, kseq, span::KERNEL);
         let w = &mut self.workloads[k.workload];
         let duration = now - k.launched_ns;
         let weight = w.trace.records[k.record].weight;

@@ -64,6 +64,21 @@ pub struct Imbalance {
     pub ahead: usize,
 }
 
+/// Observed storage-side health for one epoch, aggregated by the
+/// coordinator from completions it has already delivered (never from live
+/// device internals a shard worker might still be mutating). The zero
+/// default reads as "no signal" and leaves the trigger exactly as it was
+/// before these observations existed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceObs {
+    /// Worst per-device response-time median so far, ns.
+    pub response_p50_ns: u64,
+    /// Worst per-device response-time p99 so far, ns.
+    pub response_p99_ns: u64,
+    /// Worst per-device NVMe queue-depth high-water so far.
+    pub queue_depth_hw: u64,
+}
+
 #[derive(Debug, Clone, Copy)]
 struct ShardState {
     /// Admission-time predicted end (ns); the drift denominator.
@@ -89,6 +104,12 @@ pub struct Monitor {
     /// spread triggers on the next epoch — waiting out the normal threshold
     /// and hysteresis would leave kernel tails parked behind a dead device.
     degraded: bool,
+    /// Latest storage-side observations (see [`DeviceObs`]); zero until the
+    /// coordinator feeds them.
+    device_obs: DeviceObs,
+    /// Epochs whose observations read as storage congestion (heavy response
+    /// tail while the queues ran deep).
+    tail_heavy_epochs: u64,
     /// Positive shard drift per epoch, in permille (observability).
     drift_hist: LogHistogram,
 }
@@ -119,8 +140,24 @@ impl Monitor {
             over: 0,
             epochs: 0,
             degraded: false,
+            device_obs: DeviceObs::default(),
+            tail_heavy_epochs: 0,
             drift_hist: LogHistogram::new(),
         }
+    }
+
+    /// Feed the latest storage-side observations. The monitor treats a heavy
+    /// response tail (p99 > 8×p50) with meaningfully deep queues as storage
+    /// congestion and halves the drift threshold for subsequent epochs, so
+    /// queued work evacuates sooner from shards stuck behind a congested
+    /// device. All-zero observations (the default) change nothing.
+    pub fn set_device_obs(&mut self, obs: DeviceObs) {
+        self.device_obs = obs;
+    }
+
+    /// Epochs whose observations read as storage congestion.
+    pub fn tail_heavy_epochs(&self) -> u64 {
+        self.tail_heavy_epochs
     }
 
     /// Enter (or leave) degraded mode: with a dead device behind some shard,
@@ -165,6 +202,15 @@ impl Monitor {
     pub fn observe(&mut self, now: SimTime, samples: &[ShardSample]) -> Option<Imbalance> {
         debug_assert_eq!(samples.len(), self.shards.len());
         self.epochs += 1;
+        // Storage congestion per the fed observations: a response tail more
+        // than 8× the median while the NVMe queues have run deep. With no
+        // observations fed (all zero) this is always false.
+        let tail_heavy = self.device_obs.response_p50_ns > 0
+            && self.device_obs.response_p99_ns > 8 * self.device_obs.response_p50_ns
+            && self.device_obs.queue_depth_hw > 1;
+        if tail_heavy {
+            self.tail_heavy_epochs += 1;
+        }
         let dt = now.saturating_sub(self.last_tick_ns).max(1) as f64;
         self.last_tick_ns = now;
         let a = self.cfg.ewma_alpha;
@@ -225,7 +271,13 @@ impl Monitor {
             return None;
         }
         let spread = self.shards[behind].drift_ewma - self.shards[ahead].drift_ewma;
-        let threshold = if self.degraded { 0.0 } else { self.cfg.drift_threshold };
+        let threshold = if self.degraded {
+            0.0
+        } else if tail_heavy {
+            self.cfg.drift_threshold * 0.5
+        } else {
+            self.cfg.drift_threshold
+        };
         let hysteresis = if self.degraded { 1 } else { self.cfg.hysteresis };
         if spread <= threshold {
             self.over = 0;
@@ -367,6 +419,41 @@ mod tests {
         };
         assert_eq!(run(false), None, "mild skew must stay under the threshold");
         assert!(run(true).is_some(), "degraded mode must evacuate on mild skew");
+    }
+
+    #[test]
+    fn tail_heavy_storage_halves_the_threshold() {
+        // Shard 0 retires at 0.7× plan → EWMA drift converges to ~0.43,
+        // under the 0.5 threshold but over the halved 0.25.
+        let run = |obs: Option<DeviceObs>| {
+            let mut m = Monitor::new(cfg(), vec![10_000.0, 10_000.0]);
+            if let Some(o) = obs {
+                m.set_device_obs(o);
+            }
+            let mut fired = None;
+            for e in 1..=20u64 {
+                let s = [
+                    sample(e as f64 * 700.0, 10_000.0 - e as f64 * 700.0, 8),
+                    sample(e as f64 * 1_000.0, (10_000.0 - e as f64 * 1_000.0).max(0.0), 8),
+                ];
+                if m.observe(e * 1_000, &s).is_some() {
+                    fired = Some(e);
+                    break;
+                }
+            }
+            (fired, m.tail_heavy_epochs())
+        };
+        let (quiet, n0) = run(None);
+        assert_eq!(quiet, None, "~0.43 drift spread must stay under the full threshold");
+        assert_eq!(n0, 0);
+        let heavy =
+            DeviceObs { response_p50_ns: 1_000, response_p99_ns: 10_000, queue_depth_hw: 8 };
+        let (fired, n1) = run(Some(heavy));
+        assert!(fired.is_some(), "congested storage must migrate sooner");
+        assert!(n1 > 0);
+        // A tail under 8× the median is not congestion.
+        let mild = DeviceObs { response_p50_ns: 1_000, response_p99_ns: 4_000, queue_depth_hw: 8 };
+        assert_eq!(run(Some(mild)).0, None);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! triggers converge geometrically instead of ping-ponging the entire
 //! backlog between shards; the config's `max_migrations` caps the total.
 
-use super::monitor::{Monitor, MonitorCfg, ShardSample};
+use super::monitor::{DeviceObs, Monitor, MonitorCfg, ShardSample};
 use super::placement::PlacementCtx;
 use super::trace::KernelRecord;
 use super::GpuSim;
@@ -114,6 +114,19 @@ impl ReplaceEngine {
         self.monitor.set_degraded(degraded);
     }
 
+    /// Feed storage-side observations (worst per-device response p50/p99 and
+    /// queue-depth high-water) into the trigger — see
+    /// [`Monitor::set_device_obs`]. Zero observations change nothing.
+    pub fn set_device_obs(&mut self, obs: DeviceObs) {
+        self.monitor.set_device_obs(obs);
+    }
+
+    /// Smoothed drift of shard `g` in signed permille (the trace
+    /// time-series' `drift_permille` column).
+    pub fn drift_permille(&self, g: usize) -> i64 {
+        (self.monitor.drift(g) * 1000.0) as i64
+    }
+
     /// Refresh the cached cost prefixes for every slot of every shard.
     /// Record contents never change in place — only a slot's record *count*
     /// changes (tail extraction) or a new slot appears (injection) — so
@@ -196,7 +209,7 @@ impl ReplaceEngine {
     /// counters plus the drift histogram's summary quantiles (permille).
     pub fn report_json(&self) -> Json {
         let h = self.monitor.drift_hist();
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("epochs", self.monitor.epochs().into()),
             ("migrations", self.migrations.into()),
             ("migrated_kernels", self.migrated_kernels.into()),
@@ -204,7 +217,13 @@ impl ReplaceEngine {
             ("drift_p99_permille", h.p99().into()),
             ("drift_max_permille", h.max_seen().into()),
             ("drift_samples", h.count().into()),
-        ])
+        ]);
+        // Sparse: only runs whose observations ever read as storage
+        // congestion grow the key, so prior reports keep their byte shape.
+        if self.monitor.tail_heavy_epochs() > 0 {
+            let _ = j.set("tail_heavy_epochs", self.monitor.tail_heavy_epochs().into());
+        }
+        j
     }
 }
 

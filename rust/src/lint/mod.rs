@@ -17,7 +17,7 @@
 //! | `hash-iter` | all of `src` | iteration over `HashMap`/`HashSet` |
 //! | `unwrap` | `coordinator` `ssd` `gpu` | `.unwrap()` / `.expect(` in hot paths |
 //! | `float-eq` | priced paths (`placement` `monitor` `replace` `campaign`) | `==`/`!=` against float literals |
-//! | `structure` | whole tree | unregistered benches, stale `mod` decls, orphan files, dead doc cross-refs |
+//! | `structure` | whole tree | unregistered benches, stale `mod` decls, orphan files, dead doc cross-refs, trace event-name table |
 //! | `allow-marker` | all of `src` | malformed or unused suppression markers |
 //!
 //! All line rules skip test code: everything at or below the first
@@ -723,6 +723,72 @@ fn looks_like_repo_path(tok: &str) -> bool {
         && [".rs", ".toml", ".md", ".yml"].iter().any(|e| tok.ends_with(e))
 }
 
+/// Trace event-name constants (the `names` module of `sim/trace.rs`) must
+/// be unique and snake_case: Perfetto groups spans by exact name string, so
+/// a duplicate silently merges two span kinds, and a stray case or space
+/// breaks the pinned Chrome-trace schema shape.
+fn check_trace_names(root: &Path, out: &mut Vec<Diagnostic>) -> Result<(), String> {
+    let relp = "rust/src/sim/trace.rs";
+    let p = root.join(relp);
+    if !p.exists() {
+        return Ok(()); // fixture trees without the sim layer
+    }
+    out.extend(trace_name_diags(relp, &read_to_string(&p)?));
+    Ok(())
+}
+
+/// Harvest `pub const NAME: &str = "value";` lines inside `pub mod names`
+/// and flag duplicate or non-snake_case values. Split out from
+/// [`check_trace_names`] so fixture tests can drive it on string input.
+fn trace_name_diags(path: &str, content: &str) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut in_names = false;
+    let mut depth: usize = 0;
+    let mut seen: Vec<String> = Vec::new();
+    for (i, raw) in content.lines().enumerate() {
+        let t = raw.trim();
+        if !in_names {
+            if t.starts_with("pub mod names") {
+                in_names = true;
+                depth = raw.matches('{').count();
+            }
+            continue;
+        }
+        depth += raw.matches('{').count();
+        depth = depth.saturating_sub(raw.matches('}').count());
+        if depth == 0 {
+            break; // end of the names module
+        }
+        // Only `&str` constants carry event names (`ALL` is `&[&str]`).
+        let Some(rest) = t.strip_prefix("pub const ") else { continue };
+        let Some((_, tail)) = rest.split_once(": &str = \"") else { continue };
+        let Some((value, _)) = tail.split_once('"') else { continue };
+        let snake = value.as_bytes().first().is_some_and(u8::is_ascii_lowercase)
+            && value.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+        if !snake {
+            out.push(Diagnostic {
+                path: path.to_string(),
+                line: i + 1,
+                rule: Rule::Structure,
+                message: format!("trace event name `{value}` is not snake_case"),
+            });
+        }
+        if seen.contains(&value.to_string()) {
+            out.push(Diagnostic {
+                path: path.to_string(),
+                line: i + 1,
+                rule: Rule::Structure,
+                message: format!(
+                    "duplicate trace event name `{value}`: Perfetto would merge two span kinds"
+                ),
+            });
+        } else {
+            seen.push(value.to_string());
+        }
+    }
+    out
+}
+
 // ---------------------------------------------------------------------------
 // Tree driver
 // ---------------------------------------------------------------------------
@@ -742,6 +808,7 @@ pub fn lint_tree(root: &Path) -> Result<Vec<Diagnostic>, String> {
     check_bench_registration(root, &mut out)?;
     check_module_graph(root, &mut out)?;
     check_doc_refs(root, &mut out)?;
+    check_trace_names(root, &mut out)?;
     out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
     Ok(out)
 }
@@ -862,6 +929,25 @@ mod tests {
         let d = lint_source("rust/src/ssd/mod.rs", src);
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].rule, Rule::AllowMarker);
+    }
+
+    #[test]
+    fn trace_event_names_must_be_unique_and_snake_case() {
+        let good = "pub mod names {\n    pub const A: &str = \"a_one\";\n    \
+                    pub const B: &str = \"b_two2\";\n    \
+                    pub const ALL: &[&str] = &[A, B];\n}\n";
+        assert!(trace_name_diags("rust/src/sim/trace.rs", good).is_empty());
+        let dup = "pub mod names {\n    pub const A: &str = \"same\";\n    \
+                   pub const B: &str = \"same\";\n}\n";
+        let d = trace_name_diags("rust/src/sim/trace.rs", dup);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, Rule::Structure);
+        assert!(d[0].message.contains("duplicate"), "{}", d[0].message);
+        let camel = "pub mod names {\n    pub const A: &str = \"CamelCase\";\n}\n";
+        assert!(!trace_name_diags("rust/src/sim/trace.rs", camel).is_empty());
+        // Constants outside the names module (CSV headers etc.) are exempt.
+        let outside = "pub const HEADER: &str = \"Not,Snake\";\npub mod names {\n}\n";
+        assert!(trace_name_diags("rust/src/sim/trace.rs", outside).is_empty());
     }
 
     #[test]

@@ -29,6 +29,8 @@
 //! mqms campaign --workloads rand4k --devices 2 --faults none,dropout --csv out.csv
 //! mqms run --workload rand4k --devices 2 --faults dropout --json
 //! mqms run --workload rand4k --devices 8 --sim-threads 4
+//! mqms run --workload bert --trace /tmp/bert.trace.json       (needs --features trace)
+//! mqms campaign --workloads rand4k --trace-dir /tmp/traces    (needs --features trace)
 //! mqms sweep --scale 0.005
 //! mqms trace --workload gpt2 --scale 0.001 --out /tmp/gpt2.mqmt
 //! mqms sample --in /tmp/gpt2.mqmt --out /tmp/gpt2.sampled.mqmt
@@ -175,6 +177,12 @@ fn cmd_run(argv: &[String]) -> CliResult {
             None,
             "event-engine worker threads (1 = sequential; N ≥ 2 shards the run, same output)",
         )
+        .opt(
+            "trace",
+            None,
+            "write a Chrome trace-event JSON here, plus <stem>.timeseries.csv \
+             (requires a build with the `trace` cargo feature)",
+        )
         .flag("no-sample", "replay the full trace (skip Allegro sampling)")
         .flag("json", "print the full JSON report");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
@@ -234,6 +242,14 @@ fn cmd_run(argv: &[String]) -> CliResult {
         cfg.sim_threads =
             u32::try_from(v).map_err(|_| format!("sim-threads out of range: {v}"))?;
     }
+    if args.get("trace").is_some() {
+        if !cfg!(feature = "trace") {
+            return Err("--trace requires a build with the `trace` cargo feature \
+                        (e.g. cargo build --release --features trace)"
+                .to_string());
+        }
+        cfg.trace.enabled = true;
+    }
     cfg.validate()?;
     let scale = args.get_f64("scale").map_err(|e| e.to_string())?;
     let sampled = !args.get_flag("no-sample");
@@ -260,6 +276,15 @@ fn cmd_run(argv: &[String]) -> CliResult {
         sim.add_workload(wspec);
     }
     let report = sim.run();
+    if let Some(path) = args.get("trace") {
+        let (json, csv) = sim
+            .take_trace()
+            .ok_or("trace recorder inactive despite --trace (feature-gating bug)")?;
+        std::fs::write(path, json.pretty()).map_err(|e| format!("writing {path}: {e}"))?;
+        let csv_path = format!("{}.timeseries.csv", path.trim_end_matches(".json"));
+        std::fs::write(&csv_path, csv).map_err(|e| format!("writing {csv_path}: {e}"))?;
+        eprintln!("# wrote {path} + {csv_path}");
+    }
     if args.get_flag("json") {
         println!("{}", report.to_json().pretty());
     } else {
@@ -465,6 +490,12 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     )
     .opt("out-dir", None, "write one JSON report per cell plus campaign.json here")
     .opt("csv", None, "stream figure-ready CSV rows here as cells complete")
+    .opt(
+        "trace-dir",
+        None,
+        "write per-cell <label>.trace.json + <label>.timeseries.csv here \
+         (requires a build with the `trace` cargo feature)",
+    )
     .flag("no-sample", "replay full traces (skip Allegro sampling)")
     .flag("json", "print the merged campaign JSON instead of the table");
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
@@ -512,6 +543,17 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
             u32::try_from(v).map_err(|_| format!("sim-threads out of range: {v}"))?
         },
         sampled: !args.get_flag("no-sample"),
+        trace_dir: match args.get("trace-dir") {
+            Some(d) => {
+                if !cfg!(feature = "trace") {
+                    return Err("--trace-dir requires a build with the `trace` cargo \
+                                feature (e.g. cargo build --release --features trace)"
+                        .to_string());
+                }
+                Some(std::path::PathBuf::from(d))
+            }
+            None => None,
+        },
     };
     let n_cells = campaign::expand(&cspec).len();
     eprintln!(
@@ -525,6 +567,9 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         Some(path) => {
             let mut f = std::fs::File::create(path)
                 .map_err(|e| format!("creating {path}: {e}"))?;
+            // The quantile-merge caveat rides in-band as a `#` comment so a
+            // detached CSV still carries it; parsers skip `#` lines.
+            writeln!(f, "{}", campaign::CSV_NOTE).map_err(|e| format!("writing {path}: {e}"))?;
             writeln!(f, "{}", campaign::CSV_HEADER).map_err(|e| format!("writing {path}: {e}"))?;
             Some((path.to_string(), f))
         }

@@ -2,7 +2,7 @@
 
 use crate::sim::SimTime;
 use crate::util::jsonlite::Json;
-use crate::util::stats::Running;
+use crate::util::stats::{LogHistogram, Running};
 
 /// SSD-side scalar summary extracted from [`crate::ssd::metrics::SsdMetrics`]
 /// — one per device of the striped array, plus a merged aggregate.
@@ -21,6 +21,10 @@ pub struct SsdSummary {
     pub flash_programs: u64,
     pub multiplane_batches: u64,
     pub write_stalls: u64,
+    /// NVMe queue-depth high-water mark (queued + outstanding at submit
+    /// time). Merged summaries take the worst device. Sparse in the JSON:
+    /// the key is absent while zero, so idle-device reports don't change.
+    pub queue_depth_hw: u64,
     /// Active window (first submit, last completion) — kept so multi-device
     /// summaries can be merged into a correct aggregate IOPS.
     pub first_submit_ns: Option<SimTime>,
@@ -54,6 +58,7 @@ impl SsdSummary {
             flash_programs: ssd.tsu.flash_programs,
             multiplane_batches: ssd.tsu.multiplane_batches,
             write_stalls: ssd.metrics.write_stalls,
+            queue_depth_hw: ssd.metrics.qd_highwater,
             first_submit_ns: ssd.metrics.first_submit_ns,
             last_complete_ns: ssd.metrics.last_complete_ns,
             merged_quantiles: false,
@@ -89,6 +94,7 @@ impl SsdSummary {
             m.flash_programs += p.flash_programs;
             m.multiplane_batches += p.multiplane_batches;
             m.write_stalls += p.write_stalls;
+            m.queue_depth_hw = m.queue_depth_hw.max(p.queue_depth_hw);
             m.read_p50_ns = m.read_p50_ns.max(p.read_p50_ns);
             m.write_p50_ns = m.write_p50_ns.max(p.write_p50_ns);
             m.read_p99_ns = m.read_p99_ns.max(p.read_p99_ns);
@@ -130,6 +136,10 @@ impl SsdSummary {
             ("first_submit_ns", self.first_submit_ns.map(Json::from).unwrap_or(Json::Null)),
             ("last_complete_ns", self.last_complete_ns.into()),
         ];
+        // Sparse: absent while zero, so idle-device reports don't change.
+        if self.queue_depth_hw > 0 {
+            pairs.push(("queue_depth_hw", self.queue_depth_hw.into()));
+        }
         // Only merged summaries carry the note, so single-device reports
         // (where the quantiles are exact) stay byte-identical.
         if self.merged_quantiles {
@@ -154,11 +164,16 @@ pub struct WorkloadReport {
     /// Allegro-extrapolated full-trace end time (Σ weight × duration).
     pub predicted_end_ns: f64,
     pub kernels_done: u64,
+    /// Per-source response quantiles (histogram-exact, not bounds). Sparse
+    /// in the JSON: absent while zero, so sources with no completions keep
+    /// their report rows byte-identical.
+    pub response_p50_ns: u64,
+    pub response_p99_ns: u64,
 }
 
 impl WorkloadReport {
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut pairs = vec![
             ("name", self.name.as_str().into()),
             ("io_completed", self.io_completed.into()),
             ("iops", self.iops.into()),
@@ -166,7 +181,14 @@ impl WorkloadReport {
             ("end_ns", self.end_ns.into()),
             ("predicted_end_ns", self.predicted_end_ns.into()),
             ("kernels_done", self.kernels_done.into()),
-        ])
+        ];
+        if self.response_p50_ns > 0 {
+            pairs.push(("response_p50_ns", self.response_p50_ns.into()));
+        }
+        if self.response_p99_ns > 0 {
+            pairs.push(("response_p99_ns", self.response_p99_ns.into()));
+        }
+        Json::from_pairs(pairs)
     }
 }
 
@@ -175,6 +197,8 @@ impl WorkloadReport {
 pub struct PerSourceAcc {
     pub completed: u64,
     pub response: Running,
+    /// Response-time histogram — per-source p50/p99 for the report rows.
+    pub resp_hist: LogHistogram,
     pub first_submit_ns: Option<SimTime>,
     pub last_complete_ns: SimTime,
 }
@@ -182,7 +206,9 @@ pub struct PerSourceAcc {
 impl PerSourceAcc {
     pub fn record(&mut self, submit_ns: SimTime, complete_ns: SimTime) {
         self.completed += 1;
-        self.response.push(complete_ns.saturating_sub(submit_ns) as f64);
+        let resp = complete_ns.saturating_sub(submit_ns);
+        self.response.push(resp as f64);
+        self.resp_hist.record(resp);
         if self.first_submit_ns.is_none() {
             self.first_submit_ns = Some(submit_ns);
         }
@@ -237,6 +263,12 @@ pub struct Report {
     /// `None` when no fault plan is configured and no anomaly was counted,
     /// so fault-free reports stay byte-identical.
     pub faults: Option<Json>,
+    /// Parallel-engine profiling section ([`crate::sim::EngineProfile`]):
+    /// per-barrier-round counters from the sharded engine. `None` on
+    /// sequential runs, and always dropped from the deterministic view —
+    /// window shapes depend on `--sim-threads`, which must not perturb
+    /// byte-identity comparisons.
+    pub profile: Option<Json>,
 }
 
 impl Report {
@@ -266,16 +298,21 @@ impl Report {
         if let Some(f) = &self.faults {
             pairs.push(("faults", f.clone()));
         }
+        if let Some(p) = &self.profile {
+            pairs.push(("profile", p.clone()));
+        }
         Json::from_pairs(pairs)
     }
 
-    /// Deterministic JSON view: everything except host wall-clock time, for
-    /// byte-identical comparison across runs and campaign thread counts.
+    /// Deterministic JSON view: everything except host wall-clock time and
+    /// the engine profile (whose window shapes depend on `--sim-threads`),
+    /// for byte-identical comparison across runs and engine thread counts.
     pub fn to_json_deterministic(&self) -> Json {
         let j = self.to_json();
         match j {
             Json::Obj(mut o) => {
                 o.remove("wall_s");
+                o.remove("profile");
                 Json::Obj(o)
             }
             other => other,
@@ -375,6 +412,8 @@ mod tests {
                 end_ns: 10,
                 predicted_end_ns: 100.0,
                 kernels_done: 3,
+                response_p50_ns: 0,
+                response_p99_ns: 0,
             }],
             end_ns: 42,
             events: 7,
@@ -384,6 +423,7 @@ mod tests {
             gpus: Vec::new(),
             replacement: None,
             faults: None,
+            profile: None,
         };
         let j = r.to_json();
         assert_eq!(j.get("end_ns").unwrap().as_u64(), Some(42));
@@ -414,5 +454,12 @@ mod tests {
             wj.get("replacement").unwrap().get("migrations").unwrap().as_u64(),
             Some(3)
         );
+        // The engine profile is sparse and never part of the deterministic
+        // view (window shapes depend on --sim-threads).
+        assert!(j.get("profile").is_none());
+        let mut prof = r.clone();
+        prof.profile = Some(Json::from_pairs(vec![("windows", 1u64.into())]));
+        assert!(prof.to_json().get("profile").is_some());
+        assert!(prof.to_json_deterministic().get("profile").is_none());
     }
 }

@@ -10,8 +10,9 @@ pub mod engine;
 pub mod events;
 pub mod sharded;
 pub mod time;
+pub mod trace;
 
 pub use engine::{Engine, World};
 pub use events::EventQueue;
-pub use sharded::{ShardWorld, ShardedEngine};
+pub use sharded::{EngineProfile, ShardWorld, ShardedEngine};
 pub use time::{SimTime, MICROS, MILLIS, SECS};

@@ -222,6 +222,54 @@ impl<W: ShardWorld> Drop for WorkerPool<W> {
 /// more than it saves: the window is dispatched sequentially instead.
 const MIN_PARALLEL: usize = 16;
 
+/// Per-run counters of the sharded engine's behaviour: how much work the
+/// workers pre-executed vs what the merge replayed live, and where the
+/// lookahead collapsed to sequential stepping. Every field is a
+/// deterministic function of the event stream and the lookahead horizon —
+/// classification and windowing do not depend on the thread count — so the
+/// profile is identical for any `--sim-threads N ≥ 2` of the same run. It
+/// feeds the report's sparse `profile` section (dropped from
+/// `to_json_deterministic`, like `wall_s`) so `--sim-threads` speedups are
+/// diagnosable without breaking byte-identity oracles.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EngineProfile {
+    /// Conservative lookahead horizon the run used, ns.
+    pub lookahead_ns: SimTime,
+    /// Lookahead windows examined (parallel + fallback).
+    pub windows: u64,
+    /// Windows dense enough to ship to the worker pool.
+    pub parallel_windows: u64,
+    /// Windows below the density threshold, stepped sequentially.
+    pub sequential_fallbacks: u64,
+    /// Events stepped under a degenerate (zero) lookahead.
+    pub degenerate_steps: u64,
+    /// Events stepped inside sequential-fallback windows.
+    pub fallback_events: u64,
+    /// Worker-pre-executed events committed by the merge replay.
+    pub pre_executed: u64,
+    /// Live (loud / newly scheduled) events dispatched by the merge.
+    pub live_merged: u64,
+    /// Largest pre-executable cohort any single window offered.
+    pub eligible_max: u64,
+}
+
+impl EngineProfile {
+    /// The profile as a JSON object (the report's `profile` section).
+    pub fn to_json(&self) -> crate::util::jsonlite::Json {
+        crate::util::jsonlite::Json::from_pairs(vec![
+            ("lookahead_ns", self.lookahead_ns.into()),
+            ("windows", self.windows.into()),
+            ("parallel_windows", self.parallel_windows.into()),
+            ("sequential_fallbacks", self.sequential_fallbacks.into()),
+            ("degenerate_steps", self.degenerate_steps.into()),
+            ("fallback_events", self.fallback_events.into()),
+            ("pre_executed", self.pre_executed.into()),
+            ("live_merged", self.live_merged.into()),
+            ("eligible_max", self.eligible_max.into()),
+        ])
+    }
+}
+
 /// The conservative parallel engine. Opt-in and fully interchangeable with
 /// the sequential [`Engine`](super::engine::Engine): given the same queue
 /// and world it produces the identical event stream, statistics, and final
@@ -245,6 +293,8 @@ where
     ghosts: Vec<VecDeque<StagedEvent<W>>>,
     /// Per-shard follow-up token → committed `(at, seq)` position.
     tokens: Vec<BTreeMap<u64, (SimTime, u64)>>,
+    /// Cumulative behaviour counters (see [`EngineProfile`]).
+    profile: EngineProfile,
 }
 
 impl<W: ShardWorld + 'static> ShardedEngine<W>
@@ -263,7 +313,13 @@ where
             work: Vec::new(),
             ghosts: Vec::new(),
             tokens: Vec::new(),
+            profile: EngineProfile::default(),
         }
+    }
+
+    /// Cumulative engine-behaviour counters for this engine instance.
+    pub fn profile(&self) -> EngineProfile {
+        self.profile
     }
 
     #[cfg(test)]
@@ -285,6 +341,7 @@ where
         self.ghosts.resize_with(shards, VecDeque::new);
         self.tokens.resize_with(shards, BTreeMap::new);
         let lookahead = world.lookahead();
+        self.profile.lookahead_ns = lookahead;
         let mut events = 0u64;
         loop {
             let Some(t0) = queue.peek_time() else {
@@ -318,6 +375,7 @@ where
                     let (t, ev) = queue.pop().expect("peeked non-empty");
                     world.handle(t, ev, queue);
                     events += 1;
+                    self.profile.degenerate_steps += 1;
                 }
                 continue;
             }
@@ -337,6 +395,7 @@ where
         self.win.clear();
         self.classes.clear();
         queue.extract_before(horizon, &mut self.win);
+        self.profile.windows += 1;
 
         // Pass 1: classify, find each shard's first loud event, and count
         // how many quiet events precede it (= pre-executable).
@@ -359,6 +418,7 @@ where
         if eligible < self.min_parallel {
             // Too sparse to pay the hand-off: restore and step sequentially
             // to the horizon (new events landing inside it included).
+            self.profile.sequential_fallbacks += 1;
             for (at, seq, ev) in self.win.drain(..) {
                 queue.restore_entry(at, seq, ev);
             }
@@ -368,8 +428,11 @@ where
                 world.handle(t, ev, queue);
                 events += 1;
             }
+            self.profile.fallback_events += events;
             return events;
         }
+        self.profile.parallel_windows += 1;
+        self.profile.eligible_max = self.profile.eligible_max.max(eligible as u64);
 
         // Pass 2: move eligible quiet events to their shard worklist,
         // restore everything else at its original position.
@@ -475,9 +538,11 @@ where
                     }
                 }
                 world.commit_ghost(s, gt, ev.fx, queue);
+                self.profile.pre_executed += 1;
             } else {
                 let (t, ev) = queue.pop().expect("live event peeked");
                 world.handle(t, ev, queue);
+                self.profile.live_merged += 1;
             }
             events += 1;
         }

@@ -1,0 +1,450 @@
+//! Sim-time tracing and time-series telemetry (cargo feature `trace`).
+//!
+//! Every request and GPU kernel can be traced through its lifecycle —
+//! NVMe enqueue → fetch → device service → flash dispatch → completion,
+//! kernel launch → compute → I/O wait → retire — as *spans*, with
+//! migrations and fault injections as *instant* events. All timestamps are
+//! simulation time (the `wall-clock` lint rule applies here like
+//! everywhere else on the sim path): a trace is a pure function of the
+//! config and seed, so a `--sim-threads N` run emits a byte-identical
+//! trace to the sequential engine.
+//!
+//! Two export sinks:
+//!
+//! * **Chrome trace-event JSON** ([`TraceSink::chrome_json`]) — an array of
+//!   async-span (`ph: "b"/"e"`) and instant (`ph: "i"`) events loadable by
+//!   `chrome://tracing` and Perfetto. `pid` is the emitting component
+//!   (device `d` → `d`, GPU shard `g` → [`PID_GPU_BASE`]` + g`, the
+//!   coordinator/array → [`PID_COORD`]); `tid` is the NVMe queue, flash
+//!   die, or workload slot within it.
+//! * **Time-series CSV** ([`TraceSink::timeseries_csv`]) — rows sampled on
+//!   a deterministic sim-time period (`trace.sample_ns`): per-device NVMe
+//!   occupancy, queue-depth high-water, die-busy fraction, buffer fill and
+//!   retry backlog, plus per-GPU-shard queued kernels and monitor drift.
+//!
+//! With the feature **off** (the default), [`TraceRecorder`] is a
+//! zero-sized struct whose methods are empty `#[inline(always)]` bodies —
+//! the same zero-cost pattern as [`super::audit`] — and every run is
+//! byte-identical to a build without the hooks.
+//! `benches/trace_overhead.rs` asserts the zero-sized property.
+//!
+//! With the feature **on**, recording is still gated at runtime by the
+//! `trace` config block: each component owns its recorder, buffers fill in
+//! per-component deterministic order (identical across engines), and the
+//! flush concatenates components in a fixed order before a stable sort by
+//! `(ts, pid, tid)` — so the merged trace is deterministic too.
+
+use super::time::SimTime;
+use crate::util::jsonlite::Json;
+
+/// Span / instant event names. One `pub const` per line: `mqms lint`
+/// structurally checks this module for unique, snake_case name constants.
+pub mod names {
+    /// Request accepted into an NVMe submission queue, waiting for fetch.
+    pub const NVME_QUEUED: &str = "nvme_queued";
+    /// Device-side service: fetched from the SQ until completion credit.
+    pub const DEV_SERVICE: &str = "dev_service";
+    /// Flash read batch occupying a die (TSU dispatch → batch done).
+    pub const FLASH_READ: &str = "flash_read";
+    /// Flash program batch occupying a die.
+    pub const FLASH_PROGRAM: &str = "flash_program";
+    /// Flash erase batch occupying a die.
+    pub const FLASH_ERASE: &str = "flash_erase";
+    /// GPU kernel lifecycle: launch → retire (compute + I/O drained).
+    pub const KERNEL: &str = "kernel";
+    /// Compute-only portion of a kernel occupying the cores.
+    pub const KERNEL_COMPUTE: &str = "kernel_compute";
+    /// GPU idle with a full retirement pipeline — stalled on storage.
+    pub const GPU_IO_STALL: &str = "gpu_io_stall";
+    /// A host request split into per-device stripe parts at the array.
+    pub const STRIPE_SPLIT: &str = "stripe_split";
+    /// Coordinator re-submitted a fault-failed request (bounded backoff).
+    pub const REQ_RETRY: &str = "req_retry";
+    /// Request failed terminally after exhausting retries.
+    pub const REQ_FAILED: &str = "req_failed";
+    /// Queued kernel tail migrated between GPU shards.
+    pub const MIGRATION: &str = "migration";
+    /// NVMe command deadline expired; completed as an error status.
+    pub const FAULT_TIMEOUT: &str = "fault_timeout";
+    /// Device dropped out permanently; in-flight requests failed fast.
+    pub const FAULT_DROPOUT: &str = "fault_dropout";
+    /// Fault injector added a service-time penalty to a command.
+    pub const FAULT_STALL: &str = "fault_stall";
+
+    /// Every name above, for uniqueness/shape tests.
+    pub const ALL: &[&str] = &[
+        NVME_QUEUED,
+        DEV_SERVICE,
+        FLASH_READ,
+        FLASH_PROGRAM,
+        FLASH_ERASE,
+        KERNEL,
+        KERNEL_COMPUTE,
+        GPU_IO_STALL,
+        STRIPE_SPLIT,
+        REQ_RETRY,
+        REQ_FAILED,
+        MIGRATION,
+        FAULT_TIMEOUT,
+        FAULT_DROPOUT,
+        FAULT_STALL,
+    ];
+}
+
+/// GPU shard `g` emits under pid `PID_GPU_BASE + g` (devices use `0..n`).
+pub const PID_GPU_BASE: u32 = 1000;
+/// The coordinator / array emits under this pid.
+pub const PID_COORD: u32 = 2000;
+
+/// Chrome trace-event phase of one [`TraceEvent`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Async span begin (`ph: "b"`).
+    Begin,
+    /// Async span end (`ph: "e"`).
+    End,
+    /// Instant event (`ph: "i"`).
+    Instant,
+}
+
+impl Phase {
+    fn ph(self) -> &'static str {
+        match self {
+            Phase::Begin => "b",
+            Phase::End => "e",
+            Phase::Instant => "i",
+        }
+    }
+}
+
+/// One lifecycle event. Span begin/end pairs match on `(name, id)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub ts: SimTime,
+    pub pid: u32,
+    pub tid: u32,
+    pub id: u64,
+    pub name: &'static str,
+    pub ph: Phase,
+}
+
+/// One time-series sample. `kind` is `"device"` or `"shard"`; columns that
+/// do not apply to the kind serialize as empty CSV cells.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleRow {
+    pub ts: SimTime,
+    pub kind: &'static str,
+    pub index: u32,
+    /// Device: commands queued + outstanding across NVMe queues.
+    pub nvme_occupancy: u64,
+    /// Device: high-water of the above since the run started.
+    pub queue_depth_hw: u64,
+    /// Device: busy flash dies, in permille of the die count.
+    pub die_busy_permille: u64,
+    /// Device: sectors buffered in the write path.
+    pub buffer_fill: u64,
+    /// Device: planes parked behind a stalled-allocation retry.
+    pub retry_backlog: u64,
+    /// Shard: kernel records admitted but not yet launched.
+    pub queued_kernels: u64,
+    /// Shard: monitor drift (permille, signed; 0 when replace is off).
+    pub drift_permille: i64,
+}
+
+impl SampleRow {
+    /// A device-kind row with the shard columns zeroed.
+    pub fn device(ts: SimTime, index: u32) -> SampleRow {
+        SampleRow {
+            ts,
+            kind: "device",
+            index,
+            nvme_occupancy: 0,
+            queue_depth_hw: 0,
+            die_busy_permille: 0,
+            buffer_fill: 0,
+            retry_backlog: 0,
+            queued_kernels: 0,
+            drift_permille: 0,
+        }
+    }
+
+    /// A shard-kind row with the device columns zeroed.
+    pub fn shard(ts: SimTime, index: u32) -> SampleRow {
+        SampleRow { kind: "shard", ..SampleRow::device(ts, index) }
+    }
+}
+
+/// Column header of [`TraceSink::timeseries_csv`].
+pub const TIMESERIES_HEADER: &str = "ts_ns,kind,index,nvme_occupancy,queue_depth_hw,\
+die_busy_permille,buffer_fill,retry_backlog,queued_kernels,drift_permille";
+
+/// Merged per-run trace: every component's buffers, concatenated in a
+/// fixed component order and stable-sorted into one deterministic stream.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    pub events: Vec<TraceEvent>,
+    pub samples: Vec<SampleRow>,
+}
+
+impl TraceSink {
+    /// Deterministic global order: stable sort by `(ts, pid, tid)` for
+    /// events (ties keep the fixed component concatenation order) and
+    /// `(ts, kind, index)` for samples.
+    pub fn sort(&mut self) {
+        self.events.sort_by_key(|e| (e.ts, e.pid, e.tid));
+        self.samples.sort_by_key(|s| (s.ts, s.kind != "device", s.index));
+    }
+
+    /// Chrome trace-event / Perfetto-compatible JSON array. `ts` is
+    /// microseconds (fractional); `id` is a decimal string because split
+    /// request ids live near `1 << 63`, beyond exact `f64` integers.
+    pub fn chrome_json(&self) -> Json {
+        let rows = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("name", Json::Str(e.name.to_string())),
+                    ("cat", Json::Str(e.name.to_string())),
+                    ("ph", Json::Str(e.ph.ph().to_string())),
+                    ("ts", Json::Num(e.ts as f64 / 1_000.0)),
+                    ("pid", Json::from(e.pid as u64)),
+                    ("tid", Json::from(e.tid as u64)),
+                    ("id", Json::Str(e.id.to_string())),
+                ];
+                if e.ph == Phase::Instant {
+                    pairs.push(("s", Json::Str("t".to_string())));
+                }
+                Json::from_pairs(pairs)
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
+    /// The epoch-sampled time-series as CSV (header + one row per sample).
+    pub fn timeseries_csv(&self) -> String {
+        let mut out = String::with_capacity(64 + self.samples.len() * 48);
+        out.push_str(TIMESERIES_HEADER);
+        out.push('\n');
+        for s in &self.samples {
+            out.push_str(&format!("{},{},{}", s.ts, s.kind, s.index));
+            if s.kind == "device" {
+                out.push_str(&format!(
+                    ",{},{},{},{},{},,",
+                    s.nvme_occupancy,
+                    s.queue_depth_hw,
+                    s.die_busy_permille,
+                    s.buffer_fill,
+                    s.retry_backlog
+                ));
+            } else {
+                out.push_str(&format!(",,,,,,{},{}", s.queued_kernels, s.drift_permille));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(feature = "trace")]
+mod imp {
+    use super::{Phase, SampleRow, SimTime, TraceEvent, TraceSink};
+
+    /// Per-component event recorder (trace builds). Inert until
+    /// [`TraceRecorder::enable`] assigns it a pid; buffers fill in the
+    /// component's own deterministic event order.
+    #[derive(Debug, Default, Clone)]
+    pub struct TraceRecorder {
+        on: bool,
+        pid: u32,
+        events: Vec<TraceEvent>,
+        samples: Vec<SampleRow>,
+    }
+
+    impl TraceRecorder {
+        /// Turn recording on, attributing events to `pid`.
+        pub fn enable(&mut self, pid: u32) {
+            self.on = true;
+            self.pid = pid;
+        }
+
+        #[inline]
+        pub fn is_enabled(&self) -> bool {
+            self.on
+        }
+
+        /// The pid this recorder attributes events to (0 until enabled).
+        #[inline]
+        pub fn pid(&self) -> u32 {
+            self.pid
+        }
+
+        #[inline]
+        fn push(&mut self, ts: SimTime, tid: u32, id: u64, name: &'static str, ph: Phase) {
+            if self.on {
+                self.events.push(TraceEvent { ts, pid: self.pid, tid, id, name, ph });
+            }
+        }
+
+        /// Open span `(name, id)` at `ts`.
+        #[inline]
+        pub fn begin(&mut self, ts: SimTime, tid: u32, id: u64, name: &'static str) {
+            self.push(ts, tid, id, name, Phase::Begin);
+        }
+
+        /// Close span `(name, id)` at `ts`.
+        #[inline]
+        pub fn end(&mut self, ts: SimTime, tid: u32, id: u64, name: &'static str) {
+            self.push(ts, tid, id, name, Phase::End);
+        }
+
+        /// Record an instant event.
+        #[inline]
+        pub fn instant(&mut self, ts: SimTime, tid: u32, id: u64, name: &'static str) {
+            self.push(ts, tid, id, name, Phase::Instant);
+        }
+
+        /// Record a time-series sample row.
+        #[inline]
+        pub fn sample(&mut self, row: SampleRow) {
+            if self.on {
+                self.samples.push(row);
+            }
+        }
+
+        /// Move this component's buffers into the merged sink.
+        pub fn drain_into(&mut self, sink: &mut TraceSink) {
+            sink.events.append(&mut self.events);
+            sink.samples.append(&mut self.samples);
+        }
+    }
+}
+
+#[cfg(not(feature = "trace"))]
+mod imp {
+    use super::{SampleRow, SimTime, TraceSink};
+
+    /// Inert stand-in: zero-sized, methods compile to nothing
+    /// (`benches/trace_overhead.rs` asserts the size).
+    #[derive(Debug, Default, Clone, Copy)]
+    pub struct TraceRecorder;
+
+    impl TraceRecorder {
+        #[inline(always)]
+        pub fn enable(&mut self, _pid: u32) {}
+        #[inline(always)]
+        pub fn is_enabled(&self) -> bool {
+            false
+        }
+        #[inline(always)]
+        pub fn pid(&self) -> u32 {
+            0
+        }
+        #[inline(always)]
+        pub fn begin(&mut self, _ts: SimTime, _tid: u32, _id: u64, _name: &'static str) {}
+        #[inline(always)]
+        pub fn end(&mut self, _ts: SimTime, _tid: u32, _id: u64, _name: &'static str) {}
+        #[inline(always)]
+        pub fn instant(&mut self, _ts: SimTime, _tid: u32, _id: u64, _name: &'static str) {}
+        #[inline(always)]
+        pub fn sample(&mut self, _row: SampleRow) {}
+        #[inline(always)]
+        pub fn drain_into(&mut self, _sink: &mut TraceSink) {}
+    }
+}
+
+pub use imp::TraceRecorder;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_snake_case() {
+        let mut seen = std::collections::BTreeSet::new();
+        for n in names::ALL {
+            assert!(seen.insert(*n), "duplicate trace event name {n}");
+            assert!(
+                n.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "trace event name {n} is not snake_case"
+            );
+            assert!(!n.is_empty() && !n.starts_with('_') && !n.ends_with('_'));
+        }
+    }
+
+    #[test]
+    #[cfg(not(feature = "trace"))]
+    fn disabled_recorder_is_zero_sized_and_inert() {
+        assert_eq!(std::mem::size_of::<TraceRecorder>(), 0);
+        let mut r = TraceRecorder::default();
+        r.enable(3);
+        assert!(!r.is_enabled());
+        let mut sink = TraceSink::default();
+        r.begin(1, 0, 9, names::KERNEL);
+        r.drain_into(&mut sink);
+        assert!(sink.events.is_empty());
+    }
+
+    #[test]
+    #[cfg(feature = "trace")]
+    fn recorder_is_runtime_gated_and_ordered() {
+        let mut r = TraceRecorder::default();
+        r.begin(5, 0, 1, names::KERNEL); // off: dropped
+        r.enable(7);
+        assert!(r.is_enabled());
+        r.begin(10, 2, 1, names::NVME_QUEUED);
+        r.end(20, 2, 1, names::NVME_QUEUED);
+        r.instant(15, 0, 0, names::STRIPE_SPLIT);
+        let mut sink = TraceSink::default();
+        r.drain_into(&mut sink);
+        assert_eq!(sink.events.len(), 3);
+        assert!(sink.events.iter().all(|e| e.pid == 7));
+        sink.sort();
+        let ts: Vec<_> = sink.events.iter().map(|e| e.ts).collect();
+        assert_eq!(ts, vec![10, 15, 20]);
+    }
+
+    #[test]
+    fn chrome_json_shape_and_sample_csv() {
+        let mut sink = TraceSink::default();
+        sink.events.push(TraceEvent {
+            ts: 2_500,
+            pid: 0,
+            tid: 1,
+            id: u64::MAX - 1,
+            name: names::DEV_SERVICE,
+            ph: Phase::Begin,
+        });
+        sink.events.push(TraceEvent {
+            ts: 1_000,
+            pid: 0,
+            tid: 0,
+            id: 4,
+            name: names::FAULT_TIMEOUT,
+            ph: Phase::Instant,
+        });
+        let mut dev = SampleRow::device(1_000, 2);
+        dev.nvme_occupancy = 5;
+        sink.samples.push(SampleRow::shard(1_000, 0));
+        sink.samples.push(dev);
+        sink.sort();
+        let j = sink.chrome_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        // Sorted: the instant at 1000 ns first, as 1 µs.
+        assert_eq!(rows[0].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(rows[0].get("s").unwrap().as_str(), Some("t"));
+        assert_eq!(rows[0].get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rows[1].get("ph").unwrap().as_str(), Some("b"));
+        assert_eq!(rows[1].get("ts").unwrap().as_f64(), Some(2.5));
+        // Large ids survive exactly as decimal strings.
+        assert_eq!(rows[1].get("id").unwrap().as_str(), Some("18446744073709551614"));
+        let csv = sink.timeseries_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some(TIMESERIES_HEADER));
+        // Device rows sort before shard rows at equal timestamps.
+        assert_eq!(lines.next(), Some("1000,device,2,5,0,0,0,0,,"));
+        assert_eq!(lines.next(), Some("1000,shard,0,,,,,,0,0"));
+        assert_eq!(lines.next(), None);
+    }
+}

@@ -25,6 +25,7 @@
 
 use crate::config::SimConfig;
 use crate::sim::audit;
+use crate::sim::trace::{names, TraceRecorder, TraceSink, PID_COORD};
 use crate::sim::{EventQueue, SimTime};
 use crate::ssd::fault::FaultInjector;
 use crate::ssd::nvme::{Completion, IoRequest};
@@ -131,6 +132,9 @@ pub struct SsdArray {
     scratch_subs: Vec<(IoRequest, usize)>,
     /// Scratch: per-(device, queue) slot demand of one split pre-check.
     scratch_need: Vec<(u32, usize, u32)>,
+    /// Stripe-split instants, emitted under [`PID_COORD`] (zero-sized
+    /// unless the `trace` feature is on).
+    pub trace: TraceRecorder,
 }
 
 impl SsdArray {
@@ -183,6 +187,26 @@ impl SsdArray {
             scratch_chunks: Vec::new(),
             scratch_subs: Vec::new(),
             scratch_need: Vec::new(),
+            trace: TraceRecorder::default(),
+        }
+    }
+
+    /// Enable lifecycle tracing on the array and every device, with device
+    /// time-series samples every `sample_ns`. No-op in builds without the
+    /// `trace` feature.
+    pub fn enable_trace(&mut self, sample_ns: SimTime) {
+        self.trace.enable(PID_COORD);
+        for (d, dev) in self.devs.iter_mut().enumerate() {
+            dev.enable_trace(d as u32, sample_ns);
+        }
+    }
+
+    /// Move the array's and every device's trace buffers into `sink`, in
+    /// fixed (array, then device 0..n) order.
+    pub fn drain_trace(&mut self, sink: &mut TraceSink) {
+        self.trace.drain_into(sink);
+        for dev in &mut self.devs {
+            dev.drain_trace(sink);
         }
     }
 
@@ -418,6 +442,8 @@ impl SsdArray {
         self.next_split_id += subs.len() as u64;
         req.device = subs[0].0.device;
         let n_subs = subs.len() as u32;
+        // tid carries the leg count (there is no queue/die to point at).
+        self.trace.instant(q.now(), n_subs, req.id, names::STRIPE_SPLIT);
         for &(sub, queue) in &subs {
             self.sub_parent.insert(sub.id, req.id);
             let placed = self.dev_submit(sub.device, queue, sub, q);

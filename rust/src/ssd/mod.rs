@@ -28,6 +28,7 @@ pub use array::{ArrayEvent, SsdArray};
 
 use crate::config::{MapGranularity, SsdConfig};
 use crate::sim::audit;
+use crate::sim::trace::{names, SampleRow, TraceRecorder, TraceSink};
 use crate::sim::{EventQueue, SimTime};
 use crate::util::rng::Pcg64;
 use addr::{Geometry, PhysSector, PlaneId};
@@ -63,6 +64,13 @@ pub enum SsdEvent {
     /// when this fires, it completes with an error status (scheduled at
     /// submit only when a command timeout is configured).
     Timeout { req: u64, queue: usize },
+    /// Time-series telemetry sample (scheduled only while tracing). Loud on
+    /// purpose: a staged (worker-side) execution defers NVMe completion
+    /// credits to the merge commit, so a pre-executed sample would read an
+    /// occupancy that still counts already-credited requests — running it on
+    /// the sequential replay path keeps `--sim-threads N` traces
+    /// byte-identical to the sequential engine's.
+    Sample,
 }
 
 impl SsdEvent {
@@ -71,8 +79,9 @@ impl SsdEvent {
     /// credit — their single externally visible effect. The sharded engine
     /// ([`crate::sim::sharded`]) may pre-execute quiet events on a worker
     /// with that credit staged for deterministic commit at the merge barrier.
-    /// `Fetch` (fault/rng/admission) and `Timeout` (failure path) are "loud"
-    /// and always run on the sequential replay path.
+    /// `Fetch` (fault/rng/admission), `Timeout` (failure path) and `Sample`
+    /// (reads NVMe occupancy, which staging defers) are "loud" and always
+    /// run on the sequential replay path.
     pub(crate) fn is_quiet(&self) -> bool {
         matches!(
             self,
@@ -240,6 +249,15 @@ pub struct SsdSim {
     /// queues / `completions_out`, for deterministic commit by the owner.
     staging: bool,
     staged_out: Vec<StagedEffect>,
+    /// Lifecycle trace recorder (zero-sized unless the `trace` feature is
+    /// on; inert until [`SsdSim::enable_trace`]).
+    pub trace: TraceRecorder,
+    /// Time-series sampling period; 0 (always, in non-trace builds) keeps
+    /// [`SsdEvent::Sample`] out of the event stream entirely.
+    trace_sample_ns: SimTime,
+    /// A `Sample` event is in flight (re-armed by the next submit after the
+    /// device drains, so idle devices schedule nothing).
+    sampler_armed: bool,
 }
 
 impl SsdSim {
@@ -275,8 +293,30 @@ impl SsdSim {
             next_immediate_latency: 1_000, // ~DRAM/controller turnaround
             staging: false,
             staged_out: Vec::new(),
+            trace: TraceRecorder::default(),
+            trace_sample_ns: 0,
+            sampler_armed: false,
             cfg: cfg.clone(),
         }
+    }
+
+    /// Enable lifecycle tracing for this device (and its TSU), attributing
+    /// events to pid `dev`, with time-series samples every `sample_ns`.
+    /// No-op in builds without the `trace` feature: `is_enabled` stays
+    /// false there, so the sampler is never armed and the event stream is
+    /// byte-identical to a build without the hooks.
+    pub fn enable_trace(&mut self, dev: u32, sample_ns: SimTime) {
+        self.trace.enable(dev);
+        self.tsu.trace.enable(dev);
+        if self.trace.is_enabled() {
+            self.trace_sample_ns = sample_ns;
+        }
+    }
+
+    /// Move this device's (and its TSU's) trace buffers into `sink`.
+    pub fn drain_trace(&mut self, sink: &mut TraceSink) {
+        self.trace.drain_into(sink);
+        self.tsu.trace.drain_into(sink);
     }
 
     /// Logical sector capacity of the device.
@@ -337,6 +377,12 @@ impl SsdSim {
         let now = q.now();
         self.nvme.submit(queue, req, now)?;
         self.metrics.note_submit(now);
+        self.metrics.note_queue_depth(self.nvme.occupancy());
+        self.trace.begin(now, queue as u32, req.id, names::NVME_QUEUED);
+        if self.trace_sample_ns > 0 && !self.sampler_armed {
+            self.sampler_armed = true;
+            q.schedule_in(self.trace_sample_ns, SsdEvent::Sample.into());
+        }
         if self.cmd_timeout_ns > 0 {
             q.schedule_in(
                 self.cmd_timeout_ns,
@@ -490,6 +536,29 @@ impl SsdSim {
             SsdEvent::Immediate { req, sectors } => self.credit(req, sectors, now),
             SsdEvent::RetryStalled { plane } => self.retry_stalled(plane, now, q),
             SsdEvent::Timeout { req, queue } => self.on_timeout(req, queue, now),
+            SsdEvent::Sample => self.on_sample(now, q),
+        }
+    }
+
+    /// Emit one time-series sample row and re-arm the sampler (unless the
+    /// device has drained — the next submit re-arms it).
+    fn on_sample<E: From<SsdEvent> + From<TsuEvent>>(&mut self, now: SimTime, q: &mut EventQueue<E>) {
+        if !self.trace.is_enabled() {
+            return;
+        }
+        let mut row = SampleRow::device(now, self.trace.pid());
+        row.nvme_occupancy = self.nvme.occupancy();
+        row.queue_depth_hw = self.metrics.qd_highwater;
+        let (busy, total) = self.tsu.busy_dies();
+        row.die_busy_permille =
+            if total > 0 { busy as u64 * 1000 / total as u64 } else { 0 };
+        row.buffer_fill = self.bufs.iter().map(|b| b.sectors.len() as u64).sum();
+        row.retry_backlog = self.stalled.iter().map(|s| s.len() as u64).sum();
+        self.trace.sample(row);
+        if self.is_drained() {
+            self.sampler_armed = false;
+        } else {
+            q.schedule_in(self.trace_sample_ns, SsdEvent::Sample.into());
         }
     }
 
@@ -501,6 +570,8 @@ impl SsdSim {
             return;
         }
         if let Some((queue, req)) = self.nvme.fetch_next() {
+            self.trace.end(now, queue as u32, req.id, names::NVME_QUEUED);
+            self.trace.begin(now, queue as u32, req.id, names::DEV_SERVICE);
             self.hil.admit(req, queue);
             self.process_request(req, now, q);
         }
@@ -517,6 +588,10 @@ impl SsdSim {
     fn fail_all_dead(&mut self, now: SimTime) {
         for r in self.nvme.drain_queued() {
             self.fault_dropped += 1;
+            // tid 0: the drained queue index is not retained, and span
+            // matching is by (name, id) anyway.
+            self.trace.end(now, 0, r.id, names::NVME_QUEUED);
+            self.trace.instant(now, 0, r.id, names::FAULT_DROPOUT);
             self.failed_out.push(Completion {
                 id: r.id,
                 opcode: r.opcode,
@@ -530,6 +605,8 @@ impl SsdSim {
         }
         for (queue, c) in self.hil.force_fail_all(now) {
             self.fault_dropped += 1;
+            self.trace.end(now, queue as u32, c.id, names::DEV_SERVICE);
+            self.trace.instant(now, queue as u32, c.id, names::FAULT_DROPOUT);
             self.nvme.complete(queue);
             self.failed_out.push(c);
         }
@@ -542,6 +619,8 @@ impl SsdSim {
     fn on_timeout(&mut self, id: u64, queue: usize, now: SimTime) {
         if let Some(r) = self.nvme.remove_queued(queue, id) {
             self.fault_timeouts += 1;
+            self.trace.end(now, queue as u32, r.id, names::NVME_QUEUED);
+            self.trace.instant(now, queue as u32, r.id, names::FAULT_TIMEOUT);
             self.failed_out.push(Completion {
                 id: r.id,
                 opcode: r.opcode,
@@ -554,6 +633,8 @@ impl SsdSim {
             });
         } else if let Some((q_rel, c)) = self.hil.force_fail(id, now) {
             self.fault_timeouts += 1;
+            self.trace.end(now, q_rel as u32, c.id, names::DEV_SERVICE);
+            self.trace.instant(now, q_rel as u32, c.id, names::FAULT_TIMEOUT);
             self.nvme.complete(q_rel);
             self.failed_out.push(c);
         }
@@ -574,7 +655,11 @@ impl SsdSim {
     ) {
         let mut lat = self.ftl_latency();
         if let Some(f) = self.fault.as_mut() {
-            lat += f.service_penalty(now, req.opcode == Opcode::Read);
+            let pen = f.service_penalty(now, req.opcode == Opcode::Read);
+            if pen > 0 {
+                self.trace.instant(now, 0, req.id, names::FAULT_STALL);
+            }
+            lat += pen;
         }
         match req.opcode {
             Opcode::Read => self.process_read(req, lat, now, q),
@@ -927,6 +1012,7 @@ impl SsdSim {
 
     fn credit(&mut self, req: u64, sectors: u32, now: SimTime) {
         if let Some((queue, completion)) = self.hil.credit(req, sectors, now) {
+            self.trace.end(now, queue as u32, completion.id, names::DEV_SERVICE);
             // Metrics stay on the execution side in both modes: the staged
             // path runs this device's events in the same relative order as
             // the sequential engine, so per-device accumulation (including

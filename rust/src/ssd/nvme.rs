@@ -59,6 +59,10 @@ pub struct NvmeQueues {
     depth: u32,
     /// Round-robin arbitration cursor.
     cursor: usize,
+    /// Running total of queued + outstanding commands across all queues —
+    /// O(1) occupancy for the queue-depth high-water metric and the trace
+    /// sampler (summing 64 queues per submit would tax the hot path).
+    occupied: u32,
     /// Queues with an HIL fetch event already scheduled.
     fetch_armed: Vec<bool>,
     pub total_submitted: u64,
@@ -74,6 +78,7 @@ impl NvmeQueues {
             outstanding: vec![0; queues as usize],
             depth,
             cursor: 0,
+            occupied: 0,
             fetch_armed: vec![false; queues as usize],
             total_submitted: 0,
             total_rejected: 0,
@@ -107,6 +112,7 @@ impl NvmeQueues {
         }
         self.queues[queue].push_back(req);
         self.total_submitted += 1;
+        self.occupied += 1;
         self.occ_audit.check(
             queue,
             self.queues[queue].len(),
@@ -141,6 +147,7 @@ impl NvmeQueues {
     pub fn complete(&mut self, queue: usize) {
         debug_assert!(self.outstanding[queue] > 0);
         self.outstanding[queue] -= 1;
+        self.occupied -= 1;
     }
 
     /// Remove a still-queued command by id (NVMe abort semantics: a command
@@ -149,6 +156,7 @@ impl NvmeQueues {
     /// left the SQ (in service or completed) and the caller must look there.
     pub fn remove_queued(&mut self, queue: usize, id: u64) -> Option<IoRequest> {
         let pos = self.queues[queue].iter().position(|r| r.id == id)?;
+        self.occupied -= 1;
         self.queues[queue].remove(pos)
     }
 
@@ -160,6 +168,7 @@ impl NvmeQueues {
         for q in &mut self.queues {
             out.extend(q.drain(..));
         }
+        self.occupied -= out.len() as u32;
         out
     }
 
@@ -169,6 +178,16 @@ impl NvmeQueues {
 
     pub fn outstanding_total(&self) -> u32 {
         self.outstanding.iter().sum()
+    }
+
+    /// Queued + outstanding commands across all queues, O(1).
+    #[inline]
+    pub fn occupancy(&self) -> u64 {
+        debug_assert_eq!(
+            self.occupied as usize,
+            self.pending() + self.outstanding_total() as usize
+        );
+        self.occupied as u64
     }
 
     /// Arm/disarm the per-device fetch loop (one pipeline for simplicity;
@@ -253,6 +272,25 @@ mod tests {
         // Remaining command still fetches, and the freed slot is reusable.
         assert_eq!(nq.pending(), 1);
         assert_eq!(nq.fetch_next().unwrap().1.id, 2);
+    }
+
+    #[test]
+    fn occupancy_tracks_queued_plus_outstanding() {
+        let mut nq = NvmeQueues::new(2, 4);
+        assert_eq!(nq.occupancy(), 0);
+        nq.submit(0, req(1), 0).unwrap();
+        nq.submit(1, req(2), 0).unwrap();
+        assert_eq!(nq.occupancy(), 2);
+        let (q, _) = nq.fetch_next().unwrap();
+        // Fetched commands still occupy their slot.
+        assert_eq!(nq.occupancy(), 2);
+        nq.complete(q);
+        assert_eq!(nq.occupancy(), 1);
+        assert!(nq.remove_queued(1, 2).is_some());
+        assert_eq!(nq.occupancy(), 0);
+        nq.submit(0, req(3), 0).unwrap();
+        nq.drain_queued();
+        assert_eq!(nq.occupancy(), 0);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use super::addr::{ChannelId, DieId, Geometry};
 use super::xact::{XactId, XactKind, XactSlab};
 use crate::config::SsdConfig;
 use crate::sim::time::transfer_ns;
+use crate::sim::trace::{names, TraceRecorder};
 use crate::sim::{EventQueue, SimTime};
 use std::collections::VecDeque;
 
@@ -107,6 +108,10 @@ pub struct Tsu {
     /// Scratch: dies touched by one `enqueue_many` round (reused so group
     /// enqueues allocate nothing in steady state).
     scratch_dies: Vec<DieId>,
+    /// Flash-operation span recorder (zero-sized unless `trace` is on;
+    /// enabled together with the owning device's recorder). Span id = die
+    /// index — valid because a die runs exactly one batch at a time.
+    pub trace: TraceRecorder,
     // --- metrics -----------------------------------------------------------
     pub die_busy_ns: Vec<u64>,
     pub chan_busy_ns: Vec<u64>,
@@ -139,6 +144,7 @@ impl Tsu {
             chan_busy: vec![false; channels],
             chan_wait: vec![VecDeque::new(); channels],
             scratch_dies: Vec::new(),
+            trace: TraceRecorder::default(),
             die_busy_ns: vec![0; dies],
             chan_busy_ns: vec![0; channels],
             multiplane_batches: 0,
@@ -157,6 +163,23 @@ impl Tsu {
 
     pub fn set_gc_urgent(&mut self, die: DieId, urgent: bool) {
         self.gc_urgent[die as usize] = urgent;
+    }
+
+    /// (busy dies, total dies) — the trace sampler's die-busy fraction.
+    pub fn busy_dies(&self) -> (usize, usize) {
+        (
+            self.dies.iter().filter(|d| d.phase != Phase::Idle).count(),
+            self.dies.len(),
+        )
+    }
+
+    /// Trace span name for a flash operation kind.
+    fn span_name(kind: XactKind) -> &'static str {
+        match kind {
+            XactKind::Read => names::FLASH_READ,
+            XactKind::Program => names::FLASH_PROGRAM,
+            XactKind::Erase => names::FLASH_ERASE,
+        }
     }
 
     /// True when no transaction is queued or executing anywhere.
@@ -263,6 +286,7 @@ impl Tsu {
             self.multiplane_batches += 1;
             self.multiplane_ops += batch_len as u64;
         }
+        self.trace.begin(q.now(), die, die as u64, Self::span_name(kind));
         match kind {
             XactKind::Program => {
                 self.flash_programs += batch_len as u64;
@@ -372,6 +396,8 @@ impl Tsu {
         q: &mut EventQueue<E>,
         done: &mut Vec<XactId>,
     ) {
+        let kind = self.dies[die as usize].kind;
+        self.trace.end(q.now(), die, die as u64, Self::span_name(kind));
         let d = &mut self.dies[die as usize];
         done.extend_from_slice(&d.batch);
         d.batch.clear();

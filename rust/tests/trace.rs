@@ -1,0 +1,284 @@
+//! Tracing / telemetry integration tests (PR 9 tentpole contract):
+//!
+//! * Trace **off** (the default) changes nothing: report bytes across the
+//!   preset × devices × gpus × faults × sim-threads grid stay identical to
+//!   the untraced sequential run, and `take_trace()` returns `None`.
+//! * Tracing is a passive observer: enabling it never changes the SSD,
+//!   per-device, per-workload, or GPU outcome sections of the report.
+//! * Under the `trace` feature, a `--sim-threads N` run emits **byte-
+//!   identical** Chrome-trace JSON and time-series CSV to the sequential
+//!   engine, spans conserve (every `b` has its `e`), and the Perfetto
+//!   event shape is pinned.
+
+use mqms::bench_support as bs;
+use mqms::config::{self, SimConfig};
+use mqms::coordinator::CoSim;
+use mqms::gpu::placement::Placement;
+use mqms::metrics::Report;
+use mqms::util::jsonlite::Json;
+use mqms::workloads::WorkloadSpec;
+
+/// Canonical deterministic bytes of one report.
+fn bytes(r: &Report) -> String {
+    r.to_json_deterministic().pretty()
+}
+
+/// Run a bundle through a full co-simulation and drain the trace.
+fn run_traced(
+    mut cfg: SimConfig,
+    specs: &[WorkloadSpec],
+    trace: bool,
+    sim_threads: u32,
+) -> (Report, Option<(Json, String)>) {
+    cfg.trace.enabled = trace;
+    cfg.sim_threads = sim_threads;
+    cfg.validate().expect("valid test config");
+    let mut sim = CoSim::new(cfg);
+    for s in specs {
+        sim.add_workload(s.clone());
+    }
+    let report = sim.run();
+    let trace = sim.take_trace();
+    (report, trace)
+}
+
+#[test]
+fn trace_off_grid_is_byte_identical_and_emits_no_trace() {
+    let base = |preset: &str, devices: u32, gpus: u32| {
+        let mut cfg = match preset {
+            "mqms" => config::mqms_enterprise(),
+            _ => config::baseline_mqsim_macsim(),
+        };
+        cfg.devices = devices;
+        cfg.gpus = gpus;
+        cfg.placement = Placement::PerfAware;
+        cfg.gpu.dram_bytes = 0;
+        cfg.seed = bs::SEED;
+        cfg
+    };
+    let bundle = bs::drift_bundle(bs::SEED);
+    for preset in ["mqms", "baseline"] {
+        for devices in [1u32, 4] {
+            for gpus in [1u32, 2] {
+                let (seq, none) = run_traced(base(preset, devices, gpus), &bundle, false, 1);
+                assert!(none.is_none(), "trace-off run must emit no trace");
+                for threads in [2u32, 4] {
+                    let (par, none) =
+                        run_traced(base(preset, devices, gpus), &bundle, false, threads);
+                    assert!(none.is_none());
+                    assert_eq!(
+                        bytes(&seq),
+                        bytes(&par),
+                        "{preset} x {devices}d x {gpus}g: trace-off sim-threads \
+                         {threads} must be byte-identical to sequential"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_off_is_byte_identical_under_faults_and_replace() {
+    let bundle = bs::drift_bundle(bs::SEED);
+    for &scenario in config::FAULT_SCENARIO_NAMES.iter() {
+        let cfg = || bs::fault_cfg(2, 4, scenario, true, bs::SEED);
+        let (seq, _) = run_traced(cfg(), &bundle, false, 1);
+        let (par, _) = run_traced(cfg(), &bundle, false, 4);
+        assert_eq!(bytes(&seq), bytes(&par), "{scenario}: trace-off diverged");
+    }
+}
+
+#[test]
+fn enabling_trace_never_changes_simulation_outcomes() {
+    // Tracing is a passive observer: the SSD, per-device, per-workload, and
+    // per-GPU outcome sections must be byte-identical with tracing on. (The
+    // top-level `events` counter may grow in trace builds — the sampler adds
+    // its own simulation events — so the comparison is per section.)
+    let bundle = bs::drift_bundle(bs::SEED);
+    for (gpus, devices, scenario) in [(1u32, 1u32, "none"), (2, 4, "dropout")] {
+        let cfg = || bs::fault_cfg(gpus, devices, scenario, true, bs::SEED);
+        let (off, _) = run_traced(cfg(), &bundle, false, 1);
+        let (on, _) = run_traced(cfg(), &bundle, true, 1);
+        let (offj, onj) = (off.to_json_deterministic(), on.to_json_deterministic());
+        for key in ["config", "ssd", "ssd_devices", "workloads", "gpus", "replacement"] {
+            assert_eq!(
+                offj.get(key).map(Json::pretty),
+                onj.get(key).map(Json::pretty),
+                "{gpus}g x {devices}d x {scenario}: `{key}` section changed under tracing"
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_config_roundtrips_and_stays_sparse() {
+    let mut cfg = config::mqms_enterprise();
+    cfg.trace.enabled = true;
+    cfg.trace.sample_ns = 100_000;
+    let back = SimConfig::from_json(&cfg.to_json()).unwrap();
+    assert!(back.trace.enabled);
+    assert_eq!(back.trace.sample_ns, 100_000);
+    // The default stays sparse: no `trace` key in the JSON at all.
+    let plain = config::mqms_enterprise();
+    assert!(plain.to_json().get("trace").is_none(), "default trace block must be sparse");
+    // A zero sampling cadence is rejected at validation, not silently run.
+    let mut bad = config::mqms_enterprise();
+    bad.trace.enabled = true;
+    bad.trace.sample_ns = 0;
+    assert!(bad.validate().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Feature-gated: the recorder only captures under `--features trace`.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "trace")]
+mod traced {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// The traced grid shape: replace-on drift bundle plus a dropout cell,
+    /// so spans cover migrations, retries, and terminal failures.
+    fn cells() -> Vec<(u32, u32, &'static str, bool)> {
+        vec![(1, 1, "none", false), (2, 2, "none", true), (2, 4, "dropout", true)]
+    }
+
+    #[test]
+    fn threaded_trace_is_byte_identical_to_sequential() {
+        let bundle = bs::drift_bundle(bs::SEED);
+        for (gpus, devices, scenario, replace) in cells() {
+            let cfg = || bs::fault_cfg(gpus, devices, scenario, replace, bs::SEED);
+            let (_, seq) = run_traced(cfg(), &bundle, true, 1);
+            let (seq_json, seq_csv) = seq.expect("trace feature on: payload present");
+            let seq_json = seq_json.pretty();
+            for threads in [2u32, 4] {
+                let (_, par) = run_traced(cfg(), &bundle, true, threads);
+                let (par_json, par_csv) = par.expect("trace payload present");
+                assert_eq!(
+                    seq_json,
+                    par_json.pretty(),
+                    "{gpus}g x {devices}d x {scenario}: sim-threads {threads} \
+                     changed the trace bytes"
+                );
+                assert_eq!(
+                    seq_csv, par_csv,
+                    "{gpus}g x {devices}d x {scenario}: sim-threads {threads} \
+                     changed the time-series bytes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spans_conserve_and_key_span_kinds_appear() {
+        let bundle = bs::drift_bundle(bs::SEED);
+        let (_, t) = run_traced(bs::fault_cfg(2, 4, "dropout", true, bs::SEED), &bundle, true, 1);
+        let (json, _) = t.unwrap();
+        let events = json.as_arr().expect("chrome trace is a JSON array");
+        assert!(!events.is_empty());
+        // Per (pid, name, id): every span opened is closed (retries re-open
+        // NVME_QUEUED under the same request id — counts still balance).
+        let mut opened: BTreeMap<(u64, String, String), i64> = BTreeMap::new();
+        let mut names_seen: Vec<String> = Vec::new();
+        for e in events {
+            let name = e.get("name").unwrap().as_str().unwrap().to_string();
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            let pid = e.get("pid").unwrap().as_u64().unwrap();
+            let id = e.get("id").unwrap().as_str().unwrap().to_string();
+            if !names_seen.contains(&name) {
+                names_seen.push(name.clone());
+            }
+            match ph {
+                "b" => *opened.entry((pid, name, id)).or_insert(0) += 1,
+                "e" => *opened.entry((pid, name, id)).or_insert(0) -= 1,
+                "i" => assert_eq!(e.get("s").unwrap().as_str(), Some("t")),
+                other => panic!("unexpected phase `{other}`"),
+            }
+        }
+        for (key, balance) in &opened {
+            assert_eq!(*balance, 0, "span {key:?} opened != closed");
+        }
+        use mqms::sim::trace::names;
+        for required in [
+            names::NVME_QUEUED,
+            names::DEV_SERVICE,
+            names::KERNEL,
+            names::KERNEL_COMPUTE,
+            names::REQ_RETRY,
+        ] {
+            assert!(
+                names_seen.iter().any(|n| n == required),
+                "span kind `{required}` never recorded (saw {names_seen:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn perfetto_event_shape_and_ordering_are_pinned() {
+        let bundle = bs::drift_bundle(bs::SEED);
+        let (_, t) = run_traced(bs::fault_cfg(2, 2, "none", true, bs::SEED), &bundle, true, 1);
+        let (json, csv) = t.unwrap();
+        let events = json.as_arr().unwrap();
+        let mut last_ts = f64::MIN;
+        for e in events {
+            // Pinned key set of the Chrome trace-event schema.
+            for key in ["name", "cat", "ph", "ts", "pid", "tid", "id"] {
+                assert!(e.get(key).is_some(), "event missing `{key}`: {}", e.pretty());
+            }
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts, "events must be sorted by ts");
+            last_ts = ts;
+            assert!(
+                matches!(e.get("ph").unwrap().as_str().unwrap(), "b" | "e" | "i"),
+                "unexpected phase"
+            );
+            // ids are decimal strings: split ids live near 1 << 63, beyond
+            // exact f64 integers.
+            let id = e.get("id").unwrap().as_str().unwrap();
+            assert!(id.bytes().all(|b| b.is_ascii_digit()), "non-decimal id `{id}`");
+        }
+        // Time-series CSV: pinned header, 10 columns per row, and both
+        // sample kinds present (device occupancy rows + shard drift rows).
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some(mqms::sim::trace::TIMESERIES_HEADER));
+        let (mut devices, mut shards) = (0u64, 0u64);
+        for row in lines {
+            assert_eq!(row.split(',').count(), 10, "row arity: {row}");
+            match row.split(',').nth(1) {
+                Some("device") => devices += 1,
+                Some("shard") => shards += 1,
+                other => panic!("unknown sample kind {other:?} in: {row}"),
+            }
+        }
+        assert!(devices > 0, "no device samples recorded");
+        assert!(shards > 0, "no shard samples recorded");
+    }
+
+    #[test]
+    fn campaign_trace_dir_writes_per_cell_files() {
+        use mqms::campaign::{self, CampaignSpec};
+        let dir = std::env::temp_dir().join(format!("mqms-trace-test-{}", std::process::id()));
+        let spec = CampaignSpec {
+            presets: vec!["mqms".into()],
+            workloads: vec!["rand4k".into()],
+            scales: vec![0.001],
+            devices: vec![1, 2],
+            seed: 7,
+            threads: 2,
+            sampled: true,
+            trace_dir: Some(dir.clone()),
+            ..CampaignSpec::default()
+        };
+        let results = campaign::run(&spec).unwrap();
+        assert_eq!(results.len(), 2);
+        for (cell, _) in &results {
+            let stem = cell.label().replace('/', "_");
+            for suffix in [".trace.json", ".timeseries.csv"] {
+                let p = dir.join(format!("{stem}{suffix}"));
+                assert!(p.exists(), "missing per-cell trace file {}", p.display());
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
