@@ -16,7 +16,12 @@ fn main() {
         for devices in [1u32, 4] {
             let mut spans = Vec::new();
             for placement in Placement::ALL {
-                let r = bs::placement_run(gpus, devices, placement, bs::SEED);
+                let r = bs::Scenario::new(bs::SEED)
+                    .gpus(gpus)
+                    .devices(devices)
+                    .placement(placement)
+                    .bundle(bs::skewed_llm_bundle(bs::SEED))
+                    .run();
                 assert_eq!(r.misrouted, 0, "{gpus}g x {devices}d: misrouted completions");
                 assert_eq!(r.past_clamps, 0, "{gpus}g x {devices}d: causality clamps");
                 spans.push(bs::gpu_makespan(&r));

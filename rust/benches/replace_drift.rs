@@ -9,6 +9,7 @@
 //! strictly beat the best static policy on every sharded grid point.
 
 use mqms::bench_support as bs;
+use mqms::gpu::placement::Placement;
 use mqms::util::bench::{ns, print_table};
 
 fn main() {
@@ -16,8 +17,19 @@ fn main() {
     let mut gaps = Vec::new();
     for gpus in [2u32, 4] {
         for devices in [1u32, 4] {
-            let stat = bs::replace_run(gpus, devices, false, bs::SEED);
-            let dyn_ = bs::replace_run(gpus, devices, true, bs::SEED);
+            let cell = |replace: bool| {
+                bs::Scenario::new(bs::SEED)
+                    .gpus(gpus)
+                    .devices(devices)
+                    .placement(Placement::PerfAware)
+                    .dram_bytes(0)
+                    .pipeline_depth(4)
+                    .replace(replace)
+                    .bundle(bs::drift_bundle(bs::SEED))
+                    .run()
+            };
+            let stat = cell(false);
+            let dyn_ = cell(true);
             for (name, r) in [("static", &stat), ("dynamic", &dyn_)] {
                 assert_eq!(r.misrouted, 0, "{gpus}g x {devices}d {name}: misrouted");
                 assert_eq!(r.past_clamps, 0, "{gpus}g x {devices}d {name}: causality clamps");

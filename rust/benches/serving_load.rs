@@ -1,0 +1,148 @@
+//! Serving latency-vs-load figure: tail latency and goodput of the
+//! open-loop multi-tenant front end as offered load sweeps from under to
+//! well over array capacity, plus the admission study the paper's serving
+//! story rests on.
+//!
+//! Shape assertions:
+//! * p99 request latency is monotone nondecreasing in offered load under
+//!   open admission (queueing only ever hurts the tail);
+//! * at overload, SLO-aware admission strictly beats open admission on
+//!   goodput — controlled shedding keeps admitted requests inside budget;
+//! * bursty arrivals under `--replace on` migrate live queues (the drift
+//!   monitor operates on the serving backlog, not just batch jobs).
+//!
+//! Emits `BENCH_SERVING.json` for the CI artifact trail.
+
+use mqms::bench_support as bs;
+use mqms::config::{AdmissionPolicy, ArrivalProcess, ServingConfig};
+use mqms::metrics::Report;
+use mqms::util::bench::{ns, print_table};
+use mqms::util::jsonlite::Json;
+
+/// Per-tenant arrival rates, req/s: under capacity → deep overload.
+const RATES: [f64; 4] = [500.0, 2_000.0, 8_000.0, 16_000.0];
+const OVERLOAD: f64 = 16_000.0;
+
+/// The serving block of one cell: 4 tenants on the 70/30 mixed4k template
+/// (read-dominant, so the admission cost model prices requests accurately).
+fn serving(rate: f64, admission: AdmissionPolicy, process: ArrivalProcess) -> ServingConfig {
+    ServingConfig {
+        enabled: true,
+        process,
+        rate_per_tenant: rate,
+        tenants: 4,
+        admission,
+        workload: "mixed4k".to_string(),
+        ..ServingConfig::default()
+    }
+}
+
+fn cell(rate: f64, admission: AdmissionPolicy, process: ArrivalProcess, replace: bool) -> Report {
+    bs::Scenario::new(bs::SEED)
+        .devices(4)
+        .gpus(2)
+        .replace(replace)
+        .serving(serving(rate, admission, process))
+        .run()
+}
+
+fn sv(r: &Report) -> &Json {
+    r.serving.as_ref().expect("serving run must emit the serving section")
+}
+
+fn u(s: &Json, k: &str) -> u64 {
+    s.get(k).and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn f(s: &Json, k: &str) -> f64 {
+    s.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn main() {
+    // 1. Open-admission load sweep: the latency-vs-load curve.
+    let mut rows = Vec::new();
+    let mut sweep = Vec::new();
+    let mut prev_p99 = 0u64;
+    for rate in RATES {
+        let r = cell(rate, AdmissionPolicy::None, ArrivalProcess::Poisson, false);
+        assert_eq!(r.misrouted, 0, "{rate} req/s: misrouted completions");
+        assert_eq!(r.past_clamps, 0, "{rate} req/s: causality clamps");
+        let s = sv(&r);
+        let (offered, completed) = (u(s, "offered"), u(s, "completed"));
+        assert!(offered > 0, "{rate} req/s minted no arrivals");
+        assert_eq!(u(s, "shed"), 0, "open admission must never shed");
+        assert_eq!(completed, u(s, "admitted"), "open-loop run must drain every request");
+        let p99 = u(s, "latency_p99_ns");
+        assert!(
+            p99 >= prev_p99,
+            "p99 must be monotone nondecreasing in offered load: \
+             {rate} req/s gave {p99} ns after {prev_p99} ns"
+        );
+        prev_p99 = p99;
+        rows.push((
+            format!("{rate} req/s/tenant"),
+            vec![
+                offered.to_string(),
+                format!("{:.0}", f(s, "goodput_rps")),
+                ns(u(s, "latency_p50_ns") as f64),
+                ns(p99 as f64),
+            ],
+        ));
+        sweep.push(Json::from_pairs(vec![
+            ("arrival_rate", rate.into()),
+            ("offered", offered.into()),
+            ("completed", completed.into()),
+            ("slo_met", u(s, "slo_met").into()),
+            ("goodput_rps", f(s, "goodput_rps").into()),
+            ("latency_p50_ns", u(s, "latency_p50_ns").into()),
+            ("latency_p99_ns", p99.into()),
+        ]));
+    }
+    print_table(
+        "open-admission latency vs offered load (4 tenants, mixed4k)",
+        &["rate", "offered", "goodput", "p50", "p99"],
+        &rows,
+    );
+
+    // 2. Admission study at overload: shedding must buy goodput.
+    let open = cell(OVERLOAD, AdmissionPolicy::None, ArrivalProcess::Poisson, false);
+    let slo = cell(OVERLOAD, AdmissionPolicy::SloAware, ArrivalProcess::Poisson, false);
+    let (g_open, g_slo) = (f(sv(&open), "goodput_rps"), f(sv(&slo), "goodput_rps"));
+    let shed = u(sv(&slo), "shed");
+    assert!(shed > 0, "slo-aware admission must shed at {OVERLOAD} req/s/tenant");
+    assert!(
+        g_slo > g_open,
+        "slo-aware goodput {g_slo:.0} req/s must strictly beat open admission \
+         {g_open:.0} req/s at overload"
+    );
+    println!(
+        "admission @ {OVERLOAD} req/s/tenant: open {g_open:.0} vs slo-aware {g_slo:.0} \
+         goodput req/s ({shed} shed)"
+    );
+
+    // 3. Bursty arrivals + dynamic re-placement: the monitor must migrate
+    // live serving queues off the hot shard.
+    let bursty = cell(8_000.0, AdmissionPolicy::None, ArrivalProcess::Bursty, true);
+    let rep = bursty.replacement.as_ref().expect("replace-on run must report");
+    let migrations = rep.get("migrations").and_then(Json::as_u64).unwrap_or(0);
+    assert!(migrations > 0, "bursty serving under replace must migrate queued work");
+    println!("bursty + replace: {migrations} migration(s)");
+
+    let payload = Json::from_pairs(vec![
+        ("bench", "serving_load".into()),
+        ("devices", 4u64.into()),
+        ("gpus", 2u64.into()),
+        ("tenants", 4u64.into()),
+        ("workload", "mixed4k".into()),
+        ("seed", bs::SEED.into()),
+        ("arrival_rates", Json::Arr(RATES.iter().map(|r| (*r).into()).collect())),
+        ("sweep", Json::Arr(sweep)),
+        ("overload_rate", OVERLOAD.into()),
+        ("goodput_open_rps", g_open.into()),
+        ("goodput_slo_aware_rps", g_slo.into()),
+        ("overload_shed", shed.into()),
+        ("bursty_migrations", migrations.into()),
+    ]);
+    std::fs::write("BENCH_SERVING.json", payload.pretty()).expect("write BENCH_SERVING.json");
+    println!("shape OK: p99 monotone in load; slo-aware beats open at overload; wrote BENCH_SERVING.json");
+}

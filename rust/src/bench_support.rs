@@ -162,15 +162,153 @@ pub fn gpu_makespan(r: &Report) -> SimTime {
         .unwrap_or(0)
 }
 
+// --- unified scenario builder -------------------------------------------
+
+/// Canonical entry point for composing a simulation cell: every study knob
+/// the `*_run` / `*_cfg` helpers used to hard-wire is one chainable method
+/// on top of the enterprise preset. Knobs that depend on the final device
+/// count (`faults`, `device_mix`) are stored by name and resolved at
+/// [`Scenario::config`] time, so method order never matters.
+///
+/// ```ignore
+/// let report = Scenario::new(42)
+///     .devices(4)
+///     .gpus(2)
+///     .placement(Placement::PerfAware)
+///     .replace(true)
+///     .faults("dropout")
+///     .bundle(drift_bundle(42))
+///     .run();
+/// ```
+///
+/// The legacy `placement_run` / `replace_run` / `fault_run` / `fault_cfg` /
+/// `sim_threads_cfg` / `sim_threads_run` / `hetero_run` helpers are thin
+/// delegates onto this builder, so both spellings of a cell produce
+/// byte-identical reports.
+#[derive(Clone)]
+pub struct Scenario {
+    cfg: SimConfig,
+    faults: Option<String>,
+    device_mix: Option<String>,
+    bundle: Vec<WorkloadSpec>,
+}
+
+impl Scenario {
+    /// Fresh scenario on the enterprise preset with `seed`.
+    pub fn new(seed: u64) -> Self {
+        let mut cfg = config::mqms_enterprise();
+        cfg.seed = seed;
+        Self { cfg, faults: None, device_mix: None, bundle: Vec::new() }
+    }
+
+    /// Device count of the striped array.
+    pub fn devices(mut self, n: u32) -> Self {
+        self.cfg.devices = n;
+        self
+    }
+
+    /// Compute shard count.
+    pub fn gpus(mut self, n: u32) -> Self {
+        self.cfg.gpus = n;
+        self
+    }
+
+    /// Workload→GPU placement policy.
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.cfg.placement = p;
+        self
+    }
+
+    /// Enable/disable dynamic re-placement (queued-kernel migration).
+    pub fn replace(mut self, on: bool) -> Self {
+        self.cfg.replace.enabled = on;
+        self
+    }
+
+    /// Named fault scenario ([`config::fault_scenario`]); resolved against
+    /// the final device count when the config is built.
+    pub fn faults(mut self, scenario: &str) -> Self {
+        self.faults = Some(scenario.to_string());
+        self
+    }
+
+    /// Event-engine worker threads (1 = sequential).
+    pub fn sim_threads(mut self, n: u32) -> Self {
+        self.cfg.sim_threads = n;
+        self
+    }
+
+    /// Named per-device override mix ([`config::device_mix`]); resolved
+    /// against the final device count when the config is built.
+    pub fn device_mix(mut self, mix: &str) -> Self {
+        self.device_mix = Some(mix.to_string());
+        self
+    }
+
+    /// GPU DRAM capacity in bytes (0 disables the cache so every access
+    /// reaches storage — the storage-bound study regime).
+    pub fn dram_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.gpu.dram_bytes = bytes;
+        self
+    }
+
+    /// Prefetch pipeline depth (shallow pipelines surface I/O stalls as
+    /// makespan instead of hiding them in queue depth).
+    pub fn pipeline_depth(mut self, depth: u32) -> Self {
+        self.cfg.gpu.pipeline_depth = depth;
+        self
+    }
+
+    /// Open-loop serving front end (replaces the batch bundle as the work
+    /// source when enabled).
+    pub fn serving(mut self, s: config::ServingConfig) -> Self {
+        self.cfg.serving = s;
+        self
+    }
+
+    /// Batch workload bundle to run (ignored by the coordinator when a
+    /// serving config is active — serving cells mint their own arrivals).
+    pub fn bundle(mut self, specs: Vec<WorkloadSpec>) -> Self {
+        self.bundle = specs;
+        self
+    }
+
+    /// Resolve the final [`SimConfig`] (named faults / device mix applied
+    /// against the final device count).
+    pub fn config(&self) -> SimConfig {
+        let mut cfg = self.cfg.clone();
+        if let Some(mix) = &self.device_mix {
+            cfg.device_overrides =
+                config::device_mix(mix, cfg.devices).expect("known device mix");
+        }
+        if let Some(scenario) = &self.faults {
+            cfg.faults =
+                config::fault_scenario(scenario, cfg.devices).expect("known fault scenario");
+        }
+        cfg
+    }
+
+    /// Run the scenario and return the full report.
+    pub fn run(&self) -> Report {
+        run_bundle(self.config(), &self.bundle)
+    }
+
+    /// Run the scenario and return the deterministic JSON view — the
+    /// byte-identity currency of the engine/serving equivalence tests.
+    pub fn report(&self) -> Json {
+        self.run().to_json_deterministic()
+    }
+}
+
 /// One cell of the placement study: the skewed bundle on `gpus` compute
 /// shards over `devices` striped SSDs under `placement`.
 pub fn placement_run(gpus: u32, devices: u32, placement: Placement, seed: u64) -> Report {
-    let mut cfg = config::mqms_enterprise();
-    cfg.gpus = gpus;
-    cfg.devices = devices;
-    cfg.placement = placement;
-    cfg.seed = seed;
-    run_bundle(cfg, &skewed_llm_bundle(seed))
+    Scenario::new(seed)
+        .gpus(gpus)
+        .devices(devices)
+        .placement(placement)
+        .bundle(skewed_llm_bundle(seed))
+        .run()
 }
 
 // --- dynamic re-placement study (benches/replace_drift.rs +
@@ -226,15 +364,19 @@ pub fn drift_bundle(seed: u64) -> Vec<WorkloadSpec> {
 /// the prefetch pipeline is kept shallow so a shard's mispredicted I/O
 /// shows up as pipeline stall instead of disappearing into queue depth.
 pub fn replace_run(gpus: u32, devices: u32, replace: bool, seed: u64) -> Report {
-    let mut cfg = config::mqms_enterprise();
-    cfg.gpus = gpus;
-    cfg.devices = devices;
-    cfg.placement = Placement::PerfAware;
-    cfg.gpu.dram_bytes = 0;
-    cfg.gpu.pipeline_depth = 4;
-    cfg.replace.enabled = replace;
-    cfg.seed = seed;
-    run_bundle(cfg, &drift_bundle(seed))
+    drift_scenario(gpus, devices, replace, seed).bundle(drift_bundle(seed)).run()
+}
+
+/// Shared base of the drift studies: PerfAware placement, DRAM off, shallow
+/// prefetch pipeline (see [`replace_run`] for why).
+fn drift_scenario(gpus: u32, devices: u32, replace: bool, seed: u64) -> Scenario {
+    Scenario::new(seed)
+        .gpus(gpus)
+        .devices(devices)
+        .placement(Placement::PerfAware)
+        .dram_bytes(0)
+        .pipeline_depth(4)
+        .replace(replace)
 }
 
 // --- fault-injection / graceful-degradation study
@@ -253,7 +395,10 @@ pub fn fault_run(
     replace: bool,
     seed: u64,
 ) -> Report {
-    run_bundle(fault_cfg(gpus, devices, scenario, replace, seed), &drift_bundle(seed))
+    drift_scenario(gpus, devices, replace, seed)
+        .faults(scenario)
+        .bundle(drift_bundle(seed))
+        .run()
 }
 
 /// The resolved config of one [`fault_run`] cell, exposed so the parallel
@@ -266,16 +411,7 @@ pub fn fault_cfg(
     replace: bool,
     seed: u64,
 ) -> SimConfig {
-    let mut cfg = config::mqms_enterprise();
-    cfg.gpus = gpus;
-    cfg.devices = devices;
-    cfg.placement = Placement::PerfAware;
-    cfg.gpu.dram_bytes = 0;
-    cfg.gpu.pipeline_depth = 4;
-    cfg.replace.enabled = replace;
-    cfg.faults = config::fault_scenario(scenario, devices).expect("known fault scenario");
-    cfg.seed = seed;
-    cfg
+    drift_scenario(gpus, devices, replace, seed).faults(scenario).config()
 }
 
 // --- parallel intra-run engine study (benches/sim_threads_scaling.rs +
@@ -286,13 +422,12 @@ pub fn fault_cfg(
 /// is disabled so every access reaches storage — the event stream is
 /// device-dominated, the regime the sharded engine parallelizes.
 pub fn sim_threads_cfg(devices: u32, gpus: u32, sim_threads: u32, seed: u64) -> SimConfig {
-    let mut cfg = config::mqms_enterprise();
-    cfg.devices = devices;
-    cfg.gpus = gpus;
-    cfg.gpu.dram_bytes = 0;
-    cfg.sim_threads = sim_threads;
-    cfg.seed = seed;
-    cfg
+    Scenario::new(seed)
+        .devices(devices)
+        .gpus(gpus)
+        .dram_bytes(0)
+        .sim_threads(sim_threads)
+        .config()
 }
 
 /// Saturating bundle for the scaling study: one BERT instance per compute
@@ -320,7 +455,13 @@ pub fn sim_threads_bundle(gpus: u32, seed: u64) -> Vec<WorkloadSpec> {
 /// both the deterministic payload (byte-compared across thread counts) and
 /// the host wall-clock (`wall_s`) the speedup figures divide.
 pub fn sim_threads_run(devices: u32, gpus: u32, sim_threads: u32, seed: u64) -> Report {
-    run_bundle(sim_threads_cfg(devices, gpus, sim_threads, seed), &sim_threads_bundle(gpus, seed))
+    Scenario::new(seed)
+        .devices(devices)
+        .gpus(gpus)
+        .dram_bytes(0)
+        .sim_threads(sim_threads)
+        .bundle(sim_threads_bundle(gpus, seed))
+        .run()
 }
 
 /// `BENCH_SIM_THREADS.json` payload: per-thread-count event rates plus the
@@ -424,15 +565,15 @@ pub fn hetero_run(
     mix: &str,
     seed: u64,
 ) -> Report {
-    let mut cfg = config::mqms_enterprise();
-    cfg.gpus = gpus;
-    cfg.devices = devices;
-    cfg.placement = placement;
-    cfg.gpu.dram_bytes = 0;
-    cfg.gpu.pipeline_depth = 4;
-    cfg.seed = seed;
-    cfg.device_overrides = config::device_mix(mix, devices).expect("known device mix");
-    run_bundle(cfg, &asym_io_bundle())
+    Scenario::new(seed)
+        .gpus(gpus)
+        .devices(devices)
+        .placement(placement)
+        .dram_bytes(0)
+        .pipeline_depth(4)
+        .device_mix(mix)
+        .bundle(asym_io_bundle())
+        .run()
 }
 
 // --- hot-path regression harness (benches/hotpath_regression.rs + `mqms
@@ -673,6 +814,47 @@ mod tests {
             assert!(!t.records.is_empty(), "{name}");
             assert!(stats.reduction_factor() >= 1.0);
         }
+    }
+
+    #[test]
+    fn scenario_builder_matches_legacy_cfg_helpers() {
+        // The legacy cfg helpers are delegates, but pin the equivalence
+        // explicitly so a builder regression cannot silently change a study.
+        let a = fault_cfg(2, 4, "dropout", true, 7).to_json().pretty();
+        let b = Scenario::new(7)
+            .gpus(2)
+            .devices(4)
+            .placement(Placement::PerfAware)
+            .dram_bytes(0)
+            .pipeline_depth(4)
+            .replace(true)
+            .faults("dropout")
+            .config()
+            .to_json()
+            .pretty();
+        assert_eq!(a, b);
+        let c = sim_threads_cfg(4, 2, 3, 11).to_json().pretty();
+        let d = Scenario::new(11)
+            .devices(4)
+            .gpus(2)
+            .dram_bytes(0)
+            .sim_threads(3)
+            .config()
+            .to_json()
+            .pretty();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn scenario_resolves_named_knobs_against_final_devices() {
+        // faults/device_mix are stored by name and resolved at config()
+        // time, so calling them before or after .devices() is identical.
+        let before = Scenario::new(3).faults("dropout").device_mix("mixed").devices(4).config();
+        let after = Scenario::new(3).devices(4).faults("dropout").device_mix("mixed").config();
+        assert_eq!(before.to_json().pretty(), after.to_json().pretty());
+        // The dropout victim is the last device — only resolvable with the
+        // final count.
+        assert!(!before.faults.devices.is_empty());
     }
 
     #[test]

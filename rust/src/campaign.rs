@@ -56,6 +56,15 @@ pub struct CampaignSpec {
     /// `degrade` / `dropout` inject the corresponding per-device schedule
     /// resolved against the cell's device count.
     pub faults: Vec<String>,
+    /// Open-loop serving sweep: per-tenant arrival rates (requests/s).
+    /// Any non-empty value (here or in `tenants`) switches the swept cells
+    /// into serving mode ([`config::ServingConfig`]) — the latency-vs-load
+    /// axis. Empty = closed-batch cells, byte-identical to earlier layouts.
+    pub arrival_rates: Vec<f64>,
+    /// Open-loop serving sweep: tenant counts sharing the array. Empty =
+    /// the serving default when `arrival_rates` is swept, closed-batch
+    /// cells otherwise.
+    pub tenants: Vec<u32>,
     /// Root seed; every cell runs with this seed (a cell is then directly
     /// comparable to `mqms run --seed <seed>` with the same parameters).
     pub seed: u64,
@@ -91,6 +100,8 @@ impl Default for CampaignSpec {
             rw_ratios: Vec::new(),
             op_ratios: Vec::new(),
             faults: vec!["none".into()],
+            arrival_rates: Vec::new(),
+            tenants: Vec::new(),
             seed: 42,
             threads: 0,
             sim_threads: 1,
@@ -120,6 +131,12 @@ pub struct Cell {
     /// Named fault scenario resolved against `devices`
     /// ([`config::fault_scenario`]); `"none"` is the fault-free cell.
     pub faults: String,
+    /// Per-tenant arrival rate override (`None` = the axis is unswept;
+    /// serving stays off unless `tenants` is swept).
+    pub arrival_rate: Option<f64>,
+    /// Tenant-count override (`None` = unswept; serving stays off unless
+    /// `arrival_rate` is swept, in which case the config default applies).
+    pub tenants: Option<u32>,
 }
 
 impl Cell {
@@ -149,6 +166,12 @@ impl Cell {
         if self.faults != "none" {
             s.push_str(&format!("-{}", self.faults));
         }
+        if let Some(r) = self.arrival_rate {
+            s.push_str(&format!("-ar{r}"));
+        }
+        if let Some(t) = self.tenants {
+            s.push_str(&format!("-t{t}"));
+        }
         s
     }
 }
@@ -169,6 +192,12 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
     };
     let rw_axis = opt_axis(&spec.rw_ratios);
     let op_axis = opt_axis(&spec.op_ratios);
+    let ar_axis = opt_axis(&spec.arrival_rates);
+    let tn_axis: Vec<Option<u32>> = if spec.tenants.is_empty() {
+        vec![None]
+    } else {
+        spec.tenants.iter().copied().map(Some).collect()
+    };
     // An empty faults axis means "fault-free", matching the rw/op idiom.
     let fault_axis: Vec<String> = if spec.faults.is_empty() {
         vec!["none".to_string()]
@@ -193,19 +222,25 @@ pub fn expand(spec: &CampaignSpec) -> Vec<Cell> {
                                     for &rw_ratio in &rw_axis {
                                         for &op_ratio in &op_axis {
                                             for faults in &fault_axis {
-                                                cells.push(Cell {
-                                                    preset: preset.clone(),
-                                                    workload: workload.clone(),
-                                                    scale,
-                                                    devices,
-                                                    device_mix: device_mix.clone(),
-                                                    gpus,
-                                                    placement,
-                                                    replace,
-                                                    rw_ratio,
-                                                    op_ratio,
-                                                    faults: faults.clone(),
-                                                });
+                                                for &arrival_rate in &ar_axis {
+                                                    for &tenants in &tn_axis {
+                                                        cells.push(Cell {
+                                                            preset: preset.clone(),
+                                                            workload: workload.clone(),
+                                                            scale,
+                                                            devices,
+                                                            device_mix: device_mix.clone(),
+                                                            gpus,
+                                                            placement,
+                                                            replace,
+                                                            rw_ratio,
+                                                            op_ratio,
+                                                            faults: faults.clone(),
+                                                            arrival_rate,
+                                                            tenants,
+                                                        });
+                                                    }
+                                                }
                                             }
                                         }
                                     }
@@ -276,6 +311,20 @@ pub fn cell_config(cell: &Cell, seed: u64) -> Result<SimConfig, String> {
     if cell.device_mix != "uniform" {
         cfg.device_overrides = mix;
     }
+    // Sweeping either serving axis turns the cell into an open-loop serving
+    // run; the swept cell's workload becomes the request template. Unswept
+    // cells never touch `cfg.serving`, keeping closed-batch bytes intact.
+    if cell.arrival_rate.is_some() || cell.tenants.is_some() {
+        cfg.serving.enabled = true;
+        cfg.serving.workload = cell.workload.clone();
+        cfg.serving.request_scale = cell.scale;
+        if let Some(r) = cell.arrival_rate {
+            cfg.serving.rate_per_tenant = r;
+        }
+        if let Some(t) = cell.tenants {
+            cfg.serving.tenants = t;
+        }
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -323,13 +372,19 @@ pub fn run_cell_traced(
         cfg.trace.enabled = true;
     }
     cfg.validate()?;
-    let (mut wspec, _stats) =
-        workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
-    if let Some(rw) = cell.rw_ratio {
-        apply_rw_ratio(&mut wspec, rw);
-    }
+    // Serving cells use the workload as the open-loop request template
+    // (wired into `cfg.serving` by [`cell_config`]) rather than as a
+    // one-shot batch job; closed-batch cells admit it as before.
+    let serving_cell = cell.arrival_rate.is_some() || cell.tenants.is_some();
     let mut sim = CoSim::new(cfg);
-    sim.add_workload(wspec);
+    if !serving_cell {
+        let (mut wspec, _stats) =
+            workloads::spec_by_name_sampled(&cell.workload, cell.scale, seed, sampled)?;
+        if let Some(rw) = cell.rw_ratio {
+            apply_rw_ratio(&mut wspec, rw);
+        }
+        sim.add_workload(wspec);
+    }
     let report = sim.run();
     let trace_out = if trace { sim.take_trace() } else { None };
     Ok((report, trace_out))
@@ -402,6 +457,16 @@ pub fn run_streaming(
                 "unknown fault scenario `{f}` (valid: {})",
                 config::FAULT_SCENARIO_NAMES.join(", ")
             ));
+        }
+    }
+    for &r in &spec.arrival_rates {
+        if !(r.is_finite() && r > 0.0) {
+            return Err(format!("arrival rate {r} must be finite and > 0"));
+        }
+    }
+    for &t in &spec.tenants {
+        if t == 0 {
+            return Err("tenant count 0 in --tenants (must be ≥ 1)".to_string());
         }
     }
     if spec.sim_threads == 0 {
@@ -523,6 +588,11 @@ pub fn summary_json(results: &[(Cell, Report)]) -> Json {
                 ("rw_ratio", c.rw_ratio.map(Json::from).unwrap_or(Json::Null)),
                 ("op_ratio", c.op_ratio.map(Json::from).unwrap_or(Json::Null)),
                 ("faults", c.faults.as_str().into()),
+                ("arrival_rate", c.arrival_rate.map(Json::from).unwrap_or(Json::Null)),
+                (
+                    "tenants",
+                    c.tenants.map(|t| Json::from(u64::from(t))).unwrap_or(Json::Null),
+                ),
                 ("device_configs", Json::Arr(fingerprints)),
                 ("report", r.to_json_deterministic()),
             ])
@@ -566,13 +636,15 @@ the quantile_merge column says which regime each row is in";
 /// `quantile_merge` column is `exact` or `max-upper-bound` (see
 /// [`crate::metrics::SsdSummary::merge`] and [`CSV_NOTE`]).
 pub const CSV_HEADER: &str = "preset,workload,scale,devices,device_mix,gpus,placement,replace,\
-rw_ratio,op_ratio,faults,end_ns,gpu_makespan_ns,completed,iops,mean_response_ns,\
-read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,quantile_merge,events_per_sec";
+rw_ratio,op_ratio,faults,arrival_rate,tenants,end_ns,gpu_makespan_ns,completed,iops,\
+mean_response_ns,read_p50_ns,read_p99_ns,write_p50_ns,write_p99_ns,quantile_merge,\
+events_per_sec,offered,shed,goodput_rps,serving_p99_ns";
 
 /// One CSV data row matching [`CSV_HEADER`]. Everything except
 /// `events_per_sec` (a host wall-clock rate) is deterministic for a fixed
 /// seed. Axis values never contain commas (preset/workload names are
-/// identifiers or file paths); unswept rw/op axes print `-`. For
+/// identifiers or file paths); unswept rw/op/serving axes print `-`, and so
+/// do the trailing serving metric columns of a closed-batch row. For
 /// multi-device cells the response quantile columns are worst-device upper
 /// bounds (see [`crate::metrics::SsdSummary::merge`]), exact for
 /// `devices = 1` — the `quantile_merge` column carries the regime per row.
@@ -582,8 +654,19 @@ pub fn csv_row(cell: &Cell, r: &Report) -> String {
         Some(x) => x.to_string(),
         None => "-".to_string(),
     };
+    let sv = r.serving.as_ref();
+    let sv_u = |key: &str| {
+        sv.and_then(|s| s.get(key))
+            .and_then(|v| v.as_u64())
+            .map_or_else(|| "-".to_string(), |v| v.to_string())
+    };
+    let sv_f = |key: &str| {
+        sv.and_then(|s| s.get(key))
+            .and_then(|v| v.as_f64())
+            .map_or_else(|| "-".to_string(), |v| format!("{v:.3}"))
+    };
     format!(
-        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{},{:.3}",
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.3},{:.3},{},{},{},{},{},{:.3},{},{},{},{}",
         cell.preset,
         cell.workload,
         cell.scale,
@@ -595,6 +678,8 @@ pub fn csv_row(cell: &Cell, r: &Report) -> String {
         opt(cell.rw_ratio),
         opt(cell.op_ratio),
         cell.faults,
+        opt(cell.arrival_rate),
+        cell.tenants.map_or_else(|| "-".to_string(), |t| t.to_string()),
         r.end_ns,
         crate::bench_support::gpu_makespan(r),
         r.ssd.completed,
@@ -606,6 +691,10 @@ pub fn csv_row(cell: &Cell, r: &Report) -> String {
         r.ssd.write_p99_ns,
         if r.ssd.merged_quantiles { "max-upper-bound" } else { "exact" },
         events_per_sec,
+        sv_u("offered"),
+        sv_u("shed"),
+        sv_f("goodput_rps"),
+        sv_u("latency_p99_ns"),
     )
 }
 
@@ -663,6 +752,8 @@ mod tests {
             rw_ratio: None,
             op_ratio: None,
             faults: "none".into(),
+            arrival_rate: None,
+            tenants: None,
         };
         let tie = vec![cell(0.01, 1), cell(0.005, 2)];
         assert_eq!(schedule_order(&tie), vec![0, 1]);
@@ -773,6 +864,8 @@ mod tests {
             rw_ratio: None,
             op_ratio: Some(0.5),
             faults: "none".to_string(),
+            arrival_rate: None,
+            tenants: None,
         };
         let cfg = cell_config(&cell, 7).unwrap();
         assert_eq!(cfg.device_overrides.len(), 4);
@@ -817,6 +910,85 @@ mod tests {
         let bad = CampaignSpec { faults: vec!["nope".into()], ..CampaignSpec::default() };
         let err = run(&bad).unwrap_err();
         assert!(err.contains("fault scenario"), "{err}");
+    }
+
+    #[test]
+    fn serving_axes_expand_configure_and_validate() {
+        let spec = CampaignSpec {
+            presets: vec!["a".into()],
+            workloads: vec!["w".into()],
+            scales: vec![0.1],
+            devices: vec![1],
+            arrival_rates: vec![500.0, 2000.0],
+            tenants: vec![2],
+            ..CampaignSpec::default()
+        };
+        let cells = expand(&spec);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].label(), "a/w@0.1x1d-ar500-t2");
+        assert_eq!(cells[1].label(), "a/w@0.1x1d-ar2000-t2");
+        let labels: std::collections::HashSet<String> =
+            cells.iter().map(Cell::label).collect();
+        assert_eq!(labels.len(), cells.len(), "labels must stay unique");
+        // The swept axes resolve into an enabled serving block carrying the
+        // cell's workload as the request template.
+        let mut cell = cells[0].clone();
+        cell.preset = "mqms".to_string();
+        cell.workload = "rand4k".to_string();
+        cell.scale = 0.001;
+        let cfg = cell_config(&cell, 7).unwrap();
+        assert!(cfg.serving.enabled());
+        assert!((cfg.serving.rate_per_tenant - 500.0).abs() < 1e-9);
+        assert_eq!(cfg.serving.tenants, 2);
+        assert_eq!(cfg.serving.workload, "rand4k");
+        // Unswept axes leave serving off entirely.
+        let mut off = cell.clone();
+        off.arrival_rate = None;
+        off.tenants = None;
+        assert!(!cell_config(&off, 7).unwrap().serving.enabled());
+        // Bad axis values fail before any cell runs.
+        let bad = CampaignSpec { arrival_rates: vec![-1.0], ..CampaignSpec::default() };
+        assert!(run(&bad).unwrap_err().contains("arrival rate"));
+        let bad = CampaignSpec { tenants: vec![0], ..CampaignSpec::default() };
+        assert!(run(&bad).unwrap_err().contains("tenant count"));
+    }
+
+    #[test]
+    fn serving_cell_runs_and_emits_serving_csv_columns() {
+        let cell = Cell {
+            preset: "mqms".to_string(),
+            workload: "rand4k".to_string(),
+            scale: 0.0001,
+            devices: 1,
+            device_mix: "uniform".to_string(),
+            gpus: 1,
+            placement: Placement::RoundRobin,
+            replace: false,
+            rw_ratio: None,
+            op_ratio: None,
+            faults: "none".to_string(),
+            arrival_rate: Some(2_000.0),
+            tenants: Some(2),
+        };
+        let report = run_cell(&cell, 7, true, 1).unwrap();
+        let sv = report.serving.as_ref().expect("serving cell must report the section");
+        assert!(sv.get("offered").unwrap().as_u64().unwrap() > 0);
+        let row = csv_row(&cell, &report);
+        let n_cols = CSV_HEADER.split(',').count();
+        assert_eq!(row.split(',').count(), n_cols, "row arity: {row}");
+        // The serving metric columns carry values, not the `-` placeholder.
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_ne!(cols[n_cols - 4], "-", "offered column: {row}");
+        assert_ne!(cols[n_cols - 1], "-", "serving p99 column: {row}");
+        // Closed-batch rows keep placeholders in the serving columns.
+        let mut batch = cell.clone();
+        batch.arrival_rate = None;
+        batch.tenants = None;
+        let br = run_cell(&batch, 7, true, 1).unwrap();
+        assert!(br.serving.is_none(), "closed-batch report must omit serving");
+        let brow = csv_row(&batch, &br);
+        assert_eq!(brow.split(',').count(), n_cols);
+        assert!(brow.ends_with(",-,-,-,-"), "batch serving columns: {brow}");
     }
 
     #[test]

@@ -544,6 +544,190 @@ impl TraceConfig {
     }
 }
 
+/// Arrival process of the open-loop serving front end
+/// ([`ServingConfig`]). Every process is realized by per-tenant seeded rng
+/// streams — no wall clock — so a serving run is a pure function of the
+/// config and seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Memoryless Poisson arrivals: exponential inter-arrival gaps at the
+    /// tenant's mean rate.
+    Poisson,
+    /// Bursty MMPP(2): the tenant alternates between a hot and a quiet
+    /// Poisson state (exponential sojourns), with the long-run mean rate
+    /// matching `rate_per_tenant`.
+    Bursty,
+    /// Deterministic replay of an evenly spaced arrival log at the tenant's
+    /// rate, phase-shifted per tenant so tenants never arrive in lockstep.
+    TraceReplay,
+}
+
+/// Valid [`ArrivalProcess`] names, for CLI/help error messages.
+pub const ARRIVAL_PROCESS_NAMES: [&str; 3] = ["poisson", "bursty", "trace-replay"];
+
+impl ArrivalProcess {
+    pub const ALL: [ArrivalProcess; 3] =
+        [ArrivalProcess::Poisson, ArrivalProcess::Bursty, ArrivalProcess::TraceReplay];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty => "bursty",
+            ArrivalProcess::TraceReplay => "trace-replay",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(ArrivalProcess::Poisson),
+            "bursty" | "mmpp" => Some(ArrivalProcess::Bursty),
+            "trace-replay" | "replay" => Some(ArrivalProcess::TraceReplay),
+            _ => None,
+        }
+    }
+}
+
+/// Admission policy of the serving scheduler ([`ServingConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit every arrival (open admission — queues grow without bound
+    /// under overload).
+    None,
+    /// Shed an arrival when its projected completion (shard backlog +
+    /// request cost through the static cost model) exceeds the tenant's
+    /// SLO budget.
+    SloAware,
+}
+
+/// Valid [`AdmissionPolicy`] names, for CLI/help error messages.
+pub const ADMISSION_POLICY_NAMES: [&str; 2] = ["none", "slo-aware"];
+
+impl AdmissionPolicy {
+    pub const ALL: [AdmissionPolicy; 2] = [AdmissionPolicy::None, AdmissionPolicy::SloAware];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::None => "none",
+            AdmissionPolicy::SloAware => "slo-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "open" => Some(AdmissionPolicy::None),
+            "slo-aware" | "slo" => Some(AdmissionPolicy::SloAware),
+            _ => None,
+        }
+    }
+}
+
+/// Open-loop multi-tenant serving configuration. Off by default: with
+/// `enabled = false` the coordinator schedules no arrival events and a run
+/// is byte-identical to the closed-batch behaviour the equivalence suites
+/// pin (`tests/serving.rs`). Enabled, each of `tenants` tenant streams
+/// mints request instances of the `workload` template at `rate_per_tenant`
+/// over `[0, horizon_ns)`, admitted into per-shard queues by the placement
+/// policy (with optional SLO-aware shedding) — see
+/// `coordinator` for the scheduler and the report's sparse `serving`
+/// section for the per-tenant latency/goodput metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Master switch for the open-loop front end.
+    pub enabled: bool,
+    /// Arrival process shared by every tenant stream.
+    pub process: ArrivalProcess,
+    /// Mean arrival rate per tenant, requests per second.
+    pub rate_per_tenant: f64,
+    /// Tenant streams (each with its own seeded arrival rng).
+    pub tenants: u32,
+    /// Per-tenant SLO latency budget (arrival → completion), simulated ns.
+    /// Both the slo-aware admission bound and the goodput cutoff.
+    pub slo_ns: u64,
+    /// Admission policy at the placement layer.
+    pub admission: AdmissionPolicy,
+    /// Arrival-generation window, simulated ns: arrivals are minted in
+    /// `[0, horizon_ns)`; the run then drains to quiescence.
+    pub horizon_ns: u64,
+    /// Workload template every request instantiates
+    /// ([`crate::workloads::spec_by_name`] — trace generators and synthetic
+    /// streams both mint).
+    pub workload: String,
+    /// Scale factor of the per-request template (a request is a small
+    /// instance of the template workload).
+    pub request_scale: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            process: ArrivalProcess::Poisson,
+            rate_per_tenant: 2_000.0,
+            tenants: 4,
+            slo_ns: 20_000_000,
+            admission: AdmissionPolicy::None,
+            horizon_ns: 20_000_000,
+            workload: "bert".to_string(),
+            request_scale: 0.0001,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Whether the open-loop front end is active (arrival events exist).
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn validate(&self, errs: &mut Vec<String>) {
+        if !self.enabled {
+            return;
+        }
+        if !(self.rate_per_tenant > 0.0 && self.rate_per_tenant.is_finite()) {
+            errs.push(format!(
+                "serving.rate_per_tenant {} must be finite and > 0",
+                self.rate_per_tenant
+            ));
+        }
+        if self.tenants == 0 {
+            errs.push("serving.tenants must be ≥ 1".to_string());
+        }
+        if self.slo_ns == 0 {
+            errs.push("serving.slo_ns must be ≥ 1 (the per-tenant latency budget)".to_string());
+        }
+        if self.horizon_ns == 0 {
+            errs.push("serving.horizon_ns must be ≥ 1".to_string());
+        }
+        if !(self.request_scale > 0.0 && self.request_scale.is_finite()) {
+            errs.push(format!(
+                "serving.request_scale {} must be finite and > 0",
+                self.request_scale
+            ));
+        }
+        if !crate::workloads::is_valid_name(&self.workload) {
+            errs.push(format!(
+                "serving.workload `{}` unknown (valid traces: {}; synthetic: {})",
+                self.workload,
+                crate::workloads::ALL_WORKLOADS.join(", "),
+                crate::workloads::SYNTH_WORKLOADS.join(", ")
+            ));
+        }
+        // Bound the arrival volume up front: the whole schedule is
+        // pre-generated at start, so an absurd rate × horizon × tenants
+        // product must fail validation instead of exhausting memory.
+        if self.rate_per_tenant.is_finite() {
+            let expected =
+                self.rate_per_tenant / 1e9 * self.horizon_ns as f64 * self.tenants as f64;
+            if expected > 2_000_000.0 {
+                errs.push(format!(
+                    "serving arrival volume too large (~{expected:.0} expected requests; \
+                     lower rate_per_tenant, tenants, or horizon_ns)"
+                ));
+            }
+        }
+    }
+}
+
 /// One device's fault schedule inside a [`FaultPlan`]. All times are
 /// simulated ns; every mechanism is off at its default value, so a spec
 /// that only names a device injects nothing.
@@ -887,6 +1071,9 @@ pub struct SimConfig {
     /// Sim-time tracing / telemetry (requires the `trace` cargo feature to
     /// take effect). Default = off, byte-identical runs.
     pub trace: TraceConfig,
+    /// Open-loop multi-tenant serving front end (arrival processes, SLO
+    /// admission). Default = off, byte-identical closed-batch runs.
+    pub serving: ServingConfig,
     pub ssd: SsdConfig,
     pub gpu: GpuConfig,
     pub path: PathConfig,
@@ -967,6 +1154,7 @@ impl SimConfig {
         self.replace.validate(&mut errs);
         self.faults.validate(&mut errs, self.devices);
         self.trace.validate(&mut errs);
+        self.serving.validate(&mut errs);
         if self.sim_threads == 0 {
             errs.push("sim_threads must be ≥ 1 (1 = sequential engine)".to_string());
         }
@@ -1119,6 +1307,26 @@ impl SimConfig {
             )
             .expect("config json is an object");
         }
+        // Sparse: serving-off (closed-batch) configs stay byte-identical on
+        // round-trip.
+        if self.serving != ServingConfig::default() {
+            let sv = &self.serving;
+            j.set(
+                "serving",
+                Json::from_pairs(vec![
+                    ("enabled", sv.enabled.into()),
+                    ("process", sv.process.name().into()),
+                    ("rate_per_tenant", sv.rate_per_tenant.into()),
+                    ("tenants", u64::from(sv.tenants).into()),
+                    ("slo_ns", sv.slo_ns.into()),
+                    ("admission", sv.admission.name().into()),
+                    ("horizon_ns", sv.horizon_ns.into()),
+                    ("workload", sv.workload.as_str().into()),
+                    ("request_scale", sv.request_scale.into()),
+                ]),
+            )
+            .expect("config json is an object");
+        }
         j
     }
 
@@ -1196,6 +1404,39 @@ impl SimConfig {
             }
             if let Some(v) = t.get("sample_ns").and_then(Json::as_u64) {
                 c.sample_ns = v;
+            }
+        }
+        if let Some(sv) = j.get("serving") {
+            let c = &mut cfg.serving;
+            if let Some(v) = sv.get("enabled").and_then(Json::as_bool) {
+                c.enabled = v;
+            }
+            if let Some(v) = sv.get("process").and_then(Json::as_str) {
+                c.process = ArrivalProcess::parse(v)
+                    .ok_or_else(|| format!("bad serving.process: {v}"))?;
+            }
+            if let Some(v) = sv.get("rate_per_tenant").and_then(Json::as_f64) {
+                c.rate_per_tenant = v;
+            }
+            if let Some(v) = sv.get("tenants").and_then(Json::as_u64) {
+                c.tenants =
+                    u32::try_from(v).map_err(|_| format!("serving.tenants out of range: {v}"))?;
+            }
+            if let Some(v) = sv.get("slo_ns").and_then(Json::as_u64) {
+                c.slo_ns = v;
+            }
+            if let Some(v) = sv.get("admission").and_then(Json::as_str) {
+                c.admission = AdmissionPolicy::parse(v)
+                    .ok_or_else(|| format!("bad serving.admission: {v}"))?;
+            }
+            if let Some(v) = sv.get("horizon_ns").and_then(Json::as_u64) {
+                c.horizon_ns = v;
+            }
+            if let Some(v) = sv.get("workload").and_then(Json::as_str) {
+                c.workload = v.to_string();
+            }
+            if let Some(v) = sv.get("request_scale").and_then(Json::as_f64) {
+                c.request_scale = v;
             }
         }
         if let Some(s) = j.get("ssd") {
@@ -1525,6 +1766,82 @@ mod tests {
         let mut bad = cfg.clone();
         bad.faults.max_sq_retry_rounds = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn serving_block_roundtrips_and_validates() {
+        // Presets default to serving-off, and the key is sparse.
+        assert_eq!(mqms_enterprise().serving, ServingConfig::default());
+        assert!(!mqms_enterprise().serving.enabled());
+        assert!(mqms_enterprise().to_json().get("serving").is_none());
+        let mut cfg = mqms_enterprise();
+        cfg.gpus = 2;
+        cfg.serving.enabled = true;
+        cfg.serving.process = ArrivalProcess::Bursty;
+        cfg.serving.rate_per_tenant = 5_000.0;
+        cfg.serving.tenants = 3;
+        cfg.serving.slo_ns = 4_000_000;
+        cfg.serving.admission = AdmissionPolicy::SloAware;
+        cfg.serving.horizon_ns = 10_000_000;
+        cfg.serving.workload = "rand4k".to_string();
+        cfg.serving.request_scale = 0.002;
+        cfg.validate().unwrap();
+        assert!(cfg.serving.enabled());
+        let re = SimConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, re);
+        assert_eq!(re.serving.process, ArrivalProcess::Bursty);
+        assert_eq!(re.serving.admission, AdmissionPolicy::SloAware);
+        // Every process/admission name round-trips through parse.
+        for p in ArrivalProcess::ALL {
+            assert_eq!(ArrivalProcess::parse(p.name()), Some(p));
+        }
+        for a in AdmissionPolicy::ALL {
+            assert_eq!(AdmissionPolicy::parse(a.name()), Some(a));
+        }
+        assert_eq!(ARRIVAL_PROCESS_NAMES.len(), ArrivalProcess::ALL.len());
+        assert_eq!(ADMISSION_POLICY_NAMES.len(), AdmissionPolicy::ALL.len());
+        // Bad knob values are load errors, not silent defaults.
+        let mut bad = cfg.clone();
+        bad.serving.rate_per_tenant = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.serving.rate_per_tenant = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.serving.tenants = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.serving.slo_ns = 0; // malformed SLO budget
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.serving.horizon_ns = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.serving.request_scale = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.serving.workload = "no-such-workload".to_string();
+        assert!(bad.validate().is_err());
+        // Arrival volume is bounded up front (schedule is pre-generated).
+        let mut bad = cfg.clone();
+        bad.serving.rate_per_tenant = 1e12;
+        assert!(bad.validate().is_err());
+        // Disabled blocks skip knob validation entirely.
+        let mut off = cfg.clone();
+        off.serving.enabled = false;
+        off.serving.rate_per_tenant = 0.0;
+        off.validate().unwrap();
+        // Bad process/admission names are load errors.
+        let mut j = cfg.to_json();
+        let mut sj = j.get("serving").cloned().unwrap();
+        sj.set("process", "nope".into()).unwrap();
+        j.set("serving", sj).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
+        let mut j = cfg.to_json();
+        let mut sj = j.get("serving").cloned().unwrap();
+        sj.set("admission", "nope".into()).unwrap();
+        j.set("serving", sj).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -76,6 +76,7 @@ pub fn mqms_enterprise() -> SimConfig {
         faults: FaultPlan::default(),
         sim_threads: 1,
         trace: TraceConfig::default(),
+        serving: ServingConfig::default(),
         ssd: enterprise_ssd_base(),
         gpu: default_gpu(),
         path: PathConfig {
@@ -112,6 +113,7 @@ pub fn baseline_mqsim_macsim() -> SimConfig {
         faults: FaultPlan::default(),
         sim_threads: 1,
         trace: TraceConfig::default(),
+        serving: ServingConfig::default(),
         ssd,
         gpu: default_gpu(),
         path: PathConfig {

@@ -12,7 +12,8 @@
 //!   pattern" whose propagation overhead the paper measures at >80 % of GNN
 //!   processing latency.
 
-use crate::config::{IoPath, SimConfig};
+use crate::config::{AdmissionPolicy, ArrivalProcess, IoPath, ServingConfig, SimConfig};
+use crate::gpu::trace::KernelRecord;
 use crate::gpu::{self, monitor, placement, replace, GpuSim, TaggedGpuEvent};
 use crate::metrics::{PerSourceAcc, Report, SsdSummary, WorkloadReport};
 use crate::sim::audit;
@@ -54,6 +55,11 @@ pub enum Ev {
     /// only when the `replace` policy is enabled on a multi-shard run, so a
     /// replace-off world sees a byte-identical event stream.
     MonitorTick,
+    /// One open-loop serving request reaching the admission layer
+    /// (`idx` indexes the pre-generated arrival schedule). Scheduled only
+    /// when `cfg.serving` is enabled, so a serving-off world sees a
+    /// byte-identical event stream.
+    Arrival { idx: usize },
 }
 
 impl From<ArrayEvent> for Ev {
@@ -126,6 +132,131 @@ impl SynthStream {
     }
 }
 
+/// One scheduled open-loop request: its tenant, arrival instant, and the
+/// admission outcome (filled in when the arrival event fires).
+struct Arrival {
+    tenant: u32,
+    at_ns: SimTime,
+    admitted: bool,
+    shed: bool,
+}
+
+/// Open-loop serving front end: the pre-generated arrival schedule plus the
+/// request template every admitted arrival instantiates. Everything here is
+/// a pure function of (config, seed), fixed at [`CoSim::start`] — no wall
+/// clock anywhere — so serving runs are deterministic and `--sim-threads`
+/// replays the identical arrival stream on the coordinator path.
+struct ServingState {
+    /// Interned kernel-name table of the request template.
+    template_names: Vec<String>,
+    /// Kernel records each admitted request replays.
+    records: Vec<KernelRecord>,
+    footprint_sectors: u64,
+    /// Per-tenant region base: all requests of one tenant share a region
+    /// slot (their working set is the tenant's model image).
+    region_base: Vec<u64>,
+    region_len: u64,
+    /// Per-request DRAM hit rate (per-tenant DRAM share over footprint,
+    /// mirroring [`GpuSim::start`]'s per-slot split).
+    hit_rate: f64,
+    /// First serving source id; batch trace workloads take `0..src_base`
+    /// and synthetic streams follow the serving range.
+    src_base: usize,
+    /// Time-sorted arrival schedule; index == arrival id == source offset.
+    arrivals: Vec<Arrival>,
+    /// Arrival events scheduled but not yet handled — keeps the monitor
+    /// ticking across quiet gaps between arrivals.
+    pending: usize,
+    /// Σ `record_cost(..).end_ns()` over the template: one request's
+    /// predicted cost in the same unit shard backlogs are priced in.
+    request_cost_ns: f64,
+    /// Static cost model pricing live backlogs for admission decisions.
+    ctx: placement::PlacementCtx,
+    /// Round-robin admission cursor (used when the placement policy is
+    /// round-robin).
+    rr_cursor: usize,
+    slo_ns: SimTime,
+    slo_aware: bool,
+    seed: u64,
+}
+
+/// Generate the merged multi-tenant arrival schedule: one seeded rng stream
+/// per tenant (splitmix64-expanded from the run seed + tenant id — never a
+/// wall clock), each realizing the configured process over
+/// `[0, horizon_ns)`, merged and sorted by `(time, tenant)`.
+fn generate_arrivals(sv: &ServingConfig, seed: u64) -> Vec<Arrival> {
+    let gap_ns = 1e9 / sv.rate_per_tenant;
+    let horizon = sv.horizon_ns as f64;
+    // Hard per-tenant safety valve far above any plausible draw (validation
+    // already bounds the expected volume).
+    let cap = (4.0 * horizon / gap_ns).ceil() as u64 + 64;
+    let mut all: Vec<(SimTime, u32)> = Vec::new();
+    for tenant in 0..sv.tenants {
+        let mut rng = Pcg64::new(seed ^ 0xA221_7E4A ^ (u64::from(tenant) << 21));
+        let mut n = 0u64;
+        match sv.process {
+            ArrivalProcess::Poisson => {
+                let mut t = 0.0f64;
+                loop {
+                    t += rng.exponential(gap_ns);
+                    if t >= horizon || n >= cap {
+                        break;
+                    }
+                    all.push((t as SimTime, tenant));
+                    n += 1;
+                }
+            }
+            ArrivalProcess::Bursty => {
+                // MMPP(2): a hot Poisson state at 1.8× the mean rate and a
+                // quiet one at 0.2×, with exponential sojourns of equal
+                // mean — the long-run rate is `rate_per_tenant`, delivered
+                // in bursts.
+                let sojourn_ns = 20.0 * gap_ns;
+                let mut hot = rng.chance(0.5);
+                let mut t = 0.0f64;
+                let mut switch = rng.exponential(sojourn_ns);
+                loop {
+                    let mean_gap = if hot { gap_ns / 1.8 } else { gap_ns / 0.2 };
+                    let gap = rng.exponential(mean_gap);
+                    if t + gap >= switch {
+                        // State flips before the next arrival would land:
+                        // advance to the switch and redraw in the new state.
+                        t = switch;
+                        hot = !hot;
+                        switch = t + rng.exponential(sojourn_ns);
+                        if t >= horizon {
+                            break;
+                        }
+                        continue;
+                    }
+                    t += gap;
+                    if t >= horizon || n >= cap {
+                        break;
+                    }
+                    all.push((t as SimTime, tenant));
+                    n += 1;
+                }
+            }
+            ArrivalProcess::TraceReplay => {
+                // Deterministic evenly spaced arrival log at the tenant's
+                // rate, phase-shifted per tenant so streams interleave
+                // instead of arriving in lockstep.
+                let phase = gap_ns * (f64::from(tenant) + 0.5) / f64::from(sv.tenants.max(1));
+                let mut t = phase;
+                while t < horizon && n < cap {
+                    all.push((t as SimTime, tenant));
+                    t += gap_ns;
+                    n += 1;
+                }
+            }
+        }
+    }
+    all.sort_unstable_by_key(|&(at, tenant)| (at, tenant));
+    all.into_iter()
+        .map(|(at_ns, tenant)| Arrival { tenant, at_ns, admitted: false, shed: false })
+        .collect()
+}
+
 /// The co-simulated world (owns every component).
 pub struct CoWorld {
     pub cfg: SimConfig,
@@ -144,6 +275,9 @@ pub struct CoWorld {
     /// Dynamic re-placement engine (populated only when `cfg.replace` is
     /// enabled on a multi-shard run with trace workloads).
     replace: Option<replace::ReplaceEngine>,
+    /// Open-loop serving front end (populated only when `cfg.serving` is
+    /// enabled; a serving-off world never allocates or consults it).
+    serving: Option<ServingState>,
     /// Requests rejected on full SQs, retried (batched) after completions.
     pending_submit: Vec<IoRequest>,
     /// Scratch: drained `pending_submit` during one batched retry round.
@@ -228,6 +362,9 @@ impl World for CoWorld {
             }
             Ev::MonitorTick => {
                 self.monitor_tick(now, q);
+            }
+            Ev::Arrival { idx } => {
+                self.handle_arrival(idx, now, q);
             }
         }
         // Any event can surface device failures (a submission can fail fast
@@ -406,7 +543,12 @@ impl CoWorld {
     /// when the engine asks for one, and re-arm the tick. Ticking stops once
     /// the compute side has drained so the run can reach quiescence.
     fn monitor_tick(&mut self, now: SimTime, q: &mut EventQueue<Ev>) {
-        if self.gpus.iter().all(GpuSim::all_done) {
+        // Pending open-loop arrivals are future work: the monitor must keep
+        // ticking across quiet gaps between them even when every shard has
+        // momentarily drained. Serving-off runs see `pending == 0` and the
+        // historical early return.
+        let arrivals_pending = self.serving.as_ref().map_or(0, |s| s.pending);
+        if arrivals_pending == 0 && self.gpus.iter().all(GpuSim::all_done) {
             return;
         }
         // Trace time-series: one shard row per compute shard per epoch.
@@ -461,6 +603,88 @@ impl CoWorld {
         if let Some(eng) = &self.replace {
             q.schedule_in(eng.epoch_ns(), Ev::MonitorTick);
         }
+    }
+
+    /// One open-loop request reaching the admission layer: price every
+    /// shard's live backlog with the static cost model, pick the target
+    /// shard under the configured placement policy, and either admit the
+    /// request as an injected workload fragment or shed it when the
+    /// projected completion would blow the tenant's SLO budget.
+    fn handle_arrival(&mut self, idx: usize, now: SimTime, q: &mut EventQueue<Ev>) {
+        // Take the serving state so shard pricing and admission can borrow
+        // the rest of the world freely; restored on every path below.
+        let Some(mut sv) = self.serving.take() else {
+            self.misrouted += 1;
+            return;
+        };
+        sv.pending = sv.pending.saturating_sub(1);
+        if idx >= sv.arrivals.len() || self.gpus.is_empty() {
+            self.misrouted += 1;
+            self.serving = Some(sv);
+            return;
+        }
+        // Price each shard's live backlog: the predicted cost of every
+        // kernel not yet issued, summed over all resident fragments. This
+        // is the scheduler view of the queue — actual service order is the
+        // shard's own pipeline model.
+        let mut backlog = vec![0.0f64; self.gpus.len()];
+        for (s, gpu) in self.gpus.iter().enumerate() {
+            for slot in 0..gpu.workload_count() {
+                let recs = gpu.workload_records(slot);
+                for r in &recs[gpu.workload_next_record(slot)..] {
+                    backlog[s] += sv.ctx.record_cost(r).end_ns();
+                }
+            }
+        }
+        let shard = match self.cfg.placement {
+            placement::Placement::RoundRobin => {
+                let s = sv.rr_cursor % backlog.len();
+                sv.rr_cursor += 1;
+                s
+            }
+            placement::Placement::LeastLoaded | placement::Placement::PerfAware => {
+                let mut best = 0usize;
+                for s in 1..backlog.len() {
+                    if backlog[s] < backlog[best] {
+                        best = s;
+                    }
+                }
+                best
+            }
+        };
+        let tenant = sv.arrivals[idx].tenant;
+        let src = sv.src_base + idx;
+        if sv.slo_aware && backlog[shard] + sv.request_cost_ns > sv.slo_ns as f64 {
+            // Projected completion blows the tenant's SLO budget even on
+            // the least-loaded shard: shed at admission instead of queueing
+            // a request that will miss anyway.
+            sv.arrivals[idx].shed = true;
+            self.trace.instant(now, tenant, idx as u64, names::SHED);
+            self.serving = Some(sv);
+            return;
+        }
+        sv.arrivals[idx].admitted = true;
+        let work = gpu::MigratedWork {
+            name: self.source_names[src].clone(),
+            source: src as u32,
+            names: sv.template_names.clone(),
+            records: sv.records.clone(),
+            footprint_sectors: sv.footprint_sectors,
+            region_base: sv.region_base[tenant as usize],
+            region_len: sv.region_len,
+            hit_rate: sv.hit_rate,
+            cursor: 0,
+            rng: Pcg64::new(sv.seed ^ 0xA44B ^ ((idx as u64) << 13)),
+        };
+        self.trace.instant(now, shard as u32, idx as u64, names::ARRIVAL);
+        if let Some(eng) = self.replace.as_mut() {
+            // Admitted work must enter the monitor's plan, or every
+            // admission would read as drift against a stale prior.
+            eng.note_admitted_work(shard, &work.records);
+        }
+        let slot = self.gpus[shard].inject_migrated(work, q);
+        self.source_locs[src].push((shard as u32, slot));
+        self.serving = Some(sv);
     }
 
     /// Worst-device storage observations from coordinator-side accumulators:
@@ -803,6 +1027,7 @@ impl CoSim {
                 gpu_sources: 0,
                 source_locs: Vec::new(),
                 replace: None,
+                serving: None,
                 pending_submit: Vec::new(),
                 retry_scratch: Vec::new(),
                 io_scratch: Vec::new(),
@@ -891,12 +1116,20 @@ impl CoSim {
             .iter()
             .filter(|s| matches!(s.kind, WorkloadKind::Trace(_)))
             .count();
-        self.world.gpu_sources = n_gpu;
+        // Open-loop serving: generate the arrival schedule up front (pure
+        // function of config + seed). Each arrival owns a source id in
+        // [n_gpu, n_gpu + arrivals), so completions route per-request;
+        // tenants share region slots (one model image per tenant).
+        let sv_cfg = self.world.cfg.serving.clone();
+        let serving_on = sv_cfg.enabled();
+        let arrivals = if serving_on { generate_arrivals(&sv_cfg, seed) } else { Vec::new() };
+        let n_tenants = if serving_on { sv_cfg.tenants as usize } else { 0 };
+        self.world.gpu_sources = n_gpu + arrivals.len();
         let total = self.world.ssd.logical_sectors();
         let n_synth = specs.len() - n_gpu;
-        let n_sources = (n_gpu + n_synth).max(1) as u64;
-        let share = total / n_sources;
-        if n_gpu > 0 {
+        let n_slots = (n_gpu + n_tenants + n_synth).max(1) as u64;
+        let share = total / n_slots;
+        if n_gpu > 0 || serving_on {
             // Placement: predict each trace workload's cost against the
             // array shape, then let the configured policy spread them over
             // the compute shards (all land on shard 0 when `gpus == 1`).
@@ -971,12 +1204,74 @@ impl CoSim {
             }
             self.world.gpus = gpus;
         }
+        if serving_on {
+            // Resolve the request template once (validation already vouched
+            // for the name); every admitted arrival replays a copy of it.
+            let spec = crate::workloads::spec_by_name(
+                &sv_cfg.workload,
+                sv_cfg.request_scale,
+                seed,
+            )
+            // lint:allow(unwrap): serving.workload vetted by SimConfig::validate
+            .expect("serving.workload vetted by SimConfig::validate");
+            let template = match &spec.kind {
+                WorkloadKind::Trace(t) => t.clone(),
+                WorkloadKind::Synth(p) => p.to_trace(&sv_cfg.workload),
+            };
+            let region_len = template.footprint_sectors.clamp(1, share.max(1));
+            // One region slot per tenant, after the batch slots: the
+            // tenant's model image, preloaded like any workload's weights.
+            let mut region_base = Vec::with_capacity(n_tenants);
+            for t in 0..n_tenants {
+                let base = (n_gpu + t) as u64 * share;
+                self.world.ssd.preload(base, region_len);
+                region_base.push(base);
+            }
+            // Per-request DRAM hit rate mirrors `GpuSim::start`'s per-slot
+            // split, with tenants as the unit of DRAM partitioning.
+            let dram_share = self.world.cfg.gpu.dram_bytes / u64::from(sv_cfg.tenants.max(1));
+            let footprint_bytes =
+                template.footprint_sectors * self.world.cfg.ssd.sector_bytes as u64;
+            let hit_rate = if footprint_bytes == 0 {
+                1.0
+            } else {
+                (dram_share as f64 / footprint_bytes as f64).min(1.0)
+            };
+            let sctx = placement::PlacementCtx::from_config(&self.world.cfg);
+            let request_cost_ns: f64 =
+                template.records.iter().map(|r| sctx.record_cost(r).end_ns()).sum();
+            for (i, a) in arrivals.iter().enumerate() {
+                self.world
+                    .source_names
+                    .push(format!("{}-t{}", sv_cfg.workload, a.tenant));
+                self.world.source_locs.push(Vec::new());
+                self.engine.queue.schedule_at(a.at_ns, Ev::Arrival { idx: i });
+            }
+            let pending = arrivals.len();
+            self.world.serving = Some(ServingState {
+                template_names: template.names.clone(),
+                records: template.records.clone(),
+                footprint_sectors: template.footprint_sectors,
+                region_base,
+                region_len,
+                hit_rate,
+                src_base: n_gpu,
+                arrivals,
+                pending,
+                request_cost_ns,
+                ctx: sctx,
+                rr_cursor: 0,
+                slo_ns: sv_cfg.slo_ns,
+                slo_aware: matches!(sv_cfg.admission, AdmissionPolicy::SloAware),
+                seed,
+            });
+        }
         // Synth streams take the tail regions.
         let mut idx = 0usize;
         for spec in &specs {
             if let WorkloadKind::Synth(p) = &spec.kind {
-                let source = (n_gpu + idx) as u32;
-                let region_base = share * source as u64;
+                let source = (self.world.gpu_sources + idx) as u32;
+                let region_base = share * ((n_gpu + n_tenants + idx) as u64);
                 let region_len = if p.footprint_sectors > 0 {
                     p.footprint_sectors.min(share)
                 } else {
@@ -1059,10 +1354,18 @@ impl CoSim {
 
     fn report(&self, end_ns: SimTime, events: u64, wall_s: f64) -> Report {
         let w = &self.world;
+        // Serving sources are per-request, not per-workload: they report in
+        // the `serving` section (per-tenant latency/goodput), not as rows
+        // here — a thousand-arrival run should not emit a thousand rows.
+        let serving_range = w
+            .serving
+            .as_ref()
+            .map(|s| (s.src_base, s.src_base + s.arrivals.len()));
         let workloads = w
             .source_names
             .iter()
             .enumerate()
+            .filter(|(i, _)| serving_range.map_or(true, |(lo, hi)| *i < lo || *i >= hi))
             .map(|(i, name)| {
                 let acc = &w.per_source[i];
                 let (end, predicted, kernels) = if i < w.gpu_sources {
@@ -1142,9 +1445,104 @@ impl CoSim {
             gpus: w.gpus.iter().map(GpuSim::report).collect(),
             replacement: w.replace.as_ref().map(replace::ReplaceEngine::report_json),
             faults,
+            serving: w.serving.as_ref().map(|s| serving_report_json(w, s)),
             profile: self.sharded.as_ref().map(|e| e.profile().to_json()),
         }
     }
+}
+
+/// Per-tenant accumulator for the serving report section.
+#[derive(Default)]
+struct TenantAcc {
+    offered: u64,
+    admitted: u64,
+    shed: u64,
+    completed: u64,
+    slo_met: u64,
+    hist: LogHistogram,
+}
+
+impl TenantAcc {
+    fn json(&self, horizon_s: f64, extra: Vec<(&str, Json)>) -> Json {
+        let mut pairs: Vec<(&str, Json)> = extra;
+        pairs.extend([
+            ("offered", self.offered.into()),
+            ("admitted", self.admitted.into()),
+            ("shed", self.shed.into()),
+            ("completed", self.completed.into()),
+            ("slo_met", self.slo_met.into()),
+            ("offered_rps", (self.offered as f64 / horizon_s).into()),
+            ("goodput_rps", (self.slo_met as f64 / horizon_s).into()),
+            ("latency_p50_ns", self.hist.p50().into()),
+            ("latency_p99_ns", self.hist.p99().into()),
+        ]);
+        Json::from_pairs(pairs)
+    }
+}
+
+/// Render the sparse `serving` report section: request latency is measured
+/// arrival-to-last-fragment-end (admission queueing included), a request
+/// counts toward goodput only when it completed within its tenant's SLO
+/// budget, and sheds are first-class counters — the paper's admission story
+/// is goodput *because of* controlled rejection, not despite it.
+fn serving_report_json(w: &CoWorld, sv: &ServingState) -> Json {
+    let horizon_s = (w.cfg.serving.horizon_ns as f64 / 1e9).max(f64::MIN_POSITIVE);
+    let mut tenants: Vec<TenantAcc> = Vec::new();
+    tenants.resize_with(w.cfg.serving.tenants.max(1) as usize, TenantAcc::default);
+    let mut all = TenantAcc::default();
+    for (idx, a) in sv.arrivals.iter().enumerate() {
+        let t = &mut tenants[(a.tenant as usize).min(w.cfg.serving.tenants.max(1) as usize - 1)];
+        t.offered += 1;
+        all.offered += 1;
+        if a.shed {
+            t.shed += 1;
+            all.shed += 1;
+            continue;
+        }
+        if !a.admitted {
+            // Scheduled past the run bound (bounded run): neither admitted
+            // nor shed — offered only.
+            continue;
+        }
+        t.admitted += 1;
+        all.admitted += 1;
+        let src = sv.src_base + idx;
+        let mut end: SimTime = 0;
+        let mut done = 0u64;
+        let mut need = 0u64;
+        for &(g, slot) in &w.source_locs[src] {
+            let gs = &w.gpus[g as usize];
+            end = end.max(gs.actual_end_ns(slot));
+            done += gs.kernels_done(slot);
+            need += gs.workload_records(slot).len() as u64;
+        }
+        if end == 0 || need == 0 || done < need {
+            continue;
+        }
+        t.completed += 1;
+        all.completed += 1;
+        let latency = end.saturating_sub(a.at_ns);
+        t.hist.record(latency);
+        all.hist.record(latency);
+        if latency <= sv.slo_ns {
+            t.slo_met += 1;
+            all.slo_met += 1;
+        }
+    }
+    let tenant_rows: Vec<Json> = tenants
+        .iter()
+        .enumerate()
+        .map(|(t, acc)| acc.json(horizon_s, vec![("tenant", (t as u64).into())]))
+        .collect();
+    all.json(
+        horizon_s,
+        vec![
+            ("process", w.cfg.serving.process.name().into()),
+            ("admission", w.cfg.serving.admission.name().into()),
+            ("slo_ns", sv.slo_ns.into()),
+            ("tenants", Json::Arr(tenant_rows)),
+        ],
+    )
 }
 
 #[cfg(test)]

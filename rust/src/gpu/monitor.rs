@@ -177,6 +177,14 @@ impl Monitor {
         self.shards[to].prior_end_ns += c;
     }
 
+    /// Grow `shard`'s prior by `cost_ns` of newly admitted work: open-loop
+    /// serving admits requests while the run is live, and the plan each
+    /// shard is measured against must include them or every admission would
+    /// read as drift.
+    pub fn add_prior(&mut self, shard: usize, cost_ns: f64) {
+        self.shards[shard].prior_end_ns += cost_ns.max(0.0);
+    }
+
     pub fn epoch_ns(&self) -> SimTime {
         self.cfg.epoch_ns
     }

@@ -205,6 +205,15 @@ impl ReplaceEngine {
         self.migrated_kernels += records.len() as u64;
     }
 
+    /// Record a live serving admission: grow the destination shard's prior
+    /// by the admitted records' predicted cost, so the monitor measures the
+    /// shard against a plan that includes the open-loop queue rather than
+    /// reading every admission as drift.
+    pub fn note_admitted_work(&mut self, shard: usize, records: &[KernelRecord]) {
+        let cost: f64 = records.iter().map(|r| self.ctx.record_cost(r).end_ns()).sum();
+        self.monitor.add_prior(shard, cost);
+    }
+
     /// The `replacement` section of [`crate::metrics::Report`]: migration
     /// counters plus the drift histogram's summary quantiles (permille).
     pub fn report_json(&self) -> Json {

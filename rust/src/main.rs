@@ -29,6 +29,8 @@
 //! mqms campaign --workloads rand4k --devices 2 --faults none,dropout --csv out.csv
 //! mqms run --workload rand4k --devices 2 --faults dropout --json
 //! mqms run --workload rand4k --devices 8 --sim-threads 4
+//! mqms run --workload rand4k --arrivals 2000 --tenants 4 --admission slo-aware --json
+//! mqms campaign --workloads rand4k --arrival-rates 500,2000,8000 --tenants 2,4 --csv out.csv
 //! mqms run --workload bert --trace /tmp/bert.trace.json       (needs --features trace)
 //! mqms campaign --workloads rand4k --trace-dir /tmp/traces    (needs --features trace)
 //! mqms sweep --scale 0.005
@@ -37,18 +39,90 @@
 //! ```
 
 use mqms::campaign::{self, CampaignSpec};
-use mqms::config::{self, AddrScheme, SchedPolicy, SimConfig};
+use mqms::config::{self, AddrScheme, AdmissionPolicy, ArrivalProcess, SchedPolicy, SimConfig};
 use mqms::gpu::placement::Placement;
 use mqms::coordinator::CoSim;
 use mqms::gpu::trace::Trace;
 use mqms::sampling::{self, SamplerConfig};
 use mqms::util::bench::{ns, print_table, si};
-use mqms::util::cli::{Args, CliError};
+use mqms::util::cli::{Args, CliError, FlagDef, FlagKind};
 use mqms::workloads::{self, WorkloadSpec};
 use std::path::Path;
 use std::process::ExitCode;
 
 type CliResult = Result<(), String>;
+
+/// Flags `run` and `campaign` define identically — one declarative table,
+/// so registration, generated help, and the unknown-flag error stay in sync
+/// across both subcommands.
+const SHARED_FLAGS: &[FlagDef] = &[
+    FlagDef {
+        name: "seed",
+        kind: FlagKind::ValueDefault("42"),
+        help: "rng seed (campaign: every cell runs with it)",
+    },
+    FlagDef {
+        name: "no-sample",
+        kind: FlagKind::Switch,
+        help: "replay full traces (skip Allegro sampling)",
+    },
+    FlagDef {
+        name: "json",
+        kind: FlagKind::Switch,
+        help: "print JSON output instead of the table summary",
+    },
+];
+
+/// Open-loop serving flags on `run` (scalar forms of the campaign axes).
+/// Giving any of them switches the run into serving mode with the first
+/// `--workload` name as the request template.
+const RUN_SERVING_FLAGS: &[FlagDef] = &[
+    FlagDef {
+        name: "arrivals",
+        kind: FlagKind::Value,
+        help: "per-tenant arrival rate in req/s — enables open-loop serving",
+    },
+    FlagDef {
+        name: "tenants",
+        kind: FlagKind::Value,
+        help: "tenant count sharing the array (implies serving mode)",
+    },
+    FlagDef {
+        name: "arrival-process",
+        kind: FlagKind::Value,
+        help: "arrival process: poisson | bursty | trace-replay",
+    },
+    FlagDef {
+        name: "admission",
+        kind: FlagKind::Value,
+        help: "admission policy: none | slo-aware",
+    },
+    FlagDef {
+        name: "slo",
+        kind: FlagKind::Value,
+        help: "per-tenant SLO latency budget in simulated ns",
+    },
+    FlagDef {
+        name: "horizon",
+        kind: FlagKind::Value,
+        help: "serving arrival horizon in simulated ns",
+    },
+];
+
+/// Open-loop serving sweep axes on `campaign` (list forms of the `run`
+/// serving flags; sweeping either switches the swept cells into serving).
+const CAMPAIGN_SERVING_FLAGS: &[FlagDef] = &[
+    FlagDef {
+        name: "arrival-rates",
+        kind: FlagKind::Value,
+        help: "comma-separated per-tenant arrival rates in req/s (serving sweep axis)",
+    },
+    FlagDef {
+        name: "tenants",
+        kind: FlagKind::Value,
+        help: "comma-separated tenant counts (serving sweep axis)",
+    },
+];
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -153,7 +227,6 @@ fn cmd_run(argv: &[String]) -> CliResult {
         .opt("preset", Some("mqms"), "mqms | baseline | pm9a3 | client | <config.json>")
         .opt("workload", Some("bert"), "comma-separated workload names or trace files")
         .opt("scale", Some("0.01"), "workload scale factor (fraction of Table-1 size)")
-        .opt("seed", Some("42"), "rng seed")
         .opt("devices", None, "override device count of the striped array")
         .opt("stripe", None, "override stripe granularity in sectors")
         .opt(
@@ -183,8 +256,8 @@ fn cmd_run(argv: &[String]) -> CliResult {
             "write a Chrome trace-event JSON here, plus <stem>.timeseries.csv \
              (requires a build with the `trace` cargo feature)",
         )
-        .flag("no-sample", "replay the full trace (skip Allegro sampling)")
-        .flag("json", "print the full JSON report");
+        .with_table(RUN_SERVING_FLAGS)
+        .with_table(SHARED_FLAGS);
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
 
     let mut cfg = SimConfig::load_named(args.get("preset").unwrap())?;
@@ -250,30 +323,77 @@ fn cmd_run(argv: &[String]) -> CliResult {
         }
         cfg.trace.enabled = true;
     }
-    cfg.validate()?;
     let scale = args.get_f64("scale").map_err(|e| e.to_string())?;
+    // Any serving flag switches the run into open-loop mode: the first
+    // `--workload` name becomes the per-request template (no batch jobs).
+    let serving_requested = RUN_SERVING_FLAGS.iter().any(|d| args.get(d.name).is_some());
+    if serving_requested {
+        cfg.serving.enabled = true;
+        cfg.serving.workload = args
+            .get("workload")
+            .unwrap()
+            .split(',')
+            .map(str::trim)
+            .find(|s| !s.is_empty())
+            .ok_or("serving mode needs a --workload template")?
+            .to_string();
+        cfg.serving.request_scale = scale;
+        if args.get("arrivals").is_some() {
+            cfg.serving.rate_per_tenant = args.get_f64("arrivals").map_err(|e| e.to_string())?;
+        }
+        if args.get("tenants").is_some() {
+            let v = args.get_u64("tenants").map_err(|e| e.to_string())?;
+            cfg.serving.tenants =
+                u32::try_from(v).map_err(|_| format!("tenant count out of range: {v}"))?;
+        }
+        if let Some(p) = args.get("arrival-process") {
+            cfg.serving.process = ArrivalProcess::parse(p).ok_or_else(|| {
+                format!(
+                    "unknown arrival process `{p}` (valid: {})",
+                    config::ARRIVAL_PROCESS_NAMES.join(", ")
+                )
+            })?;
+        }
+        if let Some(p) = args.get("admission") {
+            cfg.serving.admission = AdmissionPolicy::parse(p).ok_or_else(|| {
+                format!(
+                    "unknown admission policy `{p}` (valid: {})",
+                    config::ADMISSION_POLICY_NAMES.join(", ")
+                )
+            })?;
+        }
+        if args.get("slo").is_some() {
+            cfg.serving.slo_ns = args.get_u64("slo").map_err(|e| e.to_string())?;
+        }
+        if args.get("horizon").is_some() {
+            cfg.serving.horizon_ns = args.get_u64("horizon").map_err(|e| e.to_string())?;
+        }
+    }
+    cfg.validate()?;
     let sampled = !args.get_flag("no-sample");
     let seed = cfg.seed;
 
     let mut sim = CoSim::new(cfg);
-    for name in args
-        .get("workload")
-        .unwrap()
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-    {
-        if Path::new(name).exists() {
-            for (n, t) in load_traces(name, scale, seed, sampled)? {
-                sim.add_workload(WorkloadSpec::trace(&n, t));
+    if !serving_requested {
+        for name in args
+            .get("workload")
+            .unwrap()
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+        {
+            if Path::new(name).exists() {
+                for (n, t) in load_traces(name, scale, seed, sampled)? {
+                    sim.add_workload(WorkloadSpec::trace(&n, t));
+                }
+                continue;
             }
-            continue;
+            let (wspec, stats) = workloads::spec_by_name_sampled(name, scale, seed, sampled)?;
+            if let Some(stats) = stats {
+                log_sampling(name, &stats);
+            }
+            sim.add_workload(wspec);
         }
-        let (wspec, stats) = workloads::spec_by_name_sampled(name, scale, seed, sampled)?;
-        if let Some(stats) = stats {
-            log_sampling(name, &stats);
-        }
-        sim.add_workload(wspec);
     }
     let report = sim.run();
     if let Some(path) = args.get("trace") {
@@ -319,6 +439,18 @@ fn cmd_run(argv: &[String]) -> CliResult {
                 n("failed"),
                 n("retries"),
                 n("retry_exhausted")
+            );
+        }
+        if let Some(s) = &report.serving {
+            let n = |k: &str| s.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+            let goodput = s.get("goodput_rps").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            println!(
+                "serving: {} offered / {} admitted / {} shed | goodput {:.1} req/s | p99 {}",
+                n("offered"),
+                n("admitted"),
+                n("shed"),
+                goodput,
+                ns(n("latency_p99_ns") as f64)
             );
         }
         let rows: Vec<(String, Vec<String>)> = report
@@ -456,7 +588,8 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
     let spec = Args::new(
         "mqms campaign",
         "expand a {preset x workload x scale x devices x device-mix x gpus x placement x \
-         replace x rw-ratio x op-ratio x faults} matrix, run cells in parallel",
+         replace x rw-ratio x op-ratio x faults x arrival-rate x tenants} matrix, \
+         run cells in parallel",
     )
     .opt("presets", Some("mqms,baseline"), "comma-separated presets / config files")
     .opt(
@@ -481,7 +614,7 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         Some("none"),
         "comma-separated fault scenarios (none | transient | gc-storm | degrade | dropout)",
     )
-    .opt("seed", Some("42"), "root rng seed (every cell runs with it)")
+    .with_table(CAMPAIGN_SERVING_FLAGS)
     .opt("threads", Some("0"), "worker threads (0 = one per core)")
     .opt(
         "sim-threads",
@@ -496,8 +629,7 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         "write per-cell <label>.trace.json + <label>.timeseries.csv here \
          (requires a build with the `trace` cargo feature)",
     )
-    .flag("no-sample", "replay full traces (skip Allegro sampling)")
-    .flag("json", "print the merged campaign JSON instead of the table");
+    .with_table(SHARED_FLAGS);
     let args = spec.clone().parse(argv).map_err(|e| handle_help(e, &spec))?;
 
     fn parse_on_off(s: &str) -> Option<bool> {
@@ -536,6 +668,14 @@ fn cmd_campaign(argv: &[String]) -> CliResult {
         faults: parse_list(args.get("faults").unwrap(), "fault scenario", |s| {
             Some(s.to_string())
         })?,
+        arrival_rates: match args.get("arrival-rates") {
+            Some(raw) => parse_list(raw, "arrival rate", |s| s.parse::<f64>().ok())?,
+            None => Vec::new(),
+        },
+        tenants: match args.get("tenants") {
+            Some(raw) => parse_list(raw, "tenant count", |s| s.parse::<u32>().ok())?,
+            None => Vec::new(),
+        },
         seed: args.get_u64("seed").map_err(|e| e.to_string())?,
         threads: args.get_u64("threads").map_err(|e| e.to_string())? as usize,
         sim_threads: {

@@ -227,6 +227,15 @@ impl PerSourceAcc {
     }
 }
 
+/// Report JSON schema version, emitted as the top-level `"schema"` key.
+///
+/// Bump on any breaking change to key names, required sections, or value
+/// semantics. Sparse sections (a key absent when its feature is off) are
+/// NOT breaking — consumers must treat `replacement` / `faults` /
+/// `serving` / `profile` as optional. History: 1 = pre-serving layout
+/// (implicit, no `schema` key); 2 = `schema` key + sparse `serving`.
+pub const SCHEMA_VERSION: u64 = 2;
+
 /// Complete co-simulation report.
 #[derive(Debug, Clone)]
 pub struct Report {
@@ -263,6 +272,10 @@ pub struct Report {
     /// `None` when no fault plan is configured and no anomaly was counted,
     /// so fault-free reports stay byte-identical.
     pub faults: Option<Json>,
+    /// Online-serving section (per-tenant latency histogram quantiles,
+    /// goodput, shed/reject counters). `None` when `cfg.serving` is off,
+    /// so closed-batch reports stay byte-identical.
+    pub serving: Option<Json>,
     /// Parallel-engine profiling section ([`crate::sim::EngineProfile`]):
     /// per-barrier-round counters from the sharded engine. `None` on
     /// sequential runs, and always dropped from the deterministic view —
@@ -274,6 +287,7 @@ pub struct Report {
 impl Report {
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
+            ("schema", SCHEMA_VERSION.into()),
             ("config", self.config_name.as_str().into()),
             ("end_ns", self.end_ns.into()),
             ("events", self.events.into()),
@@ -297,6 +311,9 @@ impl Report {
         }
         if let Some(f) = &self.faults {
             pairs.push(("faults", f.clone()));
+        }
+        if let Some(s) = &self.serving {
+            pairs.push(("serving", s.clone()));
         }
         if let Some(p) = &self.profile {
             pairs.push(("profile", p.clone()));
@@ -423,9 +440,11 @@ mod tests {
             gpus: Vec::new(),
             replacement: None,
             faults: None,
+            serving: None,
             profile: None,
         };
         let j = r.to_json();
+        assert_eq!(j.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
         assert_eq!(j.get("end_ns").unwrap().as_u64(), Some(42));
         assert_eq!(
             j.get("workloads").unwrap().as_arr().unwrap()[0]
@@ -454,6 +473,14 @@ mod tests {
             wj.get("replacement").unwrap().get("migrations").unwrap().as_u64(),
             Some(3)
         );
+        // Serving-off reports omit the key; the deterministic view keeps
+        // both the schema stamp and the serving section when present.
+        assert!(j.get("serving").is_none());
+        let mut sv = r.clone();
+        sv.serving = Some(Json::from_pairs(vec![("offered", 9u64.into())]));
+        let svj = sv.to_json_deterministic();
+        assert_eq!(svj.get("schema").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(svj.get("serving").unwrap().get("offered").unwrap().as_u64(), Some(9));
         // The engine profile is sparse and never part of the deterministic
         // view (window shapes depend on --sim-threads).
         assert!(j.get("profile").is_none());

@@ -70,6 +70,10 @@ pub mod names {
     pub const FAULT_DROPOUT: &str = "fault_dropout";
     /// Fault injector added a service-time penalty to a command.
     pub const FAULT_STALL: &str = "fault_stall";
+    /// Open-loop serving request arrived and was admitted to a shard queue.
+    pub const ARRIVAL: &str = "arrival";
+    /// Open-loop serving request shed by SLO-aware admission control.
+    pub const SHED: &str = "shed";
 
     /// Every name above, for uniqueness/shape tests.
     pub const ALL: &[&str] = &[
@@ -88,6 +92,8 @@ pub mod names {
         FAULT_TIMEOUT,
         FAULT_DROPOUT,
         FAULT_STALL,
+        ARRIVAL,
+        SHED,
     ];
 }
 

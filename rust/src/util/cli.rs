@@ -13,6 +13,28 @@ struct OptSpec {
     default: Option<String>,
 }
 
+/// One row of a declarative flag table (see [`Args::with_table`]): several
+/// subcommands can share a single `const` table as their source of truth
+/// for common flags — registration, generated help text, and the
+/// unknown-flag parse error all derive from the same data.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagDef {
+    pub name: &'static str,
+    pub kind: FlagKind,
+    pub help: &'static str,
+}
+
+/// Shape of a [`FlagDef`] row.
+#[derive(Debug, Clone, Copy)]
+pub enum FlagKind {
+    /// Boolean `--flag`.
+    Switch,
+    /// `--key value` without a default (absent unless given).
+    Value,
+    /// `--key value` with a default.
+    ValueDefault(&'static str),
+}
+
 /// Declarative argument parser for one (sub)command.
 #[derive(Debug, Clone)]
 pub struct Args {
@@ -87,6 +109,24 @@ impl Args {
     pub fn positional(mut self, name: &str, help: &str) -> Self {
         self.positionals.push((name.to_string(), help.to_string()));
         self
+    }
+
+    /// Register every row of a declarative flag table, in table order.
+    pub fn with_table(mut self, table: &[FlagDef]) -> Self {
+        for d in table {
+            self = match d.kind {
+                FlagKind::Switch => self.flag(d.name, d.help),
+                FlagKind::Value => self.opt(d.name, None, d.help),
+                FlagKind::ValueDefault(v) => self.opt(d.name, Some(v), d.help),
+            };
+        }
+        self
+    }
+
+    /// Names of every registered option, in registration order (help and
+    /// coverage-test introspection).
+    pub fn opt_names(&self) -> Vec<String> {
+        self.opts.iter().map(|o| o.name.clone()).collect()
     }
 
     /// Render the help text.
@@ -270,6 +310,37 @@ mod tests {
     fn help_requested() {
         let e = Args::new("t", "").parse(&toks(&["--help"]));
         assert!(matches!(e, Err(CliError::HelpRequested)));
+    }
+
+    #[test]
+    fn table_registration_generates_help_and_rejects_unknown_flags() {
+        const TABLE: &[FlagDef] = &[
+            FlagDef { name: "alpha", kind: FlagKind::ValueDefault("1"), help: "a" },
+            FlagDef { name: "beta", kind: FlagKind::Value, help: "b" },
+            FlagDef { name: "gamma", kind: FlagKind::Switch, help: "c" },
+        ];
+        let spec = Args::new("t", "").with_table(TABLE);
+        // Help text is generated from the table — every row appears.
+        let help = spec.help();
+        for d in TABLE {
+            assert!(help.contains(&format!("--{}", d.name)), "help misses --{}", d.name);
+        }
+        assert_eq!(spec.opt_names(), vec!["alpha", "beta", "gamma"]);
+        // Every registered option parses with its declared shape.
+        let a = spec.clone().parse(&toks(&["--beta", "2", "--gamma"])).unwrap();
+        assert_eq!(a.get("alpha"), Some("1"), "table default applies");
+        assert_eq!(a.get("beta"), Some("2"));
+        assert!(a.get_flag("gamma"));
+        // Exhaustive unknown-flag check: anything NOT in the table is a
+        // parse error naming the offender — including near-misses of each
+        // registered name — never a silent ignore.
+        for bad in ["alphas", "alpha2", "betta", "gama", "delta", "b", ""] {
+            let e = Args::new("t", "").with_table(TABLE).parse(&[format!("--{bad}")]);
+            match e {
+                Err(CliError::Unknown(n)) => assert_eq!(n, bad),
+                other => panic!("--{bad} must be rejected as Unknown, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! no GPU model. Used for the §2 queue-depth scaling study (the PM9A3
 //! comparison), the quickstart, and FTL stress tests.
 
-use crate::gpu::trace::AccessKind;
+use crate::gpu::trace::{AccessKind, KernelRecord, Trace};
 
 /// A closed-loop stream: keeps `queue_depth` requests outstanding until
 /// `count` requests have completed.
@@ -80,6 +80,43 @@ impl SynthPattern {
         self.footprint_sectors = sectors;
         self
     }
+
+    /// Render the stream as a minimal I/O-dominated kernel [`Trace`] so a
+    /// synthetic pattern is admissible anywhere a trace workload is — in
+    /// particular as an open-loop serving request template. Each kernel
+    /// issues one closed-loop window of up to `queue_depth` requests
+    /// (reads vs writes split by `read_fraction`), with nominal compute so
+    /// the GPU pipeline model stays exercised.
+    pub fn to_trace(&self, name: &str) -> Trace {
+        let mut t = Trace::default();
+        let name_id = t.intern(name);
+        let per_kernel = u64::from(self.queue_depth.max(1));
+        let mut remaining = self.count.max(1);
+        while remaining > 0 {
+            let window = remaining.min(per_kernel) as u32;
+            let reads = ((f64::from(window) * self.read_fraction).round() as u32).min(window);
+            t.records.push(KernelRecord {
+                name_id,
+                grid: 1,
+                block: 256,
+                cycles_per_block: 512,
+                reads,
+                writes: window - reads,
+                req_sectors: self.sectors,
+                access: self.access,
+                weight: 1.0,
+            });
+            remaining -= u64::from(window);
+        }
+        t.footprint_sectors = if self.footprint_sectors > 0 {
+            self.footprint_sectors
+        } else {
+            // Default to the stream's touched range so region mapping and
+            // hit-rate accounting have a denominator.
+            self.count.max(1) * u64::from(self.sectors)
+        };
+        t
+    }
 }
 
 #[cfg(test)]
@@ -106,5 +143,26 @@ mod tests {
     fn queue_depth_floor() {
         let p = SynthPattern::random_4k_write(10).with_queue_depth(0);
         assert_eq!(p.queue_depth, 1);
+    }
+
+    #[test]
+    fn to_trace_preserves_request_totals() {
+        let p = SynthPattern::mixed_4k(100).with_queue_depth(8);
+        let t = p.to_trace("mixed4k");
+        // 100 requests at qd 8 → 12 full windows + one 4-request tail.
+        assert_eq!(t.records.len(), 13);
+        let total: u64 =
+            t.records.iter().map(|r| u64::from(r.reads) + u64::from(r.writes)).sum();
+        assert_eq!(total, 100);
+        let reads: u64 = t.records.iter().map(|r| u64::from(r.reads)).sum();
+        // 70/30 split survives rounding to within one request per window.
+        assert!((57..=83).contains(&reads), "reads {reads}");
+        assert!(t.footprint_sectors > 0);
+        assert_eq!(t.names.len(), 1);
+        // An explicit footprint wins over the derived default.
+        let t2 = p.clone().with_footprint(4096).to_trace("mixed4k");
+        assert_eq!(t2.footprint_sectors, 4096);
+        // Deterministic: same pattern, same trace.
+        assert_eq!(p.to_trace("mixed4k"), p.to_trace("mixed4k"));
     }
 }

@@ -1,0 +1,239 @@
+//! Open-loop serving integration tests: the tentpole contract of the
+//! multi-tenant front end (`SimConfig::serving`).
+//!
+//! * Serving **off** is byte-invisible: a config whose serving block is
+//!   disabled — even with every other serving field changed — produces a
+//!   report byte-identical to one that never touched the block, across a
+//!   {devices × gpus × replace} grid.
+//! * Serving **on** is deterministic: same config + seed → byte-identical
+//!   reports, different seed → different arrival schedule.
+//! * `--sim-threads {2,4}` with serving on is byte-identical to the
+//!   sequential engine (arrivals are coordinator events, replayed in the
+//!   deterministic stream).
+//! * SLO-aware admission conserves requests: per tenant and in aggregate,
+//!   `admitted + shed == offered` once the run drains to quiescence.
+//! * An enabled serving config survives the JSON round-trip and drives a
+//!   byte-identical run; malformed blocks are rejected at validation.
+
+use mqms::bench_support as bs;
+use mqms::config::{AdmissionPolicy, ArrivalProcess, ServingConfig, SimConfig};
+use mqms::gpu::placement::Placement;
+use mqms::metrics::Report;
+use mqms::util::jsonlite::Json;
+use mqms::workloads::{synth::SynthPattern, WorkloadSpec};
+
+/// Canonical deterministic bytes of one report.
+fn bytes(r: &Report) -> String {
+    r.to_json_deterministic().pretty()
+}
+
+/// Small serving block on the rand4k template (100 requests per arrival at
+/// the default 0.0001 scale) — cheap enough for dense grids.
+fn serving_block(rate: f64, tenants: u32, admission: AdmissionPolicy) -> ServingConfig {
+    ServingConfig {
+        enabled: true,
+        rate_per_tenant: rate,
+        tenants,
+        admission,
+        workload: "rand4k".to_string(),
+        ..ServingConfig::default()
+    }
+}
+
+fn u(s: &Json, k: &str) -> u64 {
+    s.get(k).and_then(Json::as_u64).unwrap_or_else(|| panic!("serving key {k} missing"))
+}
+
+#[test]
+fn serving_off_is_byte_invisible_across_grid() {
+    // A disabled serving block must not perturb a single byte of the
+    // closed-batch output, whatever junk the other serving fields carry.
+    for (devices, gpus, replace) in [(1u32, 1u32, false), (2, 2, false), (4, 2, true)] {
+        let cell = |cfg_mut: &dyn Fn(&mut SimConfig)| {
+            let sc = bs::Scenario::new(bs::SEED)
+                .devices(devices)
+                .gpus(gpus)
+                .placement(Placement::PerfAware)
+                .dram_bytes(0)
+                .pipeline_depth(4)
+                .replace(replace);
+            let mut cfg = sc.config();
+            cfg_mut(&mut cfg);
+            bytes(&bs::run_bundle(cfg, &bs::drift_bundle(bs::SEED)))
+        };
+        let untouched = cell(&|_| {});
+        let disabled_block = cell(&|cfg| {
+            cfg.serving = ServingConfig {
+                enabled: false,
+                process: ArrivalProcess::Bursty,
+                rate_per_tenant: 9_999.0,
+                tenants: 7,
+                slo_ns: 1,
+                admission: AdmissionPolicy::SloAware,
+                horizon_ns: 1,
+                workload: "rand4k".to_string(),
+                request_scale: 0.5,
+            };
+        });
+        assert_eq!(
+            untouched, disabled_block,
+            "{devices}d x {gpus}g replace={replace}: disabled serving block changed bytes"
+        );
+        // And the sparse section stays absent.
+        assert!(!untouched.contains("\"serving\""));
+    }
+}
+
+#[test]
+fn serving_run_is_deterministic_and_seed_sensitive() {
+    let run = |seed: u64| {
+        bs::Scenario::new(seed)
+            .devices(2)
+            .gpus(2)
+            .serving(serving_block(2_000.0, 2, AdmissionPolicy::None))
+            .run()
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(bytes(&a), bytes(&b), "same seed must replay the identical serving run");
+    let s = a.serving.as_ref().expect("serving section present");
+    assert!(u(s, "offered") > 0, "poisson stream minted no arrivals");
+    assert!(u(s, "completed") > 0, "no request ran to completion");
+    let c = run(8);
+    assert_ne!(
+        bytes(&a),
+        bytes(&c),
+        "a different seed must draw a different arrival schedule"
+    );
+}
+
+#[test]
+fn serving_sim_threads_byte_identical_to_sequential() {
+    // Bursty arrivals leave real gaps in the event stream — the regime
+    // where a lookahead bug would reorder arrival admission.
+    let run = |threads: u32| {
+        let mut sv = serving_block(2_000.0, 2, AdmissionPolicy::SloAware);
+        sv.process = ArrivalProcess::Bursty;
+        bs::Scenario::new(bs::SEED)
+            .devices(4)
+            .gpus(2)
+            .sim_threads(threads)
+            .serving(sv)
+            .report()
+            .pretty()
+    };
+    let sequential = run(1);
+    for threads in [2u32, 4] {
+        assert_eq!(
+            sequential,
+            run(threads),
+            "serving on: sim-threads {threads} must be byte-identical to sequential"
+        );
+    }
+}
+
+#[test]
+fn slo_admission_conserves_offered_requests() {
+    // Overload a small array so the slo-aware scheduler actually sheds,
+    // then check the books: every offered request is admitted or shed —
+    // nothing vanishes, nothing is double-counted.
+    let r = bs::Scenario::new(bs::SEED)
+        .devices(1)
+        .gpus(1)
+        .serving(serving_block(8_000.0, 4, AdmissionPolicy::SloAware))
+        .run();
+    let s = r.serving.as_ref().expect("serving section present");
+    let (offered, admitted, shed) = (u(s, "offered"), u(s, "admitted"), u(s, "shed"));
+    assert!(offered > 0);
+    assert!(shed > 0, "overloaded slo-aware cell must shed");
+    assert_eq!(admitted + shed, offered, "aggregate conservation broken");
+    assert!(u(s, "completed") <= admitted);
+    assert!(u(s, "slo_met") <= u(s, "completed"));
+    let tenants = s.get("tenants").and_then(Json::as_arr).expect("tenants array");
+    assert_eq!(tenants.len(), 4);
+    let mut sums = (0u64, 0u64, 0u64);
+    for t in tenants {
+        let (o, a, sh) = (u(t, "offered"), u(t, "admitted"), u(t, "shed"));
+        assert_eq!(a + sh, o, "per-tenant conservation broken: {}", t.pretty());
+        sums = (sums.0 + o, sums.1 + a, sums.2 + sh);
+    }
+    assert_eq!(sums, (offered, admitted, shed), "tenant rows must sum to the aggregate");
+}
+
+#[test]
+fn open_admission_never_sheds_and_trace_replay_is_even() {
+    for process in [ArrivalProcess::Poisson, ArrivalProcess::TraceReplay] {
+        let mut sv = serving_block(2_000.0, 2, AdmissionPolicy::None);
+        sv.process = process;
+        let r = bs::Scenario::new(bs::SEED).devices(2).gpus(1).serving(sv).run();
+        let s = r.serving.as_ref().expect("serving section present");
+        assert_eq!(u(s, "shed"), 0, "{}: open admission must never shed", process.name());
+        assert_eq!(u(s, "admitted"), u(s, "offered"));
+    }
+}
+
+#[test]
+fn enabled_serving_config_roundtrips_and_runs_identically() {
+    let mut cfg = bs::Scenario::new(11)
+        .devices(2)
+        .gpus(2)
+        .serving(serving_block(1_500.0, 3, AdmissionPolicy::SloAware))
+        .config();
+    cfg.serving.process = ArrivalProcess::Bursty;
+    cfg.validate().expect("serving config must validate");
+    let re = SimConfig::from_json(&cfg.to_json()).expect("round-trip parse");
+    assert_eq!(re.serving, cfg.serving);
+    let run = |cfg: SimConfig| bytes(&bs::run_bundle(cfg, &[]));
+    assert_eq!(
+        run(cfg.clone()),
+        run(re),
+        "round-tripped serving config must drive a byte-identical run"
+    );
+}
+
+#[test]
+fn malformed_serving_blocks_rejected_at_validation() {
+    let base = || {
+        let mut cfg = bs::Scenario::new(1).config();
+        cfg.serving = serving_block(2_000.0, 2, AdmissionPolicy::None);
+        cfg
+    };
+    assert!(base().validate().is_ok());
+    let cases: [(&str, fn(&mut SimConfig)); 8] = [
+        ("zero rate", |c| c.serving.rate_per_tenant = 0.0),
+        ("nan rate", |c| c.serving.rate_per_tenant = f64::NAN),
+        ("zero tenants", |c| c.serving.tenants = 0),
+        ("zero slo", |c| c.serving.slo_ns = 0),
+        ("zero horizon", |c| c.serving.horizon_ns = 0),
+        ("zero scale", |c| c.serving.request_scale = 0.0),
+        ("unknown template", |c| c.serving.workload = "nope".to_string()),
+        ("arrival volume bomb", |c| c.serving.rate_per_tenant = 1e12),
+    ];
+    for (what, break_it) in cases {
+        let mut cfg = base();
+        break_it(&mut cfg);
+        assert!(cfg.validate().is_err(), "{what} must be rejected");
+    }
+}
+
+#[test]
+fn serving_coexists_with_batch_bundle_and_keeps_batch_sections() {
+    // A serving run alongside a batch workload: both the per-workload table
+    // (batch only — per-request sources are folded into serving) and the
+    // serving section must be present and internally consistent.
+    let r = bs::Scenario::new(bs::SEED)
+        .devices(2)
+        .gpus(2)
+        .serving(serving_block(1_000.0, 2, AdmissionPolicy::None))
+        .bundle(vec![WorkloadSpec::synthetic(
+            "bg-rand4k",
+            SynthPattern::random_4k_write(2_000).with_queue_depth(32),
+        )])
+        .run();
+    let s = r.serving.as_ref().expect("serving section present");
+    assert!(u(s, "offered") > 0);
+    // The batch stream still completes and reports under its own name; the
+    // serving per-request sources do not leak into the workload table.
+    assert!(r.workloads.iter().any(|w| w.name == "bg-rand4k"));
+    assert!(r.workloads.iter().all(|w| !w.name.starts_with("rand4k-t")));
+}

@@ -65,7 +65,23 @@ fn threaded_runs_byte_identical_with_replace_on() {
     // tests/replace.rs); the monitor, migration, and continuation machinery
     // must all land at identical positions under the sharded engine.
     for (gpus, devices) in [(2u32, 1u32), (2, 2), (4, 4)] {
-        let cfg = || bs::fault_cfg(gpus, devices, "none", true, bs::SEED);
+        let cfg = || {
+            bs::Scenario::new(bs::SEED)
+                .gpus(gpus)
+                .devices(devices)
+                .placement(Placement::PerfAware)
+                .dram_bytes(0)
+                .pipeline_depth(4)
+                .replace(true)
+                .faults("none")
+                .config()
+        };
+        // The legacy helper spelling of the same cell must resolve to the
+        // identical config (it is a thin delegate onto the builder).
+        assert_eq!(
+            cfg().to_json().pretty(),
+            bs::fault_cfg(gpus, devices, "none", true, bs::SEED).to_json().pretty()
+        );
         let sequential = drift_bytes(cfg(), 1, bs::SEED);
         for threads in [2u32, 4, 8] {
             assert_eq!(
